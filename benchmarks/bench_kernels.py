@@ -1,0 +1,61 @@
+"""Kernel benchmark: fused dequant GEMM vs references.
+
+Correctness deltas (interpret mode vs jnp oracle), packed-size accounting
+(the HBM-bandwidth claim of the kernel), and CPU wall-clock for the XLA
+fallback path (relative across bit-widths; absolute numbers are CPU-bound
+and labeled as such — the TPU target numbers come from §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table
+from repro.kernels.common import pack_kernel_layout
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.quant import rtn_quantize
+
+
+def run(verbose: bool = True):
+    k, n, m = 512, 512, 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+
+    t = Table("quant_matmul kernel: correctness + bytes",
+              ["bits", "max_abs_err(interp_vs_ref)", "weight_bytes",
+               "vs_bf16", "xla_path_ms"])
+    bf16_bytes = k * n * 2
+    for bits in (1, 2, 3, 4):
+        res = rtn_quantize(w, bits=bits, group_size=128)
+        planes = pack_kernel_layout(res.codes, bits, 128)
+        ref = quant_matmul_ref(x, planes, res.scales, res.zeros, bits=bits,
+                               group_size=128, pack_block=128)
+        out = quant_matmul(x, planes, res.scales, res.zeros, bits=bits,
+                           group_size=128, impl="interpret")
+        err = float(jnp.abs(out - ref).max())
+        pb = sum(int(np.prod(p.shape)) for p in planes)
+        sb = res.scales.size * 2 + (res.zeros.size * 2 if bits > 1 else 0)
+
+        fn = jax.jit(lambda xx: quant_matmul(
+            xx, planes, res.scales, res.zeros, bits=bits, group_size=128,
+            impl="auto"))
+        fn(x).block_until_ready()
+        t0 = time.time()
+        for _ in range(10):
+            fn(x).block_until_ready()
+        ms = (time.time() - t0) / 10 * 1e3
+        t.add(bits, f"{err:.2e}", pb + sb,
+              f"{(pb + sb) / bf16_bytes:.3f}x", round(ms, 2))
+    if verbose:
+        print(t.render())
+        print("(CPU wall-clock is the XLA fallback; TPU projections in "
+              "EXPERIMENTS.md §Roofline)")
+    return t
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""Paper Tab. 4 / Fig. 1(b) / Tab. 13-14 analogue.
+
+1. analytic memory accounting for the FULL configs (mixtral 8x7b/8x22b +
+   the assigned MoE archs): total / activated parameter bytes at 16-bit and
+   at PMQ budgets, with the ODP activated-parameter reduction;
+2. measured end-to-end serve throughput (smoke scale, CPU) for fp32 vs
+   MC-compressed — the *relative* speed story of Tab. 13 (absolute numbers
+   are CPU-bound and labeled as such).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import Table, calib_tokens, trained_smoke_mixtral
+from repro.config import CompressionConfig
+from repro.configs import get_config
+from repro.core import mc as mc_lib
+from repro.launch.dryrun import synthetic_meta
+from repro.core.pmq import dense_expert_bytes, packed_expert_bytes
+
+
+def _gb(x):
+    return x / 1e9
+
+
+def analytic_table() -> Table:
+    t = Table("memory accounting (Tab. 4 / Fig. 1b analogue, full configs)",
+              ["model", "bits", "params_GB", "act_params_GB",
+               "compression", "odp_act_GB"])
+    for arch in ("mixtral-8x7b", "mixtral-8x22b", "arctic-480b",
+                 "llama4-maverick-400b-a17b"):
+        cfg = get_config(arch)
+        n_moe = cfg.num_moe_layers()
+        dense16 = dense_expert_bytes(cfg) * n_moe
+        other = (cfg.param_count() * 2) - dense16   # non-expert bf16 bytes
+        total16 = _gb(dense16 + other)
+        act16 = _gb(cfg.active_param_count() * 2)
+        t.add(arch, 16.0, round(total16, 1), round(act16, 1), "0%",
+              round(act16, 1))
+        for bits in (2.54, 2.05, 1.57):
+            meta = synthetic_meta(cfg, bits)
+            packed = packed_expert_bytes(cfg, meta) * n_moe
+            other4 = other / 4   # non-expert weights at 4-bit (paper)
+            total = _gb(packed + other4)
+            act_expert_frac = cfg.top_k / cfg.num_experts
+            act = _gb(packed * act_expert_frac
+                      + (cfg.active_param_count() * 2 - dense16
+                         * act_expert_frac) / 4)
+            comp = 1 - total / total16
+            # ODP: ~15% fewer expert activations (calibrated prune rate)
+            odp_act = act * (1 - 0.15 * (cfg.top_k >= 2))
+            t.add(arch, bits, round(total, 1), round(act, 2),
+                  f"{comp:.1%}", round(odp_act, 2))
+    return t
+
+
+def measured_speed() -> Table:
+    """Relative serve speed fp32 vs MC (smoke, CPU — relative only)."""
+    from repro.models.transformer import MCRuntime
+    from repro.serve.engine import Request, ServeEngine
+    cfg, model, params = trained_smoke_mixtral()
+    calib = calib_tokens(cfg)
+    ccfg = CompressionConfig(enabled=True, target_bits=2.5, group_size=32,
+                             odp_enabled=True)
+    qparams, runtime, report = mc_lib.compress(model, params, ccfg, calib,
+                                               layout="uniform")
+    t = Table("serve throughput (smoke Mixtral, CPU; relative — Tab. 13)",
+              ["config", "decode_tok_s", "prefill_s", "act_param_reduction"])
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=i, prompt=rng.randint(
+        1, cfg.vocab_size, 24).astype(np.int32), max_new_tokens=8)
+        for i in range(4)]
+    for name, p, mc in (
+            ("fp32", params, None),
+            ("MC 2.5-bit + ODP", qparams, runtime)):
+        eng = ServeEngine(model, p, batch_size=4, mc=mc)
+        eng.run(reqs)
+        red = f"{report.odp_prune_rate:.1%}" if mc else "-"
+        t.add(name, round(eng.stats.decode_tokens_per_s, 2),
+              round(eng.stats.prefill_s, 2), red)
+    return t
+
+
+def run(verbose: bool = True):
+    t1 = analytic_table()
+    t2 = measured_speed()
+    if verbose:
+        print(t1.render())
+        print(t2.render())
+    return t1, t2
+
+
+if __name__ == "__main__":
+    run()

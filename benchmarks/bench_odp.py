@@ -1,0 +1,109 @@
+"""Paper Figs. 7-8 + Tabs. 11-12 analogue: ODP ablations.
+
+1. token-protection ratio sweep (Fig. 7): PPL + computation-compression
+   ratio as protection grows 0 -> 20%;
+2. pruning-threshold sweep (Tab. 12): PPL + pruned fraction per mu,
+   including the calibrated median;
+3. token-importance metric comparison (Tab. 11): Eq. 6 importance vs
+   kurtosis / variance / mean magnitude ranking.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Table, calib_tokens, trained_smoke_mixtral
+from repro.core import odp as odp_lib
+from repro.eval.perplexity import eval_tokens, perplexity
+from repro.models.layers.moe import OdpRuntime
+from repro.models.transformer import MCRuntime
+
+
+def _ppl_with_odp(model, params, ev, odp):
+    return perplexity(model, params, ev,
+                      mc=MCRuntime(odp=odp, quant_meta=None))
+
+
+def _pruned_frac(model, params, calib, odp):
+    _, _, aux = model.forward(params, calib, scan=False, collect_aux=True,
+                              mc=MCRuntime(odp=odp, quant_meta=None))
+    fr = [float(a["odp_pruned_frac"]) for a in aux["per_layer"]
+          if "odp_pruned_frac" in a]
+    return float(np.mean(fr)) if fr else 0.0
+
+
+def run(verbose: bool = True):
+    cfg, model, params = trained_smoke_mixtral()
+    calib = calib_tokens(cfg)
+    ev = eval_tokens(cfg, n_seq=6, seq_len=96)
+    fp_ppl = perplexity(model, params, ev)
+
+    # calibrate mu from router stats
+    captured_mu = _calibrate_mu(model, params, calib)
+
+    t1 = Table("ODP token-protection sweep (Fig. 7)",
+               ["protect_ratio", "ppl", "pruned_frac", "ppl_vs_fp"])
+    t1.add(0.0, fp_ppl, 0.0, 1.0)
+    for ratio in (0.0, 0.02, 0.05, 0.1, 0.2):
+        odp = OdpRuntime(threshold=captured_mu, protect_ratio=ratio,
+                         capacity_scale=1.0)
+        ppl = _ppl_with_odp(model, params, ev, odp)
+        frac = _pruned_frac(model, params, calib, odp)
+        t1.add(ratio, ppl, round(frac, 4), ppl / fp_ppl)
+
+    t2 = Table("ODP threshold sweep (Tab. 12)",
+               ["mu", "ppl", "pruned_frac"])
+    for mu in (0.4, 0.5, 0.6, 0.7):
+        odp = OdpRuntime(threshold=mu, protect_ratio=0.02,
+                         capacity_scale=1.0)
+        t2.add(mu, _ppl_with_odp(model, params, ev, odp),
+               round(_pruned_frac(model, params, calib, odp), 4))
+    odp = OdpRuntime(threshold=captured_mu, protect_ratio=0.0,
+                     capacity_scale=1.0)
+    t2.add(f"median={captured_mu:.3f}",
+           _ppl_with_odp(model, params, ev, odp),
+           round(_pruned_frac(model, params, calib, odp), 4))
+    odp = OdpRuntime(threshold=captured_mu, protect_ratio=0.02,
+                     capacity_scale=1.0)
+    t2.add(f"ODP (median+protect)",
+           _ppl_with_odp(model, params, ev, odp),
+           round(_pruned_frac(model, params, calib, odp), 4))
+
+    # metric comparison: prune bottom-30% tokens by each metric instead of
+    # importance-aware protection (Tab. 11 style)
+    t3 = Table("token-importance metric comparison (Tab. 11)",
+               ["metric", "ppl"])
+    for name in ("odp_importance", "token_kurtosis", "token_variance",
+                 "token_mean"):
+        ppl = _ppl_with_metric(model, params, ev, captured_mu, name)
+        t3.add(name, ppl)
+
+    if verbose:
+        print(t1.render())
+        print(t2.render())
+        print(t3.render())
+    return t1, t2, t3
+
+
+def _calibrate_mu(model, params, calib):
+    from repro.core.mc import calibrate_forward
+    captured = calibrate_forward(model, params, calib)
+    ratios = []
+    for cap in captured:
+        tw = np.asarray(cap["topk_weights"]).reshape(-1, 2)
+        ratios.append(tw[:, 1] / np.maximum(tw[:, 0], 1e-9))
+    return float(np.median(np.concatenate(ratios)))
+
+
+def _ppl_with_metric(model, params, ev, mu, metric: str):
+    """Protection driven by alternative token statistics (Tab. 11)."""
+    name = {"odp_importance": "eq6", "token_kurtosis": "kurtosis",
+            "token_variance": "variance", "token_mean": "mean"}[metric]
+    odp = OdpRuntime(threshold=mu, protect_ratio=0.02, capacity_scale=1.0,
+                     importance_metric=name)
+    return _ppl_with_odp(model, params, ev, odp)
+
+
+if __name__ == "__main__":
+    run()

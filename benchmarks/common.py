@@ -1,0 +1,83 @@
+"""Shared bench fixtures: a trained-ish smoke Mixtral and calibration data.
+
+Benches that mirror paper tables need a model whose router has structure
+(untrained routers are near-uniform). We quick-train a reduced Mixtral for a
+few dozen steps so expert frequencies/weights diverge, then reuse it across
+benchmark modules (cached in-process).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CompressionConfig, TrainConfig
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTextConfig, SyntheticTokenDataset
+from repro.models.transformer import DecoderModel
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@functools.lru_cache(maxsize=1)
+def trained_smoke_mixtral(steps: int = 300) -> Tuple:
+    """A reduced Mixtral trained long enough to develop non-uniform expert
+    routing and sub-random PPL — otherwise the compression comparisons the
+    paper makes (PMQ vs uniform vs single-metric) cannot differentiate.
+    Low aux-loss weight deliberately lets experts specialize/imbalance
+    (the phenomenon Fig. 3 is about)."""
+    cfg = get_config("mixtral-8x7b", smoke=True).replace(
+        dtype="float32", d_model=128, d_ff=256, moe_d_ff=256,
+        num_experts=8, num_layers=4, capacity_factor=4.0,
+        scan_layers=False)
+    model = DecoderModel(cfg)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=20,
+                       total_steps=steps, optimizer="adamw",
+                       aux_loss_weight=0.003)
+    state = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+    step = jax.jit(make_train_step(model, cfg, tcfg))
+    ds = SyntheticTokenDataset(SyntheticTextConfig(
+        vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, seed=3))
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        state, metrics = step(state, batch)
+    return cfg, model, state.params
+
+
+def calib_tokens(cfg, n=6, seq=96, seed=1234):
+    ds = SyntheticTokenDataset(SyntheticTextConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=n, seed=seed))
+    return jnp.asarray(ds.batch(0)["tokens"])
+
+
+class Table:
+    """Minimal aligned-column table printer for bench output."""
+
+    def __init__(self, title, cols):
+        self.title = title
+        self.cols = cols
+        self.rows = []
+
+    def add(self, *vals):
+        self.rows.append(vals)
+
+    def render(self) -> str:
+        widths = [max(len(str(c)), *(len(_fmt(r[i])) for r in self.rows))
+                  if self.rows else len(str(c))
+                  for i, c in enumerate(self.cols)]
+        out = [f"== {self.title} =="]
+        out.append("  ".join(str(c).ljust(w) for c, w in
+                             zip(self.cols, widths)))
+        for r in self.rows:
+            out.append("  ".join(_fmt(v).ljust(w) for v, w in
+                                 zip(r, widths)))
+        return "\n".join(out)
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

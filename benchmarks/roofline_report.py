@@ -1,0 +1,123 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+ARCH_ORDER = [
+    "arctic-480b", "llama4-maverick-400b-a17b", "whisper-medium",
+    "zamba2-1.2b", "command-r-plus-104b", "h2o-danube-3-4b", "gemma2-27b",
+    "internlm2-1.8b", "falcon-mamba-7b", "paligemma-3b", "mixtral-8x7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = {}
+    for f in glob.glob(str(DRYRUN / "*.json")):
+        r = json.loads(Path(f).read_text())
+        recs[r["cell"]] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(recs, mesh="single", mc=False):
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPs/HLO | bottleneck note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            tag = f"{arch}__{shape}__{mesh}" + ("__mc" if mc else "")
+            r = recs.get(tag)
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | SKIP | — | "
+                             f"{r['note'][:60]} |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | — | — | — | ERROR | — | "
+                             f"{r.get('error', '')[:60]} |")
+                continue
+            t = r["roofline"]
+            note = _note(r)
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | "
+                f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                f"**{t['dominant']}** | {t['useful_ratio']:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def _note(r):
+    t = r["roofline"]
+    d = t["dominant"]
+    coll = r["hlo_analysis"]["collective_by_kind"]
+    if d == "collective" and coll:
+        top = max(coll, key=coll.get)
+        return f"{top} dominates ICI ({coll[top]/1e9:.1f} GB/chip)"
+    if d == "memory":
+        if r["shape"].startswith("decode") or r["shape"].startswith("long"):
+            return "weight+KV streaming bound"
+        return "materialized attention + activations"
+    return "MXU-bound"
+
+
+def dryrun_table(recs, mesh):
+    lines = [
+        "| arch | shape | status | compile_s | args/chip | peak-ish/chip | "
+        "collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            tag = f"{arch}__{shape}__{mesh}"
+            r = recs.get(tag)
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | {r['status'].upper()} | "
+                             f"— | — | — | — |")
+                continue
+            mem = r["memory_analysis"]
+            args = (mem.get("argument_size_in_bytes") or 0) / 1e9
+            temp = (mem.get("temp_size_in_bytes") or 0) / 1e9
+            cc = r["hlo_analysis"]["collective_counts"]
+            cstr = ",".join(f"{k.split('-')[-1]}:{v}"
+                            for k, v in sorted(cc.items()))
+            lines.append(
+                f"| {arch} | {shape} | ok | {r['compile_s']} | "
+                f"{args:.2f} GB | {temp:.2f} GB | {cstr} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--mc", action="store_true")
+    args = ap.parse_args()
+    recs = load()
+    print("### Dry-run (mesh:", args.mesh, ")\n")
+    print(dryrun_table(recs, args.mesh))
+    print("\n### Roofline (mesh:", args.mesh, ", mc:", args.mc, ")\n")
+    print(roofline_table(recs, args.mesh, args.mc))
+
+
+if __name__ == "__main__":
+    main()

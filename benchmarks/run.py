@@ -1,0 +1,41 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs one benchmark per paper table/figure at smoke scale (CPU container):
+
+* bench_allocation — Figs. 5-6, Tabs. 2/5/7 (PMQ vs baselines)
+* bench_odp        — Figs. 7-8, Tabs. 11-12 (pruning + protection)
+* bench_memory     — Tab. 4 / Fig. 1b / Tab. 13 (memory + speed)
+* bench_kernels    — kernel correctness/bytes (Tab. 13-14 kernel side)
+
+The multi-pod roofline tables (EXPERIMENTS.md §Roofline) are produced by
+``repro.launch.dryrun`` + ``benchmarks.roofline_report``.
+"""
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="allocation|odp|memory|kernels")
+    args = ap.parse_args()
+    t0 = time.time()
+    from benchmarks import (bench_allocation, bench_kernels, bench_memory,
+                            bench_odp)
+    benches = {
+        "kernels": bench_kernels.run,
+        "memory": bench_memory.run,
+        "odp": bench_odp.run,
+        "allocation": bench_allocation.run,
+    }
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n#### benchmark: {name} " + "#" * 40)
+        fn(verbose=True)
+    print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

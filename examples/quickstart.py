@@ -1,0 +1,53 @@
+"""Quickstart: build a (reduced) Mixtral, compress it with MC, compare.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the three-line public API: build model -> ``mc.compress`` ->
+forward with the returned MCRuntime.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CompressionConfig
+from repro.configs import get_config
+from repro.core import mc as mc_lib
+from repro.data.pipeline import calibration_batch
+from repro.models.model_registry import build_model
+
+
+def main():
+    # 1. a Mixtral-family model (reduced config for the CPU container;
+    #    drop smoke=True on a real pod)
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"model: {cfg.name}  ({cfg.num_experts} experts, "
+          f"{cfg.param_count()/1e6:.1f}M params at this scale)")
+
+    # 2. training-free mixture compression (PMQ + ODP)
+    ccfg = CompressionConfig(enabled=True, target_bits=2.54, group_size=32,
+                             odp_enabled=True)
+    calib = jnp.asarray(calibration_batch(cfg, n_sequences=4, seq_len=64))
+    qparams, runtime, report = mc_lib.compress(model, params, ccfg, calib,
+                                               layout="uniform")
+    print(f"PMQ: avg {report.avg_bits:.2f} bits/expert-weight, "
+          f"{report.pmq.compression_ratio:.1%} of expert bytes removed")
+    print(f"ODP: mu={report.odp_threshold:.3f}, "
+          f"prune rate {report.odp_prune_rate:.1%}, "
+          f"capacity scale {report.capacity_scale:.2f}")
+    for rep in report.pmq.reports[:2]:
+        print(f"  layer {rep.layer}: bits per expert = {rep.bits.tolist()}")
+
+    # 3. run it
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size)
+    ref, _, _ = model.forward(params, tokens)
+    out, _, _ = model.forward(qparams, tokens, mc=runtime)
+    drift = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    print(f"logit drift vs fp: {drift:.3f} (finite: "
+          f"{bool(jnp.isfinite(out).all())})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end training driver: train a small Mixtral-family MoE LM for a few
+hundred steps with the full production loop — sharded train state, 8-bit
+Adam, deterministic data pipeline, checkpoint/resume, straggler detection.
+
+    PYTHONPATH=src python examples/train_small_moe.py            # ~8M CPU
+    PYTHONPATH=src python examples/train_small_moe.py --m100     # ~100M
+
+The 100M variant is the assignment's reference workload; the default is
+sized so a few hundred steps finish on this 1-core CPU container. Both run
+the identical code path (`repro.launch.train` drives the same loop).
+"""
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.checkpoint.checkpointer import CheckpointManager
+from repro.data.pipeline import SyntheticTextConfig, SyntheticTokenDataset
+from repro.models.model_registry import build_model
+from repro.runtime.fault_tolerance import (StragglerDetector,
+                                           run_with_fault_tolerance)
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--m100", action="store_true",
+                    help="~100M-param config (slow on CPU)")
+    ap.add_argument("--ckpt", default="/tmp/repro_small_moe")
+    args = ap.parse_args()
+
+    base = get_config("mixtral-8x7b", smoke=True)
+    if args.m100:
+        cfg = base.replace(num_layers=8, d_model=512, d_ff=1024,
+                           moe_d_ff=1024, num_experts=8, num_heads=8,
+                           num_kv_heads=4, head_dim=64, vocab_size=8192,
+                           scan_layers=True, remat_policy="minimal")
+    else:
+        cfg = base.replace(num_layers=4, d_model=192, d_ff=384,
+                           moe_d_ff=384, num_experts=8, vocab_size=2048)
+    print(f"training {cfg.param_count()/1e6:.1f}M-param MoE "
+          f"({cfg.num_experts} experts top-{cfg.top_k}) "
+          f"for {args.steps} steps")
+
+    tcfg = TrainConfig(learning_rate=1.5e-3, warmup_steps=20,
+                       total_steps=args.steps, optimizer="adamw8bit",
+                       aux_loss_weight=0.02)
+    model = build_model(cfg)
+    ds = SyntheticTokenDataset(SyntheticTextConfig(
+        vocab_size=cfg.vocab_size, seq_len=128, global_batch=8, seed=0))
+    step_fn = jax.jit(make_train_step(model, cfg, tcfg))
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+    mgr = CheckpointManager(args.ckpt, keep=2)
+    det = StragglerDetector()
+    losses = []
+
+    def one_step(state, step):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+        state, metrics = step_fn(state, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"  step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"lb {float(metrics.get('load_balance', 0)):.3f}")
+        losses.append(float(metrics["ce_loss"]))
+        return state
+
+    report = run_with_fault_tolerance(
+        total_steps=args.steps,
+        make_state=lambda: init_train_state(model,
+                                            jax.random.PRNGKey(0), tcfg),
+        step_fn=one_step, ckpt_manager=mgr,
+        checkpoint_every=max(args.steps // 4, 10), detector=det)
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"{report.restarts} restarts; checkpoint at {args.ckpt}")
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: MC-MoE — Mixture Compressor for Mixture-of-Experts LLMs (ICLR 2025).
+
+A production-grade JAX framework implementing the paper's training-free
+mixture compression (PMQ mixed-precision expert quantization + ODP online
+dynamic pruning) as first-class features of a multi-pod training/serving
+stack, together with the substrate (model zoo, distribution, checkpointing,
+fault tolerance, data, serving) required to run it at scale.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+from repro.config.base import (  # noqa: F401
+    SHAPES,
+    CompressionConfig,
+    MeshConfig,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    TrainConfig,
+    apply_overrides,
+)

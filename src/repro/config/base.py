@@ -1,0 +1,335 @@
+"""Config system: typed dataclasses with dict round-tripping and overrides.
+
+Every architecture in ``repro.configs`` builds a :class:`ModelConfig`;
+launchers combine it with a :class:`ShapeConfig` (one of the assigned
+input-shape cells), a :class:`MeshConfig`, and (for PMQ/ODP) a
+:class:`CompressionConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def _asdict(obj) -> Dict[str, Any]:
+    return dataclasses.asdict(obj)
+
+
+class _Base:
+    """Shared helpers for all config dataclasses."""
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]):
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+    def fingerprint(self) -> str:
+        """Stable content hash — used for checkpoint compatibility checks."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]
+
+
+@dataclass(frozen=True)
+class ModelConfig(_Base):
+    """Architecture definition. Covers dense / MoE / SSM / hybrid / enc-dec / VLM."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # 0 -> d_ff
+    moe_layer_period: int = 1        # MoE every `period` layers (llama4: 2)
+    first_moe_layer: int = 0
+    shared_expert: bool = False      # llama4-style always-on shared expert
+    dense_residual: bool = False     # arctic-style parallel dense FFN branch
+    dense_residual_ff: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    moe_impl: str = "gather"         # gather | shard_map (EP all_to_all)
+
+    # --- attention ---
+    attn_type: str = "full"          # full | sliding | local_global | chunked
+    window_size: int = 0             # sliding / local layers
+    local_global_period: int = 2     # gemma2: every other layer global
+    chunk_size: int = 0              # llama4 chunked-local layers
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    use_parallel_residual: bool = False   # command-r style attn || mlp
+    use_qk_norm: bool = False
+    attn_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    max_pos: int = 32768             # learned-position table size (use_rope=False)
+    kv_quant: bool = False           # int8 KV cache (beyond-paper, KIVI-style)
+
+    # --- FFN ---
+    mlp_act: str = "silu"            # silu | gelu | gelu_tanh
+    mlp_gated: bool = True           # SwiGLU/GeGLU vs plain
+
+    # --- SSM (mamba) ---
+    ssm_type: str = ""               # "" | mamba1 | mamba2
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64           # mamba2
+    ssm_chunk: int = 256             # chunked scan length
+    ssm_scan: str = "assoc"          # assoc | fused_seq (see ssm.py §Perf)
+    ssm_dt_rank: int = 0             # 0 -> d_model // 16 (mamba1)
+
+    # --- hybrid (zamba2) ---
+    shared_attn_period: int = 0      # insert shared attn block every N ssm layers
+
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # precomputed frame embeddings length
+
+    # --- VLM (paligemma) ---
+    num_prefix_tokens: int = 0       # precomputed patch embeddings length
+
+    # --- misc ---
+    norm_eps: float = 1e-6
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    pre_post_norm: bool = False      # gemma2 double-norm
+    tie_embeddings: bool = True
+    embedding_scale: bool = False    # gemma-style sqrt(d) embed scaling
+    dtype: str = "bfloat16"
+    remat_policy: str = "minimal"    # none | minimal | full
+    scan_layers: bool = True
+    logit_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.ssm_dt_rank == 0 and self.ssm_type == "mamba1":
+            object.__setattr__(self, "ssm_dt_rank", max(1, self.d_model // 16))
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def moe_layer_ids(self) -> List[int]:
+        if not self.is_moe:
+            return []
+        return [
+            i for i in range(self.num_layers)
+            if i >= self.first_moe_layer
+            and (i - self.first_moe_layer) % self.moe_layer_period == 0
+        ]
+
+    def num_moe_layers(self) -> int:
+        return len(self.moe_layer_ids())
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, h = self.d_model, self.head_dim
+        n_q = self.num_heads * h
+        n_kv = self.num_kv_heads * h
+        attn = d * n_q + 2 * d * n_kv + n_q * d
+        mlp_mats = 3 if self.mlp_gated else 2
+        dense_ffn = mlp_mats * d * self.d_ff
+        expert_ffn = mlp_mats * d * self.moe_d_ff
+
+        total = 0
+        if self.family == "ssm":
+            inner = self.d_model * self.ssm_expand
+            if self.ssm_type == "mamba1":
+                per = (d * inner * 2 + inner * self.ssm_conv
+                       + inner * (self.ssm_dt_rank + 2 * self.ssm_state)
+                       + self.ssm_dt_rank * inner + inner * self.ssm_state
+                       + inner * d)
+            else:
+                nheads = inner // self.ssm_head_dim
+                per = (d * (2 * inner + 2 * self.ssm_state + nheads)
+                       + inner * self.ssm_conv + inner * d)
+            total += self.num_layers * per
+        elif self.family == "hybrid":
+            inner = self.d_model * self.ssm_expand
+            nheads = max(1, inner // self.ssm_head_dim)
+            per = (d * (2 * inner + 2 * self.ssm_state + nheads)
+                   + inner * self.ssm_conv + inner * d)
+            total += self.num_layers * per
+            if self.shared_attn_period:
+                total += attn + dense_ffn  # one shared block
+        else:
+            n_moe = self.num_moe_layers()
+            n_dense = self.num_layers - n_moe
+            per_moe = attn + self.num_experts * expert_ffn + d * self.num_experts
+            if self.shared_expert:
+                per_moe += expert_ffn
+            if self.dense_residual:
+                per_moe += mlp_mats * d * (self.dense_residual_ff or self.d_ff)
+            total += n_moe * per_moe + n_dense * (attn + dense_ffn)
+            if self.family == "encdec":
+                enc_per = attn + dense_ffn + (d * n_q + n_q * d + 2 * d * n_kv)  # + cross-attn in dec
+                total += self.encoder_layers * (attn + dense_ffn) + self.num_layers * (d * n_q + n_q * d + 2 * d * n_kv)
+                _ = enc_per
+        total += self.vocab_size * d
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Per-token activated parameters (MoE: only top-k experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        mlp_mats = 3 if self.mlp_gated else 2
+        expert_ffn = mlp_mats * self.d_model * self.moe_d_ff
+        n_moe = self.num_moe_layers()
+        inactive = n_moe * (self.num_experts - self.top_k) * expert_ffn
+        return int(full - inactive)
+
+
+@dataclass(frozen=True)
+class ShapeConfig(_Base):
+    """One assigned input-shape cell."""
+
+    name: str                        # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    mode: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class MeshConfig(_Base):
+    """Logical device mesh. Axis order: (pod?, data, model)."""
+
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axis_names
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def axis_size(self, name: str) -> int:
+        return self.shape[self.axis_names.index(name)] if name in self.axis_names else 1
+
+
+@dataclass(frozen=True)
+class CompressionConfig(_Base):
+    """MC settings: PMQ bit allocation + ODP pruning."""
+
+    enabled: bool = False
+    # PMQ
+    target_bits: float = 2.54        # mean expert bit-width k in Eq. 4
+    bit_choices: Tuple[int, ...] = (1, 2, 3)
+    alpha: float = 1.0               # frequency exponent
+    beta: float = 1.0                # routing-weight exponent
+    gamma: float = 2.0               # quant-error exponent
+    group_size: int = 128            # quantizer group size
+    attn_bits: int = 4               # non-expert weights
+    gptq_blocksize: int = 128
+    gptq_percdamp: float = 0.01
+    calib_sequences: int = 128
+    calib_seq_len: int = 2048
+    # ODP
+    odp_enabled: bool = False
+    prune_threshold: float = -1.0    # <0 -> use calibration median of w1/w0
+    protect_ratio: float = 0.02      # fraction of tokens protected
+    odp_capacity_scale: float = 0.85 # static capacity shrink from calibrated prune rate
+
+
+@dataclass(frozen=True)
+class TrainConfig(_Base):
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"         # adamw | adamw8bit
+    grad_compression: str = "none"   # none | int8_ef
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    seed: int = 0
+    z_loss: float = 1e-4
+    aux_loss_weight: float = 0.01    # MoE load-balance loss
+
+
+@dataclass(frozen=True)
+class RunConfig(_Base):
+    """Bundle handed to launchers."""
+
+    model: Dict[str, Any] = field(default_factory=dict)
+    shape: Dict[str, Any] = field(default_factory=dict)
+    mesh: Dict[str, Any] = field(default_factory=dict)
+    compression: Dict[str, Any] = field(default_factory=dict)
+    train: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def build(cls, model: ModelConfig, shape: ShapeConfig,
+              mesh: MeshConfig = MeshConfig(),
+              compression: CompressionConfig = CompressionConfig(),
+              train: TrainConfig = TrainConfig()) -> "RunConfig":
+        return cls(model=model.to_dict(), shape=shape.to_dict(),
+                   mesh=mesh.to_dict(), compression=compression.to_dict(),
+                   train=train.to_dict())
+
+    def model_config(self) -> ModelConfig:
+        return ModelConfig.from_dict(self.model)
+
+    def shape_config(self) -> ShapeConfig:
+        return ShapeConfig.from_dict(self.shape)
+
+    def mesh_config(self) -> MeshConfig:
+        return MeshConfig.from_dict(dict(self.mesh))
+
+    def compression_config(self) -> CompressionConfig:
+        return CompressionConfig.from_dict(self.compression)
+
+    def train_config(self) -> TrainConfig:
+        return TrainConfig.from_dict(self.train)
+
+
+def apply_overrides(cfg: ModelConfig, overrides: Optional[Dict[str, Any]]) -> ModelConfig:
+    if not overrides:
+        return cfg
+    return cfg.replace(**overrides)

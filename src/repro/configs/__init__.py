@@ -1,0 +1,6 @@
+from repro.configs.registry import (  # noqa: F401
+    ALL_ARCHS,
+    ASSIGNED_ARCHS,
+    get_config,
+    shrink,
+)

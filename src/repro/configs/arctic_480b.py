@@ -1,0 +1,32 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128 experts top-2 with a parallel dense residual FFN branch.
+[hf:Snowflake/snowflake-arctic-base; hf]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        family="moe",
+        num_layers=35,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=4864,
+        vocab_size=32000,
+        num_experts=128,
+        top_k=2,
+        moe_d_ff=4864,
+        dense_residual=True,
+        dense_residual_ff=4864,
+        attn_type="full",
+        mlp_act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

@@ -1,0 +1,31 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096, attention-free Mamba-1
+architecture, ssm_state=16, vocab=65024. [arXiv:2410.05355; unverified]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b",
+        family="ssm",
+        num_layers=64,
+        d_model=4096,
+        num_heads=0,
+        num_kv_heads=0,
+        head_dim=1,
+        d_ff=0,
+        vocab_size=65024,
+        ssm_type="mamba1",
+        ssm_state=16,
+        ssm_expand=2,
+        ssm_conv=4,
+        ssm_scan="fused_seq",   # Perf cell A: 3.3x memory-term win vs assoc
+        use_rope=False,
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config(), num_heads=0, num_kv_heads=0, head_dim=1,
+                           d_ff=0)

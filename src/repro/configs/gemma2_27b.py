@@ -1,0 +1,33 @@
+"""gemma2-27b [dense]: 46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000; alternating local(4096)/global attention, logit softcapping,
+pre+post norms, embedding scaling. [arXiv:2408.00118; hf]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b",
+        family="dense",
+        num_layers=46,
+        d_model=4608,
+        num_heads=32,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab_size=256000,
+        attn_type="local_global",
+        window_size=4096,
+        local_global_period=2,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        pre_post_norm=True,
+        embedding_scale=True,
+        mlp_act="gelu_tanh",
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

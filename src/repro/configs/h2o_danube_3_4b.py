@@ -1,0 +1,28 @@
+"""h2o-danube-3-4b [dense]: 24L d_model=3840 32H (GQA kv=8) d_ff=10240
+vocab=32000; llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818; unverified]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-3-4b",
+        family="dense",
+        num_layers=24,
+        d_model=3840,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=120,
+        d_ff=10240,
+        vocab_size=32000,
+        attn_type="sliding",
+        window_size=4096,
+        mlp_act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config(), head_dim=32)

@@ -1,0 +1,26 @@
+"""internlm2-1.8b [dense]: 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544; llama-style GQA. [arXiv:2403.17297; hf]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-1.8b",
+        family="dense",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=92544,
+        attn_type="full",
+        mlp_act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

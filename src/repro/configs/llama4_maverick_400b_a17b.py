@@ -1,0 +1,37 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 128 experts top-1 + shared expert, alternating dense/MoE
+layers, interleaved chunked-local attention (iRoPE: every 4th layer global).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202048,
+        num_experts=128,
+        top_k=1,
+        moe_d_ff=8192,
+        moe_layer_period=2,      # alternate dense / MoE
+        first_moe_layer=1,
+        shared_expert=True,
+        attn_type="chunked",
+        chunk_size=8192,
+        local_global_period=4,   # every 4th layer full attention (NoPE)
+        use_qk_norm=True,
+        mlp_act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

@@ -1,0 +1,29 @@
+"""mixtral-8x22b [moe] — the paper's second target: 56L d_model=6144 48H
+(GQA kv=8) d_ff=16384 vocab=32768, MoE 8 experts top-2. [arXiv:2401.04088]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b",
+        family="moe",
+        num_layers=56,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=32768,
+        num_experts=8,
+        top_k=2,
+        moe_d_ff=16384,
+        attn_type="full",
+        mlp_act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

@@ -1,0 +1,29 @@
+"""mixtral-8x7b [moe] — the paper's primary target: 32L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=32000, MoE 8 experts top-2. [arXiv:2401.04088]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b",
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=32000,
+        num_experts=8,
+        top_k=2,
+        moe_d_ff=14336,
+        attn_type="full",
+        mlp_act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

@@ -1,0 +1,30 @@
+"""paligemma-3b [vlm]: 18L gemma decoder d_model=2048 8H (GQA kv=1, MQA)
+d_ff=16384 vocab=257216; SigLIP vision tower is a STUB per assignment:
+input_specs() supplies precomputed patch embeddings (256 x d_model).
+[arXiv:2407.07726; hf]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b",
+        family="vlm",
+        num_layers=18,
+        d_model=2048,
+        num_heads=8,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab_size=257216,
+        num_prefix_tokens=256,
+        attn_type="full",
+        embedding_scale=True,
+        mlp_act="gelu_tanh",
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

@@ -1,0 +1,34 @@
+"""whisper-medium [audio]: enc-dec transformer backbone, 24L decoder (+24L
+encoder) d_model=1024 16H (kv=16) d_ff=4096 vocab=51865. The conv audio
+frontend is a STUB per assignment: input_specs() supplies precomputed frame
+embeddings (1500 x d_model). [arXiv:2212.04356; unverified]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium",
+        family="encdec",
+        num_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=51865,
+        encoder_layers=24,
+        encoder_seq=1500,
+        attn_type="full",
+        use_rope=False,          # learned absolute positions
+        norm_type="layernorm",
+        mlp_gated=False,
+        mlp_act="gelu",
+        attn_bias=True,
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

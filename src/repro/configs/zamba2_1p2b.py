@@ -1,0 +1,35 @@
+"""zamba2-1.2b [hybrid]: 38 Mamba2 layers d_model=2048 (GQA kv=32 in the
+shared attention block, 32H) d_ff=8192 vocab=32000, ssm_state=64; a single
+weight-shared attention+FFN block is interleaved periodically.
+[arXiv:2411.15242; hf]
+"""
+from repro.config import ModelConfig
+from repro.configs import registry
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b",
+        family="hybrid",
+        num_layers=38,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=32000,
+        ssm_type="mamba2",
+        ssm_state=64,
+        ssm_expand=2,
+        ssm_conv=4,
+        ssm_head_dim=64,
+        shared_attn_period=6,    # shared block every 6 ssm layers
+        attn_type="sliding",     # shared blocks use a window at long context
+        window_size=4096,
+        mlp_act="gelu",
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return registry.shrink(config())

@@ -1,0 +1,177 @@
+"""Optimal expert bit-width allocation (paper Eq. 4).
+
+    MINIMIZE    sum_i sum_j  phi_i^alpha * w_i^beta * (eps_ij)^gamma * x_ij
+    subject to  sum_ij j*x_ij = floor(n*k),   sum_j x_ij = 1  (one width each),
+                sum_i x_i3 >= 1,  sum_i x_i2 >= 1,  x_ij in {0,1}.
+
+The objective is linear in ``x`` (coefficients precomputed), and the
+constraint structure is a small knapsack — we solve it **exactly** with
+dynamic programming over (expert, bit-budget, has-a-3bit, has-a-2bit) states:
+O(n * B * 4 * |bits|) with n <= a few hundred experts and B <= 3n. The paper
+uses an off-the-shelf IP solver ("takes a second"); the DP is equivalent and
+dependency-free, and `tests/test_allocation.py` cross-checks optimality
+against scipy's MILP on random instances.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class AllocationResult:
+    bits: np.ndarray          # (E,) chosen bit-width per expert
+    objective: float          # optimal objective value
+    target_bits: float        # requested mean width k
+    achieved_bits: float      # sum(bits)/E after rounding
+    cost_matrix: np.ndarray   # (E, |choices|) the c_ij used
+
+
+def build_costs(frequency: np.ndarray, mean_weight: np.ndarray,
+                eps: np.ndarray, *, alpha: float = 1.0, beta: float = 1.0,
+                gamma: float = 2.0) -> np.ndarray:
+    """c_ij = phi_i^alpha * w_i^beta * eps_ij^gamma (Eq. 4 coefficients)."""
+    phi = np.maximum(np.asarray(frequency, np.float64), 1e-6)
+    w = np.maximum(np.asarray(mean_weight, np.float64), 1e-8)
+    sig = (phi ** alpha) * (w ** beta)
+    return sig[:, None] * (np.asarray(eps, np.float64) ** gamma)
+
+
+def solve_allocation(costs: np.ndarray, target_bits: float,
+                     bit_choices: Sequence[int] = (1, 2, 3),
+                     require_presence: bool = True) -> AllocationResult:
+    """Exact DP solve of Eq. 4.
+
+    Args:
+      costs: (E, len(bit_choices)) — c_ij, lower is better.
+      target_bits: mean bit-width k; the budget is floor(E * k).
+      bit_choices: ascending candidate widths.
+      require_presence: enforce >=1 expert at the top width and >=1 at the
+        second width (paper's accuracy-preservation constraints). Skipped
+        when E < 2.
+
+    Returns AllocationResult; raises ValueError if infeasible.
+    """
+    costs = np.asarray(costs, np.float64)
+    n, m = costs.shape
+    bits = list(bit_choices)
+    assert m == len(bits)
+    budget = int(np.floor(n * target_bits))
+    budget = max(budget, n * min(bits))
+    budget = min(budget, n * max(bits))
+    require_presence = require_presence and n >= 2 and m >= 3
+    return _solve_exact(costs, budget, bits, require_presence, target_bits)
+
+
+def _solve_exact(costs: np.ndarray, budget: int, bits: Sequence[int],
+                 require_presence: bool, target_bits: float
+                 ) -> AllocationResult:
+    """Reference-clarity exact DP with parent pointers."""
+    n, m = costs.shape
+    nf = 4 if require_presence else 1
+    inf = float("inf")
+    dp = [[[inf] * nf for _ in range(budget + 1)] for _ in range(n + 1)]
+    parent = {}
+    dp[0][0][0] = 0.0
+    for i in range(n):
+        for b in range(budget + 1):
+            for f in range(nf):
+                cur = dp[i][b][f]
+                if cur == inf:
+                    continue
+                for j, bj in enumerate(bits):
+                    nb = b + bj
+                    if nb > budget:
+                        continue
+                    if require_presence:
+                        fadd = (1 if j == m - 1 else 0) | (
+                            2 if j == m - 2 else 0)
+                    else:
+                        fadd = 0
+                    nfed = f | fadd
+                    cand = cur + costs[i, j]
+                    if cand < dp[i + 1][nb][nfed]:
+                        dp[i + 1][nb][nfed] = cand
+                        parent[(i + 1, nb, nfed)] = (b, f, j)
+
+    # Prefer full presence (flag 3); if the budget is too tight for
+    # "one 3-bit + one 2-bit + rest at min" (budget < n*lo + 3), degrade
+    # gracefully through weaker flag states rather than failing — small-n /
+    # ultra-low-k corners the paper never hits but a framework must survive.
+    flag_preference = [3, 1, 2, 0] if require_presence else [0]
+    best = None
+    for want_f in flag_preference:
+        for b in range(budget, n * min(bits) - 1, -1):
+            if dp[n][b][want_f] < inf:
+                best = (b, dp[n][b][want_f], want_f)
+                break
+        if best is not None:
+            break
+    if best is None:
+        raise ValueError("infeasible allocation problem")
+    b, obj, f = best
+    alloc = np.zeros(n, np.int64)
+    for i in range(n, 0, -1):
+        pb, pf, j = parent[(i, b, f)]
+        alloc[i - 1] = bits[j]
+        b, f = pb, pf
+    return AllocationResult(bits=alloc, objective=float(obj),
+                            target_bits=target_bits,
+                            achieved_bits=float(alloc.sum()) / n,
+                            cost_matrix=costs)
+
+
+def allocate_layer(frequency: np.ndarray, mean_weight: np.ndarray,
+                   eps: np.ndarray, *, target_bits: float,
+                   bit_choices: Sequence[int] = (1, 2, 3), alpha: float = 1.0,
+                   beta: float = 1.0, gamma: float = 2.0) -> AllocationResult:
+    """Convenience: stats + eps -> optimal per-expert widths for one layer."""
+    costs = build_costs(frequency, mean_weight, eps, alpha=alpha, beta=beta,
+                        gamma=gamma)
+    return solve_allocation(costs, target_bits, bit_choices)
+
+
+# ------------------------------------------------------------------ baselines
+def allocate_uniform(n: int, bits: int) -> np.ndarray:
+    return np.full(n, bits, np.int64)
+
+
+def allocate_random(n: int, target_bits: float, rng: np.random.RandomState,
+                    bit_choices: Sequence[int] = (1, 2, 3)) -> np.ndarray:
+    """Random allocation at the same budget (paper Fig. 5 baseline)."""
+    budget = int(np.floor(n * target_bits))
+    alloc = np.full(n, min(bit_choices), np.int64)
+    budget -= alloc.sum()
+    order = rng.permutation(n)
+    hi = max(bit_choices)
+    for i in order:
+        room = hi - alloc[i]
+        add = min(room, budget, rng.randint(0, hi - min(bit_choices) + 1))
+        alloc[i] += add
+        budget -= add
+        if budget <= 0:
+            break
+    return alloc
+
+
+def allocate_greedy_metric(metric: np.ndarray, target_bits: float,
+                           bit_choices: Sequence[int] = (1, 2, 3)
+                           ) -> np.ndarray:
+    """Single-metric greedy (freq-only / weight-only / Hessian / F-norm
+    baselines of Figs. 5-6): rank experts by `metric` descending and pour
+    bits top-down within the budget."""
+    n = len(metric)
+    lo, hi = min(bit_choices), max(bit_choices)
+    budget = int(np.floor(n * target_bits)) - n * lo
+    alloc = np.full(n, lo, np.int64)
+    order = np.argsort(-np.asarray(metric, np.float64))
+    for level in range(hi - lo):
+        for i in order:
+            if budget <= 0:
+                return alloc
+            if alloc[i] == lo + level:
+                alloc[i] += 1
+                budget -= 1
+    return alloc

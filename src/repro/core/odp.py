@@ -1,0 +1,126 @@
+"""Online Dynamic Pruning (paper Sec. 3.3) — routing-level expert pruning
+with significance-aware token protection.
+
+Pure array-level logic, consumed by the MoE layer (training-free; applied at
+inference).  The two rules:
+
+1. **Weight-guided pruning** (Eq. 5): a token routed to top-2 experts with
+   scores (w0, w1) drops the secondary expert when ``w1 / w0 < mu``; ``mu``
+   is the calibration-set median of the ratio.
+2. **Token protection** (Eq. 6): the top ``protect_ratio`` tokens by
+   ``I_j = ||t_j||_1 * mean attention received`` keep all their experts —
+   this is what prevents the "attention decay" failure (Fig. 4).
+
+TPU adaptation (DESIGN.md §3): pruning is expressed as zeroing the routing
+weight of pruned slots, and the calibrated prune rate feeds a *static*
+capacity reduction in the dispatcher, so the saving appears as smaller
+all-to-all buffers and grouped-GEMM shapes rather than dynamic control flow.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OdpConfig:
+    threshold: float = 0.5        # mu; calibrated median of w1/w0
+    protect_ratio: float = 0.02   # fraction of tokens protected
+    enabled: bool = True
+
+
+def prune_mask(topk_weights: jax.Array, threshold: float,
+               protected: Optional[jax.Array] = None) -> jax.Array:
+    """Which (token, slot) routing assignments survive ODP.
+
+    Args:
+      topk_weights: (..., k) routing weights, slot 0 = primary (descending).
+      threshold: mu of Eq. 5.
+      protected: (...,) bool — protected tokens keep every slot.
+
+    Returns (..., k) bool keep-mask. Slot 0 is always kept; slots >= 1 are
+    kept iff w_s / w_0 >= mu or the token is protected. (k=1 models pass
+    through untouched; see DESIGN.md §4 for the llama4 deviation.)
+    """
+    k = topk_weights.shape[-1]
+    if k == 1:
+        return jnp.ones_like(topk_weights, dtype=bool)
+    w0 = jnp.maximum(topk_weights[..., :1], 1e-9)
+    ratio = topk_weights / w0
+    keep = ratio >= threshold
+    keep = keep.at[..., 0].set(True)
+    if protected is not None:
+        keep = keep | protected[..., None]
+    return keep
+
+
+def apply_pruning(topk_weights: jax.Array, keep: jax.Array,
+                  renormalize: bool = True) -> jax.Array:
+    """Zero pruned slots; optionally renormalize the survivors to sum 1."""
+    w = jnp.where(keep, topk_weights, 0.0)
+    if renormalize:
+        denom = jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        w = w / denom
+    return w
+
+
+def protect_tokens(importance: jax.Array, protect_ratio: float,
+                   valid: Optional[jax.Array] = None) -> jax.Array:
+    """Top-``ceil(ratio * L)`` tokens by importance -> bool mask (per row).
+
+    importance: (..., L); valid: optional (..., L) bool for padding.
+    """
+    l = importance.shape[-1]
+    n_protect = max(1, int(np.ceil(protect_ratio * l))) if protect_ratio > 0 else 0
+    if n_protect == 0:
+        return jnp.zeros(importance.shape, bool)
+    imp = importance
+    if valid is not None:
+        imp = jnp.where(valid, imp, -jnp.inf)
+    thresh = jax.lax.top_k(imp, n_protect)[0][..., -1:]
+    mask = imp >= thresh
+    if valid is not None:
+        mask = mask & valid
+    return mask
+
+
+def token_importance_from_running(tl1: jax.Array, attn_recv: jax.Array,
+                                  counts: jax.Array) -> jax.Array:
+    """Decode-time Eq. 6 with *running* column statistics.
+
+    tl1: (..., L) l1 magnitudes of cached tokens; attn_recv: (..., L) sum of
+    attention each cached token has received from decoded queries so far;
+    counts: (..., L) number of queries that could have attended (denominator).
+    """
+    return tl1 * attn_recv / jnp.maximum(counts, 1.0)
+
+
+def pruned_fraction(keep: jax.Array, topk: int) -> jax.Array:
+    """Fraction of expert activations removed (the paper's ~15% metric)."""
+    return 1.0 - keep.sum() / (np.prod(keep.shape[:-1]) * topk)
+
+
+def calibrate(ratio_samples: np.ndarray, protect_ratio: float = 0.02
+              ) -> Tuple[OdpConfig, float]:
+    """Median-threshold calibration; returns config + predicted prune rate."""
+    mu = float(np.median(ratio_samples))
+    rate = float(np.mean(ratio_samples < mu)) / 2.0  # half the slots are w1
+    return OdpConfig(threshold=mu, protect_ratio=protect_ratio), rate
+
+
+def capacity_scale_from_prune_rate(prune_rate: float, top_k: int,
+                                   protect_ratio: float) -> float:
+    """Static capacity-factor multiplier implied by calibrated ODP.
+
+    A prune removes one of top_k slots for non-protected tokens; protected
+    tokens keep everything, so the expected kept fraction is
+        1 - prune_rate * (1 - protect_ratio)
+    where prune_rate counts pruned slots among all slots.
+    """
+    if top_k <= 1:
+        return 1.0
+    return float(1.0 - prune_rate * (1.0 - protect_ratio))

@@ -1,0 +1,286 @@
+"""PMQ — Pre-Loading Mixed-Precision Quantization (paper Sec. 3.2).
+
+Pipeline per MoE layer (driven by a single calibration forward pass that
+captures each layer's FFN inputs and routing decisions):
+
+1. **significance stats**: activation frequency phi_i + routing mass w_i
+   (`core.significance.ExpertStats`);
+2. **eps_{i,j}**: expert-local output reconstruction F-norm at each candidate
+   width (Eq. 3), RTN fake-quant probes;
+3. **IP allocation** (Eq. 4) — exact DP (`core.allocation`). Two layouts:
+   * ``per_layer`` — the paper's formulation, independent optimum per layer;
+   * ``uniform``  — beyond-paper production mode: class sizes fixed across
+     layers (median of per-layer optima) and experts assigned to classes by
+     an exact linear-sum-assignment solve, so the quantized model keeps one
+     static layout and stays scan-over-layers compatible;
+4. **GPTQ** each expert matrix at its width (sign-GPTQ for 1-bit), Hessians
+   from the tokens actually routed to that expert;
+5. **pack**: experts sorted by class; packed kernel-layout planes per class;
+   the router's output columns are permuted identically.
+
+Non-expert weights are 4-bit in the paper; here they stay bf16 at runtime
+(experts are >96% of MoE-LLM weights) and the 4-bit storage is accounted
+analytically in reports — DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CompressionConfig, ModelConfig
+from repro.core import allocation as alloc_lib
+from repro.core.significance import ExpertStats
+from repro.kernels.common import pack_kernel_layout
+from repro.models.layers.core import mlp_activation
+from repro.models.layers.moe import MoEQuantMeta
+from repro.quant import gptq as gptq_lib
+from repro.quant.quantizer import quant_dequant
+from repro.quant.binary import binary_quant_dequant
+
+
+@dataclass
+class PMQLayerReport:
+    layer: int
+    bits: np.ndarray                 # (E,) allocated widths (original order)
+    permutation: np.ndarray          # class-sorted expert order
+    achieved_bits: float
+    objective: float
+    eps: np.ndarray                  # (E, |choices|)
+    frequency: np.ndarray
+    mean_weight: np.ndarray
+
+
+@dataclass
+class PMQResult:
+    params: Dict                     # model params with quantized experts
+    metas: List[Optional[MoEQuantMeta]]   # per MoE layer (model order)
+    reports: List[PMQLayerReport]
+    avg_bits: float
+    compressed_bytes: int
+    original_bytes: int
+
+    @property
+    def compression_ratio(self) -> float:
+        return 1.0 - self.compressed_bytes / max(self.original_bytes, 1)
+
+
+# --------------------------------------------------------------- eps probes
+def _expert_apply(cfg: ModelConfig, w_in, w_gate, w_out, x):
+    act = mlp_activation(cfg)
+    h = x @ w_in
+    g = x @ w_gate
+    return (act(g) * h) @ w_out
+
+
+def _fake_quant(w, bits, group_size):
+    if bits == 1:
+        return binary_quant_dequant(w, group_size)
+    return quant_dequant(w, bits, group_size)
+
+
+def compute_eps(cfg: ModelConfig, moe_params: Dict, calib_x: jax.Array,
+                topk_idx: jax.Array, topk_w: jax.Array,
+                bit_choices: Sequence[int], group_size: int) -> np.ndarray:
+    """eps_{i,j} (Eq. 3) on the tokens routed to each expert."""
+    e = cfg.num_experts
+    t = calib_x.shape[0]
+    eps = np.zeros((e, len(bit_choices)))
+    idx_np = np.asarray(topk_idx).reshape(t, -1)
+    w_np = np.asarray(topk_w).reshape(t, -1)
+    w_in = np.asarray(moe_params["w_in"], np.float32)
+    w_gate = np.asarray(moe_params["w_gate"], np.float32)
+    w_out = np.asarray(moe_params["w_out"], np.float32)
+    x32 = calib_x.astype(jnp.float32)
+
+    for i in range(e):
+        hits = (idx_np == i)
+        rows = hits.any(axis=1)
+        if not rows.any():
+            continue
+        xs = x32[np.nonzero(rows)[0]]
+        ws = jnp.asarray(w_np[rows][hits[rows]].reshape(-1, 1))
+        ref = _expert_apply(cfg, w_in[i], w_gate[i], w_out[i], xs)
+        for bj, bits in enumerate(bit_choices):
+            qi = _fake_quant(jnp.asarray(w_in[i]), bits, group_size)
+            qg = _fake_quant(jnp.asarray(w_gate[i]), bits, group_size)
+            qo = _fake_quant(jnp.asarray(w_out[i]), bits, group_size)
+            out = _expert_apply(cfg, qi, qg, qo, xs)
+            delta = (ref - out) * ws
+            eps[i, bj] = float(jnp.sqrt(jnp.sum(delta ** 2)))
+    return eps
+
+
+# ------------------------------------------------------------- gptq experts
+def _gptq_expert(cfg: ModelConfig, w_in, w_gate, w_out, xs, bits: int,
+                 ccfg: CompressionConfig):
+    """GPTQ all three matrices of one expert on its routed tokens."""
+    gs = ccfg.group_size
+    x32 = xs.astype(jnp.float32)
+    h_in, _ = gptq_lib.accumulate_hessian(
+        gptq_lib.init_hessian(w_in.shape[0]), x32, 0)
+    r_in = gptq_lib.gptq_quantize(w_in, h_in, bits=bits, group_size=gs,
+                                  percdamp=ccfg.gptq_percdamp)
+    r_gate = gptq_lib.gptq_quantize(w_gate, h_in, bits=bits, group_size=gs,
+                                    percdamp=ccfg.gptq_percdamp)
+    # intermediate activations for w_out's Hessian
+    act = mlp_activation(cfg)
+    h_mid = act(x32 @ w_gate.astype(jnp.float32)) * \
+        (x32 @ w_in.astype(jnp.float32))
+    h_out, _ = gptq_lib.accumulate_hessian(
+        gptq_lib.init_hessian(w_out.shape[0]), h_mid, 0)
+    r_out = gptq_lib.gptq_quantize(w_out, h_out, bits=bits, group_size=gs,
+                                   percdamp=ccfg.gptq_percdamp)
+    return r_in, r_gate, r_out
+
+
+def _pack_class(results, pack_block: int):
+    """Stack per-expert GPTQResults of one class into packed planes dicts."""
+    out = {}
+    for tag, rs in results.items():
+        bits = rs[0].bits
+        planes = [pack_kernel_layout(r.codes, bits, pack_block) for r in rs]
+        n_planes = len(planes[0])
+        for pi in range(n_planes):
+            out[f"{tag}_p{pi}"] = jnp.stack([p[pi] for p in planes])
+        out[f"{tag}_s"] = jnp.stack([r.scales for r in rs])
+        if bits > 1:
+            out[f"{tag}_z"] = jnp.stack([r.zeros for r in rs])
+    return out
+
+
+# ------------------------------------------------------------ layer compress
+def compress_moe_layer(cfg: ModelConfig, ccfg: CompressionConfig,
+                       moe_params: Dict, calib_x: jax.Array,
+                       topk_idx: jax.Array, topk_w: jax.Array,
+                       layer_idx: int,
+                       forced_counts: Optional[Tuple[int, ...]] = None,
+                       ) -> Tuple[Dict, MoEQuantMeta, PMQLayerReport]:
+    """Quantize one MoE layer's experts. Returns (new params, meta, report).
+
+    calib_x: (T, D) FFN inputs; topk_idx/w: (T, k) routing decisions.
+    forced_counts: fix per-class expert counts (uniform layout mode).
+    """
+    e = cfg.num_experts
+    bit_choices = tuple(ccfg.bit_choices)
+    stats = ExpertStats(num_experts=e)
+    stats.update(topk_idx, topk_w)
+
+    eps = compute_eps(cfg, moe_params, calib_x, topk_idx, topk_w,
+                      bit_choices, ccfg.group_size)
+    costs = alloc_lib.build_costs(stats.frequency, stats.mean_weight, eps,
+                                  alpha=ccfg.alpha, beta=ccfg.beta,
+                                  gamma=ccfg.gamma)
+    if forced_counts is None:
+        res = alloc_lib.solve_allocation(costs, ccfg.target_bits, bit_choices)
+        bits_per_expert = res.bits
+        objective = res.objective
+    else:
+        bits_per_expert, objective = assign_with_counts(costs, bit_choices,
+                                                        forced_counts)
+
+    # class-sort experts (ascending width); permute router columns to match
+    order = np.argsort(bits_per_expert, kind="stable")
+    sorted_bits = bits_per_expert[order]
+    classes, counts = np.unique(sorted_bits, return_counts=True)
+    pack_block = 128 if (cfg.d_model % 128 == 0 and cfg.moe_d_ff % 128 == 0) \
+        else ccfg.group_size
+    meta = MoEQuantMeta(bit_classes=tuple(int(b) for b in classes),
+                        class_counts=tuple(int(c) for c in counts),
+                        group_size=ccfg.group_size, pack_block=pack_block)
+
+    idx_np = np.asarray(topk_idx).reshape(-1, topk_idx.shape[-1])
+    x32 = calib_x.astype(jnp.float32)
+    w_in = np.asarray(moe_params["w_in"], np.float32)
+    w_gate = np.asarray(moe_params["w_gate"], np.float32)
+    w_out = np.asarray(moe_params["w_out"], np.float32)
+
+    experts_q = {}
+    pos = 0
+    for ci, (bits, cnt) in enumerate(zip(meta.bit_classes,
+                                         meta.class_counts)):
+        results = {"in": [], "gate": [], "out": []}
+        for j in range(cnt):
+            eid = int(order[pos + j])
+            rows = (idx_np == eid).any(axis=1)
+            xs = x32[np.nonzero(rows)[0]] if rows.any() else x32[:8]
+            r_in, r_gate, r_out = _gptq_expert(
+                cfg, jnp.asarray(w_in[eid]), jnp.asarray(w_gate[eid]),
+                jnp.asarray(w_out[eid]), xs, int(bits), ccfg)
+            results["in"].append(r_in)
+            results["gate"].append(r_gate)
+            results["out"].append(r_out)
+        experts_q[f"cls{ci}"] = _pack_class(results, meta.pack_block)
+        pos += cnt
+
+    new_params = {k: v for k, v in moe_params.items()
+                  if k not in ("w_in", "w_gate", "w_out")}
+    new_params["router"] = jnp.asarray(
+        np.asarray(moe_params["router"])[:, order])
+    new_params["experts_q"] = experts_q
+
+    report = PMQLayerReport(
+        layer=layer_idx, bits=bits_per_expert, permutation=order,
+        achieved_bits=float(bits_per_expert.mean()), objective=objective,
+        eps=eps, frequency=stats.frequency, mean_weight=stats.mean_weight)
+    return new_params, meta, report
+
+
+def assign_with_counts(costs: np.ndarray, bit_choices: Sequence[int],
+                       counts: Sequence[int]) -> Tuple[np.ndarray, float]:
+    """Exact expert->class assignment with fixed class sizes (uniform
+    layout): linear-sum-assignment on a class-slot-expanded cost matrix."""
+    from scipy.optimize import linear_sum_assignment
+    n = costs.shape[0]
+    assert sum(counts) == n
+    col_bits = []
+    cols = []
+    for j, c in enumerate(counts):
+        for _ in range(c):
+            cols.append(costs[:, j])
+            col_bits.append(bit_choices[j])
+    cmat = np.stack(cols, axis=1)          # (n, n)
+    rows, colsel = linear_sum_assignment(cmat)
+    bits = np.zeros(n, np.int64)
+    for r, c in zip(rows, colsel):
+        bits[r] = col_bits[c]
+    return bits, float(cmat[rows, colsel].sum())
+
+
+def uniform_counts(per_layer_bits: List[np.ndarray],
+                   bit_choices: Sequence[int]) -> Tuple[int, ...]:
+    """Median class sizes across layers, fixed up to sum to E."""
+    e = len(per_layer_bits[0])
+    med = []
+    for b in bit_choices:
+        med.append(int(np.median([(lb == b).sum() for lb in per_layer_bits])))
+    diff = e - sum(med)
+    med[-1] += diff   # absorb rounding in the widest class
+    if med[-1] < 0:
+        raise ValueError("degenerate uniform counts")
+    return tuple(med)
+
+
+# ------------------------------------------------------------ size account
+def packed_expert_bytes(cfg: ModelConfig, meta: MoEQuantMeta) -> int:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    gs = meta.group_size
+    total = 0
+    for bits, cnt in zip(meta.bit_classes, meta.class_counts):
+        per_mat = (d * f * bits) // 8
+        scale_rows = {  # groups along contraction dim
+            "in": d // gs, "gate": d // gs, "out": f // gs}
+        sz = 3 * per_mat
+        sz += (scale_rows["in"] + scale_rows["gate"]) * f * 2 * \
+            (2 if bits > 1 else 1)
+        sz += scale_rows["out"] * d * 2 * (2 if bits > 1 else 1)
+        total += cnt * sz
+    return total
+
+
+def dense_expert_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    return cfg.num_experts * 3 * cfg.d_model * cfg.moe_d_ff * dtype_bytes

@@ -1,0 +1,142 @@
+"""Expert significance analysis (paper Sec. 3.2.1, Fig. 3).
+
+Three per-expert statistics gathered on a calibration set:
+
+* **access frequency**  ``phi_i = n_i / N`` — how often expert *i* lands in
+  the top-k;
+* **activation weight** ``w_i = (sum_j sigma_j) / N`` — the routing mass it
+  receives;
+* **quantization reconstruction error** ``eps_{i,j}`` — the Frobenius norm of
+  the MoE-layer output change when expert *i* alone is quantized to *j* bits
+  (Eq. 3).  Because the layer output is ``y = sum_i w_i E_i(t)``, quantizing
+  a single expert perturbs it by ``w_t * (E_i(t) - Q_j(E_i)(t))`` over the
+  tokens routed to *i* — so eps can be computed expert-locally without
+  re-running the full network, which is what makes PMQ cheap.
+
+All functions are model-agnostic: they consume router outputs / expert
+activations, not model objects.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ExpertStats:
+    """Accumulated router statistics for one MoE layer."""
+
+    num_experts: int
+    counts: np.ndarray = field(default=None)        # (E,) activations
+    weight_sums: np.ndarray = field(default=None)   # (E,) routing mass
+    ratio_samples: List[np.ndarray] = field(default_factory=list)  # w1/w0
+    tokens_seen: int = 0
+
+    def __post_init__(self):
+        if self.counts is None:
+            self.counts = np.zeros(self.num_experts, np.int64)
+        if self.weight_sums is None:
+            self.weight_sums = np.zeros(self.num_experts, np.float64)
+
+    def update(self, topk_idx: jax.Array, topk_weights: jax.Array) -> None:
+        """topk_idx/weights: (..., k) routing decisions for a token batch."""
+        idx = np.asarray(topk_idx).reshape(-1)
+        w = np.asarray(topk_weights, dtype=np.float64).reshape(-1)
+        self.counts += np.bincount(idx, minlength=self.num_experts)
+        self.weight_sums += np.bincount(idx, weights=w,
+                                        minlength=self.num_experts)
+        tk = np.asarray(topk_weights).reshape(-1, topk_weights.shape[-1])
+        self.tokens_seen += tk.shape[0]
+        if tk.shape[-1] >= 2:
+            w0 = np.maximum(tk[:, 0], 1e-9)
+            self.ratio_samples.append(tk[:, 1] / w0)
+
+    @property
+    def frequency(self) -> np.ndarray:
+        """phi_i — normalized activation frequency."""
+        n = max(self.tokens_seen, 1)
+        return self.counts / n
+
+    @property
+    def mean_weight(self) -> np.ndarray:
+        """w_i — mean routing weight (mass per calibration token)."""
+        n = max(self.tokens_seen, 1)
+        return self.weight_sums / n
+
+    def ratio_median(self) -> float:
+        """Calibrated ODP threshold mu = median(w1 / w0)  (paper Sec. 3.3.1)."""
+        if not self.ratio_samples:
+            return 0.0
+        return float(np.median(np.concatenate(self.ratio_samples)))
+
+    def significance(self, alpha: float, beta: float) -> np.ndarray:
+        """phi^alpha * w^beta with epsilon flooring for never-hit experts."""
+        phi = np.maximum(self.frequency, 1e-6)
+        w = np.maximum(self.mean_weight, 1e-8)
+        return phi ** alpha * w ** beta
+
+
+def expert_quant_errors(
+    expert_apply: Callable[[Dict, jax.Array], jax.Array],
+    expert_params: Sequence[Dict],
+    quantize_params: Callable[[Dict, int], Dict],
+    calib_x: jax.Array,
+    routed_weights: jax.Array,
+    routed_mask: jax.Array,
+    bit_choices: Sequence[int] = (1, 2, 3),
+) -> np.ndarray:
+    """eps_{i,j} per Eq. 3, computed expert-locally.
+
+    Args:
+      expert_apply: fn(params_i, x) -> expert output for token batch x.
+      expert_params: per-expert parameter trees (len E).
+      quantize_params: fn(params_i, bits) -> fake-quantized params.
+      calib_x: (T, d) calibration tokens (layer inputs).
+      routed_weights: (T, E) routing weight of each token for each expert
+        (0 where not routed).
+      routed_mask: (T, E) bool, token routed to expert.
+      bit_choices: candidate bit-widths.
+
+    Returns:
+      eps (E, len(bit_choices)) float64.
+    """
+    num_e = len(expert_params)
+    eps = np.zeros((num_e, len(bit_choices)))
+    for i in range(num_e):
+        mask = np.asarray(routed_mask[:, i])
+        if mask.sum() == 0:
+            continue  # never routed: zero reconstruction impact
+        xs = calib_x[mask]
+        ws = routed_weights[mask, i][:, None]
+        ref = expert_apply(expert_params[i], xs)
+        for bj, bits in enumerate(bit_choices):
+            qp = quantize_params(expert_params[i], bits)
+            out = expert_apply(qp, xs)
+            delta = (ref - out).astype(jnp.float32) * ws
+            eps[i, bj] = float(jnp.sqrt(jnp.sum(delta ** 2)))
+    return eps
+
+
+def expert_drop_fnorm(
+    expert_apply: Callable[[Dict, jax.Array], jax.Array],
+    expert_params: Sequence[Dict],
+    calib_x: jax.Array,
+    routed_weights: jax.Array,
+    routed_mask: jax.Array,
+) -> np.ndarray:
+    """Fig. 3 red channel: layer-output F-norm change if expert dropped."""
+    num_e = len(expert_params)
+    out = np.zeros(num_e)
+    for i in range(num_e):
+        mask = np.asarray(routed_mask[:, i])
+        if mask.sum() == 0:
+            continue
+        xs = calib_x[mask]
+        ws = routed_weights[mask, i][:, None]
+        y = expert_apply(expert_params[i], xs).astype(jnp.float32) * ws
+        out[i] = float(jnp.sqrt(jnp.sum(y ** 2)))
+    return out

@@ -1,0 +1,122 @@
+"""Deterministic synthetic data pipeline (offline container stand-in for C4).
+
+Properties a production loader must have and this one does:
+
+* **step-indexed determinism**: batch ``i`` is a pure function of
+  ``(seed, host, step)`` via counter-based Philox — restart/elastic resume
+  is exact with no state files;
+* host sharding (each host materializes only its slice);
+* background prefetch (thread + bounded queue) overlapping host->device;
+* structured batches: next-token LM pairs, plus the modality stubs
+  (frame/patch embeddings) the audio/VLM archs need.
+
+The token stream is Zipf-distributed with Markov bigram structure so MoE
+routers see a non-uniform, correlated distribution (expert stats in the MC
+calibration are non-degenerate).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+@dataclass
+class SyntheticTextConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+    zipf_a: float = 1.2
+
+
+class SyntheticTokenDataset:
+    """Deterministic random-access LM batches."""
+
+    def __init__(self, cfg: SyntheticTextConfig,
+                 model_cfg: Optional[ModelConfig] = None):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        assert cfg.global_batch % cfg.num_hosts == 0
+        self.local_batch = cfg.global_batch // cfg.num_hosts
+
+    def _rng(self, step: int) -> np.random.Generator:
+        ss = np.random.SeedSequence(
+            entropy=(self.cfg.seed, self.cfg.host_id, step))
+        return np.random.Generator(np.random.Philox(ss))
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = self._rng(step)
+        b, s, v = self.local_batch, cfg.seq_len, cfg.vocab_size
+        # zipf body + markov-ish repetition for router correlation
+        base = rng.zipf(cfg.zipf_a, size=(b, s + 1)).astype(np.int64)
+        tokens = (base % (v - 2)) + 1
+        rep = rng.random((b, s + 1)) < 0.3
+        rep[:, 0] = False
+        idx = np.where(rep)
+        tokens[idx] = tokens[idx[0], idx[1] - 1]
+        out = {"tokens": tokens[:, :-1].astype(np.int32),
+               "labels": tokens[:, 1:].astype(np.int32)}
+        mc = self.model_cfg
+        if mc is not None and mc.family == "encdec":
+            out["enc_frames"] = rng.standard_normal(
+                (b, mc.encoder_seq, mc.d_model)).astype(np.float32)
+        if mc is not None and mc.family == "vlm":
+            out["prefix_embeds"] = rng.standard_normal(
+                (b, mc.num_prefix_tokens, mc.d_model)).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Bounded background prefetch over a step-indexed dataset."""
+
+    def __init__(self, dataset: SyntheticTokenDataset, start_step: int = 0,
+                 depth: int = 2):
+        self.dataset = dataset
+        self.queue: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.dataset.batch(step)
+            while not self._stop.is_set():
+                try:
+                    self.queue.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self):
+        return self.queue.get()
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=2)
+
+
+def calibration_batch(model_cfg: ModelConfig, n_sequences: int,
+                      seq_len: int, seed: int = 1234) -> np.ndarray:
+    """The MC calibration set (paper: 128 x 2048-token C4 samples)."""
+    ds = SyntheticTokenDataset(SyntheticTextConfig(
+        vocab_size=model_cfg.vocab_size, seq_len=seq_len,
+        global_batch=n_sequences, seed=seed), model_cfg)
+    return ds.batch(0)["tokens"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernel for 1-bit (sign) expert GEMM.
+
+Shares the tiled dequant-GEMM machinery with ``quant_matmul`` — the 1-bit
+path unpacks a (bk/8, bn) bit-plane tile, maps {0,1} -> {-1,+1}, applies the
+per-group l1 scale, and feeds the MXU.  See DESIGN.md §3 for why the paper's
+add/sub trick is replaced by a scaled matmul on TPU (bandwidth, not
+multiplier count, is the binding resource).
+"""
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas  # noqa: F401
+
+
+def binary_matmul_pallas(x, plane, scales, **kw):
+    return quant_matmul_pallas(x, (plane,), scales, None, bits=1, **kw)

@@ -1,0 +1,11 @@
+"""Public op: 1-bit sign-quantized matmul (MC's 1-bit experts)."""
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.ops import quant_matmul
+
+
+def binary_matmul(x, plane, scales, *, group_size=128, pack_block=128,
+                  impl="auto", out_dtype=jnp.float32):
+    return quant_matmul(x, (plane,), scales, None, bits=1,
+                        group_size=group_size, pack_block=pack_block,
+                        impl=impl, out_dtype=out_dtype)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the 1-bit GEMM."""
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def binary_matmul_ref(x, plane, scales, *, group_size, pack_block,
+                      out_dtype=jnp.float32):
+    return quant_matmul_ref(x, (plane,), scales, None, bits=1,
+                            group_size=group_size, pack_block=pack_block,
+                            out_dtype=out_dtype)

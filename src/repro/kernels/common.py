@@ -1,0 +1,131 @@
+"""Shared helpers for the Pallas kernels.
+
+Kernel weight layout
+--------------------
+The GEMM kernels consume packed sub-byte weights in a **block-local
+deinterleaved** layout: within every ``pack_block`` logical rows (the kernel's
+K tile), byte-row ``b`` packs logical rows ``{b + p * pack_block//per}`` at
+bit-shift ``p*bits``.  In-kernel unpacking is then `per` static shifts plus a
+single sublane-axis concatenate — no cross-lane shuffles and no reshapes that
+Mosaic would have to relayout.  The layout transform runs offline in XLA at
+pack time (:func:`pack_kernel_layout`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default tiling — MXU-aligned (multiples of 128 lanes / 8 sublanes).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128  # == pack_block == quant group size by default
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _plane_split(bits: int) -> Tuple[int, ...]:
+    """Bit-widths of the packed planes for a logical width."""
+    if bits == 3:
+        return (2, 1)
+    assert bits in (1, 2, 4, 8)
+    return (bits,)
+
+
+def pack_plane_kernel_layout(codes: jax.Array, plane_bits: int,
+                             pack_block: int) -> jax.Array:
+    """Pack one plane (values < 2**plane_bits) deinterleaved per K block."""
+    if plane_bits == 8:
+        return codes.astype(jnp.uint8)
+    per = 8 // plane_bits
+    d_in, d_out = codes.shape
+    assert d_in % pack_block == 0 and pack_block % per == 0
+    sub = pack_block // per
+    c = codes.reshape(d_in // pack_block, per, sub, d_out).astype(jnp.uint32)
+    c = c.transpose(0, 2, 1, 3)              # (KB, sub, per, N)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * plane_bits)[None, None, :, None]
+    packed = jnp.sum(c << shifts, axis=2)    # (KB, sub, N)
+    return packed.reshape(d_in // per, d_out).astype(jnp.uint8)
+
+
+def pack_kernel_layout(codes: jax.Array, bits: int, pack_block: int
+                       ) -> Tuple[jax.Array, ...]:
+    """Split ``bits`` codes into planes and pack each for the kernel."""
+    if bits == 3:
+        lo = codes & jnp.uint8(0x3)
+        hi = (codes >> 2) & jnp.uint8(0x1)
+        return (pack_plane_kernel_layout(lo, 2, pack_block),
+                pack_plane_kernel_layout(hi, 1, pack_block))
+    return (pack_plane_kernel_layout(codes, bits, pack_block),)
+
+
+def unpack_plane_reference(plane: jax.Array, plane_bits: int, d_in: int,
+                           pack_block: int) -> jax.Array:
+    """XLA inverse of :func:`pack_plane_kernel_layout` (tests / CPU path)."""
+    if plane_bits == 8:
+        return plane
+    per = 8 // plane_bits
+    sub = pack_block // per
+    d_out = plane.shape[-1]
+    p = plane.reshape(d_in // pack_block, sub, d_out).astype(jnp.uint32)
+    mask = jnp.uint32(2 ** plane_bits - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * plane_bits)[None, None, :, None]
+    vals = (p[:, :, None, :] >> shifts) & mask          # (KB, sub, per, N)
+    vals = vals.transpose(0, 2, 1, 3)                   # (KB, per, sub, N)
+    return vals.reshape(d_in, d_out).astype(jnp.uint8)
+
+
+def unpack_kernel_layout(planes: Tuple[jax.Array, ...], bits: int, d_in: int,
+                         pack_block: int) -> jax.Array:
+    if bits == 3:
+        lo = unpack_plane_reference(planes[0], 2, d_in, pack_block)
+        hi = unpack_plane_reference(planes[1], 1, d_in, pack_block)
+        return (lo | (hi << 2)).astype(jnp.uint8)
+    return unpack_plane_reference(planes[0], bits, d_in, pack_block)
+
+
+def unpack_tile(plane_tile: jax.Array, plane_bits: int) -> jax.Array:
+    """In-kernel unpack of one deinterleaved K-tile -> (bk, bn) int32.
+
+    ``plane_tile``: (bk // per, bn) uint8 slice of a kernel-layout plane.
+    Static `per`-way shift loop + one sublane concat.
+    """
+    if plane_bits == 8:
+        return plane_tile.astype(jnp.int32)
+    per = 8 // plane_bits
+    mask = jnp.int32(2 ** plane_bits - 1)
+    p32 = plane_tile.astype(jnp.int32)
+    parts = [(p32 >> (i * plane_bits)) & mask for i in range(per)]
+    return jnp.concatenate(parts, axis=0)
+
+
+def pad_to_multiple(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.lru_cache(maxsize=None)
+def choose_bm(m_hint: int) -> int:
+    """Pick an M tile: decode uses tiny M, keep it sublane-aligned."""
+    for bm in (8, 16, 32, 64, 128):
+        if m_hint <= bm:
+            return bm
+    return DEFAULT_BM
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def product(xs) -> int:
+    return int(np.prod(list(xs))) if xs else 1

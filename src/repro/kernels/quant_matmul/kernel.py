@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: fused sub-byte dequantization x GEMM.
+
+The inference hot spot of MC-compressed experts is ``y = x @ dequant(W)``
+with W packed at 1/2/3/4 bits.  Tiling:
+
+* grid ``(E?, M/bm, N/bn, K/bk)`` — K innermost (sequential accumulation);
+* ``x`` tile ``(bm, bk)`` in VMEM;
+* packed plane tile ``(bk * plane_bits / 8, bn)`` uint8 in VMEM — unpacked on
+  the VPU with ``per`` static shifts + one sublane concat (see
+  ``kernels.common`` for the deinterleaved layout that makes this legal);
+* per-group ``(scale, zero)`` tiles ``(bk/group, bn)``;
+* f32 accumulator scratch ``(bm, bn)``; the MXU consumes the dequantized
+  bf16/f32 tile.
+
+Weight bytes fetched per K-step are ``bits/16`` of the bf16 equivalent — the
+kernel turns the PMQ storage win directly into an HBM-bandwidth win, which is
+what the memory-roofline term of decode is bound by.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import _plane_split, unpack_tile
+
+
+def _dequant_tile(plane_tiles, scale_tile, zero_tile, bits: int,
+                  bk: int, group_size: int, compute_dtype):
+    """Unpack + affine-dequant one (bk, bn) weight tile."""
+    split = _plane_split(bits)
+    if bits == 3:
+        lo = unpack_tile(plane_tiles[0], 2)
+        hi = unpack_tile(plane_tiles[1], 1)
+        codes = lo + (hi << 2)
+    else:
+        codes = unpack_tile(plane_tiles[0], split[0])
+    codes = codes.astype(jnp.float32)
+    n_g = bk // group_size
+    bn = codes.shape[-1]
+    if bits == 1:
+        pm1 = codes * 2.0 - 1.0
+        if n_g == 1:
+            w = pm1 * scale_tile[0][None, :]
+        else:
+            w = (pm1.reshape(n_g, group_size, bn)
+                 * scale_tile[:, None, :]).reshape(bk, bn)
+    else:
+        if n_g == 1:
+            w = (codes - zero_tile[0][None, :]) * scale_tile[0][None, :]
+        else:
+            w = ((codes.reshape(n_g, group_size, bn)
+                  - zero_tile[:, None, :])
+                 * scale_tile[:, None, :]).reshape(bk, bn)
+    return w.astype(compute_dtype)
+
+
+def _qmm_kernel(x_ref, *refs, bits: int, group_size: int, bk: int,
+                nk: int, compute_dtype, batched: bool):
+    n_planes = len(_plane_split(bits))
+    plane_refs = refs[:n_planes]
+    scale_ref = refs[n_planes]
+    zero_ref = refs[n_planes + 1] if bits > 1 else None
+    out_ref = refs[-2]
+    acc_ref = refs[-1]
+
+    k = pl.program_id(3 if batched else 2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def read(ref):
+        t = ref[...]
+        return t[0] if batched else t   # squeeze expert block dim
+
+    plane_tiles = tuple(read(r) for r in plane_refs)
+    scale_tile = read(scale_ref)
+    zero_tile = read(zero_ref) if zero_ref is not None else None
+    w = _dequant_tile(plane_tiles, scale_tile, zero_tile, bits, bk,
+                      group_size, compute_dtype)
+    x_tile = read(x_ref).astype(compute_dtype)
+    acc_ref[...] += jnp.dot(x_tile, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        t = acc_ref[...].astype(out_ref.dtype)
+        out_ref[...] = t[None] if batched else t
+
+
+def quant_matmul_pallas(x: jax.Array, planes: Tuple[jax.Array, ...],
+                        scales: jax.Array, zeros: jax.Array, *, bits: int,
+                        group_size: int, block_m: int = 128,
+                        block_n: int = 128, block_k: int = 128,
+                        compute_dtype=jnp.float32, out_dtype=jnp.float32,
+                        interpret: bool = False) -> jax.Array:
+    """x: (M, K) or (E, M, K); planes kernel-layout packed (pack_block == block_k)."""
+    batched = x.ndim == 3
+    if batched:
+        e, m, kdim = x.shape
+        n = planes[0].shape[-1]
+    else:
+        m, kdim = x.shape
+        n = planes[0].shape[-1]
+    assert kdim % block_k == 0 and n % block_n == 0 and m % block_m == 0
+    assert block_k % group_size == 0
+    nk = kdim // block_k
+    split = _plane_split(bits)
+
+    def em(i):
+        # index maps; grid is (e?, m, n, k)
+        if batched:
+            return {
+                "x": lambda e_, m_, n_, k_: (e_, m_, k_),
+                "w": lambda e_, m_, n_, k_: (e_, k_, n_),
+                "s": lambda e_, m_, n_, k_: (e_, k_, n_),
+                "o": lambda e_, m_, n_, k_: (e_, m_, n_),
+            }[i]
+        return {
+            "x": lambda m_, n_, k_: (m_, k_),
+            "w": lambda m_, n_, k_: (k_, n_),
+            "s": lambda m_, n_, k_: (k_, n_),
+            "o": lambda m_, n_, k_: (m_, n_),
+        }[i]
+
+    def bshape(shape):
+        return ((1,) + shape) if batched else shape
+
+    in_specs = [pl.BlockSpec(bshape((block_m, block_k)), em("x"))]
+    for pb in split:
+        in_specs.append(
+            pl.BlockSpec(bshape((block_k * pb // 8, block_n)), em("w")))
+    n_g = block_k // group_size
+    in_specs.append(pl.BlockSpec(bshape((n_g, block_n)), em("s")))
+    args = [x] + list(planes) + [scales.astype(jnp.float32)]
+    if bits > 1:
+        in_specs.append(pl.BlockSpec(bshape((n_g, block_n)), em("s")))
+        args.append(zeros.astype(jnp.float32))
+
+    grid = (m // block_m, n // block_n, nk)
+    if batched:
+        grid = (e,) + grid
+
+    kern = functools.partial(
+        _qmm_kernel, bits=bits, group_size=group_size, bk=block_k, nk=nk,
+        compute_dtype=compute_dtype, batched=batched)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(bshape((block_m, block_n)), em("o")),
+        out_shape=jax.ShapeDtypeStruct(
+            ((e, m, n) if batched else (m, n)), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(*args)

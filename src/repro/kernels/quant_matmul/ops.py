@@ -1,0 +1,65 @@
+"""Public op: quantized matmul with packed sub-byte weights.
+
+Dispatches to the Pallas TPU kernel on TPU backends (or in interpret mode for
+CPU validation) and to the XLA reference otherwise.  The XLA path is also what
+the multi-pod dry-run lowers on the CPU host — it has identical math and
+byte-traffic structure (packed uint8 weight loads + on-chip dequant), so the
+roofline terms derived from it are representative.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def _use_pallas(mode: str) -> bool:
+    if mode == "auto":
+        return common.on_tpu()
+    return mode in ("pallas", "interpret")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group_size", "pack_block", "impl", "block_m",
+                     "block_n", "block_k", "out_dtype"))
+def quant_matmul(x: jax.Array, planes: Tuple[jax.Array, ...],
+                 scales: jax.Array, zeros: Optional[jax.Array], *, bits: int,
+                 group_size: int = 128, pack_block: int = 128,
+                 impl: str = "auto", block_m: int = 0, block_n: int = 128,
+                 block_k: int = 128, out_dtype=jnp.float32) -> jax.Array:
+    """``y = x @ dequant(planes)``.
+
+    x: ``(..., K)`` (or ``(E, M, K)`` with per-expert planes ``(E, ., N)``).
+    """
+    if not _use_pallas(impl):
+        return quant_matmul_ref(x, planes, scales, zeros, bits=bits,
+                                group_size=group_size, pack_block=pack_block,
+                                out_dtype=out_dtype)
+
+    interpret = (impl == "interpret") or not common.on_tpu()
+    batched = planes[0].ndim == 3
+    lead = x.shape[:-1] if not batched else x.shape[1:-1]
+    k = x.shape[-1]
+    if batched:
+        e = x.shape[0]
+        xm = x.reshape(e, -1, k)
+    else:
+        xm = x.reshape(-1, k)
+    m = xm.shape[-2]
+    bm = block_m or common.choose_bm(m)
+    xm = common.pad_to_multiple(xm, xm.ndim - 2, bm)
+
+    out = quant_matmul_pallas(
+        xm, planes, scales, zeros, bits=bits, group_size=group_size,
+        block_m=bm, block_n=block_n, block_k=block_k, out_dtype=out_dtype,
+        interpret=interpret)
+    out = out[..., :m, :]
+    n = out.shape[-1]
+    return out.reshape((e,) + lead + (n,)) if batched else out.reshape(lead + (n,))

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused dequant GEMM kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import unpack_kernel_layout
+
+
+def dequant_ref(planes: Tuple[jax.Array, ...], scales: jax.Array,
+                zeros: jax.Array, *, bits: int, group_size: int, d_in: int,
+                pack_block: int, dtype=jnp.float32) -> jax.Array:
+    """Unpack kernel-layout planes -> dense (d_in, d_out) weights."""
+    codes = unpack_kernel_layout(planes, bits, d_in, pack_block)
+    codes = codes.astype(jnp.float32)
+    d_out = codes.shape[-1]
+    g = codes.reshape(d_in // group_size, group_size, d_out)
+    if bits == 1:
+        w = (g * 2.0 - 1.0) * scales[:, None, :]
+    else:
+        w = (g - zeros[:, None, :]) * scales[:, None, :]
+    return w.reshape(d_in, d_out).astype(dtype)
+
+
+def quant_matmul_ref(x: jax.Array, planes: Tuple[jax.Array, ...],
+                     scales: jax.Array, zeros: jax.Array, *, bits: int,
+                     group_size: int, pack_block: int,
+                     compute_dtype=jnp.float32,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """x: (..., K) or batched-expert (E, ..., K) with per-expert planes."""
+    if x.ndim == 3 and planes[0].ndim == 3:   # (E, M, K) x (E, packed, N)
+        e = x.shape[0]
+        outs = [
+            quant_matmul_ref(x[i], tuple(p[i] for p in planes), scales[i],
+                             zeros[i] if zeros is not None else None,
+                             bits=bits, group_size=group_size,
+                             pack_block=pack_block,
+                             compute_dtype=compute_dtype, out_dtype=out_dtype)
+            for i in range(e)
+        ]
+        return jnp.stack(outs)
+    k = x.shape[-1]
+    w = dequant_ref(planes, scales, zeros, bits=bits, group_size=group_size,
+                    d_in=k, pack_block=pack_block, dtype=compute_dtype)
+    y = jnp.dot(x.astype(compute_dtype), w,
+                preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)

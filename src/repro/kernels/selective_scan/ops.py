@@ -1,0 +1,25 @@
+"""Public op: fused selective scan (Mamba-1 inner recurrence)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.selective_scan.kernel import selective_scan_pallas
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_i", "block_s"))
+def selective_scan(delta, x, b_mat, c_mat, a, h0, *, impl="auto",
+                   block_i=128, block_s=128):
+    use_pallas = impl in ("pallas", "interpret") or (
+        impl == "auto" and common.on_tpu())
+    i, s = delta.shape[-1], delta.shape[-2]
+    if not use_pallas or i % block_i or s % block_s:
+        return selective_scan_ref(delta, x, b_mat, c_mat, a, h0)
+    interpret = (impl == "interpret") or not common.on_tpu()
+    f32 = jnp.float32
+    return selective_scan_pallas(
+        delta.astype(f32), x.astype(f32), b_mat.astype(f32),
+        c_mat.astype(f32), a.astype(f32), h0.astype(f32),
+        block_i=block_i, block_s=block_s, interpret=interpret)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused token-importance reduction (ODP, paper Eq. 6).
+
+    I_j = ||t_j||_1 * mean_{q >= j} A[h, q, j]        (mean over heads too)
+
+The heavy part is the masked column reduction over the (H, L, L) attention
+probabilities — O(H L^2) reads with a triangular predicate. Tiling:
+
+* grid ``(nj, nq, nh)`` — key/column blocks outermost (they own the output),
+  query and head blocks accumulate sequentially;
+* probs tile ``(bh, bq, bj)`` in VMEM, mask built from global iotas;
+* f32 accumulator scratch ``(1, bj)``; on the last (q, h) step the partial
+  column sums are normalized by ``(L - j)`` and multiplied by the token's
+  precomputed l1 magnitude ``(1, bj)`` tile.
+
+The l1 norms are a cheap elementwise reduce handled by XLA outside the
+kernel; fusing them here would add a d-sized grid axis for no bandwidth win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ti_kernel(probs_ref, tl1_ref, out_ref, acc_ref, *, bq: int, bj: int,
+               nq: int, nh: int, seq_len: int, num_heads: int):
+    jb = pl.program_id(0)
+    qb = pl.program_id(1)
+    hb = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(qb == 0, hb == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p = probs_ref[...]                                  # (bh, bq, bj)
+    q_idx = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bj), 0)
+    j_idx = jb * bj + jax.lax.broadcasted_iota(jnp.int32, (bq, bj), 1)
+    mask = (q_idx >= j_idx).astype(p.dtype)
+    acc_ref[...] += jnp.sum(p * mask[None, :, :], axis=(0, 1))[None, :]
+
+    @pl.when(jnp.logical_and(qb == nq - 1, hb == nh - 1))
+    def _done():
+        j = jb * bj + jax.lax.broadcasted_iota(jnp.int32, (1, bj), 1)
+        denom = jnp.maximum(seq_len - j, 1).astype(jnp.float32)
+        mean_recv = acc_ref[...] / (denom * num_heads)
+        out_ref[...] = (mean_recv * tl1_ref[...]).astype(out_ref.dtype)
+
+
+def token_importance_pallas(probs: jax.Array, tl1: jax.Array, *,
+                            block_q: int = 128, block_j: int = 128,
+                            block_h: int = 4,
+                            interpret: bool = False) -> jax.Array:
+    """probs: (H, L, L) attention probabilities; tl1: (1, L) l1 norms."""
+    h, l, l2 = probs.shape
+    assert l == l2 and l % block_j == 0 and l % block_q == 0
+    block_h = min(block_h, h)
+    assert h % block_h == 0
+    nj, nq, nh = l // block_j, l // block_q, h // block_h
+
+    kern = functools.partial(_ti_kernel, bq=block_q, bj=block_j, nq=nq,
+                             nh=nh, seq_len=l, num_heads=h)
+    return pl.pallas_call(
+        kern,
+        grid=(nj, nq, nh),
+        in_specs=[
+            pl.BlockSpec((block_h, block_q, block_j),
+                         lambda j, q, hh: (hh, q, j)),
+            pl.BlockSpec((1, block_j), lambda j, q, hh: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_j), lambda j, q, hh: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, l), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_j), jnp.float32)],
+        interpret=interpret,
+    )(probs, tl1)

@@ -1,0 +1,27 @@
+"""Public op: fused token-importance (ODP token protection metric)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.token_importance.kernel import token_importance_pallas
+from repro.kernels.token_importance.ref import token_importance_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def token_importance(probs, t, *, impl="auto"):
+    """probs: (H, L, L) or (B, H, L, L); t matching (L, d) / (B, L, d)."""
+    if probs.ndim == 4:
+        return jax.vmap(lambda p, tt: token_importance(p, tt, impl=impl)
+                        )(probs, t)
+    use_pallas = impl in ("pallas", "interpret") or (
+        impl == "auto" and common.on_tpu())
+    l = probs.shape[-1]
+    if not use_pallas or l % 128 != 0:
+        return token_importance_ref(probs, t)
+    interpret = (impl == "interpret") or not common.on_tpu()
+    tl1 = jnp.sum(jnp.abs(t.astype(jnp.float32)), axis=-1)[None, :]
+    out = token_importance_pallas(probs.astype(jnp.float32), tl1,
+                                  interpret=interpret)
+    return out[0]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for token importance (MC paper Eq. 6)."""
+import jax.numpy as jnp
+
+
+def token_importance_ref(probs, t):
+    """probs: (H, L, L) softmax attention; t: (L, d) hidden states -> (L,).
+
+    I_j = ||t_j||_1 * sum_{q >= j} mean_h A[h, q, j] / (L - j)
+    (0-based j; the denominator counts the queries that can attend to j).
+    """
+    h, l, _ = probs.shape
+    q_idx = jnp.arange(l)[:, None]
+    j_idx = jnp.arange(l)[None, :]
+    mask = (q_idx >= j_idx).astype(probs.dtype)
+    col = jnp.sum(probs.mean(axis=0) * mask, axis=0)       # (L,)
+    denom = jnp.maximum(l - jnp.arange(l), 1).astype(col.dtype)
+    tl1 = jnp.sum(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    return (tl1 * col / denom).astype(jnp.float32)

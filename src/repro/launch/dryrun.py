@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 host placeholder devices, lowers the real step
+function (train_step / prefill / serve_step) against ShapeDtypeStruct
+stand-ins (no allocation), compiles it, and records
+
+* ``compiled.memory_analysis()``  — per-device bytes (fits-in-HBM proof),
+* ``compiled.cost_analysis()``    — FLOPs / bytes for the roofline,
+* collective bytes parsed from the compiled HLO,
+
+into ``experiments/dryrun/<arch>__<shape>__<mesh>[__mc].json``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape decode_32k --mesh both [--mc] [--all]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch import roofline as rf
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_registry import build_model
+from repro.models.transformer import DecoderModel, MCRuntime
+from repro.sharding import context as shctx
+from repro.sharding.partitioning import batch_spec, sanitize_spec
+from repro.train import optimizer as opt_lib
+from repro.train.train_step import TrainState, init_train_state, \
+    make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _bf16_structs(tree):
+    def cast(s):
+        if s.dtype == jnp.float32:
+            return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        return s
+    return jax.tree.map(cast, tree)
+
+
+def _shard_tree(mesh, spec_tree, struct_tree):
+    def one(sp, st):
+        sp = sp if isinstance(sp, P) else P()
+        return NamedSharding(mesh, sanitize_spec(mesh, sp, st.shape))
+    return jax.tree.map(one, spec_tree, struct_tree,
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+def _batch_shardings(mesh, batch_structs):
+    def one(st):
+        sp = batch_spec(mesh, st.shape[0] if st.ndim else 1, max(st.ndim, 1))
+        if st.ndim == 0:
+            sp = P()
+        return NamedSharding(mesh, sanitize_spec(mesh, sp, st.shape))
+    return jax.tree.map(one, batch_structs)
+
+
+def _generic_cache_spec(cfg: ModelConfig, st) -> P:
+    """Heuristic cache sharding: (L, B, ...) -> batch over data, any dim
+    equal to num_kv_heads over model."""
+    entries = [None] * st.ndim
+    if st.ndim >= 2:
+        entries[1] = "data"
+    for i in range(2, st.ndim):
+        if cfg.num_kv_heads and st.shape[i] == cfg.num_kv_heads:
+            entries[i] = "model"
+            break
+    return P(*entries)
+
+
+def _cache_shardings(mesh, cfg, cache_structs):
+    return jax.tree.map(
+        lambda st: NamedSharding(
+            mesh, sanitize_spec(mesh, _generic_cache_spec(cfg, st),
+                                st.shape)),
+        cache_structs)
+
+
+# --------------------------------------------------------------- MC variant
+def synthetic_meta(cfg: ModelConfig, target_bits: float = 2.54):
+    """Representative PMQ class layout for dry-run lowering (uniform-layout
+    mode; counts from the target budget — see EXPERIMENTS.md §Dry-run)."""
+    from repro.models.layers.moe import MoEQuantMeta
+    e = cfg.num_experts
+    if target_bits >= 2.0:
+        n3 = int(round(e * (target_bits - 2.0)))
+        n3 = min(max(n3, 1), e - 1)
+        counts, classes = (e - n3, n3), (2, 3)
+    else:
+        n1 = int(round(e * (2.0 - target_bits)))
+        n1 = min(max(n1, 1), e - 1)
+        counts, classes = (n1, e - n1), (1, 2)
+    return MoEQuantMeta(bit_classes=classes, class_counts=counts,
+                        group_size=128, pack_block=128)
+
+
+def quantize_param_structs(model: DecoderModel, cfg: ModelConfig,
+                           param_structs, meta):
+    """Replace dense expert stacks with packed-plane ShapeDtypeStructs."""
+    d, f = cfg.d_model, cfg.moe_d_ff
+    gs = meta.group_size
+    n_steps = model.n_steps
+    u8 = jnp.uint8
+
+    def cls_struct(bits, cnt):
+        out = {}
+        def planes(tag, kdim, ndim):
+            split = (2, 1) if bits == 3 else (bits,)
+            for pi, pb in enumerate(split):
+                out[f"{tag}_p{pi}"] = jax.ShapeDtypeStruct(
+                    (n_steps, cnt, kdim * pb // 8, ndim), u8)
+            out[f"{tag}_s"] = jax.ShapeDtypeStruct(
+                (n_steps, cnt, kdim // gs, ndim), jnp.float32)
+            if bits > 1:
+                out[f"{tag}_z"] = jax.ShapeDtypeStruct(
+                    (n_steps, cnt, kdim // gs, ndim), jnp.float32)
+        planes("in", d, f)
+        planes("gate", d, f)
+        planes("out", f, d)
+        return out
+
+    experts_q = {f"cls{ci}": cls_struct(bits, cnt)
+                 for ci, (bits, cnt) in
+                 enumerate(zip(meta.bit_classes, meta.class_counts))}
+
+    new = dict(param_structs)
+    for slot in range(model.period):
+        if model.slot_kinds[slot] != "moe":
+            continue
+        layer = dict(new[f"layers{slot}"])
+        ffn = {k: v for k, v in layer["ffn"].items()
+               if k not in ("w_in", "w_gate", "w_out")}
+        ffn["experts_q"] = experts_q
+        layer["ffn"] = ffn
+        new[f"layers{slot}"] = layer
+    return new
+
+
+def quantized_param_specs(model: DecoderModel, cfg: ModelConfig, specs,
+                          meta):
+    new = dict(specs)
+    def cls_spec(bits, cnt):
+        out = {}
+        def planes(tag, kspec, nspec):
+            split = (2, 1) if bits == 3 else (bits,)
+            for pi in range(len(split)):
+                out[f"{tag}_p{pi}"] = P(None, "data", kspec, nspec)
+            out[f"{tag}_s"] = P(None, "data", None, nspec)
+            if bits > 1:
+                out[f"{tag}_z"] = P(None, "data", None, nspec)
+        planes("in", None, "model")
+        planes("gate", None, "model")
+        planes("out", "model", None)
+        return out
+
+    experts_q = {f"cls{ci}": cls_spec(bits, cnt)
+                 for ci, (bits, cnt) in
+                 enumerate(zip(meta.bit_classes, meta.class_counts))}
+    for slot in range(model.period):
+        if model.slot_kinds[slot] != "moe":
+            continue
+        layer = dict(new[f"layers{slot}"])
+        ffn = {k: v for k, v in layer["ffn"].items()
+               if k not in ("w_in", "w_gate", "w_out")}
+        ffn["experts_q"] = experts_q
+        layer["ffn"] = ffn
+        new[f"layers{slot}"] = layer
+    return new
+
+
+# ------------------------------------------------------------------ lowering
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mc_mode: bool = False, overrides=None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    shctx.set_mesh_axes(tuple(mesh.axis_names),
+                        tuple(mesh.shape[a] for a in mesh.axis_names))
+
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    param_structs = _bf16_structs(jax.eval_shape(
+        lambda k: model.init(k), jax.random.PRNGKey(0)))
+
+    mc = None
+    if mc_mode:
+        assert cfg.is_moe, "--mc only applies to MoE archs"
+        from repro.models.layers.moe import OdpRuntime
+        meta = synthetic_meta(cfg)
+        param_structs = quantize_param_structs(model, cfg, param_structs,
+                                               meta)
+        pspecs = quantized_param_specs(model, cfg, pspecs, meta)
+        odp = OdpRuntime(threshold=0.5, protect_ratio=0.02,
+                         capacity_scale=0.85) if cfg.top_k >= 2 else None
+        mc = MCRuntime(odp=odp, quant_meta=meta)
+
+    param_sh = _shard_tree(mesh, pspecs, param_structs)
+    batch_structs = specs_lib.input_specs(arch, shape_name, cfg)
+    batch_sh = _batch_shardings(mesh, batch_structs)
+
+    if shape.mode == "train":
+        tcfg = TrainConfig(optimizer="adamw8bit",
+                           grad_compression="none")
+        step = make_train_step(model, cfg, tcfg)
+        state_structs = jax.eval_shape(
+            lambda k: init_train_state(model, k, tcfg),
+            jax.random.PRNGKey(0))
+        state_structs = TrainState(
+            params=param_structs, opt=state_structs.opt,
+            ef=state_structs.ef)
+        mspecs = opt_lib.moment_specs(pspecs, param_structs, quantized=True)
+        vspecs = opt_lib.moment_specs(pspecs, param_structs, quantized=True,
+                                      second=True)
+        state_specs = TrainState(
+            params=pspecs,
+            opt=opt_lib.AdamWState(step=P(), m=mspecs, v=vspecs),
+            ef=None)
+        state_sh = _shard_tree(mesh, state_specs, state_structs)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        args = (state_structs, batch_structs)
+    elif shape.mode == "prefill":
+        _, prefill = specs_lib.build_prefill_fn(cfg, shape, mc=mc)
+        fn = jax.jit(prefill, in_shardings=(param_sh, batch_sh))
+        args = (param_structs, batch_structs)
+    else:  # decode
+        _, serve_step = specs_lib.build_decode_fn(cfg, shape, mc=mc)
+        cache_structs = specs_lib.cache_structs(model, cfg, shape)
+        cache_sh = _cache_shardings(mesh, cfg, cache_structs)
+        extra = specs_lib.decode_extra_structs(model, cfg, shape)
+        if extra:
+            batch_structs = {**batch_structs, **extra}
+            batch_sh = {
+                **batch_sh,
+                **{k: jax.tree.map(lambda st: NamedSharding(
+                    mesh, sanitize_spec(mesh,
+                                        _generic_cache_spec(cfg, st),
+                                        st.shape)), v)
+                   for k, v in extra.items()}}
+        fn = jax.jit(serve_step, in_shardings=(param_sh, cache_sh, batch_sh),
+                     donate_argnums=(1,))
+        args = (param_structs, cache_structs, batch_structs)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return cfg, shape, mesh, chips, compiled, t_lower, t_compile
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             mc_mode: bool = False, out_dir: Path = OUT_DIR,
+             overrides=None, tag_suffix: str = ""):
+    multi_pod = mesh_kind == "multi"
+    tag = f"{arch}__{shape_name}__{mesh_kind}" + ("__mc" if mc_mode else "") \
+        + tag_suffix
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{tag}.json"
+
+    ok, note = specs_lib.cell_supported(arch, shape_name)
+    if not ok:
+        rec = {"cell": tag, "status": "skipped", "note": note}
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] SKIP {tag}: {note}")
+        return rec
+
+    try:
+        cfg, shape, mesh, chips, compiled, t_lower, t_compile = lower_cell(
+            arch, shape_name, multi_pod, mc_mode, overrides=overrides)
+        mem = compiled.memory_analysis()
+        cost_list = compiled.cost_analysis()
+        cost = cost_list if isinstance(cost_list, dict) else cost_list[0]
+        print(f"[dryrun] {tag} memory_analysis:\n{mem}")
+        print(f"[dryrun] {tag} cost_analysis: flops={cost.get('flops', 0):.3e}"
+              f" bytes={cost.get('bytes accessed', 0):.3e}")
+        hlo = compiled.as_text()
+        from repro.launch import hlo_analysis
+        hc = hlo_analysis.analyze(hlo)
+        mf = rf.model_flops_estimate(cfg, shape)
+        terms = rf.roofline_from_hlo(hc, chips, model_flops_global=mf)
+        mem_rec = {}
+        for attr in ("generated_code_size_in_bytes",
+                     "argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            mem_rec[attr] = getattr(mem, attr, None)
+        rec = {
+            "cell": tag, "status": "ok", "arch": arch, "shape": shape_name,
+            "mesh": mesh_kind, "chips": chips, "mc": mc_mode,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory_analysis": mem_rec,
+            # raw XLA numbers (per device; while bodies counted ONCE — kept
+            # for reference, not used by the roofline)
+            "xla_cost_analysis": {k: float(v) for k, v in cost.items()
+                                  if isinstance(v, (int, float))},
+            "hlo_analysis": {
+                "flops_per_chip": hc.flops,
+                "bytes_per_chip": hc.bytes_accessed,
+                "collective_bytes_per_chip": hc.collective_bytes,
+                "collective_by_kind": hc.collective_by_kind,
+                "collective_counts": hc.collective_counts,
+                "dot_count": hc.dot_count,
+                "warnings": hc.warnings[:20],
+            },
+            "roofline": terms.to_dict(),
+        }
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec = {"cell": tag, "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] FAIL {tag}: {e!r}")
+    out_path.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--mc", action="store_true",
+                    help="PMQ+ODP compressed serving variant")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep all assigned archs x shapes")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}" + \
+                    ("__mc" if args.mc else "")
+                if args.skip_done and (OUT_DIR / f"{tag}.json").exists():
+                    prev = json.loads((OUT_DIR / f"{tag}.json").read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] done already: {tag}")
+                        continue
+                results.append(run_cell(arch, shape, mesh_kind, args.mc))
+    bad = [r for r in results if r.get("status") == "error"]
+    print(f"[dryrun] finished: {len(results)} cells, {len(bad)} errors")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

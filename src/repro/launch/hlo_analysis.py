@@ -1,0 +1,444 @@
+"""HLO-text cost analysis with while-loop multiplicities.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies **once** —
+useless for scan-over-layers programs where >95% of the work sits inside the
+layer loop (verified empirically; see EXPERIMENTS.md §Dry-run methodology).
+This module re-derives the roofline inputs directly from the compiled HLO:
+
+* builds the computation call graph (ENTRY -> while bodies x trip count,
+  fusions, calls, conditionals) and propagates execution multiplicities;
+* **flops**: ``2 * prod(out) * prod(contracting dims)`` per ``dot`` at its
+  computation's multiplicity (MXU work; elementwise flops are bandwidth-
+  bound and accounted by the memory term);
+* **bytes**: per top-level op in non-fusion-internal computations, operand
+  bytes + output bytes (the same convention XLA's bytes_accessed uses),
+  fusion internals excluded — they never touch HBM;
+* **collective bytes**: operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, by kind, x multiplicity.
+
+All shapes in compiled SPMD HLO are per-device, so every number reported
+here is **per chip per step**.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 0.5, "u4": 0.5, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_ATOM = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _parse_type(t: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """'(s32[], f32[64,256]{1,0})' or 'bf16[8,16]{1,0}' -> atoms."""
+    out = []
+    for m in _SHAPE_ATOM.finditer(t):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _atoms_bytes(atoms) -> float:
+    total = 0.0
+    for dt, shape in atoms:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str                      # text after the opening paren
+    operands: List[str] = field(default_factory=list)
+
+    def out_bytes(self) -> float:
+        return _atoms_bytes(_parse_type(self.type_str))
+
+    def out_atoms(self):
+        return _parse_type(self.type_str)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    instrs: Dict[str, Instr] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0                      # per chip per step
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    dot_count: int = 0
+    warnings: List[str] = field(default_factory=list)
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+    "opt-barrier",
+    # control ops alias their bodies' buffers; the body instrs are counted
+    "while", "conditional", "call",
+}
+
+# XLA:CPU emulates bf16 dots by materializing f32 copies of the operands;
+# TPU reads bf16 natively in the MXU datapath. Pure dtype-conversion
+# fusions are therefore discounted from the TPU roofline (methodology note
+# in EXPERIMENTS.md §Dry-run). Layout copies/transposes still count.
+_CONVERT_ONLY_OPS = {"parameter", "convert", "bitcast", "copy", "reshape",
+                     "broadcast", "transpose", "tuple", "get-tuple-element"}
+
+
+def _is_dtype_conversion_fusion(fcomp: "Computation") -> bool:
+    has_convert = False
+    for iname in fcomp.order:
+        fi = fcomp.instrs[iname]
+        if fi.op not in _CONVERT_ONLY_OPS:
+            return False
+        if fi.op == "convert":
+            has_convert = True
+    return has_convert
+
+# ops that read/write only a slice of their big operand — count the slice,
+# not the base buffer (matches XLA HloCostAnalysis; without this, stacked
+# scan-over-layers parameters are charged L^2 times)
+_SLICING_OPS = {"dynamic-slice", "slice", "gather"}
+_UPDATE_OPS = {"dynamic-update-slice", "scatter"}
+
+
+def _instr_bytes(comp: "Computation", ins: Instr,
+                 comps: Dict[str, "Computation"]) -> float:
+    """Effective HBM bytes for one top-level instruction."""
+    if ins.op in _SKIP_BYTES_OPS:
+        return 0.0
+    if ins.op in _SLICING_OPS:
+        return 2.0 * ins.out_bytes()          # read slice + write result
+    if ins.op == "dynamic-update-slice":
+        upd = comp.instrs.get(ins.operands[1]) if len(ins.operands) > 1 \
+            else None
+        ub = upd.out_bytes() if upd is not None else ins.out_bytes()
+        return 2.0 * ub                        # read update + write in place
+    if ins.op == "scatter":
+        upd = comp.instrs.get(ins.operands[-1]) if ins.operands else None
+        ub = upd.out_bytes() if upd is not None else ins.out_bytes()
+        return 2.0 * ub
+    if ins.op == "fusion":
+        fm = _CALLS.search(ins.rest)
+        fc = comps.get(fm.group(1)) if fm else None
+        if fc is not None and _is_dtype_conversion_fusion(fc):
+            return 0.0
+        return _fusion_bytes(comp, ins, comps)
+    if ins.op == "convert":
+        return 0.0
+    b = ins.out_bytes()
+    for o in ins.operands:
+        src = comp.instrs.get(o)
+        if src is not None:
+            b += src.out_bytes()
+    return b
+
+
+def _fusion_bytes(comp: "Computation", ins: Instr,
+                  comps: Dict[str, "Computation"]) -> float:
+    """Fusion: parameters consumed only through slicing ops count at slice
+    size; root dynamic-update-slice writes only the update."""
+    fm = _CALLS.search(ins.rest)
+    fcomp = comps.get(fm.group(1)) if fm else None
+    if fcomp is None:
+        b = ins.out_bytes()
+        for o in ins.operands:
+            src = comp.instrs.get(o)
+            if src is not None:
+                b += src.out_bytes()
+        return b
+
+    # map parameter number -> internal instr name, and uses per instr
+    param_names: Dict[int, str] = {}
+    uses: Dict[str, List[Instr]] = defaultdict(list)
+    root_name = fcomp.order[-1] if fcomp.order else None
+    for iname in fcomp.order:
+        fi = fcomp.instrs[iname]
+        if fi.op == "parameter":
+            pm = re.match(r"\s*(\d+)", fi.rest)
+            if pm:
+                param_names[int(pm.group(1))] = iname
+        for o in fi.operands:
+            uses[o].append(fi)
+
+    _TRANSPARENT = ("convert", "bitcast", "copy", "reshape", "broadcast")
+
+    def sliced_bytes(name: str, depth: int = 0):
+        """Effective read bytes if `name` is consumed only through slicing
+        (following elementwise-transparent wrappers); None if not."""
+        if depth > 3:
+            return None
+        eff = 0.0
+        for u in uses.get(name, []):
+            if u.op in _SLICING_OPS:
+                eff += u.out_bytes()
+            elif u.op == "dynamic-update-slice" and u.operands and \
+                    u.operands[0] == name:
+                upd = fcomp.instrs.get(u.operands[1]) if \
+                    len(u.operands) > 1 else None
+                eff += upd.out_bytes() if upd is not None else 0.0
+            elif u.op in _TRANSPARENT:
+                sub = sliced_bytes(u.name, depth + 1)
+                if sub is None:
+                    return None
+                eff += sub
+            else:
+                return None
+        return eff if uses.get(name) else None
+
+    total = 0.0
+    for k, oname in enumerate(ins.operands):
+        src = comp.instrs.get(oname)
+        if src is None:
+            continue
+        pname = param_names.get(k)
+        eff = sliced_bytes(pname) if pname else None
+        if eff is not None:
+            total += min(eff, src.out_bytes())
+        else:
+            total += src.out_bytes()
+
+    # output: if the fusion accumulates into a same-shaped parameter via
+    # dynamic-update-slice (scan residual stacking), only the update is
+    # written — walk through trailing convert/bitcast/copy wrappers.
+    root = fcomp.instrs.get(root_name) if root_name else None
+    seen = 0
+    while root is not None and root.op in ("convert", "bitcast", "copy",
+                                           "transpose") and root.operands \
+            and seen < 4:
+        root = fcomp.instrs.get(root.operands[0])
+        seen += 1
+    if root is not None and root.op == "dynamic-update-slice" and \
+            len(root.operands) > 1:
+        upd = fcomp.instrs.get(root.operands[1])
+        total += upd.out_bytes() if upd is not None else ins.out_bytes()
+    else:
+        dus_updates = [
+            fcomp.instrs.get(fi.operands[1])
+            for n in fcomp.order
+            for fi in [fcomp.instrs[n]]
+            if fi.op == "dynamic-update-slice" and len(fi.operands) > 1
+            and fi.operands[0] in uses  # writes into a parameter buffer
+        ]
+        dus_updates = [u for u in dus_updates if u is not None]
+        out_b = ins.out_bytes()
+        if dus_updates:
+            upd_b = sum(u.out_bytes() for u in dus_updates)
+            # in-place accumulation: write only the updates
+            param_b = sum(
+                fcomp.instrs[param_names[k]].out_bytes()
+                for k in param_names
+                if any(fcomp.instrs[n].op == "dynamic-update-slice"
+                       and fcomp.instrs[n].operands
+                       and fcomp.instrs[n].operands[0] == param_names[k]
+                       for n in fcomp.order))
+            if param_b > 0 and abs(param_b - out_b) / max(out_b, 1) < 0.6:
+                out_b = min(out_b, upd_b + max(out_b - param_b, 0))
+        total += out_b
+    return total
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = ""
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith((" ", "\t")):
+            hm = _COMP_HEADER.match(line.strip())
+            if hm and "{" in line:
+                cur = Computation(name=hm.group(2),
+                                  is_entry=bool(hm.group(1)))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_LINE.match(line)
+        if not dm:
+            continue
+        name, type_str, op, rest = dm.groups()
+        # operand list = %refs before any ', key=' metadata — good enough:
+        # take refs in the argument parens segment (up to matching depth 0)
+        arg_seg = _args_segment(rest)
+        operands = _OPERAND.findall(arg_seg)
+        ins = Instr(name=name, type_str=type_str, op=op, rest=rest,
+                    operands=operands)
+        cur.instrs[name] = ins
+        cur.order.append(name)
+    return comps, entry_name
+
+
+def _args_segment(rest: str) -> str:
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i]
+    return rest
+
+
+def _multiplicities(comps: Dict[str, Computation], entry: str
+                    ) -> Tuple[Dict[str, float], set]:
+    """computation name -> execution count; plus fusion-internal set."""
+    mult: Dict[str, float] = defaultdict(float)
+    fused_internal = set()
+    mult[entry] = 1.0
+    # BFS through call edges
+    todo = [entry]
+    seen_edges = set()
+    while todo:
+        cname = todo.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            targets: List[Tuple[str, float, bool]] = []
+            if ins.op == "while":
+                trip_m = _TRIP.search(ins.rest)
+                trips = float(trip_m.group(1)) if trip_m else 1.0
+                bm = _BODY.search(ins.rest)
+                cm = _COND.search(ins.rest)
+                if bm:
+                    targets.append((bm.group(1), trips, False))
+                if cm:
+                    targets.append((cm.group(1), trips + 1, False))
+            elif ins.op == "fusion":
+                fm = _CALLS.search(ins.rest)
+                if fm:
+                    targets.append((fm.group(1), 1.0, True))
+            elif ins.op in ("call", "custom-call"):
+                tm = _TO_APPLY.search(ins.rest)
+                if tm:
+                    targets.append((tm.group(1), 1.0, False))
+            elif ins.op == "conditional":
+                bm = _BRANCHES.search(ins.rest)
+                if bm:
+                    for b in _OPERAND.findall(bm.group(1)):
+                        targets.append((b, 1.0, False))
+            elif ins.op in ("reduce", "reduce-window", "scatter", "sort",
+                            "map", "select-and-scatter", "all-reduce",
+                            "reduce-scatter"):
+                tm = _TO_APPLY.search(ins.rest)
+                if tm:
+                    # applied elementwise; tiny comparator/adder — skip body
+                    fused_internal.add(tm.group(1))
+            for tgt, k, is_fused in targets:
+                if is_fused:
+                    fused_internal.add(tgt)
+                key = (cname, iname, tgt)
+                if key in seen_edges:
+                    continue
+                seen_edges.add(key)
+                mult[tgt] += m * k
+                todo.append(tgt)
+    return mult, fused_internal
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_atoms = ins.out_atoms()
+    out_elems = 1
+    for _, shape in out_atoms:
+        for d in shape:
+            out_elems *= d
+    cm = _CONTRACT.search(ins.rest)
+    contract = 1
+    if cm and ins.operands:
+        lhs = comp.instrs.get(ins.operands[0])
+        lhs_shape = None
+        if lhs is not None:
+            atoms = lhs.out_atoms()
+            if atoms:
+                lhs_shape = atoms[0][1]
+        if lhs_shape is not None and cm.group(1):
+            for d in cm.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_shape):
+                    contract *= lhs_shape[di]
+    return 2.0 * out_elems * contract
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = parse_computations(text)
+    cost = HloCost()
+    if not entry:
+        cost.warnings.append("no ENTRY computation found")
+        return cost
+    mult, fused_internal = _multiplicities(comps, entry)
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        internal = cname in fused_internal
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            if ins.op == "dot":
+                cost.flops += m * _dot_flops(comp, ins)
+                cost.dot_count += 1
+            elif ins.op == "convolution":
+                cost.warnings.append(f"convolution not counted: {iname}")
+            if internal:
+                continue
+            base = ins.op.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVE_OPS and not ins.op.endswith("-done"):
+                opb = 0.0
+                for o in ins.operands:
+                    src = comp.instrs.get(o)
+                    if src is not None:
+                        opb += src.out_bytes()
+                if opb == 0.0:
+                    opb = ins.out_bytes()
+                cost.collective_bytes += m * opb
+                cost.collective_by_kind[base] = \
+                    cost.collective_by_kind.get(base, 0.0) + m * opb
+                cost.collective_counts[base] = \
+                    cost.collective_counts.get(base, 0) + 1
+            cost.bytes_accessed += m * _instr_bytes(comp, ins, comps)
+    return cost

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required for the smoke tests and benches
+that must see exactly one CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod adds a leading DCN 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    if multi_pod:
+        return MeshConfig(shape=(2, 16, 16),
+                          axis_names=("pod", "data", "model"))
+    return MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+
+
+def single_device_mesh():
+    """1x1 mesh for CPU tests exercising the pjit code path."""
+    return jax.make_mesh((1, 1), ("data", "model"))

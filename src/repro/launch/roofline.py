@@ -1,0 +1,180 @@
+"""Roofline-term extraction from lowered/compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh), in seconds/step/chip (DESIGN.md §6):
+
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = coll_bytes  / (chips * ICI_BW)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (already whole-program,
+all chips). Collective bytes are parsed from the compiled HLO text — the sum
+of operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, scaled by how many times each op's instruction
+executes per step (ops inside a scanned while-loop execute trip-count times;
+we recover trip counts from the scan bounds in the HLO when present).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """'bf16[8,128]{1,0}' -> bytes. Tuple shapes handled by the caller."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    total_bytes: float = 0.0
+    details: List[Dict] = field(default_factory=list)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op, x while-loop trip counts."""
+    stats = CollectiveStats()
+    # map computation name -> trip count for while bodies created by scan:
+    # jax scans lower to while loops whose condition compares the induction
+    # variable against a constant; recover "constant" per body heuristically.
+    trip_counts = _scan_trip_counts(hlo_text)
+
+    current_comp = None
+    for line in hlo_text.splitlines():
+        striped = line.strip()
+        comp_m = re.match(r"%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->", striped)
+        if striped.startswith(("ENTRY", "%")) and "{" in striped and "=" not in striped:
+            name_m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", striped)
+            if name_m:
+                current_comp = name_m.group(1)
+            continue
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^=]*?\)|[\w\[\],{}\/ ]+?)\s+"
+                     r"([\w\-]+)\(", striped)
+        if not m:
+            continue
+        shape_part, op = m.groups()
+        base_op = op.replace("-start", "").replace("-done", "")
+        if base_op not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        # operand shapes: for *-start / plain ops, use the output shape
+        # (all-reduce: out == in). For tuple outputs take the summed parts.
+        if shape_part.startswith("("):
+            parts = re.findall(r"\w+\[[\d,]*\]", shape_part)
+            nb = sum(_shape_bytes(p) for p in parts) / 2  # (in, out) tuple
+        else:
+            nb = _shape_bytes(shape_part)
+        mult = trip_counts.get(current_comp, 1)
+        stats.counts[base_op] = stats.counts.get(base_op, 0) + 1
+        stats.bytes_by_kind[base_op] = (
+            stats.bytes_by_kind.get(base_op, 0.0) + nb * mult)
+        stats.total_bytes += nb * mult
+        if len(stats.details) < 200:
+            stats.details.append({"op": base_op, "bytes": nb,
+                                  "computation": current_comp,
+                                  "trip_mult": mult})
+    return stats
+
+
+def _scan_trip_counts(hlo_text: str) -> Dict[str, int]:
+    """Best-effort: body computation name -> trip count for scan loops."""
+    out: Dict[str, int] = {}
+    # while ops reference body=%name; trip count appears in backend_config
+    # or via the condition's compare-with-constant. Try known_trip_count.
+    for m in re.finditer(
+            r'body=%?([\w\.\-]+).{0,400}?"known_trip_count":\{"n":"(\d+)"\}',
+            hlo_text, re.S):
+        out[m.group(1)] = int(m.group(2))
+    if out:
+        return out
+    # fallback: constants in while conditions "compare(..., constant.N)"
+    for m in re.finditer(
+            r'known_trip_count[^\d]*(\d+)[^%]*body=%?([\w\.\-]+)', hlo_text):
+        out[m.group(2)] = int(m.group(1))
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    """All per-chip per-step (compiled SPMD HLO shapes are per-device)."""
+
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_chip: float = 0.0
+    useful_ratio: float = 0.0          # MODEL_FLOPS / HLO_FLOPs
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_hlo(hlo_cost, chips: int,
+                      model_flops_global: float = 0.0) -> RooflineTerms:
+    """hlo_cost: launch.hlo_analysis.HloCost (per-chip numbers)."""
+    flops = float(hlo_cost.flops)
+    byts = float(hlo_cost.bytes_accessed)
+    coll = float(hlo_cost.collective_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf_chip = model_flops_global / chips
+    return RooflineTerms(
+        flops_per_chip=flops, bytes_per_chip=byts,
+        collective_bytes_per_chip=coll, chips=chips, compute_s=compute_s,
+        memory_s=memory_s, collective_s=coll_s, dominant=dominant,
+        model_flops_per_chip=mf_chip,
+        useful_ratio=(mf_chip / flops if flops else 0.0))
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*tokens (train) or 2*N_active*tokens (fwd)."""
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens

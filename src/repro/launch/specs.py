@@ -1,0 +1,147 @@
+"""Input specs + step builders for every (arch x shape) dry-run cell.
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input (no device allocation) — tokens/labels for
+training, request batches + KV caches for serving; modality frontends are
+stubs supplying precomputed frame/patch embeddings per the assignment.
+
+Cell policy (DESIGN.md §4): train_4k -> train_step; prefill_32k -> prefill;
+decode_32k / long_500k -> serve_step (1 token against a seq_len cache).
+long_500k only for sub-quadratic archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+from repro.configs import get_config
+from repro.models.model_registry import build_model
+from repro.train import optimizer as opt_lib
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# archs able to run the 500k-decode cell (sub-quadratic / bounded caches)
+LONG_CONTEXT_ARCHS = {
+    "falcon-mamba-7b",        # SSM: O(1) state
+    "zamba2-1.2b",            # hybrid: SSM + windowed shared attention
+    "h2o-danube-3-4b",        # SWA: ring KV bounded by the window
+    "llama4-maverick-400b-a17b",  # chunked-local rings + sparse global layers
+}
+
+SKIP_NOTES = {
+    "long_500k": "pure full-attention arch: unbounded KV + quadratic "
+                 "prefill at 500k — skipped per assignment "
+                 "(DESIGN.md §4)",
+}
+
+
+def cell_supported(arch: str, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, SKIP_NOTES["long_500k"]
+    return True, ""
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _frontend_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    out = {}
+    if cfg.family == "encdec":
+        out["enc_frames"] = sds((batch, cfg.encoder_seq, cfg.d_model), F32)
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = sds((batch, cfg.num_prefix_tokens,
+                                    cfg.d_model), F32)
+    return out
+
+
+def input_specs(arch: str, shape_name: str,
+                cfg: Optional[ModelConfig] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function's *batch* inputs."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.mode == "train":
+        text = s - (cfg.num_prefix_tokens if cfg.family == "vlm" else 0)
+        out["tokens"] = sds((b, text), I32)
+        out["labels"] = sds((b, text), I32)
+        out.update(_frontend_specs(cfg, b))
+    elif shape.mode == "prefill":
+        text = s - (cfg.num_prefix_tokens if cfg.family == "vlm" else 0)
+        out["tokens"] = sds((b, text), I32)
+        out.update(_frontend_specs(cfg, b))
+    else:  # decode
+        out["tokens"] = sds((b, 1), I32)
+        out["pos"] = sds((), I32)
+    return out
+
+
+# ------------------------------------------------------------ step builders
+def build_train_fn(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    model = build_model(cfg)
+    step = make_train_step(model, cfg, tcfg)
+    return model, step
+
+
+def train_state_structs(model, tcfg: TrainConfig):
+    return jax.eval_shape(lambda k: init_train_state(model, k, tcfg),
+                          jax.random.PRNGKey(0))
+
+
+def build_prefill_fn(cfg: ModelConfig, shape: ShapeConfig, mc=None):
+    model = build_model(cfg)
+
+    def prefill(params, batch):
+        caches = model.init_caches(shape.global_batch, shape.seq_len)
+        kwargs = {k: v for k, v in batch.items() if k != "tokens"}
+        if cfg.family == "encdec":
+            logits, caches2, _ = model.forward(
+                params, batch["tokens"], caches=caches, mc=mc, **kwargs)
+            return logits[:, -1], caches2
+        logits, caches2, _ = model.forward(
+            params, batch["tokens"], caches=caches, mc=mc, **kwargs)
+        return logits[:, -1], caches2
+
+    return model, prefill
+
+
+def build_decode_fn(cfg: ModelConfig, shape: ShapeConfig, mc=None):
+    model = build_model(cfg)
+
+    def serve_step(params, caches, batch):
+        extra = {}
+        if cfg.family == "encdec":
+            extra["cross"] = batch["cross"]
+        logits, new_caches = model.decode_step(
+            params, caches, batch["tokens"], batch["pos"],
+            **({"mc": mc} if cfg.family not in ("encdec",) else {}),
+            **extra)
+        return logits, new_caches
+
+    return model, serve_step
+
+
+def cache_structs(model, cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        functools.partial(model.init_caches, shape.global_batch,
+                          shape.seq_len))
+
+
+def decode_extra_structs(model, cfg: ModelConfig, shape: ShapeConfig):
+    """Extra serve_step inputs beyond tokens/pos (whisper cross-KV)."""
+    if cfg.family != "encdec":
+        return {}
+    b = shape.global_batch
+    nkv, h = cfg.num_kv_heads, cfg.head_dim
+    kv = sds((cfg.num_layers, b, cfg.encoder_seq, nkv, h), jnp.bfloat16)
+    from repro.models.encdec import CrossKV
+    return {"cross": CrossKV(k=kv, v=kv)}

@@ -1,0 +1,103 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Production path on a pod: build the mesh, shard the train state, run the
+preemption-safe loop (checkpoint/resume, heartbeat, straggler detection)
+over the deterministic data pipeline. On this CPU container use ``--smoke``
+(reduced config, 1x1 mesh) — the same code path end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import MeshConfig, TrainConfig
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTextConfig, SyntheticTokenDataset
+from repro.checkpoint.checkpointer import CheckpointManager
+from repro.launch.mesh import make_mesh, single_device_mesh
+from repro.models.model_registry import build_model
+from repro.runtime.fault_tolerance import (Heartbeat, StragglerDetector,
+                                           run_with_fault_tolerance)
+from repro.sharding import context as shctx
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50,
+          global_batch: int = 8, seq_len: int = 64,
+          checkpoint_dir: str = "/tmp/repro_ckpt", checkpoint_every: int = 20,
+          learning_rate: float = 1e-3, log_every: int = 10,
+          metrics_path: str | None = None, resume: bool = True):
+    cfg = get_config(arch, smoke=smoke)
+    tcfg = TrainConfig(learning_rate=learning_rate, warmup_steps=10,
+                       total_steps=steps, checkpoint_every=checkpoint_every,
+                       optimizer="adamw8bit")
+    model = build_model(cfg)
+    mesh = single_device_mesh()
+    shctx.set_mesh_axes(tuple(mesh.axis_names),
+                        tuple(mesh.shape[a] for a in mesh.axis_names))
+
+    ds = SyntheticTokenDataset(SyntheticTextConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=global_batch, seed=tcfg.seed), cfg)
+    step_fn = jax.jit(make_train_step(model, cfg, tcfg))
+    mgr = CheckpointManager(checkpoint_dir, keep=tcfg.keep_checkpoints)
+    if not resume and mgr.latest_step() is not None:
+        import shutil
+        shutil.rmtree(checkpoint_dir, ignore_errors=True)
+    hb = Heartbeat(Path(checkpoint_dir) / "heartbeats")
+    det = StragglerDetector()
+    metrics_log = []
+
+    def make_state():
+        return init_train_state(model, jax.random.PRNGKey(tcfg.seed), tcfg)
+
+    def one_step(state, step):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+        state, metrics = step_fn(state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            metrics_log.append(m)
+            print(f"[train] step {step:5d} loss={m['loss']:.4f} "
+                  f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.2f}")
+        return state
+
+    with jax.set_mesh(mesh):
+        report = run_with_fault_tolerance(
+            total_steps=steps, make_state=make_state, step_fn=one_step,
+            ckpt_manager=mgr, checkpoint_every=checkpoint_every,
+            heartbeat=hb, detector=det)
+    if metrics_path:
+        Path(metrics_path).write_text(json.dumps(metrics_log, indent=2))
+    print(f"[train] done: {report.completed_steps} steps, "
+          f"{report.restarts} restarts, "
+          f"{report.straggler_events} straggler events")
+    return metrics_log, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, smoke=args.smoke, steps=args.steps,
+          global_batch=args.batch, seq_len=args.seq,
+          learning_rate=args.lr, checkpoint_dir=args.ckpt_dir,
+          metrics_path=args.metrics, resume=not args.fresh)
+
+
+if __name__ == "__main__":
+    main()

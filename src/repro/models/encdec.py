@@ -1,0 +1,235 @@
+"""Encoder-decoder transformer (whisper-medium backbone).
+
+Per the assignment the audio conv frontend is a stub: the encoder consumes
+precomputed frame embeddings ``(B, T_enc, d_model)`` from ``input_specs()``.
+Decoder blocks: causal self-attention (KV-cached) + cross-attention over the
+encoder output (K/V precomputed once at prefill) + FFN.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import core as core_lib
+from repro.models.layers.attention import KVCache
+from repro.sharding import context as shctx
+
+Params = Dict
+
+
+class CrossKV(NamedTuple):
+    k: jax.Array    # (B, T_enc, Nkv, H)
+    v: jax.Array
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"norm_attn": core_lib.init_norm(cfg),
+            "attn": attn_lib.init_attention(ks[0], cfg),
+            "norm_ffn": core_lib.init_norm(cfg),
+            "ffn": core_lib.init_mlp(ks[1], cfg)}
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"norm_self": core_lib.init_norm(cfg),
+            "self_attn": attn_lib.init_attention(ks[0], cfg),
+            "norm_cross": core_lib.init_norm(cfg),
+            "cross_attn": attn_lib.init_attention(ks[1], cfg, cross=True),
+            "norm_ffn": core_lib.init_norm(cfg),
+            "ffn": core_lib.init_mlp(ks[2], cfg)}
+
+
+def _specs_enc_block(cfg):
+    return {"norm_attn": core_lib.specs_norm(cfg),
+            "attn": attn_lib.specs_attention(cfg),
+            "norm_ffn": core_lib.specs_norm(cfg),
+            "ffn": core_lib.specs_mlp(cfg)}
+
+
+def _specs_dec_block(cfg):
+    return {"norm_self": core_lib.specs_norm(cfg),
+            "self_attn": attn_lib.specs_attention(cfg),
+            "norm_cross": core_lib.specs_norm(cfg),
+            "cross_attn": attn_lib.specs_attention(cfg, cross=True),
+            "norm_ffn": core_lib.specs_norm(cfg),
+            "ffn": core_lib.specs_mlp(cfg)}
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ne, nd = cfg.encoder_layers, cfg.num_layers
+        keys = jax.random.split(key, ne + nd + 4)
+        enc = [_init_enc_block(keys[i], cfg) for i in range(ne)]
+        dec = [_init_dec_block(keys[ne + i], cfg) for i in range(nd)]
+        return {
+            "embed": core_lib.init_embedding(keys[-1], cfg),
+            "enc_pos": core_lib.init_learned_pos(keys[-2], cfg.encoder_seq,
+                                                 cfg.d_model),
+            "dec_pos": core_lib.init_learned_pos(keys[-3], cfg.max_pos,
+                                                 cfg.d_model),
+            "encoder": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+            "decoder": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+            "enc_final_norm": core_lib.init_norm(cfg),
+            "final_norm": core_lib.init_norm(cfg),
+        }
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        stack = lambda tree: jax.tree.map(
+            lambda sp: P(*((None,) + tuple(sp))), tree,
+            is_leaf=lambda v: isinstance(v, P))
+        return {
+            "embed": core_lib.specs_embedding(cfg),
+            "enc_pos": core_lib.specs_learned_pos(),
+            "dec_pos": core_lib.specs_learned_pos(),
+            "encoder": stack(_specs_enc_block(cfg)),
+            "decoder": stack(_specs_dec_block(cfg)),
+            "enc_final_norm": core_lib.specs_norm(cfg),
+            "final_norm": core_lib.specs_norm(cfg),
+        }
+
+    # ---- encoder ----
+    def encode(self, params, enc_frames: jax.Array, *, scan=None) -> jax.Array:
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = enc_frames.astype(dtype)
+        x = core_lib.add_learned_pos(params["enc_pos"], x, 0)
+        x = shctx.constrain_batch(x)
+        t = x.shape[1]
+        positions = jnp.arange(t, dtype=jnp.int32)
+
+        def body(x, p_l):
+            h = core_lib.apply_norm(p_l["norm_attn"], x, cfg)
+            out, _, _ = attn_lib.apply_attention(
+                p_l["attn"], h, cfg=cfg, positions=positions, causal=False)
+            x = x + out
+            h2 = core_lib.apply_norm(p_l["norm_ffn"], x, cfg)
+            x = x + core_lib.apply_mlp(p_l["ffn"], h2, cfg)
+            return x, None
+
+        use_scan = cfg.scan_layers if scan is None else scan
+        if use_scan:
+            body_fn = body
+            if cfg.remat_policy != "none":
+                body_fn = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+        else:
+            for i in range(cfg.encoder_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                            params["encoder"]))
+        return core_lib.apply_norm(params["enc_final_norm"], x, cfg)
+
+    # ---- cross K/V precompute (prefill-time) ----
+    def cross_kv(self, params, enc_out: jax.Array):
+        cfg = self.cfg
+        h, nkv = cfg.head_dim, cfg.num_kv_heads
+
+        def per_layer(p_l):
+            src = enc_out
+            k = (src @ p_l["cross_attn"]["wk"].astype(src.dtype))
+            v = (src @ p_l["cross_attn"]["wv"].astype(src.dtype))
+            if "bv" in p_l["cross_attn"]:
+                v = v + p_l["cross_attn"]["bv"].astype(src.dtype)
+            b, t = src.shape[:2]
+            return CrossKV(k.reshape(b, t, nkv, h), v.reshape(b, t, nkv, h))
+
+        return jax.lax.map(per_layer, params["decoder"])
+
+    # ---- decoder ----
+    def decode(self, params, tokens, enc_out=None, cross=None, *,
+               caches=None, start_pos=0, scan=None):
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = core_lib.embed_tokens(params["embed"], tokens, cfg, dtype)
+        x = core_lib.add_learned_pos(params["dec_pos"], x, start_pos)
+        x = shctx.constrain_batch(x)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32) + start_pos
+
+        def cross_attend(p_l, x, kv: CrossKV):
+            h = core_lib.apply_norm(p_l["norm_cross"], x, cfg)
+            b, sq, _ = h.shape
+            nq, hd = cfg.num_heads, cfg.head_dim
+            q = h @ p_l["cross_attn"]["wq"].astype(h.dtype)
+            if "bq" in p_l["cross_attn"]:
+                q = q + p_l["cross_attn"]["bq"].astype(h.dtype)
+            q = q.reshape(b, sq, nq, hd)
+            mask = jnp.ones((sq, kv.k.shape[1]), bool)
+            out, _ = attn_lib.attend(q, kv.k, kv.v, mask)
+            out = out.reshape(b, sq, nq * hd) @ \
+                p_l["cross_attn"]["wo"].astype(h.dtype)
+            if "bo" in p_l["cross_attn"]:
+                out = out + p_l["cross_attn"]["bo"].astype(h.dtype)
+            return out
+
+        def body(x, xs):
+            p_l, kv_l, cache_l = xs
+            h = core_lib.apply_norm(p_l["norm_self"], x, cfg)
+            out, new_cache, _ = attn_lib.apply_attention(
+                p_l["self_attn"], h, cfg=cfg, positions=positions,
+                cache=cache_l)
+            x = x + out
+            x = x + cross_attend(p_l, x, kv_l)
+            h2 = core_lib.apply_norm(p_l["norm_ffn"], x, cfg)
+            x = x + core_lib.apply_mlp(p_l["ffn"], h2, cfg)
+            return x, new_cache
+
+        if cross is None:
+            assert enc_out is not None
+            cross = self.cross_kv(params, enc_out)
+
+        use_scan = cfg.scan_layers if scan is None else scan
+        if use_scan:
+            body_fn = body
+            if cfg.remat_policy != "none":
+                body_fn = jax.checkpoint(body)
+            x, new_caches = jax.lax.scan(body_fn, x,
+                                         (params["decoder"], cross, caches))
+        else:
+            ncs = [] if caches is not None else None
+            for i in range(cfg.num_layers):
+                xs_i = (jax.tree.map(lambda a: a[i], params["decoder"]),
+                        jax.tree.map(lambda a: a[i], cross),
+                        None if caches is None else
+                        jax.tree.map(lambda a: a[i], caches))
+                x, nc = body(x, xs_i)
+                if ncs is not None:
+                    ncs.append(nc)
+            new_caches = None if ncs is None else \
+                jax.tree.map(lambda *t: jnp.stack(t), *ncs)
+
+        x = core_lib.apply_norm(params["final_norm"], x, cfg)
+        logits = core_lib.unembed(params["embed"], x, cfg)
+        return logits, new_caches
+
+    # ---- top-level entry points ----
+    def forward(self, params, tokens, *, enc_frames, caches=None,
+                start_pos=0, mc=None, scan=None, collect_aux=False):
+        enc_out = self.encode(params, enc_frames, scan=scan)
+        logits, new_caches = self.decode(params, tokens, enc_out=enc_out,
+                                         caches=caches, start_pos=start_pos,
+                                         scan=scan)
+        return logits, new_caches, {}
+
+    def init_caches(self, batch: int, capacity: int):
+        cfg = self.cfg
+        one = attn_lib.init_cache(cfg, batch, capacity)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape),
+            one)
+
+    def decode_step(self, params, caches, tokens, pos, *, cross, mc=None):
+        logits, new_caches = self.decode(params, tokens, cross=cross,
+                                         caches=caches, start_pos=pos)
+        return logits, new_caches

@@ -1,0 +1,170 @@
+"""Hybrid Mamba2 + weight-shared attention backbone (zamba2-1.2b).
+
+A stack of Mamba-2 layers with a single **weight-shared** transformer block
+(attention + FFN) interleaved every ``shared_attn_period`` layers — the
+zamba2 signature. Mamba layers are grouped and scanned; the shared block is
+invoked between groups (weight sharing across invocations is exact). The
+shared block uses a sliding window so the long_500k decode cell stays
+sub-quadratic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import core as core_lib
+from repro.models.layers import ssm as ssm_lib
+from repro.models.layers.attention import KVCache
+from repro.models.layers.ssm import SSMState
+from repro.sharding import context as shctx
+
+Params = Dict
+
+
+class HybridModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.period = cfg.shared_attn_period or cfg.num_layers
+        self.n_groups = cfg.num_layers // self.period
+        self.remainder = cfg.num_layers - self.n_groups * self.period
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 4)
+        layers = [
+            {"norm": core_lib.init_norm(cfg),
+             "mixer": ssm_lib.init_mamba2(keys[i], cfg)}
+            for i in range(cfg.num_layers)
+        ]
+        shared = {
+            "norm_attn": core_lib.init_norm(cfg),
+            "attn": attn_lib.init_attention(keys[-3], cfg),
+            "norm_ffn": core_lib.init_norm(cfg),
+            "ffn": core_lib.init_mlp(keys[-4], cfg),
+        }
+        return {
+            "embed": core_lib.init_embedding(keys[-1], cfg),
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+            "shared": shared,
+            "final_norm": core_lib.init_norm(cfg),
+        }
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        blk = {"norm": core_lib.specs_norm(cfg),
+               "mixer": ssm_lib.specs_mamba2(cfg)}
+        return {
+            "embed": core_lib.specs_embedding(cfg),
+            "layers": jax.tree.map(
+                lambda sp: P(*((None,) + tuple(sp))), blk,
+                is_leaf=lambda v: isinstance(v, P)),
+            "shared": {
+                "norm_attn": core_lib.specs_norm(cfg),
+                "attn": attn_lib.specs_attention(cfg),
+                "norm_ffn": core_lib.specs_norm(cfg),
+                "ffn": core_lib.specs_mlp(cfg),
+            },
+            "final_norm": core_lib.specs_norm(cfg),
+        }
+
+    def _shared_block(self, params, x, positions, cache):
+        cfg = self.cfg
+        p = params["shared"]
+        h = core_lib.apply_norm(p["norm_attn"], x, cfg)
+        window = jnp.asarray(cfg.window_size or attn_lib.GLOBAL_WINDOW,
+                             jnp.int32)
+        out, new_cache, _ = attn_lib.apply_attention(
+            p["attn"], h, cfg=cfg, positions=positions, window=window,
+            cache=cache)
+        x = x + out
+        h2 = core_lib.apply_norm(p["norm_ffn"], x, cfg)
+        return x + core_lib.apply_mlp(p["ffn"], h2, cfg), new_cache
+
+    def forward(self, params, tokens, *, caches=None, start_pos=0,
+                mc=None, scan=None, collect_aux=False, prefix_embeds=None):
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = core_lib.embed_tokens(params["embed"], tokens, cfg, dtype)
+        x = shctx.constrain_batch(x)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32) + start_pos
+        use_scan = cfg.scan_layers if scan is None else scan
+
+        ssm_caches = None if caches is None else caches["ssm"]
+        attn_caches = None if caches is None else caches["attn"]
+
+        def mamba_body(x, xs):
+            p_l, st = xs
+            h = core_lib.apply_norm(p_l["norm"], x, cfg)
+            out, new_state = ssm_lib.apply_mamba2(p_l["mixer"], h, cfg,
+                                                  state=st)
+            return x + out, new_state
+
+        def run_group(x, g0, count, group_idx):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, g0, count, 0)
+            p_g = jax.tree.map(sl, params["layers"])
+            st_g = None if ssm_caches is None else \
+                jax.tree.map(sl, ssm_caches)
+            if use_scan:
+                body = jax.checkpoint(mamba_body) \
+                    if cfg.remat_policy != "none" else mamba_body
+                x, new_states = jax.lax.scan(body, x, (p_g, st_g))
+            else:
+                ns = []
+                for i in range(count):
+                    x, st = mamba_body(x, (
+                        jax.tree.map(lambda a: a[i], p_g),
+                        None if st_g is None else
+                        jax.tree.map(lambda a: a[i], st_g)))
+                    ns.append(st)
+                new_states = None if st_g is None else \
+                    jax.tree.map(lambda *t: jnp.stack(t), *ns)
+            return x, new_states
+
+        new_ssm, new_attn = [], []
+        for g in range(self.n_groups):
+            x, ns = run_group(x, g * self.period, self.period, g)
+            new_ssm.append(ns)
+            ac = None if attn_caches is None else \
+                jax.tree.map(lambda a: a[g], attn_caches)
+            x, nac = self._shared_block(params, x, positions, ac)
+            new_attn.append(nac)
+        if self.remainder:
+            x, ns = run_group(x, self.n_groups * self.period,
+                              self.remainder, self.n_groups)
+            new_ssm.append(ns)
+
+        new_caches = None
+        if caches is not None:
+            ssm_all = jax.tree.map(lambda *t: jnp.concatenate(t, 0),
+                                   *new_ssm)
+            attn_all = jax.tree.map(lambda *t: jnp.stack(t), *new_attn)
+            new_caches = {"ssm": ssm_all, "attn": attn_all}
+
+        x = core_lib.apply_norm(params["final_norm"], x, cfg)
+        logits = core_lib.unembed(params["embed"], x, cfg)
+        return logits, new_caches, {}
+
+    def init_caches(self, batch: int, capacity: int):
+        cfg = self.cfg
+        states = [ssm_lib.init_ssm_state(cfg, batch)
+                  for _ in range(cfg.num_layers)]
+        ssm = jax.tree.map(lambda *t: jnp.stack(t), *states)
+        ring = capacity > (cfg.window_size or capacity)
+        cap = min(capacity, cfg.window_size + 8) if ring else capacity
+        cdt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+        one = attn_lib.init_cache(cfg, batch, cap, ring=ring, dtype=cdt)
+        attn = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape), one)
+        return {"ssm": ssm, "attn": attn}
+
+    def decode_step(self, params, caches, tokens, pos, *, mc=None):
+        logits, new_caches, _ = self.forward(params, tokens, caches=caches,
+                                             start_pos=pos, mc=mc)
+        return logits, new_caches

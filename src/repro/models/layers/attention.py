@@ -1,0 +1,322 @@
+"""Attention: GQA/MQA/MHA with the mask family the assigned archs need.
+
+Variants (selected per config / per layer-kind scalars so alternating
+patterns run inside a single scanned layer stack):
+
+* full causal, sliding-window (mistral/danube/zamba2-shared), chunked-local
+  with periodic global layers (llama4 iRoPE), local/global alternation
+  (gemma2), bidirectional encoder, prefix-LM (paligemma), cross-attention
+  (whisper decoder);
+* attention-logit softcapping (gemma2), QK-norm (llama4), biases (whisper);
+* decode with a preallocated KV cache — linear or ring-buffer (sliding
+  window) layout; ring buffers bound long_500k cache memory by the window.
+
+The layer can additionally emit the **attention-received column sums** that
+ODP's token-importance metric consumes (paper Eq. 6) — computed from the
+same probabilities tensor before it is contracted with V, so the only extra
+cost is an (H,Sq,Sk)->(Sk,) reduction (fused by the `token_importance`
+Pallas kernel on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers.core import _dense_init, apply_rope
+
+Params = Dict
+NEG_INF = -2.0e38
+
+# layer-kind window sentinel: "global" layers get an effectively-infinite
+# window so alternation is a per-layer scalar, not a structural change.
+GLOBAL_WINDOW = np.int32(2 ** 30)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """KV cache; optionally int8-quantized (beyond-paper, KIVI-style).
+
+    int8 mode stores per-(position, head) absmax scales and **folds them
+    into the attention math** instead of dequantizing the cache:
+        scores[.., s] = (q . k_q[s]) * kscale[s]
+        out           = (probs * vscale[s]) @ v_q
+    — exact, zero extra HBM traffic, int8 MXU-native.
+    """
+
+    k: jax.Array          # (B, C, Nkv, H) bf16 or int8
+    v: jax.Array          # (B, C, Nkv, H)
+    pos: jax.Array        # (C,) absolute position stored in each slot (-1 empty)
+    # static: ring-buffer (sliding window) vs linear layout
+    ring: bool = dataclasses.field(default=False,
+                                   metadata=dict(static=True))
+    kscale: Optional[jax.Array] = None   # (B, C, Nkv) f32
+    vscale: Optional[jax.Array] = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.kscale is not None
+
+
+def _kv_quantize(x: jax.Array):
+    """(B, S, Nkv, H) -> int8 codes + (B, S, Nkv) scales."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, h = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _dense_init(ks[0], (d, nq * h)),
+        "wk": _dense_init(ks[1], (d, nkv * h)),
+        "wv": _dense_init(ks[2], (d, nkv * h)),
+        "wo": _dense_init(ks[3], (nq * h, d)),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((nq * h,), jnp.float32)
+        p["bv"] = jnp.zeros((nkv * h,), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((h,), jnp.float32)
+        p["k_norm"] = jnp.ones((h,), jnp.float32)
+    return p
+
+
+def specs_attention(cfg: ModelConfig, cross: bool = False) -> Params:
+    s = {"wq": P("data", "model"), "wk": P("data", "model"),
+         "wv": P("data", "model"), "wo": P("model", "data")}
+    if cfg.attn_bias:
+        s.update(bq=P("model"), bv=P("model"), bo=P(None))
+    if cfg.use_qk_norm:
+        s.update(q_norm=P(None), k_norm=P(None))
+    return s
+
+
+def _qk_rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 ** 2, -1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+def build_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool = True,
+               window: Optional[jax.Array] = None,
+               chunk: Optional[jax.Array] = None,
+               prefix_len: int = 0,
+               k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Boolean (.., Sq, Sk) attention-allowed mask from position vectors."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    allowed = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        allowed &= k <= q
+    if window is not None:
+        allowed &= (q - k) < window
+    if chunk is not None:
+        allowed &= (q // chunk) == (k // chunk)
+    if prefix_len > 0:
+        allowed |= (q < prefix_len) & (k < prefix_len)
+    if k_valid is not None:
+        allowed &= k_valid[..., None, :]
+    return allowed
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array, *,
+           softcap: float = 0.0, need_colsums: bool = False,
+           kscale: Optional[jax.Array] = None,
+           vscale: Optional[jax.Array] = None,
+           ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Core GQA attention.
+
+    q: (B, Sq, Nq, H); k/v: (B, Sk, Nkv, H); mask: (B?, Sq, Sk) bool.
+    kscale/vscale: (B, Sk, Nkv) — int8-KV scales folded into scores/probs.
+    Returns (out (B, Sq, Nq, H), colsums (B, Sk) or None) — colsums are the
+    mean-over-heads attention each key position received (for ODP Eq. 6).
+    """
+    b, sq, nq, h = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, sq, nkv, g, h)
+    scale = 1.0 / np.sqrt(h)
+    # keep operands in model dtype, accumulate in f32 on the MXU — casting
+    # K to f32 materializes a full copy of the KV cache per decode layer
+    # (§Perf: 38 GB/chip/step of convert traffic on mixtral decode_32k)
+    kk = k.astype(q.dtype) if k.dtype == jnp.int8 else k
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, kk,
+                        preferred_element_type=jnp.float32) * scale
+    if kscale is not None:
+        scores = scores * kscale.transpose(0, 2, 1)[:, :, None, None, :]
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    m = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    scores = jnp.where(m, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked query rows (e.g. cache padding) -> zero probabilities
+    probs = jnp.where(m, probs, 0.0)
+    pv = probs
+    if vscale is not None:
+        pv = probs * vscale.transpose(0, 2, 1)[:, :, None, None, :]
+    vv = v.astype(q.dtype) if v.dtype == jnp.int8 else v
+    out = jnp.einsum("bkgqs,bskh->bqkgh", pv.astype(qg.dtype), vv)
+    colsums = None
+    if need_colsums:
+        colsums = probs.sum(axis=(1, 2, 3)) / nq      # (B, Sk)
+    return out.reshape(b, sq, nq, h), colsums
+
+
+def apply_attention(
+    p: Params, x: jax.Array, *, cfg: ModelConfig,
+    positions: jax.Array,
+    window: Optional[jax.Array] = None,
+    chunk: Optional[jax.Array] = None,
+    causal: bool = True,
+    prefix_len: int = 0,
+    kv_src: Optional[jax.Array] = None,
+    cache: Optional[KVCache] = None,
+    need_colsums: bool = False,
+) -> Tuple[jax.Array, Optional[KVCache], Optional[jax.Array]]:
+    """One attention layer.
+
+    positions: (Sq,) absolute positions of the query tokens (decode: the
+    single new position). kv_src: encoder states for cross-attention.
+    Returns (output, updated cache, attention-received colsums).
+    """
+    b, sq, d = x.shape
+    h, nq, nkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    dt = x.dtype
+
+    q = x @ p["wq"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    src = kv_src if kv_src is not None else x
+    k = src @ p["wk"].astype(dt)
+    v = src @ p["wv"].astype(dt)
+    if "bv" in p:
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, sq, nq, h)
+    k = k.reshape(b, -1, nkv, h)
+    v = v.reshape(b, -1, nkv, h)
+
+    if cfg.use_qk_norm:
+        q = _qk_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+
+    if cfg.use_rope and kv_src is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    # --- sequence-parallel attention (§Perf iteration) ---------------------
+    # When the query-head count does not divide the TP axis (arctic 56H,
+    # llama4 40H, paligemma 8H vs model=16), GSPMD falls back to splitting
+    # the head_dim *contraction* and ALL-REDUCES the full (Sq, Sk) score
+    # tensor (observed: 60 GB/layer/chip on arctic prefill_32k). Sharding
+    # queries over the sequence instead keeps scores collective-free; K/V
+    # are small and get gathered once. Applies to training forward AND
+    # prefill (cache-filling) — not single-token decode.
+    from repro.sharding import context as shctx
+    tp = shctx.axis_size("model")
+    if (tp > 1 and kv_src is None and sq > 1
+            and nq % tp != 0 and sq % tp == 0):
+        from jax.sharding import PartitionSpec as _P
+        ba = shctx.batch_axes()
+        q = shctx.constrain(q, _P(ba, "model", None, None))
+        k = shctx.constrain(k, _P(ba, None, None, None))
+        v = shctx.constrain(v, _P(ba, None, None, None))
+
+    new_cache = None
+    kscale = vscale = None
+    if cache is not None and kv_src is None:
+        cap = cache.k.shape[1]
+        s_new = k.shape[1]
+        quant = cache.quantized
+        if quant:
+            kq, ks_new = _kv_quantize(k)
+            vq, vs_new = _kv_quantize(v)
+        else:
+            kq, vq = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+        if s_new > 1 and s_new > cap:
+            # prefill overflowing a ring cache: attend over the fresh K/V
+            # (standard masks), store only the last `cap` positions — older
+            # keys fall outside every local window by construction.
+            assert cache.ring, "linear cache smaller than prefill length"
+            mask = build_mask(positions, positions, causal=causal,
+                              window=window, chunk=chunk,
+                              prefix_len=prefix_len)
+            tail_pos = positions[-cap:]
+            slots = tail_pos % cap
+            ck = cache.k.at[:, slots].set(kq[:, -cap:])
+            cv = cache.v.at[:, slots].set(vq[:, -cap:])
+            cpos = cache.pos.at[slots].set(tail_pos.astype(cache.pos.dtype))
+            cks = cvs = None
+            if quant:
+                cks = cache.kscale.at[:, slots].set(ks_new[:, -cap:])
+                cvs = cache.vscale.at[:, slots].set(vs_new[:, -cap:])
+            new_cache = KVCache(ck, cv, cpos, cache.ring, cks, cvs)
+        else:
+            # decode / fitting prefill: insert then attend over the cache
+            slot = positions[0] % cap if cache.ring else positions[0]
+            ck = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                cache.pos, positions.astype(cache.pos.dtype), (slot,))
+            cks = cvs = None
+            if quant:
+                cks = jax.lax.dynamic_update_slice(cache.kscale, ks_new,
+                                                   (0, slot, 0))
+                cvs = jax.lax.dynamic_update_slice(cache.vscale, vs_new,
+                                                   (0, slot, 0))
+                kscale, vscale = cks, cvs
+            new_cache = KVCache(ck, cv, cpos, cache.ring, cks, cvs)
+            k, v = ck, cv
+            k_pos = cpos
+            k_valid = cpos >= 0
+            mask = build_mask(positions, k_pos, causal=causal, window=window,
+                              chunk=chunk, prefix_len=prefix_len,
+                              k_valid=k_valid)
+    elif kv_src is not None:
+        mask = jnp.ones((sq, kv_src.shape[1]), bool)
+    else:
+        mask = build_mask(positions, positions, causal=causal, window=window,
+                          chunk=chunk, prefix_len=prefix_len)
+
+    out, colsums = attend(q, k, v, mask, softcap=cfg.attn_logit_softcap,
+                          need_colsums=need_colsums, kscale=kscale,
+                          vscale=vscale)
+    out = out.reshape(b, sq, nq * h) @ p["wo"].astype(dt)
+    if "bo" in p:
+        out = out + p["bo"].astype(dt)
+    return out, new_cache, colsums
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, *,
+               ring: bool = False, dtype=jnp.bfloat16) -> KVCache:
+    nkv, h = cfg.num_kv_heads, cfg.head_dim
+    quant = getattr(cfg, "kv_quant", False)
+    if quant:
+        dtype = jnp.int8
+    return KVCache(
+        k=jnp.zeros((batch, capacity, nkv, h), dtype),
+        v=jnp.zeros((batch, capacity, nkv, h), dtype),
+        pos=jnp.full((capacity,), -1, jnp.int32),
+        ring=ring,
+        kscale=jnp.zeros((batch, capacity, nkv), jnp.float32) if quant
+        else None,
+        vscale=jnp.zeros((batch, capacity, nkv), jnp.float32) if quant
+        else None,
+    )
+
+
+def cache_specs(ring: bool = False) -> KVCache:
+    return KVCache(k=P(("data",), None, "model", None),
+                   v=P(("data",), None, "model", None),
+                   pos=P(None), ring=ring)

@@ -1,0 +1,161 @@
+"""Primitive layers: norms, rotary embeddings, dense MLP, embeddings.
+
+Functional module convention used across the zoo: each layer provides
+``init_<name>(key, cfg, ...) -> params`` returning a dict pytree, an
+``apply``-style function, and ``specs_<name>(...) -> matching pytree of
+PartitionSpec`` for the partitioner.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+
+Params = Dict
+
+
+def _dense_init(key, shape, in_axis_size=None) -> jax.Array:
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ norms
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None) -> Params:
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def specs_norm(cfg: ModelConfig) -> Params:
+    s = {"scale": P(None)}
+    if cfg.norm_type == "layernorm":
+        s["bias"] = P(None)
+    return s
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = x32.mean(-1, keepdims=True)
+        var = jnp.mean((x32 - mu) ** 2, -1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(x32 ** 2, -1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rotary
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, N, H); positions: broadcastable to (..., S)."""
+    h = x.shape[-1]
+    freqs = rope_frequencies(h, theta)                        # (H/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, H/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, H/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    p = {"w_in": _dense_init(keys[0], (d, f)),
+         "w_out": _dense_init(keys[1], (f, d))}
+    if cfg.mlp_gated:
+        p["w_gate"] = _dense_init(keys[2], (d, f))
+    return p
+
+
+def specs_mlp(cfg: ModelConfig) -> Params:
+    s = {"w_in": P("data", "model"), "w_out": P("model", "data")}
+    if cfg.mlp_gated:
+        s["w_gate"] = P("data", "model")
+    return s
+
+
+def mlp_activation(cfg: ModelConfig):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[cfg.mlp_act]
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = mlp_activation(cfg)
+    dt = x.dtype
+    h = x @ p["w_in"].astype(dt)
+    if cfg.mlp_gated:
+        h = act(x @ p["w_gate"].astype(dt)) * h
+    else:
+        h = act(h)
+    return h @ p["w_out"].astype(dt)
+
+
+# -------------------------------------------------------------- embedding
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 2)
+    p = {"table": (jax.random.normal(keys[0],
+                                     (cfg.vocab_size, cfg.d_model)) * 0.02
+                   ).astype(jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(keys[1], (cfg.d_model, cfg.vocab_size),
+                                   in_axis_size=cfg.d_model)
+    return p
+
+
+def specs_embedding(cfg: ModelConfig) -> Params:
+    s = {"table": P("model", "data")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = P("data", "model")
+    return s
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ModelConfig,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0).astype(dtype)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def unembed(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    table = p.get("unembed")
+    if table is None:
+        table = p["table"].T
+    logits = x.astype(jnp.float32) @ table.astype(jnp.float32)
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ------------------------------------------------------- learned positions
+def init_learned_pos(key, max_len: int, d: int) -> Params:
+    return {"pos": (jax.random.normal(key, (max_len, d)) * 0.02
+                    ).astype(jnp.float32)}
+
+
+def specs_learned_pos() -> Params:
+    return {"pos": P(None, "data")}
+
+
+def add_learned_pos(p: Params, x: jax.Array, offset=0) -> jax.Array:
+    s = x.shape[-2]
+    pos = jax.lax.dynamic_slice_in_dim(p["pos"], offset, s, 0)
+    return x + pos.astype(x.dtype)

@@ -1,0 +1,251 @@
+"""Mixture-of-Experts layer with MC integration.
+
+Dispatch is GShard-style **capacity-based top-C gather** (static shapes, no
+one-hot dispatch tensor — memory O(B*E*C*d) = O(k * cf * tokens * d)):
+
+1. router -> top-k (expert, weight) per token;
+2. **ODP hook** (paper Sec. 3.3): secondary experts with ``w1/w0 < mu`` are
+   pruned unless the token is protected by its importance score; pruned
+   assignments never enter the dispatch, and the calibrated prune rate
+   shrinks the static expert capacity (``capacity_scale``) — the TPU-native
+   form of the paper's dynamic compute saving;
+3. per expert, top-C token selection by router score (capacity dropping);
+4. batched expert FFN — dense bf16 einsum, or the **PMQ quantized path**:
+   experts are stored class-sorted by allocated bit-width and each class runs
+   the fused dequant GEMM (`kernels.quant_matmul`) on its packed planes;
+5. weighted scatter-combine (+ optional always-on shared expert — llama4 —
+   and/or parallel dense residual branch — arctic).
+
+Decode batches (S == 1) are re-laid out as a single token group so capacity
+math stays meaningful (C = ceil(k * B * cf / E) instead of per-row C >= 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.core import odp as odp_lib
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.models.layers.core import (_dense_init, init_mlp, mlp_activation,
+                                      specs_mlp)
+
+Params = Dict
+
+
+@dataclass(frozen=True)
+class MoEQuantMeta:
+    """Static metadata for PMQ-quantized experts (class-sorted layout)."""
+
+    bit_classes: Tuple[int, ...]     # ascending widths present, e.g. (1, 2, 3)
+    class_counts: Tuple[int, ...]    # experts per class; sums to num_experts
+    group_size: int = 128
+    pack_block: int = 128
+
+    def class_slices(self):
+        out, start = [], 0
+        for bits, cnt in zip(self.bit_classes, self.class_counts):
+            out.append((bits, start, cnt))
+            start += cnt
+        return out
+
+
+@dataclass(frozen=True)
+class OdpRuntime:
+    """Static ODP inference settings (calibrated).
+
+    importance_metric: how token importance (for protection) is computed —
+    ``eq6`` (paper: l1 x attention received), ``l1`` (attention-free archs,
+    DESIGN.md §4), or the Tab. 11 ablation baselines ``kurtosis`` /
+    ``variance`` / ``mean``.
+    """
+
+    threshold: float
+    protect_ratio: float
+    capacity_scale: float = 1.0
+    enabled: bool = True
+    importance_metric: str = "eq6"
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": _dense_init(ks[0], (d, e)),
+        "w_in": _dense_init(ks[1], (e, d, f), in_axis_size=d),
+        "w_gate": _dense_init(ks[2], (e, d, f), in_axis_size=d),
+        "w_out": _dense_init(ks[3], (e, f, d), in_axis_size=f),
+    }
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.moe_d_ff)
+    if cfg.dense_residual:
+        p["dense_res"] = init_mlp(ks[5], cfg,
+                                  d_ff=cfg.dense_residual_ff or cfg.d_ff)
+    return p
+
+
+def specs_moe(cfg: ModelConfig) -> Params:
+    s = {
+        "router": P(None, None),
+        "w_in": P("data", None, "model"),
+        "w_gate": P("data", None, "model"),
+        "w_out": P("data", "model", None),
+    }
+    if cfg.shared_expert:
+        s["shared"] = specs_mlp(cfg)
+    if cfg.dense_residual:
+        s["dense_res"] = specs_mlp(cfg)
+    return s
+
+
+def expert_capacity(cfg: ModelConfig, tokens_per_group: int,
+                    capacity_scale: float = 1.0) -> int:
+    c = int(np.ceil(cfg.top_k * tokens_per_group * cfg.capacity_factor
+                    * capacity_scale / cfg.num_experts))
+    c = int(np.ceil(c / 8) * 8) if c > 8 else max(c, 1)
+    return min(c, tokens_per_group)
+
+
+def _route(p, x32, cfg: ModelConfig):
+    logits = x32 @ p["router"].astype(jnp.float32)          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, cfg.top_k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    return logits, probs, topw, topi
+
+
+def _aux_losses(logits, probs, topi, cfg: ModelConfig):
+    e = cfg.num_experts
+    # Switch/GShard load-balance: E * sum_e f_e * p_e
+    hits = jax.nn.one_hot(topi, e, dtype=jnp.float32).sum(-2)    # (B,S,E)
+    frac_tokens = hits.mean(axis=(0, 1)) / cfg.top_k
+    frac_probs = probs.mean(axis=(0, 1))
+    lb = e * jnp.sum(frac_tokens * frac_probs)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return {"load_balance": lb, "router_z": z}
+
+
+def _expert_ffn_dense(p, xg, cfg: ModelConfig):
+    """xg: (B, E, C, D) -> (B, E, C, D) through each expert's gated FFN."""
+    act = mlp_activation(cfg)
+    dt = xg.dtype
+    h = jnp.einsum("becd,edf->becf", xg, p["w_in"].astype(dt))
+    g = jnp.einsum("becd,edf->becf", xg, p["w_gate"].astype(dt))
+    h = act(g) * h
+    return jnp.einsum("becf,efd->becd", h, p["w_out"].astype(dt))
+
+
+def _expert_ffn_quant(p, xg, cfg: ModelConfig, meta: MoEQuantMeta):
+    """PMQ path: per bit-class fused dequant GEMMs over class-sorted experts."""
+    act = mlp_activation(cfg)
+    b, e, c, d = xg.shape
+    outs = []
+    for ci, (bits, e0, cnt) in enumerate(meta.class_slices()):
+        w = p["experts_q"][f"cls{ci}"]
+        xc = xg[:, e0:e0 + cnt]                                  # (B,ec,C,D)
+        xc = xc.transpose(1, 0, 2, 3).reshape(cnt, b * c, d)
+
+        def planes(tag):
+            keys = sorted(k for k in w if k.startswith(f"{tag}_p"))
+            return tuple(w[k] for k in keys)
+
+        def qmm(tag, xin):
+            return quant_matmul(
+                xin, planes(tag), w[f"{tag}_s"],
+                w.get(f"{tag}_z"), bits=bits, group_size=meta.group_size,
+                pack_block=meta.pack_block, out_dtype=jnp.float32)
+
+        h = qmm("in", xc)
+        g = qmm("gate", xc)
+        h = (act(g) * h).astype(xg.dtype)
+        y = qmm("out", h).astype(xg.dtype)                       # (ec,B*C,D)
+        outs.append(y.reshape(cnt, b, c, d).transpose(1, 0, 2, 3))
+    return jnp.concatenate(outs, axis=1)
+
+
+def apply_moe(
+    p: Params, x: jax.Array, cfg: ModelConfig, *,
+    odp: Optional[OdpRuntime] = None,
+    token_importance: Optional[jax.Array] = None,
+    quant_meta: Optional[MoEQuantMeta] = None,
+    capacity_scale: float = 1.0,
+) -> Tuple[jax.Array, Dict]:
+    """MoE layer forward. x: (B, S, D) -> (y, aux).
+
+    aux carries router statistics: load-balance/z losses (training), and the
+    top-k decisions + prune mask (MC calibration / reporting).
+    """
+    b, s, d = x.shape
+    decode_regroup = s == 1 and b > 1
+    if decode_regroup:
+        x = x.reshape(1, b, d)
+        if token_importance is not None:
+            token_importance = token_importance.reshape(1, b)
+        b, s = 1, b
+
+    x32 = x.astype(jnp.float32)
+    logits, probs, topw, topi = _route(p, x32, cfg)
+    aux = _aux_losses(logits, probs, topi, cfg)
+    aux["topk_idx"] = topi
+    aux["topk_weights"] = topw
+
+    eff_scale = capacity_scale
+    if odp is not None and odp.enabled and cfg.top_k >= 2:
+        protected = None
+        if token_importance is not None and odp.protect_ratio > 0:
+            protected = odp_lib.protect_tokens(token_importance,
+                                               odp.protect_ratio)
+        keep = odp_lib.prune_mask(topw, odp.threshold, protected)
+        topw = odp_lib.apply_pruning(topw, keep)
+        aux["odp_keep"] = keep
+        aux["odp_pruned_frac"] = odp_lib.pruned_fraction(keep, cfg.top_k)
+        eff_scale = eff_scale * odp.capacity_scale
+
+    e = cfg.num_experts
+    cap = expert_capacity(cfg, s, eff_scale)
+    aux["capacity"] = cap
+
+    # (B,S,E) post-ODP combine weights
+    full_w = jnp.zeros((b, s, e), jnp.float32)
+    oh = jax.nn.one_hot(topi, e, dtype=jnp.float32)              # (B,S,k,E)
+    full_w = (oh * topw[..., None]).sum(-2)
+
+    # per-expert top-C token choice by router prob (tie-break by position)
+    choice = jnp.where(full_w > 0, probs, -1.0).transpose(0, 2, 1)  # (B,E,S)
+    gscore, gidx = jax.lax.top_k(choice, cap)                    # (B,E,C)
+    w_sel = jnp.take_along_axis(full_w.transpose(0, 2, 1), gidx, -1)
+    valid = (gscore > 0) & (w_sel > 0)
+    w_sel = jnp.where(valid, w_sel, 0.0)
+
+    xg = jax.vmap(lambda xb, ib: xb[ib])(x, gidx)                # (B,E,C,D)
+    if quant_meta is not None:
+        ye = _expert_ffn_quant(p, xg, cfg, quant_meta)
+    else:
+        ye = _expert_ffn_dense(p, xg, cfg)
+    ye = ye * w_sel[..., None].astype(ye.dtype)
+
+    def combine(yb, ib):
+        return jnp.zeros((s, d), yb.dtype).at[ib.reshape(-1)].add(
+            yb.reshape(-1, d), mode="drop")
+
+    y = jax.vmap(combine)(ye, gidx)
+
+    # dropped-token accounting (capacity overflow)
+    aux["dispatched_frac"] = valid.sum() / jnp.maximum(
+        (full_w > 0).sum(), 1)
+
+    if cfg.shared_expert:
+        from repro.models.layers.core import apply_mlp
+        y = y + apply_mlp(p["shared"], x, cfg)
+    if cfg.dense_residual:
+        from repro.models.layers.core import apply_mlp
+        y = y + apply_mlp(p["dense_res"], x, cfg)
+
+    if decode_regroup:
+        y = y.reshape(s, 1, d)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,367 @@
+"""State-space layers: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+Training/prefill uses **chunked scans** to bound the materialized state:
+
+* Mamba-1: sequential ``lax.scan`` over chunks carrying ``h (B, I, N)``;
+  within a chunk the recurrence is an associative scan over
+  ``(exp(dt*A), dt*x*B)`` pairs — O(B * chunk * I * N) transient memory.
+* Mamba-2: the SSD block-decomposition — intra-chunk attention-like matmul
+  ``(C B^T) ⊙ decay`` plus an inter-chunk scalar-decay state pass; all
+  MXU-friendly contractions (the paper's "matmul-form" insight maps directly
+  onto TPU).
+
+Decode is O(1)/token: carry ``(conv_state, h)`` per layer. No KV cache —
+this is why the SSM/hybrid archs are the ones assigned the ``long_500k``
+cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers.core import _dense_init
+
+Params = Dict
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, Kc-1, I) rolling conv inputs
+    h: jax.Array      # mamba1: (B, I, N); mamba2: (B, nh, hd, N)
+
+
+# ----------------------------------------------------------------- common
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via static shifts. x: (B,S,I); w: (I,Kc)."""
+    kc = w.shape[1]
+    out = x * w[:, -1]
+    for i in range(1, kc):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[:, -1 - i]
+    return out + b
+
+
+def _conv_step(state: jax.Array, x_new: jax.Array, w: jax.Array,
+               b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token conv. state: (B, Kc-1, I); x_new: (B, 1, I)."""
+    window = jnp.concatenate([state, x_new], axis=1)      # (B, Kc, I)
+    out = jnp.einsum("bki,ik->bi", window, w) + b
+    return window[:, 1:], out[:, None, :]
+
+
+def _conv_prefill(state: jax.Array, x: jax.Array, w: jax.Array,
+                  b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Multi-token conv continuing from history. x: (B, S, I)."""
+    kc = w.shape[1]
+    hist = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = _causal_conv(hist, w, b)[:, kc - 1:]
+    new_state = hist[:, -(kc - 1):] if kc > 1 else hist[:, :0]
+    return new_state, out
+
+
+# ----------------------------------------------------------------- mamba1
+def init_mamba1(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    i = d * cfg.ssm_expand
+    n, r, kc = cfg.ssm_state, cfg.ssm_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (i, 1))
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * i)),
+        "conv_w": (jax.random.normal(ks[1], (i, kc)) / np.sqrt(kc)
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((i,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (i, r + 2 * n)),
+        "dt_proj": _dense_init(ks[3], (r, i)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (i,))
+                             * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3)),
+                     1e-4))),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((i,), jnp.float32),
+        "out_proj": _dense_init(ks[5], (i, d)),
+    }
+
+
+def specs_mamba1(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": P("data", "model"), "conv_w": P("model", None),
+        "conv_b": P("model"), "x_proj": P("model", None),
+        "dt_proj": P(None, "model"), "dt_bias": P("model"),
+        "a_log": P("model", None), "d_skip": P("model"),
+        "out_proj": P("model", "data"),
+    }
+
+
+def _mamba1_inner(p, x_c, z, cfg: ModelConfig, h0: Optional[jax.Array]):
+    """Selective scan. x_c/z: (B,S,I) post-conv; returns (y, h_last).
+
+    Two schedules (cfg.ssm_scan):
+    * ``assoc`` — chunked associative scan: O(log c) passes over the
+      materialized (B, c, I, N) decay/input tensors (paper-standard form);
+    * ``fused_seq`` (§Perf it.) — sequential ``lax.scan`` over time whose
+      body computes ``exp(dt*A)`` **on the fly** from the (B, I) slice: the
+      (B, S, I, N) tensors are never materialized, cutting the scan's HBM
+      traffic from O(S*I*N*log c) to O(S*(I+N)) + the (B, I, N) carry.
+      The TPU endgame is `kernels/selective_scan` (same dataflow in VMEM).
+    """
+    b, s, i = x_c.shape
+    n = cfg.ssm_state
+    dbc = x_c.astype(jnp.float32) @ p["x_proj"]
+    r = cfg.ssm_dt_rank
+    dt_raw, b_ssm, c_ssm = jnp.split(dbc, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])   # (B,S,I)
+    a = -jnp.exp(p["a_log"])                                        # (I,N)
+    h0 = h0 if h0 is not None else jnp.zeros((b, i, n), jnp.float32)
+    schedule = getattr(cfg, "ssm_scan", "assoc")
+
+    if schedule == "fused_seq":
+        def step(h, args):
+            xt, dt_t, bt, ct = args                 # (B,I),(B,I),(B,N),(B,N)
+            da = jnp.exp(dt_t[..., None] * a)       # (B,I,N) transient
+            h = da * h + (dt_t * xt)[..., None] * bt[:, None, :]
+            y = jnp.einsum("bin,bn->bi", h, ct)
+            return h, y
+
+        sw = lambda t: t.swapaxes(0, 1)             # time-major
+        h_last, ys = jax.lax.scan(
+            step, h0, (sw(x_c.astype(jnp.float32)), sw(delta), sw(b_ssm),
+                       sw(c_ssm)), unroll=4)
+        y = ys.swapaxes(0, 1)
+    else:
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        xp, dp, bp, cp = x_c, delta, b_ssm, c_ssm
+        if pad:
+            xp, dp, bp, cp = (
+                jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                for t in (x_c, delta, b_ssm, c_ssm))
+        nc = (s + pad) // chunk
+
+        def chunk_body(h, args):
+            xc, dl, bs, cs = args                   # (B,c,I), ..., (B,c,N)
+            da = jnp.exp(dl[..., None] * a)         # (B,c,I,N)
+            dbx = (dl * xc.astype(jnp.float32))[..., None] * bs[:, :, None, :]
+
+            def op(l, rgt):
+                return (l[0] * rgt[0], rgt[0] * l[1] + rgt[1])
+
+            cum_a, cum_b = jax.lax.associative_scan(op, (da, dbx), axis=1)
+            h_all = cum_a * h[:, None] + cum_b      # (B,c,I,N)
+            y = jnp.einsum("bcin,bcn->bci", h_all, cs)
+            return h_all[:, -1], y
+
+        resh = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+        h_last, ys = jax.lax.scan(
+            chunk_body, h0, (resh(xp), resh(dp), resh(bp), resh(cp)))
+        y = ys.swapaxes(0, 1).reshape(b, nc * chunk, i)[:, :s]
+
+    y = y + x_c[:, :s].astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y, h_last
+
+
+def apply_mamba1(p: Params, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[SSMState] = None
+                 ) -> Tuple[jax.Array, Optional[SSMState]]:
+    """x: (B,S,D). state given: S == 1 -> decode; S > 1 -> prefill
+    continuing from (and updating) the state."""
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        x_c = jax.nn.silu(_causal_conv(x_in.astype(jnp.float32),
+                                       p["conv_w"], p["conv_b"]))
+        y, _ = _mamba1_inner(p, x_c, z, cfg, None)
+        return (y @ p["out_proj"]).astype(dt), None
+
+    if x.shape[1] > 1:  # prefill with state carry
+        conv_state, xc = _conv_prefill(state.conv, x_in.astype(jnp.float32),
+                                       p["conv_w"], p["conv_b"])
+        x_c = jax.nn.silu(xc)
+        y, h_last = _mamba1_inner(p, x_c, z, cfg, state.h)
+        out = (y @ p["out_proj"]).astype(dt)
+        return out, SSMState(conv_state.astype(x.dtype), h_last)
+
+    conv_state, h = state.conv, state.h
+    conv_state, xc1 = _conv_step(conv_state.astype(jnp.float32),
+                                 x_in.astype(jnp.float32),
+                                 p["conv_w"], p["conv_b"])
+    x_c = jax.nn.silu(xc1)                                   # (B,1,I)
+    n, r = cfg.ssm_state, cfg.ssm_dt_rank
+    dbc = x_c.astype(jnp.float32) @ p["x_proj"]
+    dt_raw, b_ssm, c_ssm = jnp.split(dbc, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])[:, 0]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(delta[..., None] * a)                       # (B,I,N)
+    dbx = (delta * x_c[:, 0].astype(jnp.float32))[..., None] \
+        * b_ssm[:, 0, None, :]
+    h = da * h + dbx
+    y = jnp.einsum("bin,bn->bi", h, c_ssm[:, 0])
+    y = y + x_c[:, 0].astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = (y @ p["out_proj"])[:, None].astype(dt)
+    return out, SSMState(conv_state.astype(x.dtype), h)
+
+
+# ----------------------------------------------------------------- mamba2
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    i = d * cfg.ssm_expand
+    n, kc = cfg.ssm_state, cfg.ssm_conv
+    nh = i // cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * i + 2 * n + nh)),
+        "conv_w": (jax.random.normal(ks[1], (i, kc)) / np.sqrt(kc)
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((i,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((i,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (i, d)),
+    }
+
+
+def specs_mamba2(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": P("data", "model"), "conv_w": P("model", None),
+        "conv_b": P("model"), "a_log": P(None), "dt_bias": P(None),
+        "d_skip": P(None), "norm_w": P("model"),
+        "out_proj": P("model", "data"),
+    }
+
+
+def _split_mamba2(xz, cfg: ModelConfig):
+    i = cfg.d_model * cfg.ssm_expand
+    n = cfg.ssm_state
+    nh = i // cfg.ssm_head_dim
+    z, x_in, b_ssm, c_ssm, dt_raw = jnp.split(
+        xz, [i, 2 * i, 2 * i + n, 2 * i + 2 * n], axis=-1)
+    return z, x_in, b_ssm, c_ssm, dt_raw, nh
+
+
+def _ssd_chunked(x, dt, a, b_ssm, c_ssm, chunk, h0):
+    """Minimal SSD. x: (B,S,nh,hd); dt: (B,S,nh); a: (nh,) (negative);
+    b/c: (B,S,N). Returns (y (B,S,nh,hd), h_last (B,nh,hd,N))."""
+    b, s, nh, hd = x.shape
+    n = b_ssm.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x, dt, b_ssm, c_ssm = (
+            jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+            for t in (x, dt, b_ssm, c_ssm))
+    nc = (s + pad) // chunk
+    log_a = dt * a                                    # (B,S,nh), <= 0
+
+    def chunk_body(h, args):
+        xc, dtc, lac, bc, cc = args
+        cum = jnp.cumsum(lac, axis=1)                 # (B,c,nh)
+        # intra-chunk: masked decay "attention". Mask the *exponent* (not the
+        # exp) so the upper triangle never produces inf -> NaN-grad via where.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]            # (B,t,s,nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30))
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)
+        m = cb[..., None] * decay                     # (B,t,s,nh)
+        dx = dtc[..., None] * xc                      # (B,c,nh,hd)
+        y = jnp.einsum("btsh,bshp->bthp", m, dx)
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("btn,bhpn->bthp", cc, h) \
+            * jnp.exp(cum)[..., None]
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum)          # (B,c,nh)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", dx, bc, tail)
+        return h_new, y
+
+    resh = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(
+        chunk_body, h0,
+        (resh(x), resh(dt), resh(log_a), resh(b_ssm), resh(c_ssm)))
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, nh, hd)[:, :s]
+    return y, h_last
+
+
+def apply_mamba2(p: Params, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[SSMState] = None
+                 ) -> Tuple[jax.Array, Optional[SSMState]]:
+    dt_ = x.dtype
+    bsz, s, _ = x.shape
+    i = cfg.d_model * cfg.ssm_expand
+    hd = cfg.ssm_head_dim
+    xz = x @ p["in_proj"].astype(dt_)
+    z, x_in, b_ssm, c_ssm, dt_raw, nh = _split_mamba2(xz, cfg)
+    a = -jnp.exp(p["a_log"])
+    n = cfg.ssm_state
+
+    if state is None or s > 1:
+        if state is None:
+            conv_state = None
+            x_c = jax.nn.silu(_causal_conv(x_in.astype(jnp.float32),
+                                           p["conv_w"], p["conv_b"]))
+            h0 = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+        else:  # prefill continuing from carried state
+            conv_state, xc = _conv_prefill(
+                state.conv, x_in.astype(jnp.float32), p["conv_w"],
+                p["conv_b"])
+            x_c = jax.nn.silu(xc)
+            h0 = state.h
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        xh = x_c.reshape(bsz, s, nh, hd)
+        y, h_last = _ssd_chunked(xh, dt, a, b_ssm.astype(jnp.float32),
+                                 c_ssm.astype(jnp.float32), cfg.ssm_chunk,
+                                 h0)
+        y = y + p["d_skip"][:, None] * xh.astype(jnp.float32)
+        y = y.reshape(bsz, s, i)
+        new_state = None if state is None else \
+            SSMState(conv_state.astype(x.dtype), h_last)
+    else:
+        conv_state, h = state.conv, state.h
+        conv_state, xc1 = _conv_step(conv_state.astype(jnp.float32),
+                                     x_in.astype(jnp.float32),
+                                     p["conv_w"], p["conv_b"])
+        x_c = jax.nn.silu(xc1)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+        xh = x_c[:, 0].reshape(bsz, nh, hd)
+        da = jnp.exp(dt * a)                                   # (B,nh)
+        h = da[:, :, None, None] * h + jnp.einsum(
+            "bhp,bn,bh->bhpn", xh.astype(jnp.float32),
+            b_ssm[:, 0].astype(jnp.float32), dt)
+        y = jnp.einsum("bn,bhpn->bhp", c_ssm[:, 0].astype(jnp.float32), h)
+        y = y + p["d_skip"][:, None] * xh.astype(jnp.float32)
+        y = y.reshape(bsz, 1, i)
+        new_state = SSMState(conv_state.astype(x.dtype), h)
+
+    # gated RMSNorm then out-projection (mamba2 block tail)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y ** 2, -1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_w"]
+    return (y @ p["out_proj"]).astype(dt_), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    i = cfg.d_model * cfg.ssm_expand
+    kc = cfg.ssm_conv
+    if cfg.ssm_type == "mamba1":
+        h = jnp.zeros((batch, i, cfg.ssm_state), jnp.float32)
+    else:
+        nh = i // cfg.ssm_head_dim
+        h = jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32)
+    return SSMState(conv=jnp.zeros((batch, kc - 1, i), jnp.bfloat16), h=h)
+
+
+def ssm_state_specs(cfg: ModelConfig) -> SSMState:
+    if cfg.ssm_type == "mamba1":
+        return SSMState(conv=P(("data",), None, "model"),
+                        h=P(("data",), "model", None))
+    return SSMState(conv=P(("data",), None, "model"),
+                    h=P(("data",), "model", None, None))

@@ -1,0 +1,19 @@
+"""Model factory: ModelConfig -> model object with the common interface.
+
+All models expose: ``init``, ``forward``, ``param_specs``, ``init_caches``,
+``decode_step`` (where the family has one).
+"""
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.models.encdec import EncDecModel
+from repro.models.hybrid import HybridModel
+from repro.models.transformer import DecoderModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg)
+    return DecoderModel(cfg)

@@ -1,0 +1,431 @@
+"""Decoder-only LM assembly covering dense / MoE / SSM / VLM families.
+
+* Layers are stored **stacked** ``(L, ...)`` per super-layer slot and run
+  either under ``lax.scan`` (production: O(1) HLO size, per-layer FSDP
+  all-gathers inside the loop) or a Python loop (smoke tests, calibration
+  passes that want per-layer stats).
+* Alternating attention patterns (gemma2 local/global, llama4 chunked+NoPE)
+  are **per-layer scalars** (window / chunk arrays scanned alongside params)
+  — no structural branching inside the scan body.
+* MoE layers take the MC runtime: ODP pruning fed by the *current layer's*
+  attention-received column sums (paper Eq. 6 / Fig. 4), and the PMQ
+  quantized expert path.
+* ``moe_layer_period > 1`` (llama4) groups one dense + one MoE block per
+  scan step.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import core as core_lib
+from repro.models.layers import moe as moe_lib
+from repro.models.layers import ssm as ssm_lib
+from repro.models.layers.attention import GLOBAL_WINDOW, KVCache
+from repro.models.layers.moe import MoEQuantMeta, OdpRuntime
+from repro.models.layers.ssm import SSMState
+from repro.sharding import context as shctx
+
+Params = Dict
+
+
+@dataclass(frozen=True)
+class MCRuntime:
+    """Static inference-compression settings threaded through the model."""
+
+    odp: Optional[OdpRuntime] = None
+    quant_meta: Optional[MoEQuantMeta] = None
+
+    @property
+    def active(self) -> bool:
+        return self.odp is not None or self.quant_meta is not None
+
+
+# --------------------------------------------------------- layer-kind arrays
+def layer_kinds(cfg: ModelConfig) -> Dict[str, np.ndarray]:
+    """Per-layer (window, chunk) scalars implementing attention alternation."""
+    l = cfg.num_layers
+    window = np.full(l, GLOBAL_WINDOW, np.int32)
+    chunk = np.full(l, GLOBAL_WINDOW, np.int32)
+    if cfg.attn_type == "sliding" and cfg.window_size:
+        window[:] = cfg.window_size
+    elif cfg.attn_type == "local_global":
+        for i in range(l):
+            if (i % cfg.local_global_period) != cfg.local_global_period - 1:
+                window[i] = cfg.window_size
+    elif cfg.attn_type == "chunked":
+        for i in range(l):
+            if (i + 1) % cfg.local_global_period != 0:
+                chunk[i] = cfg.chunk_size
+    return {"window": window, "chunk": chunk}
+
+
+def block_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    if cfg.ssm_type and cfg.family == "ssm":
+        return cfg.ssm_type
+    if cfg.is_moe and layer_idx in set(cfg.moe_layer_ids()):
+        return "moe"
+    return "dense"
+
+
+# ------------------------------------------------------------------- blocks
+def init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 8)
+    if kind == "mamba1":
+        return {"norm": core_lib.init_norm(cfg),
+                "mixer": ssm_lib.init_mamba1(ks[0], cfg)}
+    if kind == "mamba2":
+        return {"norm": core_lib.init_norm(cfg),
+                "mixer": ssm_lib.init_mamba2(ks[0], cfg)}
+    p = {
+        "norm_attn": core_lib.init_norm(cfg),
+        "attn": attn_lib.init_attention(ks[0], cfg),
+    }
+    if not cfg.use_parallel_residual:
+        p["norm_ffn"] = core_lib.init_norm(cfg)
+    if cfg.pre_post_norm:
+        p["post_attn"] = core_lib.init_norm(cfg)
+        p["post_ffn"] = core_lib.init_norm(cfg)
+    if kind == "moe":
+        p["ffn"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = core_lib.init_mlp(ks[1], cfg)
+    return p
+
+
+def specs_block(cfg: ModelConfig, kind: str) -> Params:
+    if kind == "mamba1":
+        return {"norm": core_lib.specs_norm(cfg),
+                "mixer": ssm_lib.specs_mamba1(cfg)}
+    if kind == "mamba2":
+        return {"norm": core_lib.specs_norm(cfg),
+                "mixer": ssm_lib.specs_mamba2(cfg)}
+    s = {"norm_attn": core_lib.specs_norm(cfg),
+         "attn": attn_lib.specs_attention(cfg)}
+    if not cfg.use_parallel_residual:
+        s["norm_ffn"] = core_lib.specs_norm(cfg)
+    if cfg.pre_post_norm:
+        s["post_attn"] = core_lib.specs_norm(cfg)
+        s["post_ffn"] = core_lib.specs_norm(cfg)
+    s["ffn"] = (moe_lib.specs_moe(cfg) if kind == "moe"
+                else core_lib.specs_mlp(cfg))
+    return s
+
+
+def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
+                positions: jax.Array, window=None, chunk=None,
+                prefix_len: int = 0, cache=None,
+                mc: Optional[MCRuntime] = None,
+                capture: bool = False,
+                ) -> Tuple[jax.Array, Any, Dict]:
+    """One residual block. Returns (x, new_cache, aux).
+
+    capture=True additionally stores the FFN/MoE input activations in aux
+    (PMQ calibration taps them for Hessians and eps_{i,j}).
+    """
+    aux: Dict = {}
+    if kind in ("mamba1", "mamba2"):
+        h = core_lib.apply_norm(p["norm"], x, cfg)
+        fn = ssm_lib.apply_mamba1 if kind == "mamba1" else ssm_lib.apply_mamba2
+        out, new_state = fn(p["mixer"], h, cfg, state=cache)
+        return x + out, new_state, aux
+
+    need_colsums = bool(mc and mc.odp is not None
+                        and mc.odp.protect_ratio > 0 and kind == "moe")
+    need_colsums = need_colsums or (capture and kind == "moe")
+    h = core_lib.apply_norm(p["norm_attn"], x, cfg)
+    attn_out, new_cache, colsums = attn_lib.apply_attention(
+        p["attn"], h, cfg=cfg, positions=positions, window=window,
+        chunk=chunk, prefix_len=prefix_len, cache=cache,
+        need_colsums=need_colsums)
+    if cfg.pre_post_norm:
+        attn_out = core_lib.apply_norm(p["post_attn"], attn_out, cfg)
+
+    token_imp = None
+    metric = mc.odp.importance_metric if (mc and mc.odp) else "eq6"
+    if kind == "moe" and metric != "eq6" and (need_colsums or capture):
+        x32 = x.astype(jnp.float32)
+        token_imp = {
+            "l1": lambda: jnp.sum(jnp.abs(x32), -1),
+            "mean": lambda: jnp.mean(jnp.abs(x32), -1),
+            "variance": lambda: x32.var(-1),
+            "kurtosis": lambda: jnp.mean(
+                ((x32 - x32.mean(-1, keepdims=True))
+                 / (x32.std(-1, keepdims=True) + 1e-6)) ** 4, -1),
+        }[metric]()
+    elif need_colsums and colsums is not None:
+        # Eq. 6: l1 magnitude x mean attention received
+        seq = x.shape[1]
+        if cache is None:
+            denom = jnp.maximum(seq - positions, 1).astype(jnp.float32)
+            tl1 = jnp.sum(jnp.abs(x.astype(jnp.float32)), -1)
+            token_imp = tl1 * colsums / denom
+        else:
+            # decode: importance of the *current* tokens from running stats
+            tl1 = jnp.sum(jnp.abs(x.astype(jnp.float32)), -1)
+            token_imp = tl1 * colsums[:, -1:] if colsums.shape[-1] == 1 \
+                else tl1
+
+    if cfg.use_parallel_residual:
+        ffn_out, moe_aux = _apply_ffn(p, h, cfg, kind, mc, token_imp)
+        if cfg.pre_post_norm:
+            ffn_out = core_lib.apply_norm(p["post_ffn"], ffn_out, cfg)
+        aux.update(moe_aux)
+        if capture:
+            aux["ffn_input"] = h
+            aux["token_importance"] = token_imp
+        return x + attn_out + ffn_out, new_cache, aux
+
+    x = x + attn_out
+    h2 = core_lib.apply_norm(p["norm_ffn"], x, cfg)
+    ffn_out, moe_aux = _apply_ffn(p, h2, cfg, kind, mc, token_imp)
+    if cfg.pre_post_norm:
+        ffn_out = core_lib.apply_norm(p["post_ffn"], ffn_out, cfg)
+    aux.update(moe_aux)
+    if capture:
+        aux["ffn_input"] = h2
+        aux["token_importance"] = token_imp
+    return x + ffn_out, new_cache, aux
+
+
+def _apply_ffn(p, h, cfg, kind, mc, token_imp):
+    if kind == "moe":
+        return moe_lib.apply_moe(
+            p["ffn"], h, cfg,
+            odp=mc.odp if mc else None,
+            token_importance=token_imp,
+            quant_meta=mc.quant_meta if mc else None)
+    return core_lib.apply_mlp(p["ffn"], h, cfg), {}
+
+
+_SCALAR_AUX = ("load_balance", "router_z", "odp_pruned_frac",
+               "dispatched_frac")
+
+
+def _scalar_aux(aux: Dict) -> Dict:
+    return {k: v for k, v in aux.items() if k in _SCALAR_AUX}
+
+
+# -------------------------------------------------------------------- model
+class DecoderModel:
+    """Decoder-only LM (families: dense, moe, ssm, vlm)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = layer_kinds(cfg)
+        moe_period = cfg.moe_layer_period if cfg.is_moe else 1
+        # attention alternation also defines the scan period so per-slot KV
+        # caches can differ (ring for local/chunked slots, linear for global)
+        attn_period = 1
+        if cfg.attn_type in ("local_global", "chunked"):
+            attn_period = cfg.local_global_period
+        period = int(np.lcm(moe_period, attn_period))
+        if cfg.num_layers % period != 0:
+            period = moe_period if cfg.num_layers % moe_period == 0 else 1
+        self.period = period
+        self.slot_kinds = [block_kind(cfg, i) for i in range(self.period)]
+        self.n_steps = cfg.num_layers // self.period
+
+    # ---- params ----
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, self.n_steps * self.period + 2)
+        layers = []
+        for slot in range(self.period):
+            stack = [init_block(keys[step * self.period + slot], cfg,
+                                self.slot_kinds[slot])
+                     for step in range(self.n_steps)]
+            layers.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stack))
+        p = {"embed": core_lib.init_embedding(keys[-1], cfg),
+             "final_norm": core_lib.init_norm(cfg)}
+        for slot in range(self.period):
+            p[f"layers{slot}"] = layers[slot]
+        if not cfg.use_rope and cfg.family != "ssm":
+            p["pos"] = core_lib.init_learned_pos(keys[-2], cfg.max_pos,
+                                                 cfg.d_model)
+        return p
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        s = {"embed": core_lib.specs_embedding(cfg),
+             "final_norm": core_lib.specs_norm(cfg)}
+        for slot in range(self.period):
+            blk = specs_block(cfg, self.slot_kinds[slot])
+            s[f"layers{slot}"] = jax.tree.map(
+                lambda spec: P(*((None,) + tuple(spec))), blk,
+                is_leaf=lambda v: isinstance(v, P))
+        if not cfg.use_rope and cfg.family != "ssm":
+            s["pos"] = core_lib.specs_learned_pos()
+        return s
+
+    # ---- kind arrays reshaped per (step, slot) ----
+    def _kind_arrays(self):
+        w = self.kinds["window"].reshape(self.n_steps, self.period)
+        c = self.kinds["chunk"].reshape(self.n_steps, self.period)
+        return jnp.asarray(w), jnp.asarray(c)
+
+    # ---- forward ----
+    def forward(self, params: Params, tokens: jax.Array, *,
+                prefix_embeds: Optional[jax.Array] = None,
+                caches=None, start_pos: int | jax.Array = 0,
+                mc: Optional[MCRuntime] = None,
+                scan: Optional[bool] = None,
+                collect_aux: bool = False,
+                capture: bool = False,
+                moe_layer_params: Optional[list] = None,
+                moe_layer_metas: Optional[list] = None,
+                ) -> Tuple[jax.Array, Any, Dict]:
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = core_lib.embed_tokens(params["embed"], tokens, cfg, dtype)
+        prefix_len = 0
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+            prefix_len = prefix_embeds.shape[1]
+        if "pos" in params:
+            off = start_pos if not isinstance(start_pos, int) else start_pos
+            x = core_lib.add_learned_pos(params["pos"], x, off)
+        x = shctx.constrain_batch(x)
+
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32) + start_pos
+        use_scan = cfg.scan_layers if scan is None else scan
+        win_arr, chunk_arr = self._kind_arrays()
+
+        def run_slot(x, p_l, cache_l, slot, w, c):
+            return apply_block(
+                p_l, x, cfg, self.slot_kinds[slot], positions=positions,
+                window=w, chunk=c, prefix_len=prefix_len, cache=cache_l,
+                mc=mc, capture=capture and not use_scan)
+
+        aux_all: Dict = {}
+        if use_scan:
+            def body(x, xs):
+                step_params, step_caches, wrow, crow = xs
+                new_caches, auxes = [], {}
+                for slot in range(self.period):
+                    cache_l = None if step_caches is None else \
+                        step_caches[slot]
+                    x, nc, aux = run_slot(x, step_params[slot], cache_l,
+                                          slot, wrow[slot], crow[slot])
+                    new_caches.append(nc)
+                    auxes.update({f"{k}_s{slot}": v for k, v in
+                                  _scalar_aux(aux).items()})
+                if cfg.remat_policy != "none":
+                    x = shctx.constrain_batch(x)
+                return x, (tuple(new_caches) if step_caches is not None
+                           else None, auxes)
+
+            body_fn = body
+            if cfg.remat_policy == "minimal":
+                body_fn = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            elif cfg.remat_policy == "full":
+                body_fn = jax.checkpoint(body)
+
+            step_params = tuple(params[f"layers{slot}"]
+                                for slot in range(self.period))
+            xs = (step_params, caches, win_arr, chunk_arr)
+            x, (new_caches, aux_stack) = jax.lax.scan(body_fn, x, xs)
+            if aux_stack:
+                aux_all = {k: jnp.mean(v) for k, v in aux_stack.items()}
+        else:
+            new_caches = [] if caches is not None else None
+            per_layer_aux = []
+            moe_counter = 0
+            for step in range(self.n_steps):
+                step_caches = None
+                if caches is not None:
+                    step_caches = jax.tree.map(lambda a: a[step], caches,
+                                               is_leaf=_is_arr)
+                ncs = []
+                for slot in range(self.period):
+                    p_l = jax.tree.map(lambda a: a[step],
+                                       params[f"layers{slot}"])
+                    cache_l = None if step_caches is None else \
+                        step_caches[slot]
+                    mc_l = mc
+                    if (self.slot_kinds[slot] == "moe"
+                            and moe_layer_params is not None):
+                        p_l = {**p_l, "ffn": moe_layer_params[moe_counter]}
+                        mc_l = MCRuntime(
+                            odp=mc.odp if mc else None,
+                            quant_meta=moe_layer_metas[moe_counter])
+                        moe_counter += 1
+                    x, nc, aux = apply_block(
+                        p_l, x, cfg, self.slot_kinds[slot],
+                        positions=positions,
+                        window=win_arr[step, slot],
+                        chunk=chunk_arr[step, slot],
+                        prefix_len=prefix_len, cache=cache_l, mc=mc_l,
+                        capture=capture)
+                    ncs.append(nc)
+                    if collect_aux:
+                        per_layer_aux.append(aux)
+                if caches is not None:
+                    new_caches.append(tuple(ncs))
+            if caches is not None:
+                new_caches = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *new_caches, is_leaf=_is_arr)
+            if collect_aux:
+                aux_all["per_layer"] = per_layer_aux
+
+        x = core_lib.apply_norm(params["final_norm"], x, cfg)
+        logits = core_lib.unembed(params["embed"], x, cfg)
+        return logits, new_caches, aux_all
+
+    # ---- caches ----
+    def init_caches(self, batch: int, capacity: int):
+        cfg = self.cfg
+        cdt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+
+        def one(slot):
+            kind = self.slot_kinds[slot]
+            if kind in ("mamba1", "mamba2"):
+                return ssm_lib.init_ssm_state(cfg, batch)
+            # per-slot locality: a bounded ring buffer suffices for sliding /
+            # chunked-local slots; global slots keep the full linear cache
+            w = int(self.kinds["window"][slot])
+            c = int(self.kinds["chunk"][slot])
+            local_span = min(w, c)
+            ring = 0 < local_span < capacity
+            cap = min(capacity, local_span + 8) if ring else capacity
+            return attn_lib.init_cache(cfg, batch, cap, ring=ring, dtype=cdt)
+
+        caches = []
+        for step in range(self.n_steps):
+            caches.append(tuple(one(s) for s in range(self.period)))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches,
+                            is_leaf=_is_arr)
+
+    def cache_specs(self):
+        cfg = self.cfg
+
+        def one(kind):
+            if kind in ("mamba1", "mamba2"):
+                sp = ssm_lib.ssm_state_specs(cfg)
+            else:
+                sp = attn_lib.cache_specs()
+            return jax.tree.map(lambda v: P(*((None,) + tuple(v))), sp,
+                                is_leaf=lambda v: isinstance(v, P))
+
+        return tuple(one(self.slot_kinds[s]) for s in range(self.period))
+
+    def decode_step(self, params, caches, tokens, pos, *,
+                    mc: Optional[MCRuntime] = None):
+        """tokens: (B, 1); pos: scalar int32 current position."""
+        logits, new_caches, _ = self.forward(
+            params, tokens, caches=caches, start_pos=pos, mc=mc)
+        return logits, new_caches
+
+
+def _is_arr(x):
+    return isinstance(x, (jax.Array, np.ndarray)) or hasattr(x, "shape")

@@ -1,0 +1,16 @@
+from repro.quant.quantizer import (  # noqa: F401
+    QuantParams, quantize, dequantize, quant_dequant, quantization_mse,
+    compute_scales, quantize_with,
+)
+from repro.quant.binary import (  # noqa: F401
+    BinaryParams, binarize, debinarize, binary_quant_dequant,
+    binary_matmul_addsub,
+)
+from repro.quant.packing import (  # noqa: F401
+    PackedWeight, pack_codes, unpack_codes, pack_quantized,
+    dequantize_packed, packed_bits_per_param,
+)
+from repro.quant.gptq import (  # noqa: F401
+    GPTQResult, accumulate_hessian, init_hessian, gptq_quantize,
+    gptq_dequantize, rtn_quantize, reconstruction_loss,
+)

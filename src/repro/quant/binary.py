@@ -1,0 +1,80 @@
+"""1-bit expert quantization (MC paper Appendix A.2).
+
+``B = sign(W)``; storage uses the paper's bit transform
+``B~ = (sign(W) + 1) / 2 in {0,1}`` so each element costs exactly one bit.
+Dequantization is ``W_hat = s * (2*B~ - 1)``.
+
+The paper uses a single per-matrix scale ``s = ||W||_1 / (d*m)``
+(XNOR-Net style). We default to per-(group, column) mean-|W| scales — the
+same ``(n_groups, d_out)`` layout as the affine quantizer — which is strictly
+more accurate and keeps the packed-GEMM kernel uniform across bit-widths;
+``per_tensor=True`` reproduces the paper exactly.
+
+TPU adaptation note (DESIGN.md §3): the paper's add/sub trick replaces
+multiplies on scalar pipelines; on TPU the MXU makes the multiply free and
+the win is the 16x storage/bandwidth reduction, which the packing provides.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BinaryParams(NamedTuple):
+    bits_plane: jax.Array   # (d_in, d_out) uint8 in {0,1}  (B~ of the paper)
+    scales: jax.Array       # (n_groups, d_out) f32 (or (1, 1) if per-tensor)
+    group_size: int
+
+
+def binarize(w: jax.Array, group_size: int, per_tensor: bool = False
+             ) -> BinaryParams:
+    w32 = w.astype(jnp.float32)
+    sign01 = (w32 >= 0).astype(jnp.uint8)
+    if per_tensor:
+        s = jnp.mean(jnp.abs(w32)).reshape(1, 1)
+        return BinaryParams(sign01, s, group_size=w.shape[0])
+    d_in, d_out = w.shape
+    assert d_in % group_size == 0
+    g = jnp.abs(w32).reshape(d_in // group_size, group_size, d_out)
+    s = jnp.mean(g, axis=1)
+    return BinaryParams(sign01, s, group_size)
+
+
+def debinarize(bp: BinaryParams, dtype=jnp.float32) -> jax.Array:
+    d_in, d_out = bp.bits_plane.shape
+    pm1 = bp.bits_plane.astype(jnp.float32) * 2.0 - 1.0
+    if bp.scales.size == 1:
+        w = pm1 * bp.scales.reshape(())
+    else:
+        g = pm1.reshape(bp.scales.shape[0], bp.group_size, d_out)
+        w = (g * bp.scales[:, None, :]).reshape(d_in, d_out)
+    return w.astype(dtype)
+
+
+def binary_quant_dequant(w: jax.Array, group_size: int,
+                         per_tensor: bool = False) -> jax.Array:
+    return debinarize(binarize(w, group_size, per_tensor), dtype=w.dtype)
+
+
+def binary_matmul_addsub(x: jax.Array, bp: BinaryParams) -> jax.Array:
+    """Paper Eq. (10): s * (sum_{B~=1} x_j - sum_{B~=0} x_j).
+
+    Reference for the multiplication-free formulation. Numerically identical
+    to ``x @ debinarize(bp)`` for per-tensor scales; kept as the fidelity
+    oracle for the add/sub claim in tests.
+    """
+    b = bp.bits_plane.astype(x.dtype)
+    pos = x @ b                       # sum over B~ == 1
+    neg = x.sum(axis=-1, keepdims=True) - pos
+    if bp.scales.size == 1:
+        return bp.scales.reshape(()) * (pos - neg)
+    # grouped scales: fold scale into per-group partial sums
+    d_in, d_out = bp.bits_plane.shape
+    n_g = bp.scales.shape[0]
+    xg = x.reshape(*x.shape[:-1], n_g, bp.group_size)
+    bg = b.reshape(n_g, bp.group_size, d_out)
+    pos = jnp.einsum("...gk,gko->...go", xg, bg)
+    neg = xg.sum(axis=-1)[..., None] - pos
+    return jnp.einsum("...go,go->...o", pos - neg, bp.scales)

@@ -1,0 +1,83 @@
+"""Group-wise uniform affine quantizer (the PMQ building block).
+
+Layout convention used throughout the framework:
+
+* weights ``W`` are ``(d_in, d_out)`` — activations multiply from the left,
+  ``y = x @ W``;
+* quantization groups run along ``d_in`` (the contraction dim), size
+  ``group_size``; each group stores one ``(scale, zero)`` pair **per output
+  column**, i.e. ``scales/zeros`` are ``(n_groups, d_out)``;
+* integer codes live in ``[0, 2**bits - 1]`` stored as ``uint8`` (packing into
+  denser planes is :mod:`repro.quant.packing`'s job).
+
+1-bit weights use sign binarization (:mod:`repro.quant.binary`), not this
+affine quantizer — the MC paper treats them separately (Appendix A.2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantParams(NamedTuple):
+    """Quantized tensor: integer codes + affine dequant parameters."""
+
+    codes: jax.Array    # (d_in, d_out) uint8, values in [0, 2**bits - 1]
+    scales: jax.Array   # (n_groups, d_out) f32
+    zeros: jax.Array    # (n_groups, d_out) f32  (stored as float zero-points)
+    bits: int
+    group_size: int
+
+
+def _group_view(w: jax.Array, group_size: int) -> jax.Array:
+    d_in, d_out = w.shape
+    assert d_in % group_size == 0, (d_in, group_size)
+    return w.reshape(d_in // group_size, group_size, d_out)
+
+
+def compute_scales(w: jax.Array, bits: int, group_size: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Min/max affine scale+zero per (group, out-column)."""
+    maxq = 2 ** bits - 1
+    g = _group_view(w.astype(jnp.float32), group_size)
+    wmax = jnp.maximum(g.max(axis=1), 0.0)
+    wmin = jnp.minimum(g.min(axis=1), 0.0)
+    rng = wmax - wmin
+    scale = jnp.where(rng > 0, rng / maxq, 1.0)
+    zero = jnp.round(-wmin / scale)
+    return scale, zero
+
+
+def quantize_with(w: jax.Array, scales: jax.Array, zeros: jax.Array,
+                  bits: int, group_size: int) -> jax.Array:
+    """Quantize with precomputed (scale, zero); returns uint8 codes."""
+    maxq = 2 ** bits - 1
+    g = _group_view(w.astype(jnp.float32), group_size)
+    q = jnp.clip(jnp.round(g / scales[:, None, :] + zeros[:, None, :]), 0, maxq)
+    return q.reshape(w.shape).astype(jnp.uint8)
+
+
+def quantize(w: jax.Array, bits: int, group_size: int) -> QuantParams:
+    """Round-to-nearest group-wise quantization (the GPTQ-free baseline)."""
+    scales, zeros = compute_scales(w, bits, group_size)
+    codes = quantize_with(w, scales, zeros, bits, group_size)
+    return QuantParams(codes, scales, zeros, bits, group_size)
+
+
+def dequantize(qp: QuantParams, dtype=jnp.float32) -> jax.Array:
+    """codes -> float weights."""
+    g = _group_view(qp.codes.astype(jnp.float32), qp.group_size)
+    w = (g - qp.zeros[:, None, :]) * qp.scales[:, None, :]
+    return w.reshape(qp.codes.shape).astype(dtype)
+
+
+def quant_dequant(w: jax.Array, bits: int, group_size: int) -> jax.Array:
+    """Fake-quantization pass (used for reconstruction-error probes)."""
+    return dequantize(quantize(w, bits, group_size), dtype=w.dtype)
+
+
+def quantization_mse(w: jax.Array, bits: int, group_size: int) -> jax.Array:
+    wq = quant_dequant(w, bits, group_size)
+    return jnp.mean((w.astype(jnp.float32) - wq.astype(jnp.float32)) ** 2)

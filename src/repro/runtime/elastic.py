@@ -1,0 +1,81 @@
+"""Elastic scaling: re-mesh after node loss / fleet resize.
+
+Checkpoints are topology-free (full logical arrays, see checkpoint/), so
+elasticity reduces to (1) planning a new mesh from the surviving device
+count, (2) recomputing shardings for it, (3) rescaling the data plan.
+``plan_elastic`` shrinks the ``data`` axis first (pure DP/FSDP degree —
+model math unchanged), dropping to smaller power-of-two factors; the
+``model`` axis is preserved so TP-sharded kernels keep their tile shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.config import MeshConfig
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    old_mesh: MeshConfig
+    new_mesh: MeshConfig
+    new_global_batch: int
+    grad_accum: int          # microbatching to preserve the effective batch
+    note: str
+
+
+def _largest_pow2_leq(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def plan_elastic(mesh: MeshConfig, surviving_devices: int,
+                 global_batch: int) -> ElasticPlan:
+    """New topology after failures, preserving the model axis."""
+    model = mesh.axis_size("model")
+    pods = mesh.axis_size("pod")
+    if surviving_devices < model:
+        raise ValueError(
+            f"cannot keep model axis {model} with {surviving_devices} devices")
+    per_pod = surviving_devices // max(pods, 1)
+    new_data = _largest_pow2_leq(max(per_pod // model, 1))
+    if mesh.multi_pod:
+        new = MeshConfig(shape=(pods, new_data, model),
+                         axis_names=("pod", "data", "model"))
+    else:
+        new = MeshConfig(shape=(new_data, model),
+                         axis_names=("data", "model"))
+
+    old_dp = mesh.axis_size("data") * max(mesh.axis_size("pod"), 1)
+    new_dp = new_data * max(pods, 1)
+    # keep the effective batch via gradient accumulation
+    accum = int(np.ceil(old_dp / new_dp))
+    nb = global_batch // accum
+    nb = max(new_dp, nb - nb % new_dp)
+    return ElasticPlan(
+        old_mesh=mesh, new_mesh=new, new_global_batch=nb, grad_accum=accum,
+        note=(f"data axis {mesh.axis_size('data')} -> {new_data}; "
+              f"grad_accum x{accum} preserves the effective batch"))
+
+
+def validate_resharding(param_shapes: Dict[str, Tuple[int, ...]],
+                        new_mesh: MeshConfig) -> Dict[str, str]:
+    """Check every parameter still shards on the new mesh (divisibility).
+
+    Returns {param_path: issue} for any that must demote to replicated —
+    empty dict means the plan is clean.
+    """
+    issues = {}
+    model = new_mesh.axis_size("model")
+    data = new_mesh.axis_size("data")
+    for path, shape in param_shapes.items():
+        if len(shape) >= 2:
+            if shape[-1] % model != 0 and shape[-1] > 1:
+                issues[path] = f"dim {shape[-1]} ! % model={model}"
+            elif shape[0] % data != 0 and shape[0] > data:
+                issues[path] = f"dim {shape[0]} ! % data={data}"
+    return issues

@@ -1,0 +1,147 @@
+"""Fault tolerance: heartbeat, straggler detection, checkpoint-restart loop.
+
+Designed for the 1000+-node regime (DESIGN.md §5): every worker heartbeats
+to shared storage; the controller-side detector flags dead/straggling
+workers; the training loop is preemption-safe — any crash resumes from the
+last atomic checkpoint with the data pipeline fast-forwarded (deterministic
+step-indexed batches make this exact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Heartbeat:
+    """Per-worker liveness file (shared filesystem / object store)."""
+
+    directory: Path
+    worker_id: int = 0
+
+    def beat(self, step: int, extra: Optional[Dict] = None):
+        self.directory.mkdir(parents=True, exist_ok=True)
+        rec = {"worker": self.worker_id, "step": step, "time": time.time()}
+        if extra:
+            rec.update(extra)
+        tmp = self.directory / f".hb_{self.worker_id}.tmp"
+        tmp.write_text(json.dumps(rec))
+        os.rename(tmp, self.directory / f"hb_{self.worker_id}.json")
+
+    @staticmethod
+    def dead_workers(directory: Path, timeout_s: float,
+                     now: Optional[float] = None) -> List[int]:
+        now = now or time.time()
+        dead = []
+        for f in Path(directory).glob("hb_*.json"):
+            rec = json.loads(f.read_text())
+            if now - rec["time"] > timeout_s:
+                dead.append(rec["worker"])
+        return sorted(dead)
+
+
+@dataclass
+class StragglerDetector:
+    """EWMA step-time z-score detector.
+
+    At fleet scale a straggling host slows every synchronous step; the
+    detector flags sustained outliers so the controller can evict/replace
+    the worker (here: reported via ``flagged``).
+    """
+
+    alpha: float = 0.05
+    z_threshold: float = 4.0
+    warmup: int = 10
+    min_rel_std: float = 0.05      # std floor as a fraction of the mean
+    _mean: float = 0.0
+    _var: float = 0.0
+    _n: int = 0
+    _warm: List[float] = field(default_factory=list)
+    flagged: List[Dict] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self._n += 1
+        if self._n <= self.warmup:
+            self._warm.append(dt)
+            if self._n == self.warmup:
+                self._mean = float(np.mean(self._warm))
+                self._var = float(np.var(self._warm))
+            return False
+        std = max(np.sqrt(self._var), self.min_rel_std * abs(self._mean),
+                  1e-9)
+        z = (dt - self._mean) / std
+        is_straggler = bool(z > self.z_threshold)
+        if is_straggler:
+            self.flagged.append({"step": step, "dt": dt, "z": float(z)})
+        else:
+            # only update stats on healthy steps
+            self._mean = (1 - self.alpha) * self._mean + self.alpha * dt
+            self._var = (1 - self.alpha) * self._var + \
+                self.alpha * (dt - self._mean) ** 2
+        return is_straggler
+
+
+@dataclass
+class FaultToleranceReport:
+    restarts: int = 0
+    failures: List[str] = field(default_factory=list)
+    straggler_events: int = 0
+    completed_steps: int = 0
+
+
+def run_with_fault_tolerance(
+    *, total_steps: int,
+    make_state: Callable[[], Any],
+    step_fn: Callable[[Any, int], Any],
+    ckpt_manager,
+    checkpoint_every: int = 50,
+    max_restarts: int = 3,
+    heartbeat: Optional[Heartbeat] = None,
+    detector: Optional[StragglerDetector] = None,
+    fail_injector: Optional[Callable[[int], None]] = None,
+) -> FaultToleranceReport:
+    """Preemption-safe step loop: crash -> restore -> continue.
+
+    ``step_fn(state, step) -> state``. The data pipeline must be
+    deterministic in ``step`` (see data.pipeline) so restarts are exact.
+    """
+    report = FaultToleranceReport()
+    restarts = 0
+    while True:
+        try:
+            latest = ckpt_manager.latest_step()
+            state = make_state()
+            start = 0
+            if latest is not None:
+                state, start = ckpt_manager.restore(state)
+                start += 1
+            for step in range(start, total_steps):
+                t0 = time.time()
+                if fail_injector is not None:
+                    fail_injector(step)
+                state = step_fn(state, step)
+                dt = time.time() - t0
+                if detector is not None and detector.observe(step, dt):
+                    report.straggler_events += 1
+                if heartbeat is not None:
+                    heartbeat.beat(step)
+                if (step + 1) % checkpoint_every == 0 or \
+                        step == total_steps - 1:
+                    ckpt_manager.save(step, state, block=True)
+                report.completed_steps = step + 1
+            return report
+        except Exception as e:  # noqa: BLE001 — the whole point
+            restarts += 1
+            report.restarts = restarts
+            report.failures.append(
+                f"{type(e).__name__}: {e} @ restart {restarts}")
+            if restarts > max_restarts:
+                raise
+            continue

@@ -1,0 +1,123 @@
+"""Batched serving engine with MC-compressed inference.
+
+Static-batch generation loop over the model's prefill/decode steps:
+requests are grouped into fixed-size batches (left-padded to a common
+prompt length), prefilled once, then decoded step-aligned with the MC
+runtime (PMQ quantized experts + ODP pruning) applied at every step.
+Throughput/latency stats are reported per batch — the harness behind the
+paper's Tab. 13/14 speed analogues in ``benchmarks/bench_memory.py``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.transformer import DecoderModel, MCRuntime
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (L,) int32
+    max_new_tokens: int = 16
+
+
+@dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray
+    prefill_s: float
+    decode_s: float
+    new_tokens: int
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0
+    generated_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        return self.generated_tokens / max(self.decode_s, 1e-9)
+
+
+class ServeEngine:
+    def __init__(self, model: DecoderModel, params, *, batch_size: int = 4,
+                 mc: Optional[MCRuntime] = None, pad_id: int = 0,
+                 greedy: bool = True):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.mc = mc
+        self.pad_id = pad_id
+        self.greedy = greedy
+        self.stats = EngineStats()
+
+        def _prefill(params, tokens, caches):
+            logits, new_caches, _ = model.forward(
+                params, tokens, caches=caches, mc=self.mc)
+            return logits[:, -1], new_caches
+
+        def _decode(params, caches, tokens, pos):
+            logits, new_caches = model.decode_step(params, caches, tokens,
+                                                   pos, mc=self.mc)
+            return logits[:, -1], new_caches
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def _make_batch(self, requests: List[Request]):
+        b = len(requests)
+        lmax = max(len(r.prompt) for r in requests)
+        toks = np.full((b, lmax), self.pad_id, np.int32)
+        for i, r in enumerate(requests):
+            toks[i, lmax - len(r.prompt):] = r.prompt   # left padding
+        return jnp.asarray(toks), lmax
+
+    def run(self, requests: List[Request]) -> List[Result]:
+        out: List[Result] = []
+        for i in range(0, len(requests), self.batch_size):
+            out.extend(self._run_batch(requests[i:i + self.batch_size]))
+        return out
+
+    def _run_batch(self, requests: List[Request]) -> List[Result]:
+        b = len(requests)
+        tokens, lmax = self._make_batch(requests)
+        max_new = max(r.max_new_tokens for r in requests)
+        caches = self.model.init_caches(b, lmax + max_new)
+
+        t0 = time.time()
+        logits, caches = self._prefill(self.params, tokens, caches)
+        logits.block_until_ready()
+        prefill_s = time.time() - t0
+
+        generated = np.zeros((b, max_new), np.int32)
+        t0 = time.time()
+        cur = jnp.argmax(logits, -1).astype(jnp.int32) if self.greedy else \
+            jnp.zeros((b,), jnp.int32)
+        for t in range(max_new):
+            generated[:, t] = np.asarray(cur)
+            logits, caches = self._decode(
+                self.params, caches, cur[:, None],
+                jnp.asarray(lmax + t, jnp.int32))
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(logits)
+        decode_s = time.time() - t0
+
+        self.stats.requests += b
+        self.stats.generated_tokens += b * max_new
+        self.stats.prefill_s += prefill_s
+        self.stats.decode_s += decode_s
+        return [Result(uid=r.uid, tokens=generated[i, :r.max_new_tokens],
+                       prefill_s=prefill_s, decode_s=decode_s,
+                       new_tokens=r.max_new_tokens)
+                for i, r in enumerate(requests)]

@@ -1,0 +1,86 @@
+"""Mesh-axis context: lets model code emit sharding constraints without
+threading mesh objects through every layer.
+
+Axis conventions (DESIGN.md §5):
+* ``model`` — tensor parallelism (attention heads, FFN width, vocab);
+* ``data``  — batch data parallelism AND FSDP parameter sharding AND MoE
+  expert parallelism;
+* ``pod``   — multi-pod data parallelism (gradient all-reduce over DCN).
+
+Single-process CPU tests run with no mesh: constraints become no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh_axes(axes: Optional[Tuple[str, ...]],
+                  sizes: Optional[Tuple[int, ...]] = None) -> None:
+    _state.axes = tuple(axes) if axes else None
+    _state.sizes = dict(zip(axes, sizes)) if (axes and sizes) else {}
+
+
+def mesh_axes() -> Optional[Tuple[str, ...]]:
+    return getattr(_state, "axes", None)
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis if known via set_mesh_axes (else 0 = unknown)."""
+    return getattr(_state, "sizes", {}).get(name, 0)
+
+
+@contextlib.contextmanager
+def use_mesh_axes(axes: Optional[Tuple[str, ...]]):
+    prev = mesh_axes()
+    set_mesh_axes(axes)
+    try:
+        yield
+    finally:
+        set_mesh_axes(prev)
+
+
+def batch_axes():
+    """Axes the global batch is sharded over ('pod','data' when present)."""
+    axes = mesh_axes()
+    if not axes:
+        return None
+    return tuple(a for a in axes if a in ("pod", "data")) or None
+
+
+def fsdp_axis() -> Optional[str]:
+    axes = mesh_axes()
+    return "data" if axes and "data" in axes else None
+
+
+def tp_axis() -> Optional[str]:
+    axes = mesh_axes()
+    return "model" if axes and "model" in axes else None
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op without a mesh."""
+    if mesh_axes() is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def activation_spec(*trailing) -> P:
+    """P(batch_axes, *trailing) — standard activation layout."""
+    return P(batch_axes(), *trailing)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Shard leading (batch) dim over the data axes, rest replicated."""
+    if mesh_axes() is None:
+        return x
+    return constrain(x, P(batch_axes(), *([None] * (x.ndim - 1))))

@@ -1,0 +1,136 @@
+"""Explicit expert-parallel MoE dispatch (shard_map + all_to_all).
+
+The GSPMD gather path (`models/layers/moe.py`) lets XLA choose collectives;
+this module is the deterministic-collective alternative for large expert
+counts (DESIGN.md §5): experts sharded over ``data`` (EP), expert FFN width
+over ``model`` (TP), tokens exchanged with exactly
+
+    2 x all_to_all(data)  +  1 x psum(model)        per MoE layer
+
+— the textbook DP x EP x TP schedule, and the layout the §Roofline
+collective terms can be read off directly.
+
+Capacity semantics: each source shard may send up to
+``cap = ceil(k * T_local * cf * capacity_scale / E)`` tokens to each global
+expert; overflow drops (GShard). ODP integrates as in the gather path —
+pruned slots never enter the send buffers, and the calibrated
+``capacity_scale`` shrinks them statically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.core import odp as odp_lib
+from repro.models.layers.core import mlp_activation
+from repro.models.layers.moe import OdpRuntime, expert_capacity
+
+
+def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
+               odp: Optional[OdpRuntime], capacity_scale: float,
+               data_axis: str, model_axis: str,
+               token_importance: Optional[jax.Array]):
+    """Per-shard body. x_loc: (B_l, S, D); experts local (E_l, D, F_l)."""
+    b_l, s, d = x_loc.shape
+    e = cfg.num_experts
+    e_l = w_in.shape[0]
+    dp = e // e_l
+    k = cfg.top_k
+    t_l = b_l * s
+
+    x_flat = x_loc.reshape(t_l, d)
+    logits = x_flat.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    eff_scale = capacity_scale
+    if odp is not None and odp.enabled and k >= 2:
+        protected = None
+        if token_importance is not None and odp.protect_ratio > 0:
+            protected = odp_lib.protect_tokens(
+                token_importance.reshape(t_l), odp.protect_ratio)
+        keep = odp_lib.prune_mask(topw, odp.threshold, protected)
+        topw = odp_lib.apply_pruning(topw, keep)
+        eff_scale = eff_scale * odp.capacity_scale
+
+    cap = expert_capacity(cfg, t_l, eff_scale)
+
+    # position of each assignment within its destination expert's quota
+    flat_e = topi.reshape(-1)                                  # (T_l*k,)
+    flat_w = topw.reshape(-1)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1, flat_e[:, None],
+                              axis=1)[:, 0]
+    live = (pos < cap) & (flat_w > 0)
+    slot = jnp.where(live, flat_e * cap + pos, e * cap)        # sentinel
+
+    send = jnp.zeros((e * cap + 1, d), x_loc.dtype)
+    tok_ids = jnp.repeat(jnp.arange(t_l), k)
+    send = send.at[slot].set(x_flat[tok_ids], mode="drop")
+    send = send[:-1].reshape(dp, e_l, cap, d)
+
+    # dispatch: destination-major -> expert-major
+    recv = jax.lax.all_to_all(send, data_axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    # recv: (dp, E_l, cap, D): recv[src] = tokens from shard `src`
+    xe = recv.transpose(1, 0, 2, 3).reshape(e_l, dp * cap, d)
+
+    act = mlp_activation(cfg)
+    dt = x_loc.dtype
+    h = jnp.einsum("etd,edf->etf", xe, w_in.astype(dt))
+    g = jnp.einsum("etd,edf->etf", xe, w_gate.astype(dt))
+    ye = jnp.einsum("etf,efd->etd", act(g) * h, w_out.astype(dt))
+    # TP: expert FFN width is model-sharded -> reduce the partial outputs
+    ye = jax.lax.psum(ye, model_axis)
+
+    back = ye.reshape(e_l, dp, cap, d).transpose(1, 0, 2, 3)
+    ret = jax.lax.all_to_all(back, data_axis, split_axis=0, concat_axis=0,
+                             tiled=False)
+    y_slots = jnp.concatenate(
+        [ret.reshape(e * cap, d),
+         jnp.zeros((1, d), ret.dtype)], axis=0)
+
+    y_assign = y_slots[slot] * flat_w[:, None].astype(ret.dtype)
+    y = jax.ops.segment_sum(y_assign, tok_ids, num_segments=t_l)
+    return y.reshape(b_l, s, d).astype(x_loc.dtype)
+
+
+def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
+                        odp: Optional[OdpRuntime] = None,
+                        capacity_scale: float = 1.0,
+                        token_importance: Optional[jax.Array] = None,
+                        data_axis: str = "data",
+                        model_axis: str = "model") -> jax.Array:
+    """shard_map-wrapped MoE layer (dense experts).
+
+    x sharded P(data, None, None); experts P(data, None, model).
+    """
+    fn = functools.partial(
+        _local_moe, cfg=cfg, odp=odp, capacity_scale=capacity_scale,
+        data_axis=data_axis, model_axis=model_axis)
+
+    imp_spec = P(data_axis, None) if token_importance is not None else None
+    in_specs = (P(data_axis, None, None), P(None, None),
+                P(data_axis, None, model_axis),
+                P(data_axis, None, model_axis),
+                P(data_axis, model_axis, None))
+    args = (x, p["router"], p["w_in"], p["w_gate"], p["w_out"])
+    if token_importance is not None:
+        body = lambda xl, r, wi, wg, wo, ti: fn(xl, r, wi, wg, wo,
+                                                token_importance=ti)
+        in_specs = in_specs + (imp_spec,)
+        args = args + (token_importance,)
+    else:
+        body = lambda xl, r, wi, wg, wo: fn(xl, r, wi, wg, wo,
+                                            token_importance=None)
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs,
+        out_specs=P(data_axis, None, None), check_vma=False)(*args)

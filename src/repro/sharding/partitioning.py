@@ -1,0 +1,90 @@
+"""Partitioning utilities: PartitionSpec trees -> NamedSharding trees,
+batch specs, divisibility-safe demotion.
+
+Parameter layout (DESIGN.md §5): FSDP over ``data`` + TP over ``model``;
+``pod`` carries only batch DP (params replicated across pods — cross-pod
+traffic is the gradient all-reduce, DCN-friendly). Any spec axis that does
+not divide its dimension is demoted to replicated rather than relying on
+GSPMD padding — keeps memory_analysis honest.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop axes that don't exist in the mesh or don't divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, axes)
+        if dim % size != 0:
+            # try a prefix of the axes that divides
+            while axes and dim % _axis_size(mesh, axes) != 0:
+                axes = axes[:-1]
+            out.append(axes if axes else None)
+            continue
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def shardings_for(mesh: Mesh, specs, shapes) -> Any:
+    """tree of (spec, ShapeDtypeStruct) -> tree of NamedSharding."""
+    def one(spec, arr):
+        spec = spec if isinstance(spec, P) else P()
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, arr.shape))
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+def batch_spec(mesh: Mesh, global_batch: int, ndim: int = 2) -> P:
+    """Shard the batch dim over (pod, data) when divisible, else demote."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not axes:
+        return P(*([None] * ndim))
+    if global_batch % _axis_size(mesh, axes) != 0:
+        while axes and global_batch % _axis_size(mesh, axes) != 0:
+            axes = axes[:-1]
+    lead = axes if axes else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def spec_tree_to_shardings(mesh: Mesh, spec_tree, shape_tree):
+    """Like shardings_for but tolerates structure mismatches by walking
+    the shape tree and looking specs up positionally."""
+    flat_specs = jax.tree.flatten(
+        spec_tree, is_leaf=lambda v: isinstance(v, P))[0]
+    flat_shapes, treedef = jax.tree.flatten(shape_tree)
+    assert len(flat_specs) == len(flat_shapes), \
+        (len(flat_specs), len(flat_shapes))
+    out = [NamedSharding(mesh, sanitize_spec(mesh, sp, sh.shape))
+           for sp, sh in zip(flat_specs, flat_shapes)]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,87 @@
+"""Training step: loss (CE + z-loss + MoE load-balance) + AdamW update.
+
+Built as a closure over the model so ``jax.jit(step).lower()`` works for the
+multi-pod dry-run. Gradients are clipped by global norm; optional int8
+gradient compression with error feedback runs on the DP gradient path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.train import optimizer as opt_lib
+from repro.train.grad_compression import compress_decompress_ef
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_lib.AdamWState
+    ef: Any                 # error-feedback buffers (or None)
+
+
+def init_train_state(model, key, tcfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    opt = opt_lib.adamw_init(params, tcfg)
+    ef = None
+    if tcfg.grad_compression == "int8_ef":
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt, ef=ef)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       z_loss: float = 0.0) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll = (lse - gold).mean()
+    if z_loss > 0:
+        nll = nll + z_loss * jnp.mean(lse ** 2)
+    return nll
+
+
+def make_loss_fn(model, cfg: ModelConfig, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        kwargs = {}
+        if "enc_frames" in batch:
+            kwargs["enc_frames"] = batch["enc_frames"]
+        if "prefix_embeds" in batch:
+            kwargs["prefix_embeds"] = batch["prefix_embeds"]
+        logits, _, aux = model.forward(params, batch["tokens"], **kwargs)
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:   # vlm prefix offset
+            logits = logits[:, -labels.shape[1]:]
+        loss = cross_entropy_loss(logits, labels, tcfg.z_loss)
+        metrics = {"ce_loss": loss}
+        lb = sum(v for k, v in aux.items() if k.startswith("load_balance"))
+        if cfg.is_moe and not isinstance(lb, int):
+            loss = loss + tcfg.aux_loss_weight * lb
+            metrics["load_balance"] = lb
+        metrics["loss"] = loss
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(model, cfg, tcfg)
+    sched = opt_lib.lr_schedule(tcfg)
+
+    def train_step(state: TrainState, batch: Dict
+                   ) -> Tuple[TrainState, Dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        new_ef = state.ef
+        if state.ef is not None:
+            grads, new_ef = compress_decompress_ef(grads, state.ef)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = sched(state.opt.step)
+        new_params, new_opt = opt_lib.adamw_update(
+            grads, state.opt, state.params, lr, tcfg)
+        metrics.update(grad_norm=gnorm, lr=lr,
+                       step=new_opt.step.astype(jnp.float32))
+        return TrainState(new_params, new_opt, new_ef), metrics
+
+    return train_step

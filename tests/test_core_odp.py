@@ -1,0 +1,117 @@
+"""Tests for expert significance stats and ODP pruning logic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.odp import (
+    OdpConfig, apply_pruning, calibrate, capacity_scale_from_prune_rate,
+    protect_tokens, prune_mask, pruned_fraction,
+)
+from repro.core.significance import ExpertStats
+
+
+class TestExpertStats:
+    def test_frequency_and_weight(self):
+        s = ExpertStats(num_experts=4)
+        idx = jnp.array([[0, 1], [0, 2], [0, 1]])       # 3 tokens, top-2
+        w = jnp.array([[0.9, 0.1], [0.6, 0.4], [0.7, 0.3]])
+        s.update(idx, w)
+        assert s.tokens_seen == 3
+        np.testing.assert_allclose(s.frequency, [1.0, 2 / 3, 1 / 3, 0.0])
+        np.testing.assert_allclose(s.mean_weight,
+                                   [(0.9 + 0.6 + 0.7) / 3, 0.4 / 3 + 0.0,
+                                    0.4 / 3, 0.0], atol=1e-7)
+
+    def test_ratio_median(self):
+        s = ExpertStats(num_experts=2)
+        w = jnp.array([[0.8, 0.2], [0.5, 0.5], [0.6, 0.3]])
+        s.update(jnp.zeros((3, 2), jnp.int32), w)
+        assert s.ratio_median() == pytest.approx(0.5)
+
+    def test_significance_monotone(self):
+        s = ExpertStats(num_experts=3)
+        s.update(jnp.array([[0, 1], [0, 1], [0, 2]]),
+                 jnp.array([[0.9, 0.1], [0.8, 0.2], [0.9, 0.1]]))
+        sig = s.significance(1.0, 1.0)
+        assert sig[0] > sig[1] > sig[2]
+
+
+class TestPruning:
+    def test_low_ratio_pruned(self):
+        w = jnp.array([[0.9, 0.1], [0.6, 0.4]])
+        keep = prune_mask(w, threshold=0.5)
+        np.testing.assert_array_equal(np.asarray(keep),
+                                      [[True, False], [True, True]])
+
+    def test_primary_never_pruned(self):
+        w = jnp.array([[0.99, 0.001], [0.5, 0.0]])
+        keep = prune_mask(w, threshold=0.9)
+        assert bool(keep[..., 0].all())
+
+    def test_protection_overrides(self):
+        w = jnp.array([[0.9, 0.1], [0.9, 0.1]])
+        prot = jnp.array([True, False])
+        keep = prune_mask(w, 0.5, protected=prot)
+        np.testing.assert_array_equal(np.asarray(keep),
+                                      [[True, True], [True, False]])
+
+    def test_top1_noop(self):
+        w = jnp.ones((4, 1))
+        assert bool(prune_mask(w, 0.9).all())
+
+    def test_renormalize(self):
+        w = jnp.array([[0.8, 0.2]])
+        keep = jnp.array([[True, False]])
+        out = apply_pruning(w, keep)
+        np.testing.assert_allclose(np.asarray(out), [[1.0, 0.0]], atol=1e-6)
+
+    @given(mu=st.floats(0.0, 1.0), seed=st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_prune_rate_monotone_in_threshold(self, mu, seed):
+        key = jax.random.PRNGKey(seed)
+        w = jnp.sort(jax.random.uniform(key, (64, 2)), axis=-1)[:, ::-1]
+        f_lo = float(pruned_fraction(prune_mask(w, mu * 0.5), 2))
+        f_hi = float(pruned_fraction(prune_mask(w, mu), 2))
+        assert f_lo <= f_hi + 1e-9
+
+
+class TestProtection:
+    def test_topk_selected(self):
+        imp = jnp.array([0.1, 5.0, 0.2, 3.0, 0.05, 0.0, 1.0, 0.3])
+        mask = protect_tokens(imp, 0.25)  # 2 of 8
+        np.testing.assert_array_equal(
+            np.asarray(mask),
+            [False, True, False, True, False, False, False, False])
+
+    def test_ratio_zero(self):
+        assert not bool(protect_tokens(jnp.arange(8.0), 0.0).any())
+
+    def test_valid_mask_respected(self):
+        imp = jnp.array([9.0, 8.0, 1.0, 0.5])
+        valid = jnp.array([False, True, True, True])
+        mask = protect_tokens(imp, 0.25, valid=valid)
+        assert not bool(mask[0])
+        assert bool(mask[1])
+
+    def test_batched(self):
+        imp = jnp.stack([jnp.arange(8.0), jnp.arange(8.0)[::-1]])
+        mask = protect_tokens(imp, 2 / 8)
+        assert int(mask.sum()) == 4
+        assert bool(mask[0, 7]) and bool(mask[1, 0])
+
+
+class TestCalibration:
+    def test_median_threshold_and_rate(self):
+        rng = np.random.RandomState(0)
+        ratios = rng.uniform(0, 1, 10_000)
+        cfg, rate = calibrate(ratios)
+        assert cfg.threshold == pytest.approx(0.5, abs=0.02)
+        # half the tokens prune their secondary slot -> 1/4 of all slots
+        assert rate == pytest.approx(0.25, abs=0.01)
+
+    def test_capacity_scale(self):
+        s = capacity_scale_from_prune_rate(0.25, top_k=2, protect_ratio=0.02)
+        assert s == pytest.approx(1 - 0.25 * 0.98)
+        assert capacity_scale_from_prune_rate(0.25, 1, 0.02) == 1.0

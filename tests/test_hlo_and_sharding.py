@@ -1,0 +1,111 @@
+"""HLO cost-analysis + partitioning-rule tests.
+
+The multi-device probes run in a subprocess so the main test process keeps
+its single CPU device (the dry-run owns the 512-device configuration).
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import analyze, parse_computations
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+class TestSanitize:
+    def test_sanitize_spec(self):
+        from repro.sharding.partitioning import sanitize_spec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        s = jax.ShapeDtypeStruct((8, 6), jnp_f32())
+        # axes exist and divide
+        assert tuple(sanitize_spec(mesh, P("data", "model"), (8, 16))) == \
+            ("data", "model")
+        # unknown axis dropped
+        assert tuple(sanitize_spec(mesh, P("pod", None), (8, 6))) == \
+            (None, None)
+
+    def test_sanitize_divisibility(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        from repro.sharding.partitioning import sanitize_spec
+        # size-1 axes always divide on a 1x1 mesh
+        assert tuple(sanitize_spec(mesh, P("model"), (7,))) == ("model",)
+
+
+def jnp_f32():
+    import jax.numpy as jnp
+    return jnp.float32
+
+
+_PROBE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys; sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.hlo_analysis import analyze
+    mesh = jax.make_mesh((4,), ("d",))
+    sh = NamedSharding(mesh, P("d", None))
+    N = 256
+    def g(a):
+        def body(c, _):
+            return c @ jnp.ones((N, N), jnp.float32), None
+        out, _ = jax.lax.scan(body, a, None, length=8)
+        return out
+    with jax.set_mesh(mesh):
+        c = jax.jit(g, in_shardings=sh).lower(
+            jax.ShapeDtypeStruct((N, N), jnp.float32)).compile()
+    res = analyze(c.as_text())
+    expect = 8 * 2 * 64 * 256 * 256
+    assert abs(res.flops - expect) / expect < 1e-6, (res.flops, expect)
+    print("PROBE_OK", res.flops)
+""")
+
+
+class TestHloAnalysis:
+    def test_scan_trip_counts_exact(self):
+        """Loop bodies must be counted trip-count times (XLA counts once)."""
+        out = subprocess.run(
+            [sys.executable, "-c", _PROBE.format(src=str(ROOT / "src"))],
+            capture_output=True, text=True, timeout=300)
+        assert "PROBE_OK" in out.stdout, out.stderr[-2000:]
+
+    def test_parse_computations_structure(self):
+        hlo = textwrap.dedent("""\
+        HloModule test
+
+        %fused_computation (param_0: f32[8,8]) -> f32[8,8] {
+          %param_0 = f32[8,8]{1,0} parameter(0)
+          ROOT %c = f32[8,8]{1,0} convert(%param_0)
+        }
+
+        ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+          %p = f32[8,8]{1,0} parameter(0)
+          %dot = f32[8,8]{1,0} dot(%p, %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+          ROOT %f = f32[8,8]{1,0} fusion(%dot), kind=kLoop, calls=%fused_computation
+        }
+        """)
+        comps, entry = parse_computations(hlo)
+        assert entry == "main"
+        assert "fused_computation" in comps
+        cost = analyze(hlo)
+        assert cost.flops == 2 * 8 * 8 * 8
+        assert cost.dot_count == 1
+
+    def test_collective_bytes(self):
+        hlo = textwrap.dedent("""\
+        HloModule test
+
+        ENTRY %main (p: f32[128,128]) -> f32[128,128] {
+          %p = f32[128,128]{1,0} parameter(0)
+          ROOT %ar = f32[128,128]{1,0} all-reduce(%p), replica_groups={}, to_apply=%add
+        }
+        """)
+        cost = analyze(hlo)
+        assert cost.collective_bytes == 128 * 128 * 4
+        assert cost.collective_counts.get("all-reduce") == 1

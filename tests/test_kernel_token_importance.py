@@ -1,0 +1,90 @@
+"""Kernel-vs-oracle tests for the fused token-importance reduction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.binary_matmul.ops import binary_matmul
+from repro.kernels.binary_matmul.ref import binary_matmul_ref
+from repro.kernels.common import pack_kernel_layout
+from repro.kernels.token_importance.ops import token_importance
+from repro.kernels.token_importance.ref import token_importance_ref
+from repro.quant import rtn_quantize
+
+
+def _probs(key, h, l):
+    logits = jax.random.normal(jax.random.PRNGKey(key), (h, l, l))
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    logits = jnp.where(mask[None], logits, -1e9)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+class TestTokenImportance:
+    @pytest.mark.parametrize("h,l", [(2, 128), (4, 256), (8, 128)])
+    def test_matches_ref(self, h, l):
+        probs = _probs(0, h, l)
+        t = jax.random.normal(jax.random.PRNGKey(1), (l, 64))
+        ref = token_importance_ref(probs, t)
+        out = token_importance(probs, t, impl="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_batched(self):
+        probs = jnp.stack([_probs(2, 2, 128), _probs(3, 2, 128)])
+        t = jax.random.normal(jax.random.PRNGKey(4), (2, 128, 32))
+        out = token_importance(probs, t, impl="interpret")
+        ref = jnp.stack([token_importance_ref(probs[i], t[i])
+                         for i in range(2)])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_high_attention_token_ranks_high(self):
+        """A token every query attends to must get top importance."""
+        l, h = 128, 2
+        logits = jnp.full((h, l, l), -1e9)
+        # all causal mass on token 7
+        causal = jnp.tril(jnp.ones((l, l), bool))
+        logits = jnp.where(causal[None], 0.0, -1e9)
+        logits = logits.at[:, :, 7].set(jnp.where(jnp.arange(l) >= 7, 50.0,
+                                                  -1e9)[None, :])
+        probs = jax.nn.softmax(logits, axis=-1)
+        t = jnp.ones((l, 16))
+        imp = token_importance(probs, t, impl="interpret")
+        assert int(jnp.argmax(imp)) == 7
+
+    def test_magnitude_scales_importance(self):
+        probs = _probs(5, 2, 128)
+        t = jnp.ones((128, 16))
+        t = t.at[11].mul(100.0)
+        imp = np.asarray(token_importance(probs, t, impl="interpret"))
+        base = np.asarray(token_importance(probs, jnp.ones((128, 16)),
+                                           impl="interpret"))
+        assert imp[11] / base[11] == pytest.approx(100.0, rel=1e-3)
+
+    def test_non_divisible_length_falls_back(self):
+        probs = _probs(6, 2, 96)
+        t = jax.random.normal(jax.random.PRNGKey(7), (96, 8))
+        out = token_importance(probs, t, impl="interpret")  # falls to ref
+        ref = token_importance_ref(probs, t)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5)
+
+
+class TestBinaryMatmul:
+    @pytest.mark.parametrize("k,n,group", [(128, 128, 128), (256, 128, 64)])
+    def test_matches_ref_and_dense(self, k, n, group):
+        w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.1
+        res = rtn_quantize(w, bits=1, group_size=group)
+        plane = pack_kernel_layout(res.codes, 1, 128)[0]
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, k))
+        ref = binary_matmul_ref(x, plane, res.scales, group_size=group,
+                                pack_block=128)
+        out = binary_matmul(x, plane, res.scales, group_size=group,
+                            impl="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        # dense check: matches x @ dequant(sign(w))
+        from repro.quant import gptq_dequantize
+        dense = x @ gptq_dequantize(res)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,135 @@
+"""End-to-end MC (PMQ + ODP) pipeline tests on a reduced Mixtral.
+
+Validates the paper's qualitative claims at smoke scale:
+* PMQ-compressed model stays close to the FP model (and the error grows as
+  target bits shrink);
+* mixed-precision beats uniform-low-bit at comparable budget;
+* ODP prunes a meaningful fraction of expert activations with bounded
+  logit drift; token protection reduces the drift.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CompressionConfig
+from repro.configs import get_config
+from repro.core import mc as mc_lib
+from repro.models.layers.moe import OdpRuntime
+from repro.models.transformer import DecoderModel, MCRuntime
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("mixtral-8x7b", smoke=True).replace(
+        dtype="float32", d_model=128, d_ff=128, moe_d_ff=128,
+        num_experts=8, capacity_factor=4.0)
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                                cfg.vocab_size)
+    ref_logits, _, _ = model.forward(params, tokens, scan=False)
+    return cfg, model, params, tokens, ref_logits
+
+
+def _compress(setup, target_bits, layout="uniform", group=32):
+    cfg, model, params, tokens, _ = setup
+    ccfg = CompressionConfig(enabled=True, target_bits=target_bits,
+                             group_size=group, odp_enabled=True)
+    return mc_lib.compress(model, params, ccfg, tokens, layout=layout)
+
+
+def _rel_err(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
+
+
+class TestPMQ:
+    def test_compress_and_forward_uniform_layout(self, setup):
+        cfg, model, params, tokens, ref = setup
+        qp, runtime, report = _compress(setup, 2.6)
+        assert runtime.quant_meta is not None, "uniform layout must be scan-safe"
+        logits, _, _ = model.forward(
+            qp, tokens, scan=False,
+            mc=MCRuntime(odp=None, quant_meta=runtime.quant_meta))
+        assert bool(jnp.isfinite(logits).all())
+        err = _rel_err(logits, ref)
+        assert err < 0.5, f"2.6-bit PMQ drifted too far: {err}"
+
+    def test_budget_respected(self, setup):
+        _, runtime, report = _compress(setup, 2.5)
+        assert report.avg_bits <= 2.5 + 1e-6
+        assert report.avg_bits >= 1.5
+        # compression accounting sane: ~2.5/16 of dense + scale overhead
+        assert 0.75 < report.pmq.compression_ratio < 0.95
+
+    def test_error_monotone_in_bits(self, setup):
+        cfg, model, params, tokens, ref = setup
+        errs = []
+        for k in (2.9, 2.0, 1.3):
+            qp, runtime, _ = _compress(setup, k)
+            logits, _, _ = model.forward(
+                qp, tokens, scan=False,
+                mc=MCRuntime(odp=None, quant_meta=runtime.quant_meta))
+            errs.append(_rel_err(logits, ref))
+        assert errs[0] < errs[-1], errs
+
+    def test_scan_and_loop_quantized_agree(self, setup):
+        cfg, model, params, tokens, _ = setup
+        qp, runtime, _ = _compress(setup, 2.6)
+        mc_rt = MCRuntime(odp=None, quant_meta=runtime.quant_meta)
+        l1, _, _ = model.forward(qp, tokens, scan=True, mc=mc_rt)
+        l2, _, _ = model.forward(qp, tokens, scan=False, mc=mc_rt)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_per_layer_layout(self, setup):
+        cfg, model, params, tokens, ref = setup
+        qp, runtime, report = _compress(setup, 2.6, layout="per_layer")
+        logits, _, _ = mc_lib.quantized_forward(
+            model, qp, report.pmq.metas, tokens)
+        assert bool(jnp.isfinite(logits).all())
+        assert _rel_err(logits, ref) < 0.5
+
+
+class TestODP:
+    def test_pruning_reduces_activations(self, setup):
+        cfg, model, params, tokens, ref = setup
+        odp = OdpRuntime(threshold=0.45, protect_ratio=0.02,
+                         capacity_scale=1.0)
+        logits, _, aux = model.forward(
+            params, tokens, scan=False, collect_aux=True,
+            mc=MCRuntime(odp=odp, quant_meta=None))
+        fracs = [a["odp_pruned_frac"] for a in aux["per_layer"]
+                 if "odp_pruned_frac" in a]
+        assert fracs, "no MoE layers saw ODP"
+        mean_frac = float(np.mean([float(f) for f in fracs]))
+        assert 0.0 < mean_frac < 0.5
+        assert _rel_err(logits, ref) < 0.35
+
+    def test_protection_reduces_drift(self, setup):
+        cfg, model, params, tokens, ref = setup
+        errs = {}
+        for ratio in (0.0, 0.25):
+            odp = OdpRuntime(threshold=0.8, protect_ratio=ratio,
+                             capacity_scale=1.0)
+            logits, _, _ = model.forward(
+                params, tokens, scan=False,
+                mc=MCRuntime(odp=odp, quant_meta=None))
+            errs[ratio] = _rel_err(logits, ref)
+        assert errs[0.25] <= errs[0.0] + 1e-6, errs
+
+    def test_calibrated_runtime(self, setup):
+        qp, runtime, report = _compress(setup, 2.6)
+        assert runtime.odp is not None
+        assert 0.0 < runtime.odp.threshold < 1.0
+        assert 0.0 < report.odp_prune_rate <= 0.5
+        assert 0.5 < report.capacity_scale <= 1.0
+
+    def test_full_mc_stack(self, setup):
+        """PMQ + ODP together (the paper's headline configuration)."""
+        cfg, model, params, tokens, ref = setup
+        qp, runtime, report = _compress(setup, 2.6)
+        logits, _, _ = model.forward(qp, tokens, scan=False, mc=runtime)
+        assert bool(jnp.isfinite(logits).all())
+        assert _rel_err(logits, ref) < 0.6

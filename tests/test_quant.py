@@ -1,0 +1,194 @@
+"""Unit + property tests for the quantization substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    accumulate_hessian, binarize, binary_matmul_addsub, binary_quant_dequant,
+    debinarize, dequantize, dequantize_packed, gptq_dequantize, gptq_quantize,
+    init_hessian, pack_codes, pack_quantized, quant_dequant, quantization_mse,
+    quantize, reconstruction_loss, rtn_quantize, unpack_codes,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _w(key, d_in=128, d_out=64):
+    return jax.random.normal(jax.random.PRNGKey(key), (d_in, d_out)) * 0.05
+
+
+# ---------------------------------------------------------------- quantizer
+class TestQuantizer:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_roundtrip_error_bounded(self, bits):
+        w = _w(0)
+        qp = quantize(w, bits, 32)
+        wq = dequantize(qp)
+        # error bounded by half an LSB per element
+        g = w.reshape(-1, 32, w.shape[1])
+        step = qp.scales[:, None, :]
+        err = jnp.abs(g - wq.reshape(g.shape))
+        assert jnp.all(err <= 0.5 * step + 1e-6)
+
+    def test_codes_in_range(self):
+        for bits in (2, 3, 4):
+            qp = quantize(_w(1), bits, 32)
+            assert int(qp.codes.max()) <= 2 ** bits - 1
+            assert qp.codes.dtype == jnp.uint8
+
+    def test_monotone_in_bits(self):
+        w = _w(2)
+        errs = [float(quantization_mse(w, b, 32)) for b in (2, 3, 4, 8)]
+        assert errs == sorted(errs, reverse=True)
+
+    def test_exact_at_high_bits(self):
+        w = _w(3)
+        assert float(quantization_mse(w, 8, 32)) < 1e-6
+
+
+# ------------------------------------------------------------------ binary
+class TestBinary:
+    def test_sign_preserved(self):
+        w = _w(4)
+        bp = binarize(w, 32)
+        wq = debinarize(bp)
+        nz = jnp.abs(w) > 1e-6
+        assert jnp.all(jnp.sign(wq)[nz] == jnp.sign(w)[nz])
+
+    def test_per_tensor_matches_paper_scale(self):
+        w = _w(5)
+        bp = binarize(w, 32, per_tensor=True)
+        assert np.isclose(float(bp.scales.reshape(())),
+                          float(jnp.mean(jnp.abs(w))), rtol=1e-5)
+
+    def test_addsub_equals_matmul(self):
+        """Paper Eq. (10): add/sub form == dense matmul with dequant weights."""
+        w = _w(6, 64, 32)
+        x = jax.random.normal(jax.random.PRNGKey(7), (4, 64))
+        for per_tensor in (True, False):
+            bp = binarize(w, 16, per_tensor=per_tensor)
+            ref = x @ debinarize(bp)
+            out = binary_matmul_addsub(x, bp)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_grouped_beats_per_tensor(self):
+        w = _w(8) * jnp.linspace(0.1, 3.0, 128)[:, None]  # heteroscedastic rows
+        e_t = float(jnp.mean((w - binary_quant_dequant(w, 32, True)) ** 2))
+        e_g = float(jnp.mean((w - binary_quant_dequant(w, 32, False)) ** 2))
+        assert e_g < e_t
+
+
+# ----------------------------------------------------------------- packing
+class TestPacking:
+    @pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+    def test_roundtrip_identity(self, bits):
+        key = jax.random.PRNGKey(bits)
+        codes = jax.random.randint(key, (64, 16), 0, 2 ** bits).astype(jnp.uint8)
+        planes = pack_codes(codes, bits)
+        out = unpack_codes(planes, bits, 64)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+    @pytest.mark.parametrize("bits", [1, 2, 3, 4])
+    def test_packed_size(self, bits):
+        codes = jnp.zeros((64, 16), jnp.uint8)
+        planes = pack_codes(codes, bits)
+        total_bytes = sum(int(np.prod(p.shape)) for p in planes)
+        assert total_bytes == 64 * 16 * bits // 8
+
+    @given(bits=st.sampled_from([1, 2, 3, 4]),
+           d_in=st.sampled_from([8, 32, 128]),
+           d_out=st.integers(1, 9),
+           seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip_property(self, bits, d_in, d_out, seed):
+        rng = np.random.RandomState(seed)
+        codes = rng.randint(0, 2 ** bits, (d_in, d_out)).astype(np.uint8)
+        out = unpack_codes(pack_codes(jnp.asarray(codes), bits), bits, d_in)
+        np.testing.assert_array_equal(np.asarray(out), codes)
+
+    @pytest.mark.parametrize("bits", [1, 2, 3, 4])
+    def test_pack_dequant_matches_direct(self, bits):
+        w = _w(9, 64, 16)
+        res = rtn_quantize(w, bits=bits, group_size=32)
+        pw = pack_quantized(res.codes, res.scales, res.zeros, bits, 32)
+        np.testing.assert_allclose(
+            np.asarray(dequantize_packed(pw, jnp.float32)),
+            np.asarray(gptq_dequantize(res)), rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------------------- gptq
+class TestGPTQ:
+    def _calib(self, key, n=512, d_in=128):
+        # correlated activations -> non-trivial Hessian
+        k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+        basis = jax.random.normal(k1, (d_in, d_in)) / np.sqrt(d_in)
+        z = jax.random.normal(k2, (n, d_in))
+        return z @ basis
+
+    def test_hessian_accumulation(self):
+        x = self._calib(0)
+        h, cnt = accumulate_hessian(init_hessian(128), x, 0)
+        assert cnt == 512
+        expected = 2.0 / 512 * (x.T @ x)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(expected),
+                                   rtol=1e-4, atol=1e-5)
+        # two-chunk accumulation == one-shot
+        h2, c2 = accumulate_hessian(init_hessian(128), x[:256], 0)
+        h2, c2 = accumulate_hessian(h2, x[256:], c2)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h), rtol=1e-4,
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("bits", [2, 3])
+    def test_gptq_beats_rtn_on_hessian_objective(self, bits):
+        """GPTQ must reduce the proxy loss tr(dW^T H dW) vs round-to-nearest."""
+        w = _w(10)
+        x = self._calib(11)
+        h, _ = accumulate_hessian(init_hessian(128), x, 0)
+        g = gptq_quantize(w, h, bits=bits, group_size=32)
+        r = rtn_quantize(w, bits=bits, group_size=32)
+        lg = float(reconstruction_loss(w, g, h))
+        lr = float(reconstruction_loss(w, r, h))
+        assert lg < lr, (lg, lr)
+
+    def test_gptq_activation_mse_improves(self):
+        """The actual Eq. 2 objective: ||XW - XW_q||^2 smaller for GPTQ."""
+        w = _w(12)
+        x = self._calib(13)
+        h, _ = accumulate_hessian(init_hessian(128), x, 0)
+        g = gptq_quantize(w, h, bits=2, group_size=32)
+        r = rtn_quantize(w, bits=2, group_size=32)
+        eg = float(jnp.mean((x @ w - x @ gptq_dequantize(g)) ** 2))
+        er = float(jnp.mean((x @ w - x @ gptq_dequantize(r)) ** 2))
+        assert eg < er, (eg, er)
+
+    def test_gptq_1bit_runs_and_signs(self):
+        w = _w(14)
+        x = self._calib(15)
+        h, _ = accumulate_hessian(init_hessian(128), x, 0)
+        g = gptq_quantize(w, h, bits=1, group_size=32)
+        assert set(np.unique(np.asarray(g.codes))) <= {0, 1}
+        wq = gptq_dequantize(g)
+        assert float(jnp.mean((w - wq) ** 2)) < float(jnp.mean(w ** 2))
+
+    def test_gptq_high_bits_near_exact(self):
+        w = _w(16)
+        x = self._calib(17)
+        h, _ = accumulate_hessian(init_hessian(128), x, 0)
+        g = gptq_quantize(w, h, bits=8, group_size=32)
+        err = float(jnp.mean((w - gptq_dequantize(g)) ** 2))
+        assert err < 1e-6
+
+    def test_identity_hessian_matches_rtn(self):
+        """With H = I, GPTQ's per-row decisions equal RTN row rounding."""
+        w = _w(18)
+        h = jnp.eye(128)
+        g = gptq_quantize(w, h, bits=4, group_size=32, percdamp=0.0)
+        r = rtn_quantize(w, bits=4, group_size=32)
+        # identical scales; codes may differ only where compensation shifted
+        np.testing.assert_allclose(np.asarray(g.scales), np.asarray(r.scales),
+                                   rtol=1e-5)
+        frac_diff = np.mean(np.asarray(g.codes) != np.asarray(r.codes))
+        assert frac_diff < 0.05

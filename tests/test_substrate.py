@@ -1,0 +1,327 @@
+"""Tests: checkpointing, fault tolerance, elasticity, data pipeline,
+optimizer (incl. 8-bit states), gradient compression, serve engine.
+"""
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (CheckpointManager, latest_step,
+                                           restore_pytree, save_pytree)
+from repro.config import MeshConfig, TrainConfig
+from repro.configs import get_config
+from repro.data.pipeline import (Prefetcher, SyntheticTextConfig,
+                                 SyntheticTokenDataset, calibration_batch)
+from repro.models.model_registry import build_model
+from repro.runtime.elastic import plan_elastic, validate_resharding
+from repro.runtime.fault_tolerance import (Heartbeat, StragglerDetector,
+                                           run_with_fault_tolerance)
+from repro.serve.engine import Request, ServeEngine
+from repro.train import optimizer as opt_lib
+from repro.train.grad_compression import compress_decompress_ef
+from repro.train.train_step import init_train_state, make_train_step
+
+
+# -------------------------------------------------------------- checkpoint
+class TestCheckpoint:
+    def _tree(self, key=0):
+        k = jax.random.PRNGKey(key)
+        return {"a": jax.random.normal(k, (32, 16)),
+                "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                           "c": (jnp.ones((4,)), jnp.zeros((2, 2)))}}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save_pytree(tmp_path, 7, tree, meta={"cfg": "x"})
+        out, step = restore_pytree(tmp_path, jax.eval_shape(lambda: tree))
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_pointer_and_rotation(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree(s))
+        assert mgr.latest_step() == 4
+        kept = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert len(kept) == 2
+
+    def test_atomicity_partial_write_ignored(self, tmp_path):
+        save_pytree(tmp_path, 1, self._tree())
+        # simulate a crashed writer: orphan tmp dir
+        (tmp_path / "step_00000002.tmp-999").mkdir()
+        assert latest_step(tmp_path) == 1
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=3, async_save=True)
+        mgr.save(5, self._tree())
+        mgr.wait()
+        assert mgr.latest_step() == 5
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_pytree(tmp_path, 1, {"a": jnp.ones((4,))})
+        with pytest.raises(ValueError):
+            restore_pytree(tmp_path, {"a": jnp.ones((5,))})
+
+
+# -------------------------------------------------------- fault tolerance
+class TestFaultTolerance:
+    def test_crash_restart_resumes_exactly(self, tmp_path):
+        """Inject a crash mid-run; final state must equal a crash-free run."""
+        def make_state():
+            return {"x": jnp.zeros(()), "hist": jnp.zeros((20,))}
+
+        def step_fn(state, step):
+            return {"x": state["x"] + step,
+                    "hist": state["hist"].at[step].set(step)}
+
+        crashed = {"done": False}
+
+        def injector(step):
+            if step == 13 and not crashed["done"]:
+                crashed["done"] = True
+                raise RuntimeError("synthetic preemption")
+
+        mgr = CheckpointManager(tmp_path / "ft", keep=3, async_save=False)
+        report = run_with_fault_tolerance(
+            total_steps=20, make_state=make_state, step_fn=step_fn,
+            ckpt_manager=mgr, checkpoint_every=5, fail_injector=injector)
+        assert report.restarts == 1
+        assert report.completed_steps == 20
+        final, _ = mgr.restore(jax.eval_shape(make_state))
+        expected = sum(range(20))
+        assert float(final["x"]) == expected
+        np.testing.assert_array_equal(np.asarray(final["hist"]),
+                                      np.arange(20, dtype=np.float32))
+
+    def test_max_restarts_exceeded(self, tmp_path):
+        mgr = CheckpointManager(tmp_path / "ft2", keep=2, async_save=False)
+
+        def injector(step):
+            raise RuntimeError("persistent failure")
+
+        with pytest.raises(RuntimeError):
+            run_with_fault_tolerance(
+                total_steps=5, make_state=lambda: {"x": jnp.zeros(())},
+                step_fn=lambda s, i: s, ckpt_manager=mgr,
+                checkpoint_every=2, max_restarts=2, fail_injector=injector)
+
+    def test_straggler_detector(self):
+        det = StragglerDetector(z_threshold=3.0, warmup=5)
+        for i in range(30):
+            det.observe(i, 0.1 + 0.001 * (i % 3))
+        assert not det.flagged
+        assert det.observe(31, 1.5)  # 15x step time
+        assert det.flagged[-1]["step"] == 31
+
+    def test_heartbeat_dead_worker(self, tmp_path):
+        hb = Heartbeat(tmp_path / "hb", worker_id=3)
+        hb.beat(step=10)
+        assert Heartbeat.dead_workers(tmp_path / "hb", timeout_s=100) == []
+        assert Heartbeat.dead_workers(tmp_path / "hb", timeout_s=0.0,
+                                      now=time.time() + 10) == [3]
+
+
+# ---------------------------------------------------------------- elastic
+class TestElastic:
+    def test_downsize_preserves_model_axis(self):
+        mesh = MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+        plan = plan_elastic(mesh, surviving_devices=192, global_batch=256)
+        assert plan.new_mesh.axis_size("model") == 16
+        assert plan.new_mesh.axis_size("data") == 8
+        assert plan.grad_accum == 2
+        assert plan.new_global_batch % 8 == 0
+
+    def test_multipod(self):
+        mesh = MeshConfig(shape=(2, 16, 16),
+                          axis_names=("pod", "data", "model"))
+        plan = plan_elastic(mesh, surviving_devices=384, global_batch=256)
+        assert plan.new_mesh.multi_pod
+        assert plan.new_mesh.axis_size("model") == 16
+
+    def test_too_few_devices_raises(self):
+        mesh = MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+        with pytest.raises(ValueError):
+            plan_elastic(mesh, surviving_devices=8, global_batch=256)
+
+    def test_validate_resharding(self):
+        mesh = MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+        issues = validate_resharding(
+            {"w": (2048, 8192), "odd": (7, 9)}, mesh)
+        assert "w" not in issues
+        assert "odd" in issues
+
+
+# ------------------------------------------------------------------- data
+class TestData:
+    def _cfg(self, **kw):
+        d = dict(vocab_size=1000, seq_len=32, global_batch=8, seed=0)
+        d.update(kw)
+        return SyntheticTextConfig(**d)
+
+    def test_step_determinism(self):
+        ds = SyntheticTokenDataset(self._cfg())
+        b1, b2 = ds.batch(17), ds.batch(17)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = ds.batch(18)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        ds = SyntheticTokenDataset(self._cfg())
+        b = ds.batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_host_sharding(self):
+        full = SyntheticTokenDataset(self._cfg(num_hosts=1)).batch(3)
+        h0 = SyntheticTokenDataset(self._cfg(num_hosts=2, host_id=0)).batch(3)
+        assert h0["tokens"].shape[0] == 4
+        assert full["tokens"].shape[0] == 8
+
+    def test_tokens_in_range(self):
+        b = SyntheticTokenDataset(self._cfg()).batch(0)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 1000
+
+    def test_prefetcher(self):
+        ds = SyntheticTokenDataset(self._cfg())
+        pf = Prefetcher(ds, start_step=5, depth=2)
+        s, b = pf.next()
+        assert s == 5
+        s2, _ = pf.next()
+        assert s2 == 6
+        pf.stop()
+
+    def test_calibration_batch(self):
+        cfg = get_config("mixtral-8x7b", smoke=True)
+        toks = calibration_batch(cfg, 4, 64)
+        assert toks.shape == (4, 64)
+
+
+# -------------------------------------------------------------- optimizer
+class TestOptimizer:
+    def _setup(self, opt="adamw"):
+        tcfg = TrainConfig(optimizer=opt, learning_rate=0.1,
+                           warmup_steps=0, total_steps=100, weight_decay=0.0)
+        params = {"w": jnp.ones((8, 64)), "b": jnp.zeros((64,))}
+        state = opt_lib.adamw_init(params, tcfg)
+        return tcfg, params, state
+
+    def test_adamw_descends(self):
+        tcfg, params, state = self._setup()
+        grads = {"w": jnp.ones((8, 64)), "b": jnp.ones((64,))}
+        new_p, state = opt_lib.adamw_update(grads, state, params,
+                                            jnp.asarray(0.1), tcfg)
+        assert float(new_p["w"].mean()) < 1.0
+        assert int(state.step) == 1
+
+    def test_8bit_moments_are_int8(self):
+        tcfg, params, state = self._setup("adamw8bit")
+        assert state.m["w"].q.dtype == jnp.int8
+        # small vectors stay dense f32
+        assert state.m["b"].dtype == jnp.float32 \
+            if not hasattr(state.m["b"], "q") else True
+
+    def test_8bit_tracks_fp32(self):
+        """Quantized-state AdamW stays close to exact AdamW over steps."""
+        tcfg_f, params, s_f = self._setup("adamw")
+        tcfg_q, _, s_q = self._setup("adamw8bit")
+        p_f = p_q = params
+        key = jax.random.PRNGKey(0)
+        for i in range(20):
+            key, k = jax.random.split(key)
+            g = {"w": jax.random.normal(k, (8, 64)),
+                 "b": jax.random.normal(k, (64,))}
+            p_f, s_f = opt_lib.adamw_update(g, s_f, p_f, jnp.asarray(0.01),
+                                            tcfg_f)
+            p_q, s_q = opt_lib.adamw_update(g, s_q, p_q, jnp.asarray(0.01),
+                                            tcfg_q)
+        diff = float(jnp.abs(p_f["w"] - p_q["w"]).max())
+        scale = float(jnp.abs(p_f["w"]).max())
+        assert diff / scale < 0.05, diff
+
+    def test_grad_clip(self):
+        tree = {"a": jnp.full((10,), 100.0)}
+        clipped, norm = opt_lib.clip_by_global_norm(tree, 1.0)
+        assert float(opt_lib.global_norm(clipped)) <= 1.0 + 1e-5
+        assert float(norm) > 100
+
+    def test_q8_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 256))
+        t = opt_lib.q8_encode(x)
+        err = jnp.abs(opt_lib.q8_decode(t) - x).max()
+        assert float(err) <= float(jnp.abs(x).max()) / 127 + 1e-6
+
+
+class TestGradCompression:
+    def test_error_feedback_reduces_bias(self):
+        """With EF, the accumulated compressed sum converges to the true
+        sum (the 1-bit-Adam guarantee); without EF it drifts."""
+        key = jax.random.PRNGKey(0)
+        g_total = jnp.zeros((4, 64))
+        acc_ef = jnp.zeros((4, 64))
+        ef = {"g": jnp.zeros((4, 64))}
+        acc_no = jnp.zeros((4, 64))
+        for i in range(50):
+            key, k = jax.random.split(key)
+            g = jax.random.normal(k, (4, 64)) * (1 + 10 * (i % 7 == 0))
+            g_total += g
+            out, ef_new = compress_decompress_ef({"g": g}, ef)
+            ef = ef_new
+            acc_ef += out["g"]
+            from repro.train.grad_compression import _q8_roundtrip
+            acc_no += _q8_roundtrip(g)
+        err_ef = float(jnp.abs(acc_ef + ef["g"] - g_total).max())
+        err_no = float(jnp.abs(acc_no - g_total).max())
+        assert err_ef < err_no
+        assert err_ef < 1e-3
+
+
+# ---------------------------------------------------------------- serving
+class TestServeEngine:
+    def test_generation_runs_and_stats(self):
+        cfg = get_config("internlm2-1.8b", smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, params, batch_size=2)
+        reqs = [Request(uid=i, prompt=np.arange(1, 6 + i, dtype=np.int32),
+                        max_new_tokens=4) for i in range(3)]
+        results = eng.run(reqs)
+        assert len(results) == 3
+        for r in results:
+            assert r.tokens.shape == (4,)
+            assert (r.tokens >= 0).all()
+        assert eng.stats.generated_tokens == 12
+        assert eng.stats.decode_tokens_per_s > 0
+
+    def test_greedy_deterministic(self):
+        cfg = get_config("internlm2-1.8b", smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, params, batch_size=1)
+        r1 = eng.run([Request(0, np.arange(1, 9, dtype=np.int32), 6)])
+        r2 = eng.run([Request(0, np.arange(1, 9, dtype=np.int32), 6)])
+        np.testing.assert_array_equal(r1[0].tokens, r2[0].tokens)
+
+
+# --------------------------------------------------- end-to-end train step
+class TestTrainStepIntegration:
+    def test_loss_decreases_small_model(self):
+        cfg = get_config("internlm2-1.8b", smoke=True).replace(
+            num_layers=2, scan_layers=False)
+        model = build_model(cfg)
+        tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=2,
+                           total_steps=30, optimizer="adamw8bit")
+        state = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+        step = jax.jit(make_train_step(model, cfg, tcfg))
+        ds = SyntheticTokenDataset(SyntheticTextConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0))
+        losses = []
+        for i in range(12):
+            b = ds.batch(0)  # overfit one batch
+            state, metrics = step(state, {k: jnp.asarray(v)
+                                          for k, v in b.items()})
+            losses.append(float(metrics["ce_loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses
