@@ -1,5 +1,9 @@
-"""Serve a MC-compressed MoE with batched requests (paper's deployment
-scenario: one GPU/TPU slice hosting a 2.5-bit Mixtral).
+"""Serve a MC-compressed MoE with continuous batching (paper's deployment
+scenario: one GPU/TPU slice hosting a 2.5-bit Mixtral under live traffic).
+
+Requests arrive with mixed prompt/output lengths; the engine admits each
+one into a freed decode slot as soon as one opens — no request waits for a
+lockstep batch to finish.
 
     PYTHONPATH=src python examples/serve_compressed.py
 """
@@ -9,11 +13,12 @@ from repro.launch.serve import serve
 def main():
     results, stats, report = serve(
         "mixtral-8x7b", smoke=True, mc=True, target_bits=2.54,
-        n_requests=6, max_new=12, batch_size=3)
+        n_requests=6, max_new=12, batch_size=3, mixed_lengths=True)
     print("\nsample generations (token ids):")
     for r in results[:3]:
-        print(f"  req {r.uid}: {r.tokens.tolist()}")
-    print(f"\nthroughput: {stats.decode_tokens_per_s:.1f} tok/s decode "
+        print(f"  req {r.uid}: {r.tokens.tolist()} ({r.finish_reason})")
+    print(f"\nthroughput: {stats.decode_tokens_per_s:.1f} tok/s decode, "
+          f"slot occupancy {stats.occupancy:.0%} "
           f"(CPU container; see EXPERIMENTS.md §Roofline for TPU "
           f"projections)")
 

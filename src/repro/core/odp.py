@@ -78,14 +78,19 @@ def protect_tokens(importance: jax.Array, protect_ratio: float,
     n_protect = max(1, int(np.ceil(protect_ratio * l))) if protect_ratio > 0 else 0
     if n_protect == 0:
         return jnp.zeros(importance.shape, bool)
-    imp = importance
-    if valid is not None:
-        imp = jnp.where(valid, imp, -jnp.inf)
-    thresh = jax.lax.top_k(imp, n_protect)[0][..., -1:]
-    mask = imp >= thresh
-    if valid is not None:
-        mask = mask & valid
-    return mask
+    if valid is None:
+        thresh = jax.lax.top_k(importance, n_protect)[0][..., -1:]
+        return importance >= thresh
+    # with padding/inactive tokens the quota is ceil(ratio * n_valid) —
+    # computed over the *valid* tokens, so pad rows neither steal quota
+    # nor inflate it (keeps masked pools equivalent to unpadded ones)
+    imp = jnp.where(valid, importance, -jnp.inf)
+    n_valid = valid.sum(-1, keepdims=True)
+    k_eff = jnp.clip(jnp.ceil(protect_ratio * n_valid).astype(jnp.int32),
+                     1, n_protect)
+    sorted_vals = jax.lax.top_k(imp, n_protect)[0]
+    thresh = jnp.take_along_axis(sorted_vals, k_eff - 1, axis=-1)
+    return (imp >= thresh) & valid
 
 
 def token_importance_from_running(tl1: jax.Array, attn_recv: jax.Array,

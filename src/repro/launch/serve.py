@@ -17,12 +17,13 @@ from repro.configs import get_config
 from repro.core import mc as mc_lib
 from repro.data.pipeline import calibration_batch
 from repro.models.model_registry import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, StaticServeEngine
 
 
 def serve(arch: str, *, smoke: bool = True, mc: bool = False,
           target_bits: float = 2.54, n_requests: int = 8,
-          max_new: int = 16, batch_size: int = 4, prompt_len: int = 32):
+          max_new: int = 16, batch_size: int = 4, prompt_len: int = 32,
+          static: bool = False, mixed_lengths: bool = False):
     cfg = get_config(arch, smoke=smoke)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -45,18 +46,24 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
               f"odp_mu={report.odp_threshold:.3f} "
               f"prune_rate={report.odp_prune_rate:.1%}")
 
-    eng = ServeEngine(model, params, batch_size=batch_size, mc=runtime)
+    engine_cls = StaticServeEngine if static else ServeEngine
+    eng = engine_cls(model, params, batch_size=batch_size, mc=runtime)
     rng = np.random.RandomState(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.randint(1, cfg.vocab_size,
-                                       prompt_len).astype(np.int32),
-                    max_new_tokens=max_new)
-            for i in range(n_requests)]
+    reqs = []
+    for i in range(n_requests):
+        pl, mn = prompt_len, max_new
+        if mixed_lengths:   # the regime where lockstep batching wastes most
+            pl = int(rng.randint(max(4, prompt_len // 4), prompt_len + 1))
+            mn = int(rng.randint(max(2, max_new // 4), max_new + 1))
+        reqs.append(Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, pl).astype(np.int32),
+            max_new_tokens=mn))
     results = eng.run(reqs)
     s = eng.stats
     print(f"[serve] {s.requests} requests, {s.generated_tokens} tokens, "
           f"prefill {s.prefill_s:.2f}s decode {s.decode_s:.2f}s "
-          f"({s.decode_tokens_per_s:.1f} tok/s)")
+          f"({s.decode_tokens_per_s:.1f} tok/s, "
+          f"slot occupancy {s.occupancy:.0%})")
     return results, eng.stats, report
 
 
@@ -68,10 +75,15 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--static", action="store_true",
+                    help="use the lockstep static-batch engine")
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="randomize prompt/output lengths per request")
     args = ap.parse_args()
     serve(args.arch, mc=args.mc, target_bits=args.bits,
           n_requests=args.requests, max_new=args.max_new,
-          batch_size=args.batch)
+          batch_size=args.batch, static=args.static,
+          mixed_lengths=args.mixed_lengths)
 
 
 if __name__ == "__main__":

@@ -229,7 +229,8 @@ class EncDecModel:
             lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape),
             one)
 
-    def decode_step(self, params, caches, tokens, pos, *, cross, mc=None):
+    def decode_step(self, params, caches, tokens, pos, *, cross, mc=None,
+                    token_mask=None):
         logits, new_caches = self.decode(params, tokens, cross=cross,
                                          caches=caches, start_pos=pos)
         return logits, new_caches

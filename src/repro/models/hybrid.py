@@ -93,7 +93,7 @@ class HybridModel:
         x = core_lib.embed_tokens(params["embed"], tokens, cfg, dtype)
         x = shctx.constrain_batch(x)
         s = x.shape[1]
-        positions = jnp.arange(s, dtype=jnp.int32) + start_pos
+        positions = core_lib.position_grid(s, start_pos)
         use_scan = cfg.scan_layers if scan is None else scan
 
         ssm_caches = None if caches is None else caches["ssm"]
@@ -164,7 +164,9 @@ class HybridModel:
             lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape), one)
         return {"ssm": ssm, "attn": attn}
 
-    def decode_step(self, params, caches, tokens, pos, *, mc=None):
+    def decode_step(self, params, caches, tokens, pos, *, mc=None,
+                    token_mask=None):
+        # token_mask accepted for engine API parity; no MoE dispatch here
         logits, new_caches, _ = self.forward(params, tokens, caches=caches,
                                              start_pos=pos, mc=mc)
         return logits, new_caches

@@ -52,7 +52,9 @@ class KVCache:
 
     k: jax.Array          # (B, C, Nkv, H) bf16 or int8
     v: jax.Array          # (B, C, Nkv, H)
-    pos: jax.Array        # (C,) absolute position stored in each slot (-1 empty)
+    pos: jax.Array        # (B, C) absolute position stored per row (-1 empty)
+    # pos is per batch row so rows can live independent lifetimes — the
+    # continuous-batching engine admits/retires requests per slot (row)
     # static: ring-buffer (sliding window) vs linear layout
     ring: bool = dataclasses.field(default=False,
                                    metadata=dict(static=True))
@@ -256,19 +258,42 @@ def apply_attention(
             slots = tail_pos % cap
             ck = cache.k.at[:, slots].set(kq[:, -cap:])
             cv = cache.v.at[:, slots].set(vq[:, -cap:])
-            cpos = cache.pos.at[slots].set(tail_pos.astype(cache.pos.dtype))
+            cpos = cache.pos.at[:, slots].set(
+                tail_pos.astype(cache.pos.dtype)[None, :])
             cks = cvs = None
             if quant:
                 cks = cache.kscale.at[:, slots].set(ks_new[:, -cap:])
                 cvs = cache.vscale.at[:, slots].set(vs_new[:, -cap:])
             new_cache = KVCache(ck, cv, cpos, cache.ring, cks, cvs)
+        elif positions.ndim == 2:
+            # per-row positions (continuous batching): each batch row writes
+            # its own cache slots — rows have independent lifetimes/lengths.
+            idx = positions % cap if cache.ring else positions     # (B, Sq)
+            rows = jnp.arange(b)[:, None]
+            ck = cache.k.at[rows, idx].set(kq)
+            cv = cache.v.at[rows, idx].set(vq)
+            cpos = cache.pos.at[rows, idx].set(
+                positions.astype(cache.pos.dtype))
+            cks = cvs = None
+            if quant:
+                cks = cache.kscale.at[rows, idx].set(ks_new)
+                cvs = cache.vscale.at[rows, idx].set(vs_new)
+                kscale, vscale = cks, cvs
+            new_cache = KVCache(ck, cv, cpos, cache.ring, cks, cvs)
+            k, v = ck, cv
+            k_valid = cpos >= 0
+            mask = build_mask(positions, cpos, causal=causal, window=window,
+                              chunk=chunk, prefix_len=prefix_len,
+                              k_valid=k_valid)
         else:
             # decode / fitting prefill: insert then attend over the cache
             slot = positions[0] % cap if cache.ring else positions[0]
             ck = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
             cv = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
             cpos = jax.lax.dynamic_update_slice(
-                cache.pos, positions.astype(cache.pos.dtype), (slot,))
+                cache.pos,
+                jnp.broadcast_to(positions.astype(cache.pos.dtype),
+                                 (b, s_new)), (0, slot))
             cks = cvs = None
             if quant:
                 cks = jax.lax.dynamic_update_slice(cache.kscale, ks_new,
@@ -307,7 +332,7 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, *,
     return KVCache(
         k=jnp.zeros((batch, capacity, nkv, h), dtype),
         v=jnp.zeros((batch, capacity, nkv, h), dtype),
-        pos=jnp.full((capacity,), -1, jnp.int32),
+        pos=jnp.full((batch, capacity), -1, jnp.int32),
         ring=ring,
         kscale=jnp.zeros((batch, capacity, nkv), jnp.float32) if quant
         else None,
@@ -319,4 +344,4 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, *,
 def cache_specs(ring: bool = False) -> KVCache:
     return KVCache(k=P(("data",), None, "model", None),
                    v=P(("data",), None, "model", None),
-                   pos=P(None), ring=ring)
+                   pos=P(("data",), None), ring=ring)

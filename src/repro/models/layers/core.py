@@ -155,7 +155,21 @@ def specs_learned_pos() -> Params:
     return {"pos": P(None, "data")}
 
 
+def position_grid(s: int, start_pos) -> jax.Array:
+    """Absolute query positions: (S,) for a scalar/int ``start_pos`` shared
+    by the batch, (B, S) for per-row (B,) starts (continuous-batching
+    decode slots)."""
+    if not isinstance(start_pos, int) and jnp.ndim(start_pos) == 1:
+        return (jnp.arange(s, dtype=jnp.int32)[None, :]
+                + start_pos[:, None].astype(jnp.int32))
+    return jnp.arange(s, dtype=jnp.int32) + start_pos
+
+
 def add_learned_pos(p: Params, x: jax.Array, offset=0) -> jax.Array:
     s = x.shape[-2]
+    if not isinstance(offset, int) and jnp.ndim(offset) == 1:
+        # per-row offsets (continuous-batching decode): gather per row
+        idx = offset[:, None] + jnp.arange(s)                    # (B, S)
+        return x + p["pos"][idx].astype(x.dtype)
     pos = jax.lax.dynamic_slice_in_dim(p["pos"], offset, s, 0)
     return x + pos.astype(x.dtype)

@@ -174,11 +174,16 @@ def apply_moe(
     token_importance: Optional[jax.Array] = None,
     quant_meta: Optional[MoEQuantMeta] = None,
     capacity_scale: float = 1.0,
+    token_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """MoE layer forward. x: (B, S, D) -> (y, aux).
 
     aux carries router statistics: load-balance/z losses (training), and the
     top-k decisions + prune mask (MC calibration / reporting).
+
+    token_mask: optional (B, S) bool — False tokens (padding, inactive
+    decode slots) are withheld from dispatch so they never consume expert
+    capacity; their output rows are zero.
     """
     b, s, d = x.shape
     decode_regroup = s == 1 and b > 1
@@ -186,6 +191,8 @@ def apply_moe(
         x = x.reshape(1, b, d)
         if token_importance is not None:
             token_importance = token_importance.reshape(1, b)
+        if token_mask is not None:
+            token_mask = token_mask.reshape(1, b)
         b, s = 1, b
 
     x32 = x.astype(jnp.float32)
@@ -198,8 +205,11 @@ def apply_moe(
     if odp is not None and odp.enabled and cfg.top_k >= 2:
         protected = None
         if token_importance is not None and odp.protect_ratio > 0:
+            # masked (pad / inactive-slot) tokens must not steal protection
+            # quota from live tokens
             protected = odp_lib.protect_tokens(token_importance,
-                                               odp.protect_ratio)
+                                               odp.protect_ratio,
+                                               valid=token_mask)
         keep = odp_lib.prune_mask(topw, odp.threshold, protected)
         topw = odp_lib.apply_pruning(topw, keep)
         aux["odp_keep"] = keep
@@ -214,6 +224,8 @@ def apply_moe(
     full_w = jnp.zeros((b, s, e), jnp.float32)
     oh = jax.nn.one_hot(topi, e, dtype=jnp.float32)              # (B,S,k,E)
     full_w = (oh * topw[..., None]).sum(-2)
+    if token_mask is not None:
+        full_w = full_w * token_mask.astype(jnp.float32)[..., None]
 
     # per-expert top-C token choice by router prob (tie-break by position)
     choice = jnp.where(full_w > 0, probs, -1.0).transpose(0, 2, 1)  # (B,E,S)

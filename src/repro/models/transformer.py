@@ -125,6 +125,7 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
                 prefix_len: int = 0, cache=None,
                 mc: Optional[MCRuntime] = None,
                 capture: bool = False,
+                token_mask: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Any, Dict]:
     """One residual block. Returns (x, new_cache, aux).
 
@@ -175,7 +176,8 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
                 else tl1
 
     if cfg.use_parallel_residual:
-        ffn_out, moe_aux = _apply_ffn(p, h, cfg, kind, mc, token_imp)
+        ffn_out, moe_aux = _apply_ffn(p, h, cfg, kind, mc, token_imp,
+                                      token_mask)
         if cfg.pre_post_norm:
             ffn_out = core_lib.apply_norm(p["post_ffn"], ffn_out, cfg)
         aux.update(moe_aux)
@@ -186,7 +188,8 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
 
     x = x + attn_out
     h2 = core_lib.apply_norm(p["norm_ffn"], x, cfg)
-    ffn_out, moe_aux = _apply_ffn(p, h2, cfg, kind, mc, token_imp)
+    ffn_out, moe_aux = _apply_ffn(p, h2, cfg, kind, mc, token_imp,
+                                  token_mask)
     if cfg.pre_post_norm:
         ffn_out = core_lib.apply_norm(p["post_ffn"], ffn_out, cfg)
     aux.update(moe_aux)
@@ -196,13 +199,14 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
     return x + ffn_out, new_cache, aux
 
 
-def _apply_ffn(p, h, cfg, kind, mc, token_imp):
+def _apply_ffn(p, h, cfg, kind, mc, token_imp, token_mask=None):
     if kind == "moe":
         return moe_lib.apply_moe(
             p["ffn"], h, cfg,
             odp=mc.odp if mc else None,
             token_importance=token_imp,
-            quant_meta=mc.quant_meta if mc else None)
+            quant_meta=mc.quant_meta if mc else None,
+            token_mask=token_mask)
     return core_lib.apply_mlp(p["ffn"], h, cfg), {}
 
 
@@ -282,6 +286,7 @@ class DecoderModel:
                 capture: bool = False,
                 moe_layer_params: Optional[list] = None,
                 moe_layer_metas: Optional[list] = None,
+                token_mask: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Any, Dict]:
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
@@ -291,12 +296,13 @@ class DecoderModel:
             x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
             prefix_len = prefix_embeds.shape[1]
         if "pos" in params:
-            off = start_pos if not isinstance(start_pos, int) else start_pos
-            x = core_lib.add_learned_pos(params["pos"], x, off)
+            x = core_lib.add_learned_pos(params["pos"], x, start_pos)
         x = shctx.constrain_batch(x)
 
         s = x.shape[1]
-        positions = jnp.arange(s, dtype=jnp.int32) + start_pos
+        # start_pos may be per-row (B,) — continuous-batching slots decode
+        # at independent positions — yielding a (B, S) position grid.
+        positions = core_lib.position_grid(s, start_pos)
         use_scan = cfg.scan_layers if scan is None else scan
         win_arr, chunk_arr = self._kind_arrays()
 
@@ -304,7 +310,8 @@ class DecoderModel:
             return apply_block(
                 p_l, x, cfg, self.slot_kinds[slot], positions=positions,
                 window=w, chunk=c, prefix_len=prefix_len, cache=cache_l,
-                mc=mc, capture=capture and not use_scan)
+                mc=mc, capture=capture and not use_scan,
+                token_mask=token_mask)
 
         aux_all: Dict = {}
         if use_scan:
@@ -366,7 +373,7 @@ class DecoderModel:
                         window=win_arr[step, slot],
                         chunk=chunk_arr[step, slot],
                         prefix_len=prefix_len, cache=cache_l, mc=mc_l,
-                        capture=capture)
+                        capture=capture, token_mask=token_mask)
                     ncs.append(nc)
                     if collect_aux:
                         per_layer_aux.append(aux)
@@ -420,10 +427,15 @@ class DecoderModel:
         return tuple(one(self.slot_kinds[s]) for s in range(self.period))
 
     def decode_step(self, params, caches, tokens, pos, *,
-                    mc: Optional[MCRuntime] = None):
-        """tokens: (B, 1); pos: scalar int32 current position."""
+                    mc: Optional[MCRuntime] = None,
+                    token_mask: Optional[jax.Array] = None):
+        """tokens: (B, 1); pos: scalar int32 position shared by the batch,
+        or (B,) int32 per-row positions (continuous-batching slots).
+        token_mask: optional (B, 1) bool — masked rows (inactive slots)
+        are withheld from MoE dispatch so they can't consume capacity."""
         logits, new_caches, _ = self.forward(
-            params, tokens, caches=caches, start_pos=pos, mc=mc)
+            params, tokens, caches=caches, start_pos=pos, mc=mc,
+            token_mask=token_mask)
         return logits, new_caches
 
 

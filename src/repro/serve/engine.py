@@ -1,16 +1,37 @@
-"""Batched serving engine with MC-compressed inference.
+"""Serving engines for MC-compressed inference.
 
-Static-batch generation loop over the model's prefill/decode steps:
-requests are grouped into fixed-size batches (left-padded to a common
-prompt length), prefilled once, then decoded step-aligned with the MC
-runtime (PMQ quantized experts + ODP pruning) applied at every step.
-Throughput/latency stats are reported per batch — the harness behind the
-paper's Tab. 13/14 speed analogues in ``benchmarks/bench_memory.py``.
+Two engines over the model's prefill/decode steps, both applying the MC
+runtime (PMQ quantized experts + ODP pruning) at every step:
+
+* ``ServeEngine`` — **continuous batching** (the production path): a fixed
+  pool of decode slots backed by a slot-indexed KV cache whose rows have
+  independent lifetimes (``KVCache.pos`` is per row). Pending requests are
+  admitted into freed slots between decode steps — prefill runs batch-1
+  into a fresh row, then the row is scattered into the pool — and every
+  request stops on its own EOS / ``max_new_tokens``. The decode step is a
+  single jitted call over the whole slot pool with an active-slot mask, so
+  compiled shapes stay static no matter how requests come and go.
+
+* ``StaticServeEngine`` — the lockstep baseline (paper Tab. 13/14 speed
+  harness): requests grouped into fixed batches, prefilled once, decoded
+  step-aligned for the batch-max ``max_new_tokens``. Finished requests burn
+  compute as padding — ``benchmarks/bench_serving.py`` measures exactly
+  that waste against the continuous engine.
+
+MoE capacity semantics: during decode the MoE layer groups the whole slot
+pool into one expert-capacity group. The continuous engine masks inactive
+slots out of dispatch (``token_mask``) so idle-slot garbage never consumes
+expert capacity — only *live* requests compete, exactly as in any batched
+serving. Token-for-token equivalence with sequential generation addition-
+ally requires a ``capacity_factor`` high enough that live requests never
+overflow capacity (the equivalence tests pin this down).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -18,6 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers.attention import GLOBAL_WINDOW
 from repro.models.transformer import DecoderModel, MCRuntime
 
 
@@ -26,6 +49,7 @@ class Request:
     uid: int
     prompt: np.ndarray           # (L,) int32
     max_new_tokens: int = 16
+    eos_id: Optional[int] = None
 
 
 @dataclass
@@ -35,24 +59,280 @@ class Result:
     prefill_s: float
     decode_s: float
     new_tokens: int
+    finish_reason: str = "length"     # "length" | "eos"
 
 
 @dataclass
 class EngineStats:
     requests: int = 0
-    generated_tokens: int = 0
+    generated_tokens: int = 0         # useful tokens only (no padding waste)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    decode_steps: int = 0
+    slot_steps: int = 0               # decode_steps x pool width
+    active_slot_steps: int = 0        # slot-steps doing useful work
 
     @property
     def decode_tokens_per_s(self) -> float:
-        return self.generated_tokens / max(self.decode_s, 1e-9)
+        if self.decode_s <= 0:
+            return 0.0
+        return self.generated_tokens / self.decode_s
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slot-steps spent on live requests (1.0 = no waste)."""
+        return self.active_slot_steps / max(self.slot_steps, 1)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+# --------------------------------------------------------------- continuous
+@dataclass
+class _Slot:
+    req: Request
+    req_idx: int                      # position in the submitted batch
+    prefill_s: float
+    admitted_t: float
+    n_new: int = 1                    # prefill emits the first token
 
 
 class ServeEngine:
+    """Continuous-batching engine over a fixed pool of decode slots.
+
+    ``batch_size`` is the pool width. Requests are admitted into free slots
+    as they open up; all slots decode in one jitted step with per-slot
+    positions. Prefill is right-padded to a power-of-two bucket (no left
+    padding anywhere) and the padded tail's cache entries are invalidated,
+    so per-prompt-length recompiles stay logarithmic. Models whose cache
+    rows are position-ring-buffered (sliding/chunked attention) or carry
+    recurrent state (SSM) prefill at exact length instead — padding would
+    clobber live ring entries / pollute the recurrence.
+    """
+
     def __init__(self, model: DecoderModel, params, *, batch_size: int = 4,
                  mc: Optional[MCRuntime] = None, pad_id: int = 0,
-                 greedy: bool = True):
+                 greedy: bool = True, eos_id: Optional[int] = None,
+                 max_seq_len: Optional[int] = None):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.num_slots = self.batch_size = batch_size
+        self.mc = mc
+        self.pad_id = pad_id
+        if not greedy:
+            raise NotImplementedError("sampling is not implemented; "
+                                      "only greedy decoding is supported")
+        self.greedy = greedy
+        self.eos_id = eos_id
+        self.max_seq_len = max_seq_len
+        self.stats = EngineStats()
+        self._scratch = None
+
+        kinds = getattr(model, "kinds", None)
+        all_global = (kinds is not None
+                      and bool(np.all(kinds["window"] == GLOBAL_WINDOW))
+                      and bool(np.all(kinds["chunk"] == GLOBAL_WINDOW)))
+        self._bucketed_prefill = (all_global
+                                  and self.cfg.family not in ("ssm", "hybrid"))
+
+        def _prefill(params, tokens, length, caches):
+            kw = {}
+            if self._bucketed_prefill:
+                # pad-tail tokens must not consume MoE expert capacity
+                kw["token_mask"] = (
+                    jnp.arange(tokens.shape[1])[None, :] < length)
+            logits, new_caches, _ = model.forward(
+                params, tokens, caches=caches, mc=self.mc, **kw)
+            last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
+                                                keepdims=False)
+            nxt = jnp.argmax(last, -1).astype(jnp.int32)        # (1,)
+            # void the padded tail's cache entries: keys the pad tokens wrote
+            # at positions >= length must never be attended to
+            new_caches = _void_tail(new_caches, length)
+            return nxt, new_caches
+
+        def _insert(pool, one, slot):
+            # every cache leaf carries batch at axis 1 after the model's
+            # step-stacking — scatter row 0 of the fresh cache into `slot`
+            return jax.tree.map(
+                lambda pl, on: jax.lax.dynamic_update_slice(
+                    pl, on.astype(pl.dtype),
+                    (0, slot) + (0,) * (pl.ndim - 2)),
+                pool, one)
+
+        def _decode(params, caches, cur, pos, active):
+            # inactive slots are masked out of MoE dispatch so their junk
+            # tokens never consume expert capacity from live requests
+            logits, new_caches = model.decode_step(
+                params, caches, cur[:, None], pos, mc=self.mc,
+                token_mask=active[:, None])
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            nxt = jnp.where(active, nxt, jnp.int32(pad_id))
+            return nxt, new_caches
+
+        self._prefill = jax.jit(_prefill)
+        # donation lets XLA update the pool cache in place on accelerators
+        # (ignored with a warning-free no-op on CPU)
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    # ---- sizing ----
+    def _capacity_for(self, requests: List[Request]) -> int:
+        need = max(len(r.prompt) + r.max_new_tokens for r in requests)
+        if self.max_seq_len is not None:
+            # hard memory bound AND stable compiled shapes across runs
+            if need > self.max_seq_len:
+                raise ValueError(
+                    f"request needs {need} cache positions > "
+                    f"max_seq_len {self.max_seq_len}")
+            return _round_up(self.max_seq_len, 8)
+        return _round_up(need, 8)
+
+    def _bucket(self, n: int, capacity: int) -> int:
+        if not self._bucketed_prefill:
+            return n
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, capacity)
+
+    # ---- lifecycle ----
+    def run(self, requests: List[Request]) -> List[Result]:
+        if not requests:
+            return []
+        b = self.num_slots
+        capacity = self._capacity_for(requests)
+        caches = self.model.init_caches(b, capacity)
+        self._scratch = None          # reusable batch-1 prefill cache
+        pending = deque(enumerate(requests))
+        active = np.zeros(b, bool)
+        cur = np.zeros(b, np.int32)           # last sampled token per slot
+        pos = np.zeros(b, np.int32)           # its absolute position
+        gen: List[List[int]] = [[] for _ in range(b)]
+        slots: List[Optional[_Slot]] = [None] * b
+        done: Dict[int, Result] = {}          # keyed by submission index
+
+        def finish(s: int, reason: str):
+            sl = slots[s]
+            now = time.time()
+            done[sl.req_idx] = Result(
+                uid=sl.req.uid, tokens=np.asarray(gen[s], np.int32),
+                prefill_s=sl.prefill_s,
+                decode_s=now - sl.admitted_t - sl.prefill_s,
+                new_tokens=sl.n_new, finish_reason=reason)
+            self.stats.requests += 1
+            self.stats.generated_tokens += sl.n_new
+            active[s] = False
+            slots[s] = None
+
+        while pending or active.any():
+            for s in range(b):
+                while not active[s] and pending:
+                    idx, req = pending.popleft()
+                    caches = self._admit(req, idx, s, capacity, caches,
+                                         active, cur, pos, gen, slots)
+                    eos = req.eos_id if req.eos_id is not None else \
+                        self.eos_id
+                    if eos is not None and gen[s] and gen[s][0] == eos:
+                        finish(s, "eos")
+                    elif req.max_new_tokens <= 1:
+                        finish(s, "length")
+            if not active.any():
+                continue
+
+            t0 = time.time()
+            nxt, caches = self._decode(
+                self.params, caches, jnp.asarray(cur), jnp.asarray(pos),
+                jnp.asarray(active))
+            nxt = np.asarray(nxt)
+            self.stats.decode_s += time.time() - t0
+            self.stats.decode_steps += 1
+            self.stats.slot_steps += b
+            self.stats.active_slot_steps += int(active.sum())
+
+            for s in np.nonzero(active)[0]:
+                sl = slots[s]
+                tok = int(nxt[s])
+                gen[s].append(tok)
+                sl.n_new += 1
+                cur[s] = tok
+                pos[s] += 1
+                eos = sl.req.eos_id if sl.req.eos_id is not None else \
+                    self.eos_id
+                if eos is not None and tok == eos:
+                    finish(s, "eos")
+                elif sl.n_new >= sl.req.max_new_tokens:
+                    finish(s, "length")
+
+        return [done[i] for i in range(len(requests))]
+
+    def _admit(self, req: Request, idx: int, s: int, capacity: int, caches,
+               active, cur, pos, gen, slots):
+        prompt = np.asarray(req.prompt, np.int32)
+        ln = len(prompt)
+        assert ln + req.max_new_tokens <= capacity, (
+            f"request {req.uid}: prompt {ln} + max_new "
+            f"{req.max_new_tokens} exceeds pool capacity {capacity}")
+        lb = self._bucket(ln, capacity)
+        toks = np.full((1, lb), self.pad_id, np.int32)
+        toks[0, :ln] = prompt
+
+        t0 = time.time()
+        # reuse one batch-1 scratch cache across admissions when the model
+        # is pure-KV (bucketed path): _void_tail makes every stale entry
+        # unreachable, so only the first admission pays the allocation.
+        # Recurrent (SSM/hybrid) state can't be voided -> fresh each time.
+        one = self._scratch
+        if one is None or not self._bucketed_prefill:
+            one = self.model.init_caches(1, capacity)
+        nxt, one = self._prefill(self.params, jnp.asarray(toks),
+                                 jnp.int32(ln), one)
+        if self._bucketed_prefill:
+            self._scratch = one
+        caches = self._insert(caches, one, jnp.int32(s))
+        first = int(np.asarray(nxt)[0])
+        prefill_s = time.time() - t0
+        self.stats.prefill_s += prefill_s
+
+        active[s] = True
+        cur[s] = first
+        pos[s] = ln                       # first generated token's position
+        gen[s] = [first]
+        slots[s] = _Slot(req=req, req_idx=idx, prefill_s=prefill_s,
+                         admitted_t=t0)
+        return caches
+
+
+def _void_tail(caches, length):
+    """Invalidate KV-cache entries the padded prefill tail wrote."""
+    def fix(c):
+        if isinstance(c, attn_lib.KVCache):
+            return dataclasses.replace(
+                c, pos=jnp.where(c.pos >= length, -1, c.pos))
+        return c
+    return jax.tree.map(fix, caches,
+                        is_leaf=lambda c: isinstance(c, attn_lib.KVCache))
+
+
+# ------------------------------------------------------------------- static
+class StaticServeEngine:
+    """Lockstep static batching (the pre-continuous baseline).
+
+    Requests are grouped into fixed-size batches (left-padded to a common
+    prompt length), prefilled once, then decoded step-aligned for the
+    batch-max ``max_new_tokens`` — finished requests keep burning decode
+    steps as padding. EOS-stopped requests are truncated post-hoc (the
+    lockstep loop cannot retire them early; that waste is the point).
+    """
+
+    def __init__(self, model: DecoderModel, params, *, batch_size: int = 4,
+                 mc: Optional[MCRuntime] = None, pad_id: int = 0,
+                 greedy: bool = True, eos_id: Optional[int] = None):
+        if not greedy:
+            raise NotImplementedError("sampling is not implemented; "
+                                      "only greedy decoding is supported")
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -60,6 +340,7 @@ class ServeEngine:
         self.mc = mc
         self.pad_id = pad_id
         self.greedy = greedy
+        self.eos_id = eos_id
         self.stats = EngineStats()
 
         def _prefill(params, tokens, caches):
@@ -102,10 +383,11 @@ class ServeEngine:
 
         generated = np.zeros((b, max_new), np.int32)
         t0 = time.time()
-        cur = jnp.argmax(logits, -1).astype(jnp.int32) if self.greedy else \
-            jnp.zeros((b,), jnp.int32)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
         for t in range(max_new):
             generated[:, t] = np.asarray(cur)
+            if t == max_new - 1:        # last recorded token needs no step
+                break
             logits, caches = self._decode(
                 self.params, caches, cur[:, None],
                 jnp.asarray(lmax + t, jnp.int32))
@@ -113,11 +395,29 @@ class ServeEngine:
         jax.block_until_ready(logits)
         decode_s = time.time() - t0
 
+        out = []
+        useful = 0
+        for i, r in enumerate(requests):
+            toks = generated[i, :r.max_new_tokens]
+            reason = "length"
+            eos = r.eos_id if r.eos_id is not None else self.eos_id
+            if eos is not None:
+                hits = np.nonzero(toks == eos)[0]
+                if hits.size:
+                    toks = toks[:int(hits[0]) + 1]
+                    reason = "eos"
+            useful += len(toks)
+            out.append(Result(uid=r.uid, tokens=toks, prefill_s=prefill_s,
+                              decode_s=decode_s, new_tokens=len(toks),
+                              finish_reason=reason))
         self.stats.requests += b
-        self.stats.generated_tokens += b * max_new
+        self.stats.generated_tokens += useful
         self.stats.prefill_s += prefill_s
         self.stats.decode_s += decode_s
-        return [Result(uid=r.uid, tokens=generated[i, :r.max_new_tokens],
-                       prefill_s=prefill_s, decode_s=decode_s,
-                       new_tokens=r.max_new_tokens)
-                for i, r in enumerate(requests)]
+        self.stats.decode_steps += max_new - 1
+        self.stats.slot_steps += b * (max_new - 1)
+        # a request is usefully decoding for new_tokens - 1 steps (its
+        # first token came from prefill) — same accounting as continuous
+        self.stats.active_slot_steps += sum(
+            max(r.new_tokens - 1, 0) for r in out)
+        return out

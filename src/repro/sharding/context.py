@@ -64,6 +64,34 @@ def tp_axis() -> Optional[str]:
     return "model" if axes and "model" in axes else None
 
 
+def activate_mesh(mesh):
+    """Version-portable mesh-activation context manager.
+
+    ``jax.set_mesh`` (newest) -> ``jax.sharding.use_mesh`` -> the mesh's own
+    context manager (the only spelling on the pinned 0.4.x line).
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
+
+
+def shard_map(body, mesh, in_specs, out_specs, check: bool = False):
+    """Version-portable ``shard_map`` (top-level ``jax.shard_map`` with
+    ``check_vma`` on new JAX, or ``check_rep`` on the intermediate 0.5/0.6
+    line; ``jax.experimental.shard_map`` on the pinned 0.4.x line)."""
+    import inspect
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    kw = {"check_vma": check} if "check_vma" in \
+        inspect.signature(sm).parameters else {"check_rep": check}
+    return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def constrain(x: jax.Array, spec: P) -> jax.Array:
     """with_sharding_constraint that degrades to a no-op without a mesh."""
     if mesh_axes() is None:

@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.core import odp as odp_lib
+from repro.sharding import context as shctx
 from repro.models.layers.core import mlp_activation
 from repro.models.layers.moe import OdpRuntime, expert_capacity
 
@@ -131,6 +132,5 @@ def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
         body = lambda xl, r, wi, wg, wo: fn(xl, r, wi, wg, wo,
                                             token_importance=None)
 
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=in_specs,
-        out_specs=P(data_axis, None, None), check_vma=False)(*args)
+    return shctx.shard_map(
+        body, mesh, in_specs, P(data_axis, None, None))(*args)

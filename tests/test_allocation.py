@@ -1,7 +1,7 @@
 """IP bit-allocation tests — incl. optimality cross-check vs scipy MILP."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.allocation import (
     AllocationResult, allocate_greedy_metric, allocate_layer,

@@ -49,6 +49,7 @@ _PROBE = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.hlo_analysis import analyze
+    from repro.sharding import context as shctx
     mesh = jax.make_mesh((4,), ("d",))
     sh = NamedSharding(mesh, P("d", None))
     N = 256
@@ -57,7 +58,7 @@ _PROBE = textwrap.dedent("""
             return c @ jnp.ones((N, N), jnp.float32), None
         out, _ = jax.lax.scan(body, a, None, length=8)
         return out
-    with jax.set_mesh(mesh):
+    with shctx.activate_mesh(mesh):
         c = jax.jit(g, in_shardings=sh).lower(
             jax.ShapeDtypeStruct((N, N), jnp.float32)).compile()
     res = analyze(c.as_text())
@@ -68,6 +69,7 @@ _PROBE = textwrap.dedent("""
 
 
 class TestHloAnalysis:
+    @pytest.mark.slow
     def test_scan_trip_counts_exact(self):
         """Loop bodies must be counted trip-count times (XLA counts once)."""
         out = subprocess.run(

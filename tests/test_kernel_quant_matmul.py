@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytestmark = pytest.mark.slow
+
 
 from repro.kernels.common import pack_kernel_layout, unpack_kernel_layout
 from repro.kernels.quant_matmul.ops import quant_matmul

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytestmark = pytest.mark.slow
+
 
 from repro.kernels.selective_scan.ops import selective_scan
 from repro.kernels.selective_scan.ref import selective_scan_ref

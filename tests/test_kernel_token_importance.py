@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytestmark = pytest.mark.slow
+
 
 from repro.kernels.binary_matmul.ops import binary_matmul
 from repro.kernels.binary_matmul.ref import binary_matmul_ref

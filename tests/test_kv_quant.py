@@ -36,6 +36,7 @@ class TestKVQuantMath:
         assert q.dtype == jnp.int8
 
 
+@pytest.mark.slow
 class TestKVQuantDecode:
     @pytest.mark.parametrize("arch", ["internlm2-1.8b", "gemma2-27b"])
     def test_decode_tracks_fp(self, arch):

@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytestmark = pytest.mark.slow
+
 
 from repro.config import CompressionConfig
 from repro.configs import get_config

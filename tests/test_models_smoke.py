@@ -38,6 +38,7 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_train_step_no_nans(arch):
     """One SGD step on the smoke config: finite loss and gradients."""

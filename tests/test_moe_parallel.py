@@ -7,6 +7,10 @@ import subprocess
 import sys
 import textwrap
 from pathlib import Path
+import pytest
+
+pytestmark = pytest.mark.slow
+
 
 ROOT = Path(__file__).resolve().parents[1]
 
@@ -32,7 +36,7 @@ _PROG = textwrap.dedent("""
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     shctx.set_mesh_axes(("data", "model"), (4, 2))
-    with jax.set_mesh(mesh):
+    with shctx.activate_mesh(mesh):
         y_ep = jax.jit(lambda p_, x_: apply_moe_shard_map(
             p_, x_, cfg, mesh))(p, x)
     err = float(jnp.abs(y_ep - y_ref).max())
@@ -43,7 +47,7 @@ _PROG = textwrap.dedent("""
     # ODP integration: pruning reduces, protection restores
     from repro.models.layers.moe import OdpRuntime
     odp = OdpRuntime(threshold=0.9, protect_ratio=0.0, capacity_scale=1.0)
-    with jax.set_mesh(mesh):
+    with shctx.activate_mesh(mesh):
         y_odp = jax.jit(lambda p_, x_: apply_moe_shard_map(
             p_, x_, cfg, mesh, odp=odp))(p, x)
     d_odp = float(jnp.linalg.norm(y_odp - y_ref) / jnp.linalg.norm(y_ref))
@@ -51,7 +55,7 @@ _PROG = textwrap.dedent("""
     print("EP_ODP_OK", d_odp)
 
     # collectives are the textbook schedule: 2 a2a + 1 ar per layer
-    with jax.set_mesh(mesh):
+    with shctx.activate_mesh(mesh):
         hlo = jax.jit(lambda p_, x_: apply_moe_shard_map(
             p_, x_, cfg, mesh)).lower(p, x).compile().as_text()
     n_a2a = hlo.count(" all-to-all(")

@@ -1,0 +1,264 @@
+"""Continuous-batching ServeEngine: token-for-token equivalence with
+sequential generation, slot lifecycle, EOS stopping, and stats accounting.
+
+The sequential reference below drives the model's prefill/decode steps
+directly with scalar (shared) positions — the pre-continuous code path —
+so equivalence also cross-checks the per-row-position cache insert against
+the shared-position one.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.layers.moe import OdpRuntime
+from repro.models.model_registry import build_model
+from repro.models.transformer import MCRuntime
+from repro.serve.engine import (Request, ServeEngine, StaticServeEngine)
+
+
+def _mixtral():
+    # high capacity factor: decode-time expert capacity never binds, so
+    # routing is per-token independent and batching cannot change tokens
+    cfg = get_config("mixtral-8x7b", smoke=True).replace(
+        dtype="float32", num_layers=2, d_model=64, d_ff=128, moe_d_ff=128,
+        vocab_size=256, capacity_factor=8.0, scan_layers=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _dense():
+    cfg = get_config("internlm2-1.8b", smoke=True).replace(
+        dtype="float32", num_layers=2, d_model=64, d_ff=128, vocab_size=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def _generate_sequential(model, params, prompt: np.ndarray, max_new: int,
+                         mc=None):
+    """Greedy generation, one request, scalar-position decode path."""
+    lp = len(prompt)
+    caches = model.init_caches(1, lp + max_new)
+    logits, caches, _ = model.forward(
+        params, jnp.asarray(prompt[None, :]), caches=caches, mc=mc)
+    cur = int(jnp.argmax(logits[0, -1]))
+    out = [cur]
+    for t in range(max_new - 1):
+        logits, caches = model.decode_step(
+            params, caches, jnp.asarray([[cur]], jnp.int32),
+            jnp.asarray(lp + t, jnp.int32), mc=mc)
+        cur = int(jnp.argmax(logits[0, -1]))
+        out.append(cur)
+    return np.asarray(out, np.int32)
+
+
+def _mixed_requests(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i,
+                    prompt=rng.randint(1, cfg.vocab_size,
+                                       int(rng.randint(4, 20))
+                                       ).astype(np.int32),
+                    max_new_tokens=int(rng.randint(2, 9)))
+            for i in range(n)]
+
+
+class TestEquivalence:
+    @pytest.mark.parametrize(
+        "build",
+        [pytest.param(_mixtral, id="moe", marks=pytest.mark.slow),
+         pytest.param(_dense, id="dense")])
+    def test_matches_sequential(self, build):
+        """Pool of 3 slots, 6 queued mixed-length requests: every request's
+        tokens must equal its one-request-at-a-time generation."""
+        cfg, model, params = build()
+        reqs = _mixed_requests(cfg, 6)
+        eng = ServeEngine(model, params, batch_size=3)
+        res = eng.run(reqs)
+        assert [r.uid for r in res] == [r.uid for r in reqs]
+        for req, r in zip(reqs, res):
+            ref = _generate_sequential(model, params, req.prompt,
+                                       req.max_new_tokens)
+            np.testing.assert_array_equal(r.tokens, ref, err_msg=f"uid "
+                                          f"{req.uid}")
+            assert r.new_tokens == req.max_new_tokens
+
+    def test_idle_slots_do_not_consume_expert_capacity(self):
+        """Tight capacity_factor, one live request in a pool of 4: the
+        idle slots' junk tokens are masked out of MoE dispatch, so tokens
+        must still match sequential generation exactly."""
+        cfg = get_config("mixtral-8x7b", smoke=True).replace(
+            dtype="float32", num_layers=2, d_model=64, d_ff=128,
+            moe_d_ff=128, vocab_size=256, capacity_factor=1.25,
+            scan_layers=False)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = np.arange(1, 14, dtype=np.int32)
+        ref = _generate_sequential(model, params, prompt, 8)
+        eng = ServeEngine(model, params, batch_size=4)
+        res = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=8)])
+        np.testing.assert_array_equal(res[0].tokens, ref)
+
+    def test_odp_protection_ignores_idle_slots(self):
+        """ODP token protection (protect_ratio > 0) top-k's importance over
+        the regrouped decode pool — idle-slot garbage must not steal
+        protection quota from the live request."""
+        cfg, model, params = _mixtral()
+        mc = MCRuntime(odp=OdpRuntime(threshold=0.6, protect_ratio=0.25,
+                                      capacity_scale=1.0))
+        prompt = np.arange(1, 14, dtype=np.int32)
+        ref = _generate_sequential(model, params, prompt, 10, mc=mc)
+        eng = ServeEngine(model, params, batch_size=4, mc=mc)
+        res = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=10)])
+        np.testing.assert_array_equal(res[0].tokens, ref)
+
+    def test_deterministic_across_runs(self):
+        cfg, model, params = _mixtral()
+        reqs = _mixed_requests(cfg, 4, seed=3)
+        eng = ServeEngine(model, params, batch_size=2)
+        a = eng.run(reqs)
+        b = eng.run(reqs)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x.tokens, y.tokens)
+
+
+class TestSlotLifecycle:
+    def test_admission_into_freed_slots(self):
+        """5 requests through 2 slots: later requests must be admitted only
+        as slots free up, and all must finish with their own lengths."""
+        cfg, model, params = _dense()
+        reqs = [Request(uid=i, prompt=np.arange(1, 6 + i, dtype=np.int32),
+                        max_new_tokens=[2, 7, 3, 5, 4][i])
+                for i in range(5)]
+        eng = ServeEngine(model, params, batch_size=2)
+        res = eng.run(reqs)
+        assert sorted(r.uid for r in res) == [0, 1, 2, 3, 4]
+        for req, r in zip(reqs, res):
+            assert r.tokens.shape == (req.max_new_tokens,)
+            assert r.finish_reason == "length"
+        s = eng.stats
+        # continuous overlap: fewer decode steps than the sum of the
+        # per-request decode lengths (sequential), more than the longest one
+        seq_steps = sum(r.max_new_tokens - 1 for r in reqs)
+        assert s.decode_steps < seq_steps
+        assert s.decode_steps >= max(r.max_new_tokens - 1 for r in reqs)
+
+    def test_unequal_max_new_stats(self):
+        """Stats accounting under unequal max_new_tokens: useful tokens are
+        counted exactly; occupancy reflects tail-idle slots."""
+        cfg, model, params = _dense()
+        reqs = [Request(uid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=12),
+                Request(uid=1, prompt=np.arange(1, 5, dtype=np.int32),
+                        max_new_tokens=2)]
+        eng = ServeEngine(model, params, batch_size=2)
+        eng.run(reqs)
+        s = eng.stats
+        assert s.requests == 2
+        assert s.generated_tokens == 14
+        assert s.slot_steps == s.decode_steps * 2
+        assert 0 < s.active_slot_steps <= s.slot_steps
+        # the short request leaves its slot idle for the long request's tail
+        assert s.occupancy < 1.0
+        assert s.decode_tokens_per_s > 0
+
+    def test_duplicate_uids_keep_all_results(self):
+        """Results are keyed by submission order, not uid — two requests
+        sharing a uid must both come back, in order."""
+        cfg, model, params = _dense()
+        a = np.arange(1, 9, dtype=np.int32)
+        b = np.arange(3, 15, dtype=np.int32)
+        eng = ServeEngine(model, params, batch_size=2)
+        res = eng.run([Request(uid=7, prompt=a, max_new_tokens=3),
+                       Request(uid=7, prompt=b, max_new_tokens=4)])
+        assert len(res) == 2
+        np.testing.assert_array_equal(
+            res[0].tokens, _generate_sequential(model, params, a, 3))
+        np.testing.assert_array_equal(
+            res[1].tokens, _generate_sequential(model, params, b, 4))
+
+    def test_more_requests_than_slots_occupancy(self):
+        """A saturated queue keeps freed slots busy: occupancy with a deep
+        queue must beat the two-request tail-idle case."""
+        cfg, model, params = _dense()
+        deep = [Request(uid=i, prompt=np.arange(1, 7, dtype=np.int32),
+                        max_new_tokens=4) for i in range(8)]
+        eng = ServeEngine(model, params, batch_size=2)
+        eng.run(deep)
+        assert eng.stats.occupancy > 0.9
+
+
+class TestStopping:
+    def test_per_request_eos(self):
+        """EOS must stop exactly the request that emits it, where the
+        sequential reference emits it."""
+        cfg, model, params = _dense()
+        prompt = np.arange(1, 11, dtype=np.int32)
+        ref = _generate_sequential(model, params, prompt, 8)
+        eos = int(ref[3])
+        first = int(np.nonzero(ref == eos)[0][0])
+        reqs = [Request(uid=0, prompt=prompt, max_new_tokens=8, eos_id=eos),
+                Request(uid=1, prompt=np.arange(1, 5, dtype=np.int32),
+                        max_new_tokens=6)]
+        eng = ServeEngine(model, params, batch_size=2)
+        res = eng.run(reqs)
+        np.testing.assert_array_equal(res[0].tokens, ref[:first + 1])
+        assert res[0].finish_reason == "eos"
+        assert res[1].tokens.shape == (6,)
+        assert res[1].finish_reason == "length"
+
+    def test_eos_frees_slot_for_pending(self):
+        cfg, model, params = _dense()
+        prompt = np.arange(1, 11, dtype=np.int32)
+        ref = _generate_sequential(model, params, prompt, 8)
+        eos = int(ref[1])
+        reqs = [Request(uid=0, prompt=prompt, max_new_tokens=50,
+                        eos_id=eos),
+                Request(uid=1, prompt=np.arange(1, 7, dtype=np.int32),
+                        max_new_tokens=5)]
+        eng = ServeEngine(model, params, batch_size=1)
+        res = eng.run(reqs)
+        assert res[0].finish_reason == "eos"
+        assert res[0].new_tokens < 50
+        assert res[1].tokens.shape == (5,)
+
+
+class TestStaticBaseline:
+    def test_static_engine_still_serves(self):
+        cfg, model, params = _mixtral()
+        reqs = [Request(uid=i, prompt=np.arange(1, 8, dtype=np.int32),
+                        max_new_tokens=4) for i in range(2)]
+        eng = StaticServeEngine(model, params, batch_size=2)
+        res = eng.run(reqs)
+        assert all(r.tokens.shape == (4,) for r in res)
+        res2 = eng.run(reqs)
+        np.testing.assert_array_equal(res[0].tokens, res2[0].tokens)
+
+    def test_static_eos_truncates(self):
+        """The lockstep loop cannot retire an EOS'd request early, but the
+        result must still be truncated at the EOS token."""
+        cfg, model, params = _dense()
+        prompt = np.arange(1, 11, dtype=np.int32)
+        ref = _generate_sequential(model, params, prompt, 8)
+        eos = int(ref[3])
+        first = int(np.nonzero(ref == eos)[0][0])
+        eng = StaticServeEngine(model, params, batch_size=1, eos_id=eos)
+        res = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=8)])
+        np.testing.assert_array_equal(res[0].tokens, ref[:first + 1])
+        assert res[0].finish_reason == "eos"
+        assert eng.stats.generated_tokens == first + 1
+
+    def test_static_equal_shape_batch_matches_continuous(self):
+        """With identical prompt lengths (no left padding) the lockstep
+        engine must produce the same tokens as the continuous engine."""
+        cfg, model, params = _dense()
+        reqs = [Request(uid=i,
+                        prompt=(np.arange(1, 10, dtype=np.int32) + i),
+                        max_new_tokens=5) for i in range(2)]
+        stat = StaticServeEngine(model, params, batch_size=2).run(
+            [Request(r.uid, r.prompt, r.max_new_tokens) for r in reqs])
+        cont = ServeEngine(model, params, batch_size=2).run(reqs)
+        for a, b in zip(stat, cont):
+            np.testing.assert_array_equal(a.tokens, b.tokens)

@@ -13,6 +13,10 @@ from repro.data.pipeline import (SyntheticTextConfig, SyntheticTokenDataset,
 from repro.models.model_registry import build_model
 from repro.serve.engine import Request, ServeEngine
 from repro.train.train_step import init_train_state, make_train_step
+import pytest
+
+pytestmark = pytest.mark.slow
+
 
 
 def test_full_mc_lifecycle():
