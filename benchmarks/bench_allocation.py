@@ -7,15 +7,13 @@ trace, F-norm(eps)-only, and full PMQ — at matched mean-bit budgets.
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Table, calib_tokens, trained_smoke_mixtral
 from repro.config import CompressionConfig
 from repro.core import allocation as alloc_lib
-from repro.core import mc as mc_lib
+from repro.core import pipeline
 from repro.core import pmq as pmq_lib
-from repro.core.significance import ExpertStats
 from repro.eval.perplexity import eval_tokens, perplexity
 from repro.models.transformer import MCRuntime
 
@@ -31,83 +29,70 @@ def run(verbose: bool = True) -> Table:
                    "ppl_ratio_vs_fp16"])
     table.add("fp32 (reference)", 32, 32, fp_ppl, 1.0)
 
-    def eval_mc(layout_params, runtime, metas):
-        return perplexity(model, layout_params, ev,
-                          mc=MCRuntime(odp=None,
-                                       quant_meta=runtime.quant_meta),
-                          metas=None if runtime.quant_meta else metas)
+    def eval_artifact(artifact):
+        rt = artifact.runtime
+        return perplexity(model, artifact.params, ev,
+                          mc=MCRuntime(odp=None, quant_meta=rt.quant_meta,
+                                       layer_metas=rt.layer_metas))
 
+    # staged API: one calibration, a cheap re-plan per bit target
+    record = pipeline.calibrate(model, params, calib,
+                                bit_choices=(1, 2, 3), group_size=32)
     for target in (2.5, 2.0, 1.6):
         ccfg = CompressionConfig(enabled=True, target_bits=target,
                                  group_size=32, odp_enabled=False)
-        qp, runtime, report = mc_lib.compress(model, params, ccfg, calib,
-                                              layout="uniform")
-        ppl = eval_mc(qp, runtime, report.pmq.metas)
-        table.add("PMQ (ours)", target, round(report.avg_bits, 3), ppl,
-                  ppl / fp_ppl)
+        artifact = pipeline.apply(
+            model, params, pipeline.plan(record, ccfg, layout="uniform"),
+            record)
+        ppl = eval_artifact(artifact)
+        table.add("PMQ (ours)", target, round(artifact.report.avg_bits, 3),
+                  ppl, ppl / fp_ppl)
 
-    # uniform baselines
+    # uniform baselines (single-width bit_choices need their own probes)
     for bits in (3, 2):
         ccfg = CompressionConfig(enabled=True, target_bits=float(bits),
                                  bit_choices=(bits,), group_size=32,
                                  odp_enabled=False)
-        qp, runtime, report = mc_lib.compress(model, params, ccfg, calib,
-                                              layout="uniform")
-        ppl = eval_mc(qp, runtime, report.pmq.metas)
+        record.ensure_eps(model, params, (bits,), 32)
+        artifact = pipeline.apply(
+            model, params, pipeline.plan(record, ccfg, layout="uniform"),
+            record)
+        ppl = eval_artifact(artifact)
         table.add(f"uniform {bits}-bit", bits, bits, ppl, ppl / fp_ppl)
 
     # single-metric greedy baselines at 2.5 bits via forced assignment
-    cfg_, model_, params_ = cfg, model, params
-    captured = mc_lib.calibrate_forward(model, params, calib)
     moe_slots = [s for s in range(model.period)
                  if model.slot_kinds[s] == "moe"]
-    flat = lambda v: v.reshape(-1, v.shape[-1])
+    eps_tables = record.eps[((1, 2, 3), 32)]
 
     def greedy_eval(metric_name):
         ccfg = CompressionConfig(enabled=True, target_bits=2.5,
                                  group_size=32, odp_enabled=False)
         q_layers, metas = [], []
-        for li, cap in enumerate(captured):
-            moe_p = mc_lib._get_moe_params(params, model, moe_slots, li)
-            stats = ExpertStats(num_experts=cfg.num_experts)
-            stats.update(cap["topk_idx"], cap["topk_weights"])
-            eps = pmq_lib.compute_eps(cfg, moe_p, flat(cap["x"]),
-                                      flat(cap["topk_idx"]),
-                                      flat(cap["topk_weights"]),
-                                      (1, 2, 3), 32)
+        for li, lc in enumerate(record.layers):
+            moe_p = pipeline._get_moe_params(params, model, moe_slots, li)
+            eps = eps_tables[li]
             if metric_name == "random":
                 rng = np.random.RandomState(li)
                 bits = alloc_lib.allocate_random(cfg.num_experts, 2.5, rng)
             else:
                 metric = {
-                    "freq_only": stats.frequency,
-                    "weight_only": stats.mean_weight,
+                    "freq_only": lc.frequency,
+                    "weight_only": lc.mean_weight,
                     "fnorm_only": eps[:, 1],
                     "hessian": eps[:, 1] / np.maximum(
-                        stats.frequency, 1e-6),  # loss-only proxy
+                        lc.frequency, 1e-6),  # loss-only proxy
                 }[metric_name]
                 bits = alloc_lib.allocate_greedy_metric(metric, 2.5)
             counts = tuple(int((bits == b).sum()) for b in (1, 2, 3))
             qp_l, meta, _ = pmq_lib.compress_moe_layer(
-                cfg, ccfg, moe_p, flat(cap["x"]), flat(cap["topk_idx"]),
-                flat(cap["topk_weights"]), layer_idx=li,
-                forced_counts=counts)
+                cfg, ccfg, moe_p, jnp.asarray(lc.x), lc.topk_idx,
+                lc.topk_weights, layer_idx=li, forced_counts=counts)
             q_layers.append(qp_l)
             metas.append(meta)
         new_params = dict(params)
         new_params["moe_layers"] = q_layers
-        from repro.core.mc import quantized_forward
-        lp_tokens = ev
-        total_nll, total_tok = 0.0, 0
-        for i in range(0, lp_tokens.shape[0], 4):
-            tb = lp_tokens[i:i + 4]
-            logits, _, _ = quantized_forward(model, new_params, metas, tb)
-            lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32))
-            tgt = tb[:, 1:]
-            nll = -jnp.take_along_axis(lp, tgt[..., None], -1)[..., 0]
-            total_nll += float(nll.sum())
-            total_tok += int(np.prod(tgt.shape))
-        ppl = float(np.exp(total_nll / total_tok))
+        ppl = perplexity(model, new_params, ev, metas=metas)
         avg = float(np.mean([np.dot(m.bit_classes, m.class_counts)
                              / cfg.num_experts for m in metas]))
         return ppl, avg

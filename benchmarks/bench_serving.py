@@ -22,7 +22,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import Table
+from repro.config import CompressionConfig
 from repro.configs import get_config
+from repro.core import pipeline
 from repro.models.model_registry import build_model
 from repro.serve.engine import Request, ServeEngine, StaticServeEngine
 
@@ -97,5 +99,62 @@ def run(verbose: bool = True, n_requests: int = 16, batch_size: int = 4):
     return speedup
 
 
+def cold_start(verbose: bool = True, out_dir=None):
+    """Deployment cold-start: compress-inline vs load-artifact, time to
+    first token.
+
+    The staged API's premise is that compression runs once offline and
+    serving just loads the artifact — this measures what that buys at boot:
+    ``inline`` pays calibrate+plan+GPTQ on the serving node before the
+    first request; ``artifact`` pays only ``CompressedArtifact.load``.
+    """
+    import tempfile
+
+    cfg, model, params = _model()
+    ccfg = CompressionConfig(enabled=True, target_bits=2.5, group_size=32,
+                             odp_enabled=True)
+    rng = np.random.RandomState(7)
+    calib = rng.randint(1, cfg.vocab_size, size=(4, 48)).astype(np.int32)
+    req = Request(uid=0,
+                  prompt=rng.randint(1, cfg.vocab_size, 16).astype(np.int32),
+                  max_new_tokens=1)
+
+    def first_token(artifact):
+        eng = ServeEngine.from_artifact(model, artifact, batch_size=1)
+        return eng.run([Request(req.uid, req.prompt, req.max_new_tokens)])
+
+    # inline: everything between "node boots" and "first token out"
+    t0 = time.time()
+    record = pipeline.calibrate(model, params, jax.numpy.asarray(calib),
+                                bit_choices=ccfg.bit_choices,
+                                group_size=ccfg.group_size)
+    plan = pipeline.plan(record, ccfg, layout="uniform")
+    artifact = pipeline.apply(model, params, plan, record)
+    t_compress = time.time() - t0
+    first_token(artifact)
+    ttft_inline = time.time() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        directory = out_dir or tmp
+        artifact.save(directory)
+        t0 = time.time()
+        loaded = pipeline.CompressedArtifact.load(directory)
+        t_load = time.time() - t0
+        first_token(loaded)
+        ttft_artifact = time.time() - t0
+
+    t = Table("serving cold start: compress-inline vs load-artifact",
+              ["path", "setup_s", "ttft_s"])
+    t.add("inline (calibrate+plan+GPTQ)", round(t_compress, 2),
+          round(ttft_inline, 2))
+    t.add("artifact (load only)", round(t_load, 2), round(ttft_artifact, 2))
+    speedup = ttft_inline / max(ttft_artifact, 1e-9)
+    if verbose:
+        print(t.render())
+        print(f"\nartifact boot is {speedup:.1f}x faster to first token")
+    return speedup
+
+
 if __name__ == "__main__":
     run()
+    cold_start()

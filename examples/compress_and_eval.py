@@ -2,14 +2,17 @@
 significance (Fig. 3) -> IP bit allocation (Eq. 4, Fig. 10 bit map) ->
 GPTQ quantization -> ODP calibration -> evaluate PPL vs baselines.
 
+Staged-API showcase: the calibration pass (and its eps probe tables) runs
+**once**; each bit target below is just a cheap re-``plan`` plus the GPTQ
+``apply`` — no recalibration between targets.
+
     PYTHONPATH=src python examples/compress_and_eval.py
 """
 import numpy as np
-import jax
 
 from benchmarks.common import calib_tokens, trained_smoke_mixtral
 from repro.config import CompressionConfig
-from repro.core import mc as mc_lib
+from repro.core import pipeline
 from repro.eval.perplexity import eval_tokens, perplexity
 from repro.models.transformer import MCRuntime
 
@@ -30,14 +33,18 @@ def main():
     fp_ppl = perplexity(model, params, ev)
     print(f"fp32 PPL: {fp_ppl:.3f}")
 
+    record = pipeline.calibrate(model, params, calib,
+                                bit_choices=(1, 2, 3), group_size=32)
     for target in (2.54, 2.05, 1.57):
         ccfg = CompressionConfig(enabled=True, target_bits=target,
                                  group_size=32, odp_enabled=True)
-        qp, runtime, report = mc_lib.compress(model, params, ccfg, calib,
-                                              layout="uniform")
+        cplan = pipeline.plan(record, ccfg, layout="uniform")
+        artifact = pipeline.apply(model, params, cplan, record)
+        report = artifact.report
         # significance analysis printout (Fig. 3 channels)
         rep0 = report.pmq.reports[0]
-        print(f"\n=== target {target} bits ===")
+        print(f"\n=== target {target} bits "
+              f"(probe sweeps: {record.eps_probe_runs}) ===")
         print(f"layer0 expert frequency:  "
               f"{np.round(rep0.frequency, 3).tolist()}")
         print(f"layer0 expert weight:     "
@@ -45,10 +52,12 @@ def main():
         print(f"layer0 eps(2bit):         "
               f"{np.round(rep0.eps[:, 1], 2).tolist()}")
         print(bitmap_ascii(report.pmq.reports))
-        ppl_pmq = perplexity(model, qp, ev,
-                             mc=MCRuntime(odp=None,
-                                          quant_meta=runtime.quant_meta))
-        ppl_mc = perplexity(model, qp, ev, mc=runtime)
+        ppl_pmq = perplexity(
+            model, artifact.params, ev,
+            mc=MCRuntime(odp=None,
+                         quant_meta=artifact.runtime.quant_meta,
+                         layer_metas=artifact.runtime.layer_metas))
+        ppl_mc = perplexity(model, artifact.params, ev, mc=artifact.runtime)
         print(f"avg bits {report.avg_bits:.2f} | compression "
               f"{report.pmq.compression_ratio:.1%} | "
               f"PPL PMQ {ppl_pmq:.3f} | PPL PMQ+ODP {ppl_mc:.3f} "

@@ -2,16 +2,17 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the three-line public API: build model -> ``mc.compress`` ->
-forward with the returned MCRuntime.
+Shows the staged public API: build model -> ``calibrate`` -> ``plan`` ->
+``apply`` -> forward with the artifact's MCRuntime. (The old one-shot
+``mc.compress(model, params, ccfg, calib)`` still works as a shim that
+composes these stages.)
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import CompressionConfig
 from repro.configs import get_config
-from repro.core import mc as mc_lib
+from repro.core import pipeline
 from repro.data.pipeline import calibration_batch
 from repro.models.model_registry import build_model
 
@@ -25,12 +26,17 @@ def main():
     print(f"model: {cfg.name}  ({cfg.num_experts} experts, "
           f"{cfg.param_count()/1e6:.1f}M params at this scale)")
 
-    # 2. training-free mixture compression (PMQ + ODP)
+    # 2. training-free mixture compression (PMQ + ODP), staged:
+    #    one calibration pass, a cheap bit-allocation plan, then GPTQ+pack
     ccfg = CompressionConfig(enabled=True, target_bits=2.54, group_size=32,
                              odp_enabled=True)
     calib = jnp.asarray(calibration_batch(cfg, n_sequences=4, seq_len=64))
-    qparams, runtime, report = mc_lib.compress(model, params, ccfg, calib,
-                                               layout="uniform")
+    record = pipeline.calibrate(model, params, calib,
+                                bit_choices=ccfg.bit_choices,
+                                group_size=ccfg.group_size)
+    cplan = pipeline.plan(record, ccfg, layout="uniform")
+    artifact = pipeline.apply(model, params, cplan, record)
+    report = artifact.report
     print(f"PMQ: avg {report.avg_bits:.2f} bits/expert-weight, "
           f"{report.pmq.compression_ratio:.1%} of expert bytes removed")
     print(f"ODP: mu={report.odp_threshold:.3f}, "
@@ -39,11 +45,11 @@ def main():
     for rep in report.pmq.reports[:2]:
         print(f"  layer {rep.layer}: bits per expert = {rep.bits.tolist()}")
 
-    # 3. run it
+    # 3. run it (artifact.save(dir) would persist it for serving instead)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
                                 cfg.vocab_size)
     ref, _, _ = model.forward(params, tokens)
-    out, _, _ = model.forward(qparams, tokens, mc=runtime)
+    out, _, _ = model.forward(artifact.params, tokens, mc=artifact.runtime)
     drift = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
     print(f"logit drift vs fp: {drift:.3f} (finite: "
           f"{bool(jnp.isfinite(out).all())})")

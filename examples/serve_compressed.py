@@ -1,26 +1,83 @@
-"""Serve a MC-compressed MoE with continuous batching (paper's deployment
-scenario: one GPU/TPU slice hosting a 2.5-bit Mixtral under live traffic).
+"""Compress once -> save artifact -> serve from the artifact.
 
-Requests arrive with mixed prompt/output lengths; the engine admits each
-one into a freed decode slot as soon as one opens — no request waits for a
-lockstep batch to finish.
+The paper's deployment scenario (one GPU/TPU slice hosting a 2.5-bit
+Mixtral under live traffic), now split the way production splits it: the
+staged pipeline runs **offline** and persists a
+:class:`~repro.core.pipeline.CompressedArtifact`; the serving side loads
+that artifact with **no calibration data present** and generates
+token-for-token identically to the in-memory compression it came from.
 
     PYTHONPATH=src python examples/serve_compressed.py
 """
-from repro.launch.serve import serve
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CompressionConfig
+from repro.configs import get_config
+from repro.core import pipeline
+from repro.data.pipeline import calibration_batch
+from repro.models.model_registry import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def _requests(cfg, n=6, seed=0):
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):   # mixed lengths: continuous batching's home turf
+        pl = int(rng.randint(8, 33))
+        mn = int(rng.randint(3, 13))
+        reqs.append(Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, pl).astype(np.int32),
+            max_new_tokens=mn))
+    return reqs
 
 
 def main():
-    results, stats, report = serve(
-        "mixtral-8x7b", smoke=True, mc=True, target_bits=2.54,
-        n_requests=6, max_new=12, batch_size=3, mixed_lengths=True)
-    print("\nsample generations (token ids):")
-    for r in results[:3]:
-        print(f"  req {r.uid}: {r.tokens.tolist()} ({r.finish_reason})")
-    print(f"\nthroughput: {stats.decode_tokens_per_s:.1f} tok/s decode, "
-          f"slot occupancy {stats.occupancy:.0%} "
-          f"(CPU container; see EXPERIMENTS.md §Roofline for TPU "
-          f"projections)")
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # ---- offline: calibrate -> plan -> apply -> save -------------------
+    ccfg = CompressionConfig(enabled=True, target_bits=2.54, group_size=32,
+                             odp_enabled=True)
+    calib = jnp.asarray(calibration_batch(cfg, 4, 64))
+    record = pipeline.calibrate(model, params, calib,
+                                bit_choices=ccfg.bit_choices,
+                                group_size=ccfg.group_size)
+    artifact = pipeline.apply(
+        model, params, pipeline.plan(record, ccfg, layout="uniform"), record)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        artifact.save(tmp)
+        # ---- online: load + serve (no calibration data in scope) -------
+        del record, calib
+        loaded = pipeline.CompressedArtifact.load(tmp)
+        print(f"loaded artifact: avg_bits={loaded.report.avg_bits:.2f}, "
+              f"odp_mu={loaded.runtime.odp.threshold:.3f}, "
+              f"scan_safe={loaded.scan_safe}")
+
+        reqs = _requests(cfg)
+        engine = ServeEngine.from_artifact(model, loaded, batch_size=3)
+        results = engine.run(reqs)
+
+        # the loaded artifact must match the in-memory one token-for-token
+        ref_engine = ServeEngine.from_artifact(model, artifact, batch_size=3)
+        ref = ref_engine.run(reqs)
+        for r, rr in zip(results, ref):
+            np.testing.assert_array_equal(r.tokens, rr.tokens)
+        print("token-for-token identical to the inline compression path ✓")
+
+        print("\nsample generations (token ids):")
+        for r in results[:3]:
+            print(f"  req {r.uid}: {r.tokens.tolist()} ({r.finish_reason})")
+        s = engine.stats
+        print(f"\nthroughput: {s.decode_tokens_per_s:.1f} tok/s decode, "
+              f"slot occupancy {s.occupancy:.0%} "
+              f"(CPU container; see EXPERIMENTS.md §Roofline for TPU "
+              f"projections)")
 
 
 if __name__ == "__main__":

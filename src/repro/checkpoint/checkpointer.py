@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import time
@@ -31,6 +32,26 @@ _SHARD_BYTES = 512 * 1024 * 1024
 
 def _path_str(kp) -> str:
     return jax.tree_util.keystr(kp)
+
+
+def _npz_safe(arr: np.ndarray) -> np.ndarray:
+    """npz can't hold extension dtypes (bfloat16); store the raw bits as
+    uint16 (lossless, same size) and let the manifest's recorded dtype
+    drive the reinterpretation on restore."""
+    if str(arr.dtype) == "bfloat16":
+        return arr.view(np.uint16)
+    return arr
+
+
+def _cast_back(arr: np.ndarray, dtype: str):
+    import jax.numpy as jnp
+    if dtype == "bfloat16" and arr.dtype == np.uint16:
+        import ml_dtypes                     # jax dependency
+        arr = arr.view(ml_dtypes.bfloat16)
+    out = jnp.asarray(arr)
+    if str(out.dtype) != dtype:
+        out = out.astype(dtype)
+    return out
 
 
 def save_pytree(directory: Path, step: int, tree: Any,
@@ -61,8 +82,8 @@ def save_pytree(directory: Path, step: int, tree: Any,
         manifest["leaves"].append({
             "path": _path_str(kp), "key": key, "shard": shard_idx,
             "shape": list(arr.shape), "dtype": str(arr.dtype)})
-        shard_data[key] = arr
-        shard_bytes += arr.nbytes
+        shard_data[key] = _npz_safe(arr)
+        shard_bytes += shard_data[key].nbytes
         if shard_bytes >= _SHARD_BYTES:
             flush()
     flush()
@@ -86,29 +107,95 @@ def restore_pytree(directory: Path, target: Any,
             raise FileNotFoundError(f"no checkpoint in {directory}")
     ckpt = directory / f"step_{step:08d}"
     manifest = json.loads((ckpt / "manifest.json").read_text())
-    by_shard: Dict[int, List[Dict]] = {}
-    for rec in manifest["leaves"]:
-        by_shard.setdefault(rec["shard"], []).append(rec)
-    values: Dict[str, np.ndarray] = {}
-    for shard, recs in by_shard.items():
-        with np.load(ckpt / f"shard_{shard:05d}.npz") as z:
-            for rec in recs:
-                values[rec["path"]] = z[rec["key"]]
+    values = _load_shard_values(ckpt, manifest)
 
-    import jax.numpy as jnp
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(target)
     out = []
     for kp, leaf in leaves_with_paths:
         p = _path_str(kp)
         if p not in values:
             raise KeyError(f"checkpoint missing leaf {p}")
-        arr = values[p]
+        arr, dtype = values[p]
         want_shape = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != want_shape:
             raise ValueError(f"shape mismatch at {p}: "
                              f"{arr.shape} vs {want_shape}")
-        out.append(jnp.asarray(arr))
+        out.append(_cast_back(arr, dtype))
     return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+def _load_shard_values(ckpt: Path, manifest: Dict
+                       ) -> Dict[str, Tuple[np.ndarray, str]]:
+    by_shard: Dict[int, List[Dict]] = {}
+    for rec in manifest["leaves"]:
+        by_shard.setdefault(rec["shard"], []).append(rec)
+    values: Dict[str, Tuple[np.ndarray, str]] = {}
+    for shard, recs in by_shard.items():
+        with np.load(ckpt / f"shard_{shard:05d}.npz") as z:
+            for rec in recs:
+                values[rec["path"]] = (z[rec["key"]], rec["dtype"])
+    return values
+
+
+# --------------------------------------------------- structure-free restore
+_KEY_TOKEN = re.compile(r"\['([^']*)'\]|\[(\d+)\]")
+
+
+def _parse_keystr(path: str) -> List[Any]:
+    """``['a'][0]['b']`` -> ``['a', 0, 'b']`` (dict keys / sequence idx)."""
+    keys: List[Any] = []
+    pos = 0
+    for m in _KEY_TOKEN.finditer(path):
+        if m.start() != pos:
+            raise ValueError(f"unsupported key path {path!r}")
+        keys.append(m.group(1) if m.group(1) is not None
+                    else int(m.group(2)))
+        pos = m.end()
+    if pos != len(path) or not keys:
+        raise ValueError(f"unsupported key path {path!r}")
+    return keys
+
+
+def _listify(node):
+    """Convert int-keyed dict nodes (sequence entries) back into lists."""
+    if not isinstance(node, dict):
+        return node
+    out = {k: _listify(v) for k, v in node.items()}
+    if out and all(isinstance(k, int) for k in out):
+        idx = sorted(out)
+        if idx != list(range(len(idx))):
+            raise ValueError(f"non-contiguous sequence indices {idx}")
+        return [out[i] for i in idx]
+    return out
+
+
+def load_pytree(directory: Path, step: Optional[int] = None
+                ) -> Tuple[Any, Dict]:
+    """Restore a checkpoint *without* a target structure.
+
+    Rebuilds nested dicts/lists from the manifest key paths — this is what
+    lets a :class:`repro.core.pipeline.CompressedArtifact` load with no
+    model, plan, or calibration data in hand (quantized param trees aren't
+    derivable from ``model.init``). Returns ``(tree, manifest)``.
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    ckpt = directory / f"step_{step:08d}"
+    manifest = json.loads((ckpt / "manifest.json").read_text())
+    values = _load_shard_values(ckpt, manifest)
+
+    root: Dict = {}
+    for rec in manifest["leaves"]:
+        keys = _parse_keystr(rec["path"])
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        arr, dtype = values[rec["path"]]
+        node[keys[-1]] = _cast_back(arr, dtype)
+    return _listify(root), manifest
 
 
 def latest_step(directory: Path) -> Optional[int]:

@@ -110,7 +110,11 @@ def _solve_exact(costs: np.ndarray, budget: int, bits: Sequence[int],
         if best is not None:
             break
     if best is None:
-        raise ValueError("infeasible allocation problem")
+        raise ValueError(
+            f"infeasible allocation: no assignment of {n} experts over bit "
+            f"choices {tuple(bits)} fits budget {budget} total bits "
+            f"(target {target_bits} bits/expert"
+            f"{', with presence constraints' if require_presence else ''})")
     b, obj, f = best
     alloc = np.zeros(n, np.int64)
     for i in range(n, 0, -1):

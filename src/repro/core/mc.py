@@ -1,179 +1,66 @@
 """MC — the Mixture Compressor facade (PMQ + ODP, paper Sec. 3).
 
-``compress(model, params, calib_tokens)`` runs the single calibration pass,
-compresses every MoE layer (PMQ), calibrates the ODP threshold/prune-rate,
-and returns compressed params + the static `MCRuntime` handed to the model
-at inference.
+.. deprecated::
+    The monolithic ``compress()`` is a thin shim over the staged API in
+    :mod:`repro.core.pipeline` — ``calibrate -> plan -> apply`` — which
+    separates the one-time calibration pass from cheap re-planning and the
+    heavy GPTQ stage, and yields a serializable
+    :class:`~repro.core.pipeline.CompressedArtifact` that serving loads
+    directly (no calibration data at deploy time). New code should call the
+    stages; ``compress()`` remains for existing callers and composes them.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.config import CompressionConfig, ModelConfig
-from repro.core import odp as odp_lib
-from repro.core import pmq as pmq_lib
-from repro.core.significance import ExpertStats
+from repro.config import CompressionConfig
+from repro.core import pipeline as pipeline_lib
+# Re-exported for backwards compatibility — these now live in pipeline.py.
+from repro.core.pipeline import (  # noqa: F401
+    CalibrationRecord, CompressedArtifact, CompressionPlan, MCReport,
+    _get_moe_params, capture_forward as calibrate_forward)
 from repro.models.layers.moe import MoEQuantMeta, OdpRuntime
 from repro.models.transformer import DecoderModel, MCRuntime
-
-
-@dataclass
-class MCReport:
-    pmq: pmq_lib.PMQResult
-    odp_threshold: float
-    odp_prune_rate: float
-    capacity_scale: float
-    avg_bits: float
-
-
-def calibrate_forward(model: DecoderModel, params: Dict,
-                      calib_tokens: jax.Array, **fw_kwargs):
-    """One instrumented forward pass: per-MoE-layer FFN inputs + routing."""
-    _, _, aux = model.forward(params, calib_tokens, scan=False,
-                              collect_aux=True, capture=True, **fw_kwargs)
-    captured = []
-    for layer_aux in aux["per_layer"]:
-        if "topk_idx" in layer_aux:
-            captured.append({
-                "x": layer_aux["ffn_input"],
-                "topk_idx": layer_aux["topk_idx"],
-                "topk_weights": layer_aux["topk_weights"],
-            })
-    return captured
 
 
 def compress(model: DecoderModel, params: Dict, ccfg: CompressionConfig,
              calib_tokens: jax.Array, *, layout: str = "per_layer",
              **fw_kwargs) -> Tuple[Dict, MCRuntime, MCReport]:
-    """Full MC pipeline on a DecoderModel with MoE layers."""
-    cfg = model.cfg
-    assert cfg.is_moe, "MC's PMQ applies to MoE experts (DESIGN.md §4)"
-    captured = calibrate_forward(model, params, calib_tokens, **fw_kwargs)
-    moe_ids = cfg.moe_layer_ids()
-    assert len(captured) == len(moe_ids), (len(captured), len(moe_ids))
+    """Full MC pipeline in one call (deprecated shim).
 
-    # locate MoE blocks in the stacked param tree
-    period = model.period
-    moe_slots = [s for s in range(period) if model.slot_kinds[s] == "moe"]
+    Equivalent to::
 
-    def flat(v):
-        return v.reshape(-1, v.shape[-1])
+        record = pipeline.calibrate(model, params, calib_tokens,
+                                    bit_choices=ccfg.bit_choices,
+                                    group_size=ccfg.group_size)
+        plan = pipeline.plan(record, ccfg, layout=layout)
+        artifact = pipeline.apply(model, params, plan, record)
 
-    # pass 1 (uniform layout): per-layer optima -> median counts
-    forced = None
-    if layout == "uniform":
-        per_layer_bits = []
-        for li, cap in enumerate(captured):
-            stats = ExpertStats(num_experts=cfg.num_experts)
-            stats.update(cap["topk_idx"], cap["topk_weights"])
-            moe_p = _get_moe_params(params, model, moe_slots, li)
-            eps = pmq_lib.compute_eps(
-                cfg, moe_p, flat(cap["x"]), flat(cap["topk_idx"]),
-                flat(cap["topk_weights"]), tuple(ccfg.bit_choices),
-                ccfg.group_size)
-            from repro.core import allocation as alloc_lib
-            costs = alloc_lib.build_costs(stats.frequency, stats.mean_weight,
-                                          eps, alpha=ccfg.alpha,
-                                          beta=ccfg.beta, gamma=ccfg.gamma)
-            per_layer_bits.append(alloc_lib.solve_allocation(
-                costs, ccfg.target_bits, tuple(ccfg.bit_choices)).bits)
-        forced = pmq_lib.uniform_counts(per_layer_bits, tuple(ccfg.bit_choices))
-
-    metas: List[Optional[MoEQuantMeta]] = []
-    reports = []
-    ratio_samples = []
-    q_layers = []
-    for li, cap in enumerate(captured):
-        moe_p = _get_moe_params(params, model, moe_slots, li)
-        q_params, meta, rep = pmq_lib.compress_moe_layer(
-            cfg, ccfg, moe_p, flat(cap["x"]), flat(cap["topk_idx"]),
-            flat(cap["topk_weights"]), layer_idx=moe_ids[li],
-            forced_counts=forced)
-        q_layers.append(q_params)
-        metas.append(meta)
-        reports.append(rep)
-        tw = np.asarray(cap["topk_weights"]).reshape(-1,
-                                                     cfg.top_k)
-        if cfg.top_k >= 2:
-            ratio_samples.append(tw[:, 1] / np.maximum(tw[:, 0], 1e-9))
-
-    meta0 = metas[0]
-    scan_safe = all(m == meta0 for m in metas)
-    new_params = dict(params)
-    if scan_safe:
-        # identical metas (uniform layout / lucky per-layer): stack the
-        # quantized layers back into the scanned stacks
-        for slot in moe_slots:
-            key = f"layers{slot}"
-            per_step = [q_layers[i] for i in range(len(q_layers))
-                        if moe_slots[i % len(moe_slots)] == slot]
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
-            layer = dict(new_params[key])
-            layer["ffn"] = {**{k: v for k, v in layer["ffn"].items()
-                               if k not in ("w_in", "w_gate", "w_out",
-                                            "router")},
-                            **stacked}
-            new_params[key] = layer
-    else:
-        # heterogeneous metas: per-layer MoE params; serve with scan=False
-        new_params["moe_layers"] = q_layers
-
-    avg_bits = float(np.mean([r.achieved_bits for r in reports]))
-    comp_bytes = sum(pmq_lib.packed_expert_bytes(cfg, m) for m in metas)
-    orig_bytes = pmq_lib.dense_expert_bytes(cfg) * len(metas)
-    pmq_res = pmq_lib.PMQResult(
-        params=new_params, metas=metas, reports=reports, avg_bits=avg_bits,
-        compressed_bytes=comp_bytes, original_bytes=orig_bytes)
-
-    # ODP calibration
-    odp_rt = None
-    mu, rate, cap_scale = 0.0, 0.0, 1.0
-    if ccfg.odp_enabled and cfg.top_k >= 2 and ratio_samples:
-        ratios = np.concatenate(ratio_samples)
-        mu = (float(np.median(ratios)) if ccfg.prune_threshold < 0
-              else ccfg.prune_threshold)
-        rate = float(np.mean(ratios < mu)) / cfg.top_k
-        cap_scale = odp_lib.capacity_scale_from_prune_rate(
-            rate, cfg.top_k, ccfg.protect_ratio)
-        odp_rt = OdpRuntime(threshold=mu, protect_ratio=ccfg.protect_ratio,
-                            capacity_scale=cap_scale)
-
-    # quantized serving requires one static meta per scanned stack; uniform
-    # layout guarantees it — otherwise serve via `quantized_forward`
-    runtime = MCRuntime(odp=odp_rt,
-                        quant_meta=meta0 if scan_safe else None)
-    report = MCReport(pmq=pmq_res, odp_threshold=mu, odp_prune_rate=rate,
-                      capacity_scale=cap_scale, avg_bits=avg_bits)
-    return new_params, runtime, report
-
-
-def _get_moe_params(params, model, moe_slots, li):
-    period = model.period
-    n_moe_per_step = len(moe_slots)
-    step = li // n_moe_per_step
-    slot = moe_slots[li % n_moe_per_step]
-    stack = params[f"layers{slot}"]["ffn"]
-    return jax.tree.map(lambda a: a[step], stack)
+    but discards the record (so every call re-calibrates) and the artifact
+    wrapper (so nothing can be saved). Prefer the staged API.
+    """
+    record = pipeline_lib.calibrate(
+        model, params, calib_tokens, bit_choices=tuple(ccfg.bit_choices),
+        group_size=ccfg.group_size, **fw_kwargs)
+    plan = pipeline_lib.plan(record, ccfg, layout=layout)
+    artifact = pipeline_lib.apply(model, params, plan, record)
+    return artifact.params, artifact.runtime, artifact.report
 
 
 def quantized_forward(model: DecoderModel, params: Dict,
                       metas: List[MoEQuantMeta], tokens: jax.Array, *,
                       odp: Optional[OdpRuntime] = None, **fw_kwargs):
-    """Loop-mode forward for heterogeneous per-layer metas
-    (``layout='per_layer'``): MoE params come from ``params['moe_layers']``
-    and each layer gets its own static MoEQuantMeta."""
+    """Deprecated: heterogeneous per-layer metas now ride on
+    ``MCRuntime.layer_metas`` and ``model.forward`` consumes both layouts
+    uniformly — call ``model.forward(params, tokens, mc=artifact.runtime)``.
+    """
     if "moe_layers" not in params:
-        # metas turned out identical -> compress() stacked them; plain path
+        # metas turned out identical -> apply() stacked them; plain path
         return model.forward(params, tokens, scan=False,
                              mc=MCRuntime(odp=odp, quant_meta=metas[0]),
                              **fw_kwargs)
-    return model.forward(params, tokens, scan=False,
-                         mc=MCRuntime(odp=odp, quant_meta=None),
-                         moe_layer_params=params.get("moe_layers"),
-                         moe_layer_metas=metas, **fw_kwargs)
+    return model.forward(params, tokens,
+                         mc=MCRuntime(odp=odp, layer_metas=tuple(metas)),
+                         **fw_kwargs)

@@ -117,6 +117,30 @@ def calibrate(ratio_samples: np.ndarray, protect_ratio: float = 0.02
     return OdpConfig(threshold=mu, protect_ratio=protect_ratio), rate
 
 
+def plan_odp(ratio_samples: np.ndarray, top_k: int, *,
+             protect_ratio: float = 0.02,
+             prune_threshold: float = -1.0) -> Optional[dict]:
+    """ODP portion of a CompressionPlan: threshold mu, predicted prune rate
+    and the implied static capacity scale, from calibration w1/w0 samples.
+
+    Returns None when ODP cannot apply (top-1 routing / no samples) —
+    matching the paper's restriction of Eq. 5 to multi-expert routing.
+    """
+    ratios = np.asarray(ratio_samples)
+    if top_k < 2 or ratios.size == 0:
+        return None
+    mu = (float(np.median(ratios)) if prune_threshold < 0
+          else float(prune_threshold))
+    rate = float(np.mean(ratios < mu)) / top_k
+    return {
+        "threshold": mu,
+        "prune_rate": rate,
+        "capacity_scale": capacity_scale_from_prune_rate(
+            rate, top_k, protect_ratio),
+        "protect_ratio": float(protect_ratio),
+    }
+
+
 def capacity_scale_from_prune_rate(prune_rate: float, top_k: int,
                                    protect_ratio: float) -> float:
     """Static capacity-factor multiplier implied by calibrated ODP.

@@ -1,0 +1,583 @@
+"""Staged MC compression pipeline: calibrate -> plan -> apply -> artifact.
+
+The paper's pipeline is naturally staged — one calibration pass yields expert
+significance stats, an LP/DP bit allocation, then GPTQ + packing (Sec. 3.2).
+This module exposes each stage as a first-class step so compression runs
+*once offline* and deployment just loads a small artifact (the paper's
+"pre-loading" premise):
+
+1. :func:`calibrate` — one instrumented forward pass capturing per-MoE-layer
+   FFN inputs, routing decisions, and the RTN eps_{i,j} probe table
+   (Eq. 3). Returns a :class:`CalibrationRecord`; the expensive probes are
+   cached per ``(bit_choices, group_size)`` so re-planning never re-runs
+   them.
+2. :func:`plan` — cheap, record-only: per-layer DP bit allocation (Eq. 4),
+   class sorting, ODP threshold/capacity calibration, predicted sizes.
+   Returns a small JSON-serializable :class:`CompressionPlan`; planning the
+   same record at a different ``target_bits`` costs milliseconds.
+3. :func:`apply` — the heavy stage: GPTQ each expert at its planned width,
+   pack kernel-layout planes, assemble quantized params. Returns a
+   :class:`CompressedArtifact` bundling params + metas + the static
+   :class:`MCRuntime` + report.
+4. :meth:`CompressedArtifact.save` / :meth:`CompressedArtifact.load` —
+   persist through ``checkpoint.checkpointer`` so serving boots straight
+   from the artifact with no calibration data present.
+
+The legacy one-shot ``repro.core.mc.compress`` remains as a thin shim that
+composes these stages.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CompressionConfig
+from repro.core import allocation as alloc_lib
+from repro.core import odp as odp_lib
+from repro.core import pmq as pmq_lib
+from repro.core.significance import ExpertStats
+from repro.checkpoint import checkpointer as ckpt_lib
+from repro.models.layers.moe import MoEQuantMeta, OdpRuntime
+from repro.models.transformer import DecoderModel, MCRuntime
+
+ARTIFACT_VERSION = 1
+
+
+@dataclass
+class MCReport:
+    """Summary of one full compression run (also rebuilt on artifact load)."""
+
+    pmq: pmq_lib.PMQResult
+    odp_threshold: float
+    odp_prune_rate: float
+    capacity_scale: float
+    avg_bits: float
+
+
+# ------------------------------------------------------------- calibration
+def capture_forward(model: DecoderModel, params: Dict,
+                    calib_tokens: jax.Array, **fw_kwargs) -> List[Dict]:
+    """One instrumented forward pass: per-MoE-layer FFN inputs + routing."""
+    _, _, aux = model.forward(params, calib_tokens, scan=False,
+                              collect_aux=True, capture=True, **fw_kwargs)
+    captured = []
+    for layer_aux in aux["per_layer"]:
+        if "topk_idx" in layer_aux:
+            captured.append({
+                "x": layer_aux["ffn_input"],
+                "topk_idx": layer_aux["topk_idx"],
+                "topk_weights": layer_aux["topk_weights"],
+            })
+    return captured
+
+
+@dataclass
+class LayerCalibration:
+    """Flattened calibration capture + router stats for one MoE layer."""
+
+    x: np.ndarray             # (T, D) FFN inputs
+    topk_idx: np.ndarray      # (T, k) routed expert ids
+    topk_weights: np.ndarray  # (T, k) routing weights
+    frequency: np.ndarray     # (E,) phi_i
+    mean_weight: np.ndarray   # (E,) w_i
+
+
+@dataclass
+class CalibrationRecord:
+    """Everything :func:`plan` and :func:`apply` need, computed once.
+
+    ``eps`` caches the RTN probe tables keyed by ``(bit_choices,
+    group_size)`` — re-planning at a new ``target_bits`` with the same
+    quantizer settings reuses them without touching the model weights.
+    """
+
+    model_fingerprint: str
+    num_experts: int
+    top_k: int
+    d_model: int
+    moe_d_ff: int
+    moe_layer_ids: List[int]
+    layers: List[LayerCalibration]
+    ratio_samples: np.ndarray                  # concatenated w1/w0 samples
+    eps: Dict[Tuple[Tuple[int, ...], int], List[np.ndarray]] = \
+        field(default_factory=dict)
+    eps_probe_runs: int = 0                    # how many probe sweeps ran
+
+    def ensure_eps(self, model: DecoderModel, params: Dict,
+                   bit_choices, group_size: int) -> List[np.ndarray]:
+        """Compute (or fetch cached) eps_{i,j} tables for one quantizer
+        setting. Only this method re-touches the model weights."""
+        key = (tuple(int(b) for b in bit_choices), int(group_size))
+        if key in self.eps:
+            return self.eps[key]
+        moe_slots = _moe_slots(model)
+        tables = []
+        for li, lc in enumerate(self.layers):
+            moe_p = _get_moe_params(params, model, moe_slots, li)
+            tables.append(pmq_lib.compute_eps(
+                model.cfg, moe_p, jnp.asarray(lc.x), lc.topk_idx,
+                lc.topk_weights, key[0], key[1]))
+        self.eps[key] = tables
+        self.eps_probe_runs += 1
+        return tables
+
+
+def calibrate(model: DecoderModel, params: Dict, calib_tokens: jax.Array, *,
+              bit_choices=(1, 2, 3), group_size: int = 128,
+              **fw_kwargs) -> CalibrationRecord:
+    """Stage 1: one calibration pass + eps probes -> CalibrationRecord."""
+    cfg = model.cfg
+    assert cfg.is_moe, "MC's PMQ applies to MoE experts (DESIGN.md §4)"
+    captured = capture_forward(model, params, calib_tokens, **fw_kwargs)
+    moe_ids = cfg.moe_layer_ids()
+    assert len(captured) == len(moe_ids), (len(captured), len(moe_ids))
+
+    layers = []
+    ratio_samples = []
+    for cap in captured:
+        x = np.asarray(cap["x"], np.float32)
+        x = x.reshape(-1, x.shape[-1])
+        idx = np.asarray(cap["topk_idx"]).reshape(-1, cfg.top_k)
+        w = np.asarray(cap["topk_weights"], np.float32).reshape(-1, cfg.top_k)
+        stats = ExpertStats(num_experts=cfg.num_experts)
+        stats.update(idx, w)
+        layers.append(LayerCalibration(
+            x=x, topk_idx=idx, topk_weights=w,
+            frequency=stats.frequency, mean_weight=stats.mean_weight))
+        if cfg.top_k >= 2:
+            ratio_samples.append(w[:, 1] / np.maximum(w[:, 0], 1e-9))
+
+    record = CalibrationRecord(
+        model_fingerprint=cfg.fingerprint(),
+        num_experts=cfg.num_experts, top_k=cfg.top_k,
+        d_model=cfg.d_model, moe_d_ff=cfg.moe_d_ff,
+        moe_layer_ids=list(moe_ids), layers=layers,
+        ratio_samples=(np.concatenate(ratio_samples) if ratio_samples
+                       else np.zeros(0, np.float32)))
+    record.ensure_eps(model, params, bit_choices, group_size)
+    return record
+
+
+# ------------------------------------------------------------------- plan
+@dataclass
+class LayerPlan:
+    """Planned allocation for one MoE layer (all original expert order)."""
+
+    layer: int                       # model layer id
+    bits: Tuple[int, ...]            # (E,) allocated widths
+    permutation: Tuple[int, ...]     # class-sorted expert order
+    bit_classes: Tuple[int, ...]
+    class_counts: Tuple[int, ...]
+    objective: float
+    achieved_bits: float
+
+    def to_dict(self) -> Dict:
+        return {"layer": self.layer, "bits": list(self.bits),
+                "permutation": list(self.permutation),
+                "bit_classes": list(self.bit_classes),
+                "class_counts": list(self.class_counts),
+                "objective": self.objective,
+                "achieved_bits": self.achieved_bits}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "LayerPlan":
+        return cls(layer=int(d["layer"]),
+                   bits=tuple(int(b) for b in d["bits"]),
+                   permutation=tuple(int(p) for p in d["permutation"]),
+                   bit_classes=tuple(int(b) for b in d["bit_classes"]),
+                   class_counts=tuple(int(c) for c in d["class_counts"]),
+                   objective=float(d["objective"]),
+                   achieved_bits=float(d["achieved_bits"]))
+
+
+@dataclass
+class CompressionPlan:
+    """Small, serializable output of :func:`plan` — everything :func:`apply`
+    needs besides the weights and the calibration record."""
+
+    layout: str                      # per_layer | uniform
+    target_bits: float
+    bit_choices: Tuple[int, ...]
+    group_size: int
+    pack_block: int
+    gptq_percdamp: float
+    achieved_bits: float             # mean over layers
+    predicted_bytes: int
+    original_bytes: int
+    layers: List[LayerPlan]
+    model_fingerprint: str
+    uniform_counts: Optional[Tuple[int, ...]] = None
+    uniform_achieved_bits: Optional[float] = None
+    odp: Optional[Dict] = None       # threshold/prune_rate/capacity_scale/...
+
+    @property
+    def scan_safe(self) -> bool:
+        """One static expert layout across layers -> scan-compatible."""
+        first = (self.layers[0].bit_classes, self.layers[0].class_counts)
+        return all((lp.bit_classes, lp.class_counts) == first
+                   for lp in self.layers)
+
+    def metas(self) -> List[MoEQuantMeta]:
+        return [MoEQuantMeta(bit_classes=lp.bit_classes,
+                             class_counts=lp.class_counts,
+                             group_size=self.group_size,
+                             pack_block=self.pack_block)
+                for lp in self.layers]
+
+    def to_dict(self) -> Dict:
+        return {
+            "layout": self.layout, "target_bits": self.target_bits,
+            "bit_choices": list(self.bit_choices),
+            "group_size": self.group_size, "pack_block": self.pack_block,
+            "gptq_percdamp": self.gptq_percdamp,
+            "achieved_bits": self.achieved_bits,
+            "predicted_bytes": self.predicted_bytes,
+            "original_bytes": self.original_bytes,
+            "layers": [lp.to_dict() for lp in self.layers],
+            "model_fingerprint": self.model_fingerprint,
+            "uniform_counts": (list(self.uniform_counts)
+                               if self.uniform_counts is not None else None),
+            "uniform_achieved_bits": self.uniform_achieved_bits,
+            "odp": self.odp,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "CompressionPlan":
+        return cls(
+            layout=d["layout"], target_bits=float(d["target_bits"]),
+            bit_choices=tuple(int(b) for b in d["bit_choices"]),
+            group_size=int(d["group_size"]),
+            pack_block=int(d["pack_block"]),
+            gptq_percdamp=float(d["gptq_percdamp"]),
+            achieved_bits=float(d["achieved_bits"]),
+            predicted_bytes=int(d["predicted_bytes"]),
+            original_bytes=int(d["original_bytes"]),
+            layers=[LayerPlan.from_dict(lp) for lp in d["layers"]],
+            model_fingerprint=d["model_fingerprint"],
+            uniform_counts=(tuple(int(c) for c in d["uniform_counts"])
+                            if d.get("uniform_counts") is not None else None),
+            uniform_achieved_bits=d.get("uniform_achieved_bits"),
+            odp=d.get("odp"))
+
+    def save(self, path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_dict(), indent=2))
+        return path
+
+    @classmethod
+    def load(cls, path) -> "CompressionPlan":
+        return cls.from_dict(json.loads(Path(path).read_text()))
+
+
+def _make_layer_plan(layer_id: int, bits: np.ndarray,
+                     objective: float) -> LayerPlan:
+    order = np.argsort(bits, kind="stable")
+    classes, counts = np.unique(bits[order], return_counts=True)
+    return LayerPlan(
+        layer=int(layer_id),
+        bits=tuple(int(b) for b in bits),
+        permutation=tuple(int(i) for i in order),
+        bit_classes=tuple(int(b) for b in classes),
+        class_counts=tuple(int(c) for c in counts),
+        objective=float(objective),
+        achieved_bits=float(np.mean(bits)))
+
+
+def plan(record: CalibrationRecord, ccfg: CompressionConfig, *,
+         layout: str = "per_layer") -> CompressionPlan:
+    """Stage 2: record -> CompressionPlan. Cheap, weight-free; re-planning
+    at a new ``target_bits`` reuses the record's cached eps tables."""
+    if layout not in ("per_layer", "uniform"):
+        raise ValueError(f"unknown layout {layout!r} "
+                         "(expected 'per_layer' or 'uniform')")
+    choices = tuple(int(b) for b in ccfg.bit_choices)
+    key = (choices, int(ccfg.group_size))
+    if key not in record.eps:
+        raise ValueError(
+            f"CalibrationRecord holds no eps table for bit_choices={choices}"
+            f", group_size={ccfg.group_size} (available: "
+            f"{sorted(record.eps)}); calibrate() with matching settings or "
+            "call record.ensure_eps(model, params, bit_choices, group_size)")
+    eps_tables = record.eps[key]
+
+    per_layer = []
+    for li, lc in enumerate(record.layers):
+        costs = alloc_lib.build_costs(
+            lc.frequency, lc.mean_weight, eps_tables[li],
+            alpha=ccfg.alpha, beta=ccfg.beta, gamma=ccfg.gamma)
+        res = alloc_lib.solve_allocation(costs, ccfg.target_bits, choices)
+        per_layer.append((costs, res))
+
+    layer_plans: List[LayerPlan] = []
+    counts = None
+    uni_achieved = None
+    if layout == "uniform":
+        counts, uni_achieved = pmq_lib.uniform_counts(
+            [res.bits for _, res in per_layer], choices)
+        for li, (costs, _) in enumerate(per_layer):
+            bits, obj = pmq_lib.assign_with_counts(costs, choices, counts)
+            layer_plans.append(_make_layer_plan(
+                record.moe_layer_ids[li], bits, obj))
+    else:
+        for li, (_, res) in enumerate(per_layer):
+            layer_plans.append(_make_layer_plan(
+                record.moe_layer_ids[li], res.bits, res.objective))
+
+    pack_block = (128 if (record.d_model % 128 == 0
+                          and record.moe_d_ff % 128 == 0)
+                  else int(ccfg.group_size))
+    predicted = sum(pmq_lib.packed_expert_bytes_dims(
+        record.d_model, record.moe_d_ff,
+        MoEQuantMeta(lp.bit_classes, lp.class_counts,
+                     int(ccfg.group_size), pack_block))
+        for lp in layer_plans)
+    original = (pmq_lib.dense_expert_bytes_dims(
+        record.num_experts, record.d_model, record.moe_d_ff)
+        * len(layer_plans))
+
+    odp = None
+    if ccfg.odp_enabled:
+        odp = odp_lib.plan_odp(record.ratio_samples, record.top_k,
+                               protect_ratio=ccfg.protect_ratio,
+                               prune_threshold=ccfg.prune_threshold)
+
+    return CompressionPlan(
+        layout=layout, target_bits=float(ccfg.target_bits),
+        bit_choices=choices, group_size=int(ccfg.group_size),
+        pack_block=pack_block, gptq_percdamp=float(ccfg.gptq_percdamp),
+        achieved_bits=float(np.mean([lp.achieved_bits
+                                     for lp in layer_plans])),
+        predicted_bytes=int(predicted), original_bytes=int(original),
+        layers=layer_plans, model_fingerprint=record.model_fingerprint,
+        uniform_counts=counts, uniform_achieved_bits=uni_achieved, odp=odp)
+
+
+# ------------------------------------------------------------------ apply
+@dataclass
+class CompressedArtifact:
+    """Quantized params + static metadata, the deployable unit.
+
+    ``params`` is the full model tree with quantized experts — stacked back
+    into the scanned layer stacks when the plan is scan-safe, or carried as
+    the per-layer ``params['moe_layers']`` list otherwise. ``runtime`` is
+    the :class:`MCRuntime` consumed uniformly by ``model.forward`` and the
+    serving engines for both layouts.
+    """
+
+    params: Dict
+    metas: List[MoEQuantMeta]
+    runtime: MCRuntime
+    plan: CompressionPlan
+    report: MCReport
+
+    @property
+    def scan_safe(self) -> bool:
+        return self.runtime.quant_meta is not None
+
+    @property
+    def model_fingerprint(self) -> str:
+        return self.plan.model_fingerprint
+
+    def save(self, directory) -> Path:
+        """Persist through the sharded checkpointer; the plan/metas/runtime
+        ride in the manifest so :meth:`load` needs no model or record."""
+        meta = {"artifact": {
+            "version": ARTIFACT_VERSION,
+            "plan": self.plan.to_dict(),
+            "odp": _odp_to_dict(self.runtime.odp),
+            "scan_safe": self.scan_safe,
+        }}
+        return ckpt_lib.save_pytree(Path(directory), 0, self.params,
+                                    meta=meta)
+
+    @classmethod
+    def load(cls, directory) -> "CompressedArtifact":
+        params, manifest = ckpt_lib.load_pytree(Path(directory))
+        art = manifest.get("meta", {}).get("artifact")
+        if art is None:
+            raise ValueError(
+                f"{directory} is a plain checkpoint, not a CompressedArtifact"
+                " (manifest carries no 'artifact' metadata)")
+        if art["version"] > ARTIFACT_VERSION:
+            raise ValueError(f"artifact version {art['version']} is newer "
+                             f"than supported {ARTIFACT_VERSION}")
+        cplan = CompressionPlan.from_dict(art["plan"])
+        metas = cplan.metas()
+        odp_rt = _odp_from_dict(art["odp"])
+        scan_safe = bool(art["scan_safe"])
+        runtime = MCRuntime(
+            odp=odp_rt,
+            quant_meta=metas[0] if scan_safe else None,
+            layer_metas=None if scan_safe else tuple(metas))
+        report = _report_from_plan(cplan, params, metas)
+        return cls(params=params, metas=metas, runtime=runtime, plan=cplan,
+                   report=report)
+
+
+def apply(model: DecoderModel, params: Dict, cplan: CompressionPlan,
+          record: CalibrationRecord) -> CompressedArtifact:
+    """Stage 3: GPTQ + pack every expert at its planned width and assemble
+    the deployable artifact."""
+    cfg = model.cfg
+    if cplan.model_fingerprint != record.model_fingerprint:
+        raise ValueError(
+            "plan/record model mismatch: plan was made for "
+            f"{cplan.model_fingerprint}, record for "
+            f"{record.model_fingerprint}")
+    if len(cplan.layers) != len(record.layers):
+        raise ValueError(f"plan covers {len(cplan.layers)} MoE layers but "
+                         f"record captured {len(record.layers)}")
+    for lp in cplan.layers:
+        if len(lp.bits) != record.num_experts:
+            raise ValueError(
+                f"plan layer {lp.layer} allocates {len(lp.bits)} experts "
+                f"but the model has {record.num_experts}")
+    ccfg = CompressionConfig(
+        enabled=True, target_bits=cplan.target_bits,
+        bit_choices=cplan.bit_choices, group_size=cplan.group_size,
+        gptq_percdamp=cplan.gptq_percdamp)
+    eps_tables = record.eps.get((cplan.bit_choices, cplan.group_size))
+    moe_slots = _moe_slots(model)
+
+    metas: List[MoEQuantMeta] = []
+    reports: List[pmq_lib.PMQLayerReport] = []
+    q_layers: List[Dict] = []
+    for li, (lc, lp) in enumerate(zip(record.layers, cplan.layers)):
+        moe_p = _get_moe_params(params, model, moe_slots, li)
+        bits = np.asarray(lp.bits, np.int64)
+        order = np.asarray(lp.permutation, np.int64)
+        meta = MoEQuantMeta(bit_classes=lp.bit_classes,
+                            class_counts=lp.class_counts,
+                            group_size=cplan.group_size,
+                            pack_block=cplan.pack_block)
+        q_params = pmq_lib.quantize_moe_layer(
+            cfg, ccfg, moe_p, jnp.asarray(lc.x), lc.topk_idx,
+            bits_per_expert=bits, order=order, meta=meta)
+        q_layers.append(q_params)
+        metas.append(meta)
+        reports.append(pmq_lib.PMQLayerReport(
+            layer=lp.layer, bits=bits, permutation=order,
+            achieved_bits=lp.achieved_bits, objective=lp.objective,
+            eps=(eps_tables[li] if eps_tables is not None else None),
+            frequency=lc.frequency, mean_weight=lc.mean_weight))
+
+    # single source of truth: group_size/pack_block are plan-global, so
+    # meta equality reduces to the plan's class-layout comparison
+    scan_safe = cplan.scan_safe
+    new_params = _assemble_params(params, q_layers, moe_slots, scan_safe)
+
+    odp_rt = _odp_from_dict(cplan.odp)
+    runtime = MCRuntime(
+        odp=odp_rt,
+        quant_meta=metas[0] if scan_safe else None,
+        layer_metas=None if scan_safe else tuple(metas))
+
+    avg_bits = float(np.mean([r.achieved_bits for r in reports]))
+    pmq_res = pmq_lib.PMQResult(
+        params=new_params, metas=metas, reports=reports, avg_bits=avg_bits,
+        compressed_bytes=cplan.predicted_bytes,
+        original_bytes=cplan.original_bytes)
+    report = MCReport(
+        pmq=pmq_res,
+        odp_threshold=(cplan.odp or {}).get("threshold", 0.0),
+        odp_prune_rate=(cplan.odp or {}).get("prune_rate", 0.0),
+        capacity_scale=(cplan.odp or {}).get("capacity_scale", 1.0),
+        avg_bits=avg_bits)
+    return CompressedArtifact(params=new_params, metas=metas,
+                              runtime=runtime, plan=cplan, report=report)
+
+
+# ---------------------------------------------------------------- helpers
+def _moe_slots(model: DecoderModel) -> List[int]:
+    return [s for s in range(model.period) if model.slot_kinds[s] == "moe"]
+
+
+def _get_moe_params(params, model, moe_slots, li):
+    n_moe_per_step = len(moe_slots)
+    step = li // n_moe_per_step
+    slot = moe_slots[li % n_moe_per_step]
+    stack = params[f"layers{slot}"]["ffn"]
+    return jax.tree.map(lambda a: a[step], stack)
+
+
+_EXPERT_KEYS = ("w_in", "w_gate", "w_out", "router")
+
+
+def _assemble_params(params, q_layers, moe_slots, scan_safe):
+    """Place quantized MoE layers back into the model tree.
+
+    Scan-safe (identical metas): stack the quantized layers into the
+    scanned stacks. Heterogeneous: carry them as the per-layer
+    ``moe_layers`` list (loop-mode forward) and strip the dense expert
+    stacks and the stale unpermuted router — the artifact must not ship a
+    second copy of anything the quantized layers already carry.
+    """
+    new_params = dict(params)
+    if scan_safe:
+        for slot in moe_slots:
+            key = f"layers{slot}"
+            per_step = [q_layers[i] for i in range(len(q_layers))
+                        if moe_slots[i % len(moe_slots)] == slot]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+            layer = dict(new_params[key])
+            layer["ffn"] = {**{k: v for k, v in layer["ffn"].items()
+                               if k not in _EXPERT_KEYS},
+                            **stacked}
+            new_params[key] = layer
+    else:
+        for slot in moe_slots:
+            key = f"layers{slot}"
+            layer = dict(new_params[key])
+            layer["ffn"] = {k: v for k, v in layer["ffn"].items()
+                            if k not in _EXPERT_KEYS}
+            new_params[key] = layer
+        new_params["moe_layers"] = q_layers
+    return new_params
+
+
+def _odp_to_dict(odp: Optional[OdpRuntime]) -> Optional[Dict]:
+    if odp is None:
+        return None
+    return {"threshold": odp.threshold, "protect_ratio": odp.protect_ratio,
+            "capacity_scale": odp.capacity_scale, "enabled": odp.enabled,
+            "importance_metric": odp.importance_metric}
+
+
+def _odp_from_dict(d: Optional[Dict]) -> Optional[OdpRuntime]:
+    if d is None:
+        return None
+    return OdpRuntime(
+        threshold=float(d["threshold"]),
+        protect_ratio=float(d["protect_ratio"]),
+        capacity_scale=float(d.get("capacity_scale", 1.0)),
+        enabled=bool(d.get("enabled", True)),
+        importance_metric=d.get("importance_metric", "eq6"))
+
+
+def _report_from_plan(cplan: CompressionPlan, params: Dict,
+                      metas: List[MoEQuantMeta]) -> MCReport:
+    """Light report rebuilt at load time (no calibration arrays on disk)."""
+    reports = [pmq_lib.PMQLayerReport(
+        layer=lp.layer, bits=np.asarray(lp.bits, np.int64),
+        permutation=np.asarray(lp.permutation, np.int64),
+        achieved_bits=lp.achieved_bits, objective=lp.objective,
+        eps=None, frequency=None, mean_weight=None)
+        for lp in cplan.layers]
+    pmq_res = pmq_lib.PMQResult(
+        params=params, metas=metas, reports=reports,
+        avg_bits=cplan.achieved_bits,
+        compressed_bytes=cplan.predicted_bytes,
+        original_bytes=cplan.original_bytes)
+    odp = cplan.odp or {}
+    return MCReport(pmq=pmq_res,
+                    odp_threshold=odp.get("threshold", 0.0),
+                    odp_prune_rate=odp.get("prune_rate", 0.0),
+                    capacity_scale=odp.get("capacity_scale", 1.0),
+                    avg_bits=cplan.achieved_bits)

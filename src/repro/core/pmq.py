@@ -24,7 +24,6 @@ analytically in reports — DESIGN.md §8.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -50,9 +49,10 @@ class PMQLayerReport:
     permutation: np.ndarray          # class-sorted expert order
     achieved_bits: float
     objective: float
-    eps: np.ndarray                  # (E, |choices|)
-    frequency: np.ndarray
-    mean_weight: np.ndarray
+    # calibration-time arrays; None on reports rebuilt from a loaded artifact
+    eps: Optional[np.ndarray]        # (E, |choices|)
+    frequency: Optional[np.ndarray]
+    mean_weight: Optional[np.ndarray]
 
 
 @dataclass
@@ -193,6 +193,30 @@ def compress_moe_layer(cfg: ModelConfig, ccfg: CompressionConfig,
                         class_counts=tuple(int(c) for c in counts),
                         group_size=ccfg.group_size, pack_block=pack_block)
 
+    new_params = quantize_moe_layer(cfg, ccfg, moe_params, calib_x, topk_idx,
+                                    bits_per_expert=bits_per_expert,
+                                    order=order, meta=meta)
+
+    report = PMQLayerReport(
+        layer=layer_idx, bits=bits_per_expert, permutation=order,
+        achieved_bits=float(bits_per_expert.mean()), objective=objective,
+        eps=eps, frequency=stats.frequency, mean_weight=stats.mean_weight)
+    return new_params, meta, report
+
+
+def quantize_moe_layer(cfg: ModelConfig, ccfg: CompressionConfig,
+                       moe_params: Dict, calib_x: jax.Array,
+                       topk_idx: jax.Array, *,
+                       bits_per_expert: np.ndarray, order: np.ndarray,
+                       meta: MoEQuantMeta) -> Dict:
+    """GPTQ + pack one MoE layer's experts at pre-planned widths.
+
+    The allocation (``bits_per_expert``/``order``/``meta``) comes from a
+    :class:`repro.core.pipeline.CompressionPlan`; this stage only does the
+    heavy weight work. Returns the quantized layer params (class-sorted
+    packed planes + permuted router; expert mats removed).
+    """
+    del bits_per_expert  # encoded by order + meta's class layout
     idx_np = np.asarray(topk_idx).reshape(-1, topk_idx.shape[-1])
     x32 = calib_x.astype(jnp.float32)
     w_in = np.asarray(moe_params["w_in"], np.float32)
@@ -220,14 +244,9 @@ def compress_moe_layer(cfg: ModelConfig, ccfg: CompressionConfig,
     new_params = {k: v for k, v in moe_params.items()
                   if k not in ("w_in", "w_gate", "w_out")}
     new_params["router"] = jnp.asarray(
-        np.asarray(moe_params["router"])[:, order])
+        np.asarray(moe_params["router"])[:, np.asarray(order)])
     new_params["experts_q"] = experts_q
-
-    report = PMQLayerReport(
-        layer=layer_idx, bits=bits_per_expert, permutation=order,
-        achieved_bits=float(bits_per_expert.mean()), objective=objective,
-        eps=eps, frequency=stats.frequency, mean_weight=stats.mean_weight)
-    return new_params, meta, report
+    return new_params
 
 
 def assign_with_counts(costs: np.ndarray, bit_choices: Sequence[int],
@@ -252,22 +271,75 @@ def assign_with_counts(costs: np.ndarray, bit_choices: Sequence[int],
 
 
 def uniform_counts(per_layer_bits: List[np.ndarray],
-                   bit_choices: Sequence[int]) -> Tuple[int, ...]:
-    """Median class sizes across layers, fixed up to sum to E."""
+                   bit_choices: Sequence[int]
+                   ) -> Tuple[Tuple[int, ...], float]:
+    """Median class sizes across layers, repaired to sum to E *without*
+    silently exceeding the bit budget the per-layer optima realized.
+
+    Rounding the per-class medians can leave ``sum(counts) != E``; absorbing
+    the remainder into the widest class (the old behavior) could push the
+    mean width past ``target_bits``. Instead, missing experts go to the
+    narrowest class and surplus experts are removed widest-first; if the
+    medians still overshoot the realized per-layer budget, experts are
+    demoted widest->narrowest until within it. Returns ``(counts,
+    achieved_bits)`` so the plan reports what the shared layout actually
+    costs.
+    """
+    if not per_layer_bits:
+        raise ValueError("uniform_counts: no per-layer allocations given "
+                         "(the model has no captured MoE layers)")
     e = len(per_layer_bits[0])
-    med = []
-    for b in bit_choices:
-        med.append(int(np.median([(lb == b).sum() for lb in per_layer_bits])))
+    if any(len(lb) != e for lb in per_layer_bits):
+        raise ValueError(
+            "uniform_counts: per-layer allocations disagree on expert count: "
+            f"{[len(lb) for lb in per_layer_bits]}")
+    choices = [int(b) for b in bit_choices]
+    med = [int(np.median([(lb == b).sum() for lb in per_layer_bits]))
+           for b in choices]
+    # realized per-layer budget: the mean total bits the optima spent
+    budget = int(np.floor(np.mean([int(lb.sum()) for lb in per_layer_bits])))
+    # class positions in ascending-width order (bit_choices itself is a
+    # user-settable tuple with no ordering guarantee)
+    asc = sorted(range(len(choices)), key=lambda j: choices[j])
+
     diff = e - sum(med)
-    med[-1] += diff   # absorb rounding in the widest class
-    if med[-1] < 0:
-        raise ValueError("degenerate uniform counts")
-    return tuple(med)
+    if diff > 0:
+        med[asc[0]] += diff     # narrowest class: never raises the mean
+    elif diff < 0:
+        need = -diff            # drop surplus experts widest-first
+        for j in reversed(asc):
+            take = min(med[j], need)
+            med[j] -= take
+            need -= take
+            if need == 0:
+                break
+
+    def total_bits():
+        return sum(c * b for c, b in zip(med, choices))
+
+    while total_bits() > budget:
+        for k in range(len(asc) - 1, 0, -1):
+            if med[asc[k]] > 0:       # demote one expert a single width
+                med[asc[k]] -= 1      # step — the smallest decrement, so
+                med[asc[k - 1]] += 1  # the layout lands closest to budget
+                break
+        else:
+            raise ValueError(
+                "uniform_counts: degenerate median layout — class counts "
+                f"{tuple(med)} over bit choices {tuple(choices)} cannot meet "
+                f"the realized per-layer budget of {budget} bits for {e} "
+                "experts; widen bit_choices or use layout='per_layer'")
+    achieved = total_bits() / e
+    return tuple(med), achieved
 
 
 # ------------------------------------------------------------ size account
 def packed_expert_bytes(cfg: ModelConfig, meta: MoEQuantMeta) -> int:
-    d, f = cfg.d_model, cfg.moe_d_ff
+    return packed_expert_bytes_dims(cfg.d_model, cfg.moe_d_ff, meta)
+
+
+def packed_expert_bytes_dims(d: int, f: int, meta: MoEQuantMeta) -> int:
+    """Config-free byte accounting (the plan stage has dims, not a cfg)."""
     gs = meta.group_size
     total = 0
     for bits, cnt in zip(meta.bit_classes, meta.class_counts):
@@ -283,4 +355,10 @@ def packed_expert_bytes(cfg: ModelConfig, meta: MoEQuantMeta) -> int:
 
 
 def dense_expert_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
-    return cfg.num_experts * 3 * cfg.d_model * cfg.moe_d_ff * dtype_bytes
+    return dense_expert_bytes_dims(cfg.num_experts, cfg.d_model,
+                                   cfg.moe_d_ff, dtype_bytes)
+
+
+def dense_expert_bytes_dims(num_experts: int, d: int, f: int,
+                            dtype_bytes: int = 2) -> int:
+    return num_experts * 3 * d * f * dtype_bytes

@@ -23,16 +23,21 @@ from repro.models.transformer import MCRuntime
 def perplexity(model, params, tokens: jax.Array, *,
                mc: Optional[MCRuntime] = None, metas=None,
                batch_size: int = 4) -> float:
-    """Token-level PPL of next-token prediction."""
+    """Token-level PPL of next-token prediction.
+
+    ``metas`` is a legacy kwarg for heterogeneous per-layer quantization;
+    it folds into the uniform ``MCRuntime`` path (``layer_metas``) that
+    ``model.forward`` consumes for both layouts.
+    """
+    if metas is not None:
+        odp = mc.odp if mc else None
+        mc = (MCRuntime(odp=odp, layer_metas=tuple(metas))
+              if "moe_layers" in params
+              else MCRuntime(odp=odp, quant_meta=metas[0]))
     total_nll, total_tok = 0.0, 0
     for i in range(0, tokens.shape[0], batch_size):
         tb = tokens[i:i + batch_size]
-        if metas is not None:
-            from repro.core.mc import quantized_forward
-            logits, _, _ = quantized_forward(model, params, metas, tb,
-                                             odp=mc.odp if mc else None)
-        else:
-            logits, _, _ = model.forward(params, tb, mc=mc)
+        logits, _, _ = model.forward(params, tb, mc=mc)
         lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32))
         tgt = tb[:, 1:]
         nll = -jnp.take_along_axis(lp, tgt[..., None], -1)[..., 0]

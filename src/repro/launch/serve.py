@@ -1,8 +1,17 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [--mc]``.
 
-Initializes (or restores) a model, optionally runs the full MC pipeline
-(PMQ calibration + quantization + ODP calibration) on it, then serves a
-synthetic batched workload and reports throughput + compression stats.
+Two deployment paths, mirroring the paper's compress-once/pre-loading
+premise:
+
+* ``--mc`` — run the staged compression pipeline inline (calibrate ->
+  plan -> apply), optionally persisting the result with
+  ``--save-artifact DIR``;
+* ``--artifact DIR`` — boot straight from a saved
+  :class:`~repro.core.pipeline.CompressedArtifact`: no calibration data, no
+  GPTQ, just load + serve.
+
+Then serves a synthetic batched workload and reports throughput +
+compression stats.
 """
 from __future__ import annotations
 
@@ -14,7 +23,7 @@ import numpy as np
 
 from repro.config import CompressionConfig
 from repro.configs import get_config
-from repro.core import mc as mc_lib
+from repro.core import pipeline as pipeline_lib
 from repro.data.pipeline import calibration_batch
 from repro.models.model_registry import build_model
 from repro.serve.engine import Request, ServeEngine, StaticServeEngine
@@ -23,31 +32,58 @@ from repro.serve.engine import Request, ServeEngine, StaticServeEngine
 def serve(arch: str, *, smoke: bool = True, mc: bool = False,
           target_bits: float = 2.54, n_requests: int = 8,
           max_new: int = 16, batch_size: int = 4, prompt_len: int = 32,
-          static: bool = False, mixed_lengths: bool = False):
+          static: bool = False, mixed_lengths: bool = False,
+          layout: str = "uniform", artifact_path=None, save_artifact=None):
     cfg = get_config(arch, smoke=smoke)
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    runtime = None
-    report = None
-    if mc:
-        assert cfg.is_moe, "--mc applies to MoE archs (DESIGN.md §4)"
-        ccfg = CompressionConfig(enabled=True, target_bits=target_bits,
-                                 group_size=32 if smoke else 128,
-                                 odp_enabled=True)
-        calib = jax.numpy.asarray(
-            calibration_batch(cfg, 4 if smoke else ccfg.calib_sequences,
-                              64 if smoke else ccfg.calib_seq_len))
-        t0 = time.time()
-        params, runtime, report = mc_lib.compress(model, params, ccfg, calib,
-                                                  layout="uniform")
-        print(f"[serve] MC compression in {time.time() - t0:.1f}s: "
-              f"avg_bits={report.avg_bits:.2f} "
-              f"compression={report.pmq.compression_ratio:.1%} "
-              f"odp_mu={report.odp_threshold:.3f} "
-              f"prune_rate={report.odp_prune_rate:.1%}")
-
     engine_cls = StaticServeEngine if static else ServeEngine
-    eng = engine_cls(model, params, batch_size=batch_size, mc=runtime)
+    artifact = None
+    report = None
+
+    if artifact_path is not None:
+        t0 = time.time()
+        artifact = pipeline_lib.CompressedArtifact.load(artifact_path)
+        report = artifact.report
+        print(f"[serve] loaded artifact from {artifact_path} in "
+              f"{time.time() - t0:.2f}s: avg_bits={report.avg_bits:.2f} "
+              f"layout={artifact.plan.layout} "
+              f"scan_safe={artifact.scan_safe}")
+        eng = engine_cls.from_artifact(model, artifact,
+                                       batch_size=batch_size)
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+        if mc:
+            assert cfg.is_moe, "--mc applies to MoE archs (DESIGN.md §4)"
+            ccfg = CompressionConfig(enabled=True, target_bits=target_bits,
+                                     group_size=32 if smoke else 128,
+                                     odp_enabled=True)
+            calib = jax.numpy.asarray(
+                calibration_batch(cfg, 4 if smoke else ccfg.calib_sequences,
+                                  64 if smoke else ccfg.calib_seq_len))
+            t0 = time.time()
+            record = pipeline_lib.calibrate(
+                model, params, calib, bit_choices=tuple(ccfg.bit_choices),
+                group_size=ccfg.group_size)
+            plan = pipeline_lib.plan(record, ccfg, layout=layout)
+            artifact = pipeline_lib.apply(model, params, plan, record)
+            report = artifact.report
+            print(f"[serve] MC compression in {time.time() - t0:.1f}s: "
+                  f"avg_bits={report.avg_bits:.2f} "
+                  f"compression={report.pmq.compression_ratio:.1%} "
+                  f"odp_mu={report.odp_threshold:.3f} "
+                  f"prune_rate={report.odp_prune_rate:.1%}")
+            if save_artifact is not None:
+                t0 = time.time()
+                artifact.save(save_artifact)
+                print(f"[serve] artifact saved to {save_artifact} in "
+                      f"{time.time() - t0:.2f}s (boot it later with "
+                      f"--artifact {save_artifact})")
+        if artifact is not None:
+            eng = engine_cls.from_artifact(model, artifact,
+                                           batch_size=batch_size)
+        else:       # uncompressed serving
+            eng = engine_cls(model, params, batch_size=batch_size)
+
     rng = np.random.RandomState(0)
     reqs = []
     for i in range(n_requests):
@@ -72,6 +108,8 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--mc", action="store_true")
     ap.add_argument("--bits", type=float, default=2.54)
+    ap.add_argument("--layout", default="uniform",
+                    choices=("uniform", "per_layer"))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
@@ -79,11 +117,17 @@ def main():
                     help="use the lockstep static-batch engine")
     ap.add_argument("--mixed-lengths", action="store_true",
                     help="randomize prompt/output lengths per request")
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="boot from a saved CompressedArtifact "
+                         "(skips calibration/compression entirely)")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="with --mc: persist the CompressedArtifact here")
     args = ap.parse_args()
     serve(args.arch, mc=args.mc, target_bits=args.bits,
           n_requests=args.requests, max_new=args.max_new,
           batch_size=args.batch, static=args.static,
-          mixed_lengths=args.mixed_lengths)
+          mixed_lengths=args.mixed_lengths, layout=args.layout,
+          artifact_path=args.artifact, save_artifact=args.save_artifact)
 
 
 if __name__ == "__main__":

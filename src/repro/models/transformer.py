@@ -39,14 +39,23 @@ Params = Dict
 
 @dataclass(frozen=True)
 class MCRuntime:
-    """Static inference-compression settings threaded through the model."""
+    """Static inference-compression settings threaded through the model.
+
+    ``quant_meta`` is the scan-safe case: one expert layout shared by every
+    MoE layer. ``layer_metas`` is the heterogeneous per-layer case (PMQ
+    ``layout='per_layer'``): the model pulls each layer's quantized params
+    from ``params['moe_layers']`` and runs loop-mode — one runtime object
+    covers both, so engines and ``forward`` consume artifacts uniformly.
+    """
 
     odp: Optional[OdpRuntime] = None
     quant_meta: Optional[MoEQuantMeta] = None
+    layer_metas: Optional[Tuple[MoEQuantMeta, ...]] = None
 
     @property
     def active(self) -> bool:
-        return self.odp is not None or self.quant_meta is not None
+        return (self.odp is not None or self.quant_meta is not None
+                or self.layer_metas is not None)
 
 
 # --------------------------------------------------------- layer-kind arrays
@@ -304,6 +313,14 @@ class DecoderModel:
         # at independent positions — yielding a (B, S) position grid.
         positions = core_lib.position_grid(s, start_pos)
         use_scan = cfg.scan_layers if scan is None else scan
+        if (moe_layer_params is None and mc is not None
+                and mc.layer_metas is not None):
+            # heterogeneous PMQ artifact: per-layer quantized MoE params ride
+            # in the param tree; metas come from the runtime
+            moe_layer_params = params.get("moe_layers")
+            moe_layer_metas = list(mc.layer_metas)
+        if moe_layer_params is not None:
+            use_scan = False     # per-layer metas are structurally unscannable
         win_arr, chunk_arr = self._kind_arrays()
 
         def run_slot(x, p_l, cache_l, slot, w, c):

@@ -88,6 +88,24 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+class _ArtifactBoot:
+    """Shared ``from_artifact`` constructor for both engines: boot serving
+    straight off a :class:`repro.core.pipeline.CompressedArtifact` (saved
+    offline, loaded with no calibration data) — params and the MC runtime
+    come from the artifact, covering scan-safe and per-layer layouts alike.
+    """
+
+    @classmethod
+    def from_artifact(cls, model: DecoderModel, artifact, **kwargs):
+        fp = model.cfg.fingerprint()
+        art_fp = getattr(artifact, "model_fingerprint", None)
+        if art_fp and art_fp != fp:
+            raise ValueError(
+                "artifact/model mismatch: the artifact was compressed for "
+                f"model config {art_fp}, this model is {fp}")
+        return cls(model, artifact.params, mc=artifact.runtime, **kwargs)
+
+
 # --------------------------------------------------------------- continuous
 @dataclass
 class _Slot:
@@ -98,7 +116,7 @@ class _Slot:
     n_new: int = 1                    # prefill emits the first token
 
 
-class ServeEngine:
+class ServeEngine(_ArtifactBoot):
     """Continuous-batching engine over a fixed pool of decode slots.
 
     ``batch_size`` is the pool width. Requests are admitted into free slots
@@ -317,7 +335,7 @@ def _void_tail(caches, length):
 
 
 # ------------------------------------------------------------------- static
-class StaticServeEngine:
+class StaticServeEngine(_ArtifactBoot):
     """Lockstep static batching (the pre-continuous baseline).
 
     Requests are grouped into fixed-size batches (left-padded to a common

@@ -1,0 +1,234 @@
+"""Staged compression API: calibrate -> plan -> apply -> CompressedArtifact.
+
+Fast-slice tests (PR-gating): plan/artifact round-trips must hold — a saved
+artifact must serve token-for-token identically to the in-memory one, for
+both the scan-safe and the heterogeneous per-layer layouts, and re-planning
+at a new bit-width must never re-run the calibration probes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CompressionConfig
+from repro.configs import get_config
+from repro.core import mc as mc_lib
+from repro.core import pipeline
+from repro.core import pmq as pmq_lib
+from repro.models.transformer import DecoderModel, MCRuntime
+from repro.serve.engine import Request, ServeEngine
+
+
+def _ccfg(target_bits, **kw):
+    kw.setdefault("group_size", 32)
+    return CompressionConfig(enabled=True, target_bits=target_bits,
+                             odp_enabled=True, **kw)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("mixtral-8x7b", smoke=True).replace(
+        dtype="float32", num_layers=2, d_model=64, d_ff=64, moe_d_ff=64,
+        num_experts=4, vocab_size=128, capacity_factor=4.0,
+        scan_layers=False)
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0,
+                               cfg.vocab_size)
+    record = pipeline.calibrate(model, params, calib,
+                                bit_choices=(1, 2, 3), group_size=32)
+    return cfg, model, params, calib, record
+
+
+@pytest.fixture(scope="module")
+def uniform_artifact(setup):
+    cfg, model, params, calib, record = setup
+    plan = pipeline.plan(record, _ccfg(2.5), layout="uniform")
+    return pipeline.apply(model, params, plan, record)
+
+
+def _hetero_plan(record):
+    """A genuinely heterogeneous plan: hand-edit layer 1's allocation (plans
+    are data) so its class structure differs from layer 0's."""
+    plan = pipeline.plan(record, _ccfg(2.5), layout="per_layer")
+    bits0 = np.asarray(plan.layers[0].bits)
+    bits1 = np.array([1, 2, 3, 3], np.int64)
+    if np.array_equal(np.sort(bits0), np.sort(bits1)):
+        bits1 = np.array([1, 1, 3, 3], np.int64)
+    plan.layers[1] = pipeline._make_layer_plan(
+        plan.layers[1].layer, bits1, 0.0)
+    assert not plan.scan_safe
+    return plan
+
+
+def _generate(model, artifact, n_req=2, max_new=4):
+    eng = ServeEngine.from_artifact(model, artifact, batch_size=2)
+    reqs = [Request(uid=i, prompt=np.arange(1 + i, 9 + i, dtype=np.int32),
+                    max_new_tokens=max_new) for i in range(n_req)]
+    return [r.tokens for r in eng.run(reqs)]
+
+
+class TestReplan:
+    def test_replan_skips_probes(self, setup, monkeypatch):
+        """Re-planning at a new target from a cached record must not
+        re-invoke the eps probes (or any weight-touching stage)."""
+        cfg, model, params, calib, record = setup
+        assert record.eps_probe_runs == 1
+
+        def boom(*a, **k):
+            raise AssertionError("eps probes re-ran during plan()")
+        monkeypatch.setattr(pmq_lib, "compute_eps", boom)
+        p_low = pipeline.plan(record, _ccfg(2.54), layout="per_layer")
+        p_high = pipeline.plan(record, _ccfg(3.0), layout="per_layer")
+        assert p_high.achieved_bits > p_low.achieved_bits
+        assert record.eps_probe_runs == 1
+
+    def test_plan_requires_matching_probe_settings(self, setup):
+        cfg, model, params, calib, record = setup
+        with pytest.raises(ValueError, match="no eps table"):
+            pipeline.plan(record, _ccfg(2.5, group_size=16))
+
+    def test_ensure_eps_caches(self, setup):
+        cfg, model, params, calib, record = setup
+        runs = record.eps_probe_runs
+        record.ensure_eps(model, params, (1, 2, 3), 32)  # cached key
+        assert record.eps_probe_runs == runs
+
+
+class TestPlanSerialization:
+    def test_json_roundtrip(self, setup, tmp_path):
+        cfg, model, params, calib, record = setup
+        plan = pipeline.plan(record, _ccfg(2.5), layout="uniform")
+        path = plan.save(tmp_path / "plan.json")
+        assert pipeline.CompressionPlan.load(path) == plan
+
+    def test_plan_reports_predictions(self, setup):
+        cfg, model, params, calib, record = setup
+        plan = pipeline.plan(record, _ccfg(2.5), layout="uniform")
+        assert plan.achieved_bits <= 2.5 + 1e-9
+        assert 0 < plan.predicted_bytes < plan.original_bytes
+        assert plan.uniform_achieved_bits is not None
+        assert plan.odp is not None and 0 < plan.odp["threshold"] < 1
+
+
+class TestArtifactRoundtrip:
+    def test_scan_safe_roundtrip(self, setup, uniform_artifact, tmp_path):
+        cfg, model, params, calib, record = setup
+        art = uniform_artifact
+        assert art.scan_safe and art.runtime.quant_meta is not None
+        art.save(tmp_path / "art")
+        loaded = pipeline.CompressedArtifact.load(tmp_path / "art")
+        assert loaded.scan_safe
+        assert loaded.plan == art.plan
+        assert loaded.metas == art.metas
+        l1, _, _ = model.forward(art.params, calib, mc=art.runtime)
+        l2, _, _ = model.forward(loaded.params, calib, mc=loaded.runtime)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        for t1, t2 in zip(_generate(model, art),
+                          _generate(model, loaded)):
+            np.testing.assert_array_equal(t1, t2)
+
+    def test_per_layer_roundtrip(self, setup, tmp_path):
+        cfg, model, params, calib, record = setup
+        plan = _hetero_plan(record)
+        art = pipeline.apply(model, params, plan, record)
+        assert not art.scan_safe
+        assert art.runtime.layer_metas is not None
+        assert "moe_layers" in art.params
+        art.save(tmp_path / "art")
+        loaded = pipeline.CompressedArtifact.load(tmp_path / "art")
+        assert loaded.runtime.layer_metas == art.runtime.layer_metas
+        l1, _, _ = model.forward(art.params, calib, mc=art.runtime)
+        l2, _, _ = model.forward(loaded.params, calib, mc=loaded.runtime)
+        assert bool(jnp.isfinite(l1).all())
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        for t1, t2 in zip(_generate(model, art),
+                          _generate(model, loaded)):
+            np.testing.assert_array_equal(t1, t2)
+
+    def test_fingerprint_mismatch_rejected(self, setup, uniform_artifact):
+        cfg, model, params, calib, record = setup
+        other = DecoderModel(cfg.replace(d_model=128, d_ff=128,
+                                         moe_d_ff=128))
+        with pytest.raises(ValueError, match="artifact/model mismatch"):
+            ServeEngine.from_artifact(other, uniform_artifact)
+
+    def test_plain_checkpoint_rejected(self, setup, tmp_path):
+        from repro.checkpoint import checkpointer as ckpt_lib
+        ckpt_lib.save_pytree(tmp_path / "ck", 0,
+                             {"a": np.zeros(3, np.float32)})
+        with pytest.raises(ValueError, match="not a CompressedArtifact"):
+            pipeline.CompressedArtifact.load(tmp_path / "ck")
+
+
+class TestShimCompat:
+    def test_compress_shim_matches_staged(self, setup, uniform_artifact):
+        """mc.compress() must stay equivalent to composing the stages."""
+        cfg, model, params, calib, record = setup
+        qp, runtime, report = mc_lib.compress(model, params, _ccfg(2.5),
+                                              calib, layout="uniform")
+        art = uniform_artifact
+        assert runtime.quant_meta == art.runtime.quant_meta
+        assert report.avg_bits == art.report.avg_bits
+        l1, _, _ = model.forward(qp, calib, mc=runtime)
+        l2, _, _ = model.forward(art.params, calib, mc=art.runtime)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    def test_quantized_forward_shim(self, setup):
+        cfg, model, params, calib, record = setup
+        plan = _hetero_plan(record)
+        art = pipeline.apply(model, params, plan, record)
+        l1, _, _ = mc_lib.quantized_forward(model, art.params, art.metas,
+                                            calib, odp=art.runtime.odp)
+        l2, _, _ = model.forward(art.params, calib, mc=art.runtime)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+class TestUniformCounts:
+    def test_budget_not_silently_exceeded(self):
+        """The old widest-class absorption could overshoot the budget the
+        per-layer optima realized; the repaired counts must not."""
+        layers = [np.array([1, 2, 2]), np.array([2, 2, 3])]
+        counts, achieved = pmq_lib.uniform_counts(layers, (1, 2, 3))
+        assert sum(counts) == 3
+        budget = int(np.floor(np.mean([b.sum() for b in layers])))
+        assert achieved * 3 <= budget + 1e-9
+        assert achieved == sum(c * b for c, b in zip(counts, (1, 2, 3))) / 3
+
+    def test_demotion_is_one_class_step(self):
+        """When medians overshoot, demotion moves an expert one class down
+        (not straight to the narrowest), landing as close to budget as
+        possible."""
+        layers = [np.array([2, 3, 3, 3]), np.array([1, 2, 3, 3]),
+                  np.array([1, 1, 2, 2])]
+        counts, achieved = pmq_lib.uniform_counts(layers, (1, 2, 3))
+        assert counts == (1, 2, 1)          # (1,1,2) demoted 3->2, not 3->1
+        assert achieved == pytest.approx(2.0)
+
+    def test_exact_case_unchanged(self):
+        layers = [np.array([1, 2, 3, 3]), np.array([1, 2, 3, 3])]
+        counts, achieved = pmq_lib.uniform_counts(layers, (1, 2, 3))
+        assert counts == (1, 1, 2)
+        assert achieved == pytest.approx(2.25)
+
+    def test_unsorted_bit_choices(self):
+        """bit_choices carries no ordering guarantee; the repair must go by
+        width, not by tuple position."""
+        layers = [np.array([3, 3, 2, 2]), np.array([3, 2, 2, 1])]
+        counts, achieved = pmq_lib.uniform_counts(layers, (3, 2, 1))
+        assert sum(counts) == 4
+        budget = int(np.floor(np.mean([b.sum() for b in layers])))
+        assert achieved * 4 <= budget + 1e-9
+        up_counts, up_achieved = pmq_lib.uniform_counts(
+            layers, (1, 2, 3))
+        assert counts == tuple(reversed(up_counts))
+        assert achieved == pytest.approx(up_achieved)
+
+    def test_clear_errors(self):
+        with pytest.raises(ValueError, match="no per-layer allocations"):
+            pmq_lib.uniform_counts([], (1, 2, 3))
+        with pytest.raises(ValueError, match="disagree on expert count"):
+            pmq_lib.uniform_counts([np.array([1, 2]), np.array([1, 2, 3])],
+                                   (1, 2, 3))
