@@ -6,6 +6,8 @@ Runs one benchmark per paper table/figure at smoke scale (CPU container):
 * bench_odp        — Figs. 7-8, Tabs. 11-12 (pruning + protection)
 * bench_memory     — Tab. 4 / Fig. 1b / Tab. 13 (memory + speed)
 * bench_kernels    — kernel correctness/bytes (Tab. 13-14 kernel side)
+* bench_artifact_loading — per-host bytes/latency of sharded artifact
+  streaming (the deployment half of the paper's pre-loading premise)
 
 The multi-pod roofline tables (EXPERIMENTS.md §Roofline) are produced by
 ``repro.launch.dryrun`` + ``benchmarks.roofline_report``.
@@ -18,16 +20,17 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="allocation|odp|memory|kernels")
+                    help="allocation|odp|memory|kernels|loading")
     args = ap.parse_args()
     t0 = time.time()
-    from benchmarks import (bench_allocation, bench_kernels, bench_memory,
-                            bench_odp)
+    from benchmarks import (bench_allocation, bench_artifact_loading,
+                            bench_kernels, bench_memory, bench_odp)
     benches = {
         "kernels": bench_kernels.run,
         "memory": bench_memory.run,
         "odp": bench_odp.run,
         "allocation": bench_allocation.run,
+        "loading": bench_artifact_loading.run,
     }
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -1,33 +1,90 @@
 """Sharded, atomic, restart-safe checkpointing (no orbax dependency).
 
-Layout per step::
+Layout per step (format v2, see ``docs/artifact_format.md`` for the
+normative schema)::
 
     <dir>/step_000123/
-        manifest.json     # tree paths, shapes, dtypes, step, config hash
-        shard_00000.npz   # leaves, chunked ~512MB per file
+        manifest.json     # tree paths, shapes, dtypes, shard groups, step
+        shard_00000.npz   # one file per shard-group chunk (~512MB max)
+        shard_00001.npz
     <dir>/LATEST          # atomic pointer file
 
-Writes go to ``step_X.tmp-<pid>`` then ``os.rename`` (atomic on POSIX), so a
-preempted writer never corrupts the latest checkpoint — the fault-tolerance
-loop (runtime.fault_tolerance) relies on this. On multi-host deployments
-each host writes the shards it owns (addressable arrays); this container is
-single-host so every leaf is local.
+Every leaf belongs to a named **shard group**; a group maps to one or more
+npz files, each carrying a sha256 fingerprint in the manifest. Callers can
+restore the full tree (:func:`load_pytree` / :func:`restore_pytree`) or
+only the groups a host needs (:func:`load_pytree_subset`) — the subset
+path reads strictly the files of the selected groups, which is what lets
+an expert-parallel host stream only its slice of a
+:class:`repro.core.pipeline.CompressedArtifact`.
+
+Groups are assigned two ways:
+
+* default — leaves are packed into rolling ``part*`` groups chunked at
+  ~512MB (the v1 behavior, just named);
+* ``split_fn`` — a leaf is cut into per-index slices along one axis, each
+  slice assigned its own group (expert-major artifact layout: one group
+  per (layer, expert)). The manifest records ``split`` metadata so loads
+  reassemble the original array (or a contiguous partial stack).
+
+Writes go to ``step_X.tmp-<pid>`` then ``os.rename`` (atomic on POSIX), so
+a preempted writer never corrupts the latest checkpoint — the
+fault-tolerance loop (runtime.fault_tolerance) relies on this. On
+multi-host deployments each host writes the shards it owns (addressable
+arrays); this container is single-host so every leaf is local.
+
+Manifests written before the group format (no ``format_version`` field)
+are still readable; manifests from a *newer* format fail loudly with an
+upgrade message.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import shutil
 import threading
 import time
+from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 _SHARD_BYTES = 512 * 1024 * 1024
+
+#: Manifest schema version this module writes. v1 (implicit, pre-group
+#: manifests with a per-leaf ``shard`` index) is still read; anything newer
+#: than FORMAT_VERSION is rejected with an upgrade message.
+FORMAT_VERSION = 2
+
+#: Group name used for all leaves the ``split_fn`` does not claim.
+DENSE_GROUP_PREFIX = "part"
+
+LeafFilter = Callable[[str, str], bool]      # (key path, group name) -> keep?
+SplitFn = Callable[[str, np.ndarray], Optional[Tuple[int, Sequence[str]]]]
+
+
+@dataclass
+class LoadStats:
+    """Byte/file accounting for one (possibly partial) checkpoint read."""
+
+    bytes_read: int = 0
+    total_bytes: int = 0
+    files_read: int = 0
+    total_files: int = 0
+    groups_read: int = 0
+    total_groups: int = 0
+    #: key path -> stacking axis, for every split leaf that was loaded
+    split_axes: Dict[str, int] = field(default_factory=dict)
+    #: key path -> (start, stop, count) when only a contiguous sub-range of
+    #: a split leaf's slices was loaded (stop - start < count)
+    partial: Dict[str, Tuple[int, int, int]] = field(default_factory=dict)
+
+    @property
+    def read_fraction(self) -> float:
+        return self.bytes_read / max(self.total_bytes, 1)
 
 
 def _path_str(kp) -> str:
@@ -54,8 +111,38 @@ def _cast_back(arr: np.ndarray, dtype: str):
     return out
 
 
+def _sha256_file(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+# ------------------------------------------------------------------- saving
 def save_pytree(directory: Path, step: int, tree: Any,
-                meta: Optional[Dict] = None) -> Path:
+                meta: Optional[Dict] = None,
+                split_fn: Optional[SplitFn] = None,
+                fingerprint: bool = True) -> Path:
+    """Write ``tree`` as an atomic checkpoint step.
+
+    Args:
+        directory: checkpoint root (``<directory>/step_XXXXXXXX`` is made).
+        step: step number for the directory / ``LATEST`` pointer.
+        meta: JSON-serializable extras stored under ``manifest['meta']``.
+        split_fn: optional ``(key_path, array) -> None | (axis, names)``.
+            When it returns ``(axis, names)`` (with ``len(names) ==
+            array.shape[axis]``), the leaf is stored as per-index slices
+            along ``axis``, slice ``i`` in shard group ``names[i]`` —
+            this is how :class:`~repro.core.pipeline.CompressedArtifact`
+            realizes the expert-major layout. Returning ``None`` places
+            the leaf in the default size-chunked ``part*`` groups.
+        fingerprint: record a sha256 per shard file (one extra page-cache
+            read + hash per file at save, verified on load). Artifacts
+            keep it on; rotating training checkpoints pass ``False``.
+
+    Returns the finalized step directory.
+    """
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}"
@@ -65,28 +152,70 @@ def save_pytree(directory: Path, step: int, tree: Any,
     tmp.mkdir(parents=True)
 
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
-    manifest = {"step": step, "meta": meta or {}, "leaves": [],
-                "time": time.time()}
-    shard_idx, shard_bytes, shard_data = 0, 0, {}
+    manifest: Dict = {"format_version": FORMAT_VERSION, "step": step,
+                      "meta": meta or {}, "leaves": [], "time": time.time()}
 
-    def flush():
-        nonlocal shard_idx, shard_bytes, shard_data
-        if shard_data:
-            np.savez(tmp / f"shard_{shard_idx:05d}.npz", **shard_data)
-            shard_idx += 1
-            shard_bytes, shard_data = 0, {}
-
+    # ---- assign every record (whole leaf or slice) to a group ----
+    groups: Dict[str, List[Tuple[str, np.ndarray]]] = {}
+    part_idx, part_bytes = 0, 0
     for i, (kp, leaf) in enumerate(leaves_with_paths):
         arr = np.asarray(leaf)
-        key = f"leaf_{i:06d}"
-        manifest["leaves"].append({
-            "path": _path_str(kp), "key": key, "shard": shard_idx,
-            "shape": list(arr.shape), "dtype": str(arr.dtype)})
-        shard_data[key] = _npz_safe(arr)
-        shard_bytes += shard_data[key].nbytes
-        if shard_bytes >= _SHARD_BYTES:
-            flush()
-    flush()
+        path = _path_str(kp)
+        sp = split_fn(path, arr) if split_fn is not None else None
+        if sp is None:
+            if part_bytes >= _SHARD_BYTES:
+                part_idx, part_bytes = part_idx + 1, 0
+            group = f"{DENSE_GROUP_PREFIX}{part_idx:05d}"
+            part_bytes += arr.nbytes
+            key = f"leaf_{i:06d}"
+            manifest["leaves"].append({
+                "path": path, "key": key, "group": group,
+                "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            groups.setdefault(group, []).append((key, _npz_safe(arr)))
+        else:
+            axis, names = sp
+            if len(names) != arr.shape[axis]:
+                raise ValueError(
+                    f"split_fn for {path} returned {len(names)} group names "
+                    f"for axis {axis} of size {arr.shape[axis]}")
+            for j, group in enumerate(names):
+                # basic indexing: a view, not a copy — buffered groups
+                # reference the original leaves, so peak save memory stays
+                # O(params), not O(2x params); npz makes the transient
+                # contiguous copy one slice at a time while writing
+                sl = arr[(slice(None),) * axis + (j,)]
+                key = f"leaf_{i:06d}_{j:04d}"
+                manifest["leaves"].append({
+                    "path": path, "key": key, "group": group,
+                    "shape": list(sl.shape), "dtype": str(arr.dtype),
+                    "split": {"axis": axis, "index": j,
+                              "count": int(arr.shape[axis])}})
+                groups.setdefault(group, []).append((key, _npz_safe(sl)))
+
+    # ---- write each group as one or more fingerprinted npz chunks ----
+    manifest["groups"] = {}
+    file_seq = 0
+    for group in sorted(groups):
+        chunks: List[List[Tuple[str, np.ndarray]]] = [[]]
+        nbytes = 0
+        for key, arr in groups[group]:
+            if nbytes >= _SHARD_BYTES and chunks[-1]:
+                chunks.append([])
+                nbytes = 0
+            chunks[-1].append((key, arr))
+            nbytes += arr.nbytes
+        files = []
+        for chunk in chunks:
+            name = f"shard_{file_seq:05d}.npz"
+            file_seq += 1
+            np.savez(tmp / name, **dict(chunk))
+            files.append({"name": name,
+                          "bytes": (tmp / name).stat().st_size,
+                          "sha256": (_sha256_file(tmp / name)
+                                     if fingerprint else None)})
+        manifest["groups"][group] = {
+            "files": files, "bytes": sum(f["bytes"] for f in files)}
+
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -97,9 +226,12 @@ def save_pytree(directory: Path, step: int, tree: Any,
     return final
 
 
-def restore_pytree(directory: Path, target: Any,
-                   step: Optional[int] = None) -> Tuple[Any, int]:
-    """Restore into the structure of ``target`` (arrays or structs)."""
+# ------------------------------------------------------------------ reading
+def read_manifest(directory: Path, step: Optional[int] = None
+                  ) -> Tuple[Dict, Path]:
+    """Resolve ``step`` (``LATEST`` when None), validate the format version
+    and return ``(manifest, step_dir)`` without reading any shard data —
+    the cheap first half of a streaming load."""
     directory = Path(directory)
     if step is None:
         step = latest_step(directory)
@@ -107,7 +239,128 @@ def restore_pytree(directory: Path, target: Any,
             raise FileNotFoundError(f"no checkpoint in {directory}")
     ckpt = directory / f"step_{step:08d}"
     manifest = json.loads((ckpt / "manifest.json").read_text())
-    values = _load_shard_values(ckpt, manifest)
+    fv = manifest.get("format_version", 1)
+    if fv > FORMAT_VERSION:
+        raise ValueError(
+            f"checkpoint {ckpt} has manifest format_version {fv}, newer "
+            f"than this build supports ({FORMAT_VERSION}); upgrade repro "
+            "to read it (older formats are always readable)")
+    return manifest, ckpt
+
+
+def _v1_records(manifest: Dict) -> List[Dict]:
+    """Normalize pre-group (v1) manifests: the per-leaf ``shard`` index
+    becomes group ``part<idx>`` backed by the legacy shard file."""
+    recs = []
+    for rec in manifest["leaves"]:
+        r = dict(rec)
+        r["group"] = f"{DENSE_GROUP_PREFIX}{rec['shard']:05d}"
+        r["_file"] = f"shard_{rec['shard']:05d}.npz"
+        recs.append(r)
+    return recs
+
+
+def _group_files(manifest: Dict, ckpt: Path) -> Dict[str, List[Dict]]:
+    fv = manifest.get("format_version", 1)
+    if fv >= 2:
+        return {g: info["files"] for g, info in manifest["groups"].items()}
+    files: Dict[str, List[Dict]] = {}
+    for rec in _v1_records(manifest):
+        fn = rec["_file"]
+        if rec["group"] not in files:
+            size = (ckpt / fn).stat().st_size if (ckpt / fn).exists() else 0
+            files[rec["group"]] = [{"name": fn, "bytes": size,
+                                    "sha256": None}]
+    return files
+
+
+def _load_values(ckpt: Path, manifest: Dict,
+                 leaf_filter: Optional[LeafFilter] = None,
+                 verify: bool = True
+                 ) -> Tuple[Dict[str, Tuple[np.ndarray, str]], LoadStats]:
+    """Read (a subset of) the checkpoint's leaves.
+
+    Returns ``(values, stats)`` where ``values`` maps key paths to
+    ``(array, dtype)`` with split leaves reassembled — fully, or as the
+    contiguous partial stack the filter selected (recorded in
+    ``stats.partial``).
+    """
+    fv = manifest.get("format_version", 1)
+    records = manifest["leaves"] if fv >= 2 else _v1_records(manifest)
+    group_files = _group_files(manifest, ckpt)
+
+    stats = LoadStats(total_groups=len(group_files))
+    for files in group_files.values():
+        stats.total_files += len(files)
+        stats.total_bytes += sum(f["bytes"] for f in files)
+
+    selected = [r for r in records
+                if leaf_filter is None or leaf_filter(r["path"], r["group"])]
+    needed_groups = sorted({r["group"] for r in selected})
+
+    # read + fingerprint-check every file of every needed group
+    arrays: Dict[str, np.ndarray] = {}
+    for group in needed_groups:
+        for f in group_files[group]:
+            fpath = ckpt / f["name"]
+            if not fpath.exists():
+                raise FileNotFoundError(
+                    f"shard group {group!r}: file {f['name']} missing "
+                    f"from {ckpt}")
+            if verify and f.get("sha256"):
+                digest = _sha256_file(fpath)
+                if digest != f["sha256"]:
+                    raise ValueError(
+                        f"shard group {group!r} failed its fingerprint "
+                        f"check: {f['name']} hashes to {digest[:12]}… but "
+                        f"the manifest records {f['sha256'][:12]}… — the "
+                        "file is corrupt or was tampered with; re-fetch "
+                        "the artifact")
+            with np.load(fpath) as z:
+                arrays.update({k: z[k] for k in z.files})
+            stats.files_read += 1
+            stats.bytes_read += f["bytes"]
+        stats.groups_read += 1
+
+    # assemble leaves (stacking split slices back together)
+    by_path: Dict[str, List[Dict]] = {}
+    for rec in selected:
+        by_path.setdefault(rec["path"], []).append(rec)
+    values: Dict[str, Tuple[np.ndarray, str]] = {}
+    for path, recs in by_path.items():
+        for rec in recs:
+            if rec["key"] not in arrays:
+                raise KeyError(
+                    f"checkpoint payload is missing leaf {path!r} "
+                    f"(key {rec['key']}, shard group {rec['group']!r}) — "
+                    "the npz shards do not match the manifest")
+        if "split" not in recs[0]:
+            assert len(recs) == 1, path
+            values[path] = (arrays[recs[0]["key"]], recs[0]["dtype"])
+            continue
+        recs = sorted(recs, key=lambda r: r["split"]["index"])
+        idx = [r["split"]["index"] for r in recs]
+        count = recs[0]["split"]["count"]
+        if idx != list(range(idx[0], idx[0] + len(idx))):
+            raise ValueError(
+                f"subset of split leaf {path!r} selects non-contiguous "
+                f"slice indices {idx}; expert subsets must be contiguous")
+        axis = recs[0]["split"]["axis"]
+        stacked = np.stack([arrays[r["key"]] for r in recs], axis=axis)
+        values[path] = (stacked, recs[0]["dtype"])
+        stats.split_axes[path] = axis
+        if len(idx) != count:
+            stats.partial[path] = (idx[0], idx[0] + len(idx), count)
+    return values, stats
+
+
+def restore_pytree(directory: Path, target: Any,
+                   step: Optional[int] = None,
+                   verify: bool = True) -> Tuple[Any, int]:
+    """Restore into the structure of ``target`` (arrays or structs).
+    ``verify=False`` skips per-file fingerprint checks (when recorded)."""
+    manifest, ckpt = read_manifest(directory, step)
+    values, _ = _load_values(ckpt, manifest, verify=verify)
 
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(target)
     out = []
@@ -122,19 +375,6 @@ def restore_pytree(directory: Path, target: Any,
                              f"{arr.shape} vs {want_shape}")
         out.append(_cast_back(arr, dtype))
     return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
-
-
-def _load_shard_values(ckpt: Path, manifest: Dict
-                       ) -> Dict[str, Tuple[np.ndarray, str]]:
-    by_shard: Dict[int, List[Dict]] = {}
-    for rec in manifest["leaves"]:
-        by_shard.setdefault(rec["shard"], []).append(rec)
-    values: Dict[str, Tuple[np.ndarray, str]] = {}
-    for shard, recs in by_shard.items():
-        with np.load(ckpt / f"shard_{shard:05d}.npz") as z:
-            for rec in recs:
-                values[rec["path"]] = (z[rec["key"]], rec["dtype"])
-    return values
 
 
 # --------------------------------------------------- structure-free restore
@@ -169,33 +409,116 @@ def _listify(node):
     return out
 
 
-def load_pytree(directory: Path, step: Optional[int] = None
-                ) -> Tuple[Any, Dict]:
+def _build_tree(values: Dict[str, Tuple[np.ndarray, str]],
+                order: List[str]) -> Any:
+    root: Dict = {}
+    seen = set()
+    for path in order:
+        if path in seen or path not in values:
+            continue
+        seen.add(path)
+        keys = _parse_keystr(path)
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        arr, dtype = values[path]
+        node[keys[-1]] = _cast_back(arr, dtype)
+    return _listify(root)
+
+
+def load_pytree(directory: Path, step: Optional[int] = None,
+                verify: bool = True) -> Tuple[Any, Dict]:
     """Restore a checkpoint *without* a target structure.
 
     Rebuilds nested dicts/lists from the manifest key paths — this is what
     lets a :class:`repro.core.pipeline.CompressedArtifact` load with no
     model, plan, or calibration data in hand (quantized param trees aren't
-    derivable from ``model.init``). Returns ``(tree, manifest)``.
+    derivable from ``model.init``). Reads every shard group; use
+    :func:`load_pytree_subset` to stream only some. ``verify=False`` skips
+    the per-file sha256 fingerprint check. Returns ``(tree, manifest)``.
     """
-    directory = Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {directory}")
-    ckpt = directory / f"step_{step:08d}"
-    manifest = json.loads((ckpt / "manifest.json").read_text())
-    values = _load_shard_values(ckpt, manifest)
+    tree, manifest, _ = load_pytree_subset(directory, None, step=step,
+                                           verify=verify)
+    return tree, manifest
 
-    root: Dict = {}
-    for rec in manifest["leaves"]:
-        keys = _parse_keystr(rec["path"])
-        node = root
-        for k in keys[:-1]:
-            node = node.setdefault(k, {})
-        arr, dtype = values[rec["path"]]
-        node[keys[-1]] = _cast_back(arr, dtype)
-    return _listify(root), manifest
+
+def load_pytree_subset(directory: Path,
+                       leaf_filter: Optional[LeafFilter],
+                       step: Optional[int] = None,
+                       verify: bool = True) -> Tuple[Any, Dict, LoadStats]:
+    """Restore only the leaves whose ``(key_path, group)`` the filter keeps.
+
+    Only the npz files of the selected shard groups are opened — the whole
+    point: a host that owns experts ``[k0:k1)`` of an expert-major
+    :class:`~repro.core.pipeline.CompressedArtifact` passes a filter for
+    its groups and reads strictly fewer bytes than a full load. Split
+    leaves come back as a contiguous partial stack when only some of their
+    slices are selected (``stats.partial`` records the range).
+
+    Args:
+        leaf_filter: ``(key_path, group_name) -> bool``; ``None`` keeps
+            everything (= :func:`load_pytree`).
+        verify: check each read file against its manifest sha256
+            fingerprint (mismatch raises ``ValueError``).
+
+    Returns ``(tree, manifest, stats)`` with byte/file accounting in
+    ``stats`` (:class:`LoadStats`).
+    """
+    manifest, ckpt = read_manifest(directory, step)
+    values, stats = _load_values(ckpt, manifest, leaf_filter, verify=verify)
+    tree = _build_tree(values, [r["path"] for r in manifest["leaves"]])
+    return tree, manifest, stats
+
+
+def merge_subset_trees(parts: List[Tuple[Any, LoadStats]]) -> Any:
+    """Reassemble a full pytree from per-host subset loads.
+
+    ``parts`` is a list of ``(tree, stats)`` pairs as returned by
+    :func:`load_pytree_subset`. Split leaves are concatenated along their
+    recorded axis in slice order (the per-host ranges must tile
+    ``[0, count)`` exactly); leaves present in several parts unsplit are
+    taken from the first. The union of all hosts' subsets therefore
+    reconstructs the original tree bit-for-bit — the invariant
+    ``tests/test_artifact_sharding.py`` pins down.
+    """
+    pieces: Dict[str, List[Tuple[int, int, np.ndarray]]] = {}
+    axes: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    dense: Dict[str, np.ndarray] = {}
+    for tree, stats in parts:
+        for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            path = _path_str(kp)
+            arr = np.asarray(leaf)
+            if path in stats.split_axes:
+                axis = stats.split_axes[path]
+                start, stop, count = stats.partial.get(
+                    path, (0, arr.shape[axis], arr.shape[axis]))
+                axes[path] = axis
+                counts[path] = max(counts.get(path, 0), count)
+                pieces.setdefault(path, []).append((start, stop, arr))
+            else:
+                dense.setdefault(path, arr)
+
+    values: Dict[str, Tuple[np.ndarray, str]] = {}
+    for path, arr in dense.items():
+        values[path] = (arr, str(arr.dtype))
+    for path, chunks in pieces.items():
+        chunks = sorted(chunks, key=lambda c: c[0])
+        pos = 0
+        for start, stop, _ in chunks:
+            if start != pos:
+                raise ValueError(
+                    f"subset ranges for {path!r} do not tile: gap/overlap "
+                    f"at index {pos} (next chunk starts at {start})")
+            pos = stop
+        if pos != counts[path]:
+            raise ValueError(
+                f"subset ranges for {path!r} do not tile: slices cover "
+                f"[0, {pos}) of {counts[path]} — a host's subset is "
+                "missing from `parts`")
+        merged = np.concatenate([c[2] for c in chunks], axis=axes[path])
+        values[path] = (merged, str(merged.dtype))
+    return _build_tree(values, sorted(values))
 
 
 def latest_step(directory: Path) -> Optional[int]:
@@ -226,7 +549,11 @@ class CheckpointManager:
         host_tree = jax.tree.map(np.asarray, tree)
 
         def _do():
-            save_pytree(self.dir, step, host_tree, meta)
+            # rotating training checkpoints skip fingerprints: they are
+            # transient, and hashing every shard on the hot save path
+            # (and again at restore) buys nothing the rotation keeps
+            save_pytree(self.dir, step, host_tree, meta,
+                        fingerprint=False)
             self._rotate()
 
         if self.async_save and not block:
@@ -240,9 +567,10 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def restore(self, target: Any, step: Optional[int] = None):
+    def restore(self, target: Any, step: Optional[int] = None,
+                verify: bool = True):
         self.wait()
-        return restore_pytree(self.dir, target, step)
+        return restore_pytree(self.dir, target, step, verify=verify)
 
     def latest_step(self) -> Optional[int]:
         self.wait()

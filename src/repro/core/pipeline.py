@@ -21,7 +21,12 @@ This module exposes each stage as a first-class step so compression runs
    :class:`MCRuntime` + report.
 4. :meth:`CompressedArtifact.save` / :meth:`CompressedArtifact.load` —
    persist through ``checkpoint.checkpointer`` so serving boots straight
-   from the artifact with no calibration data present.
+   from the artifact with no calibration data present. Saving uses the
+   expert-major shard layout (one fingerprinted shard group per (layer,
+   expert) — ``docs/artifact_format.md``), so
+   :meth:`CompressedArtifact.load_sharded` can stream each deployment
+   host only the dense groups plus the expert block it owns and place
+   packed planes expert-parallel on a device mesh.
 
 The legacy one-shot ``repro.core.mc.compress`` remains as a thin shim that
 composes these stages.
@@ -29,6 +34,7 @@ composes these stages.
 from __future__ import annotations
 
 import json
+import re
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
@@ -46,7 +52,142 @@ from repro.checkpoint import checkpointer as ckpt_lib
 from repro.models.layers.moe import MoEQuantMeta, OdpRuntime
 from repro.models.transformer import DecoderModel, MCRuntime
 
-ARTIFACT_VERSION = 1
+#: Artifact metadata version. v1 artifacts (size-chunked shards, no
+#: expert-major groups) are still loadable; v2 adds the expert-major shard
+#: layout (one shard group per (layer, expert) + a dense group) that
+#: :meth:`CompressedArtifact.load_sharded` streams per host.
+ARTIFACT_VERSION = 2
+
+
+# -------------------------------------------------- expert-major shard layout
+# Key paths of packed expert planes inside an artifact param tree:
+#   scan-safe   ['layers<slot>']['ffn']['experts_q']['cls<ci>'][...]
+#               (leading layer-stack dim, expert axis = 1)
+#   per-layer   ['moe_layers'][<li>]['experts_q']['cls<ci>'][...]
+#               (expert axis = 0)
+_SCAN_Q = re.compile(
+    r"^\['layers(\d+)'\]\['ffn'\]\['experts_q'\]\['cls(\d+)'\]\[")
+_HET_Q = re.compile(
+    r"^\['moe_layers'\]\[(\d+)\]\['experts_q'\]\['cls(\d+)'\]\[")
+_GROUP_EXPERT = re.compile(r"\.expert(\d+)$")
+
+
+def expert_of_group(group: str) -> Optional[int]:
+    """Global (class-sorted) expert index encoded in a shard-group name,
+    or None for non-expert groups (the dense ``part*`` groups)."""
+    m = _GROUP_EXPERT.search(group)
+    return int(m.group(1)) if m else None
+
+
+def byte_balanced_ranges(weights, num_hosts: int) -> List[Tuple[int, int]]:
+    """Partition experts ``[0, len(weights))`` into ``num_hosts`` contiguous
+    non-empty blocks minimizing the max per-block byte sum (exact DP).
+    Byte- rather than count-balanced because mixed-precision classes make
+    experts byte-heterogeneous (a 3-bit expert is ~3x a 1-bit one).
+
+    Contiguity is load-bearing: the checkpointer reassembles split leaves
+    only from contiguous slice ranges, and the class-sorted expert layout
+    keeps each bit-class contiguous on a minimal number of hosts."""
+    w = [int(v) for v in weights]
+    e = len(w)
+    if not 1 <= num_hosts <= e:
+        raise ValueError(f"cannot split {e} experts over {num_hosts} hosts")
+    prefix = np.concatenate([[0], np.cumsum(w)])
+
+    # best[h][i] = minimal max-block-sum splitting w[:i] into h blocks
+    best = np.full((num_hosts + 1, e + 1), np.inf)
+    cut = np.zeros((num_hosts + 1, e + 1), np.int64)
+    best[0][0] = 0.0
+    for h in range(1, num_hosts + 1):
+        for i in range(h, e - (num_hosts - h) + 1):
+            for j in range(h - 1, i):
+                cand = max(best[h - 1][j], prefix[i] - prefix[j])
+                if cand < best[h][i]:
+                    best[h][i], cut[h][i] = cand, j
+    bounds = [e]
+    for h in range(num_hosts, 0, -1):
+        bounds.append(int(cut[h][bounds[-1]]))
+    bounds = bounds[::-1]
+    return [(bounds[i], bounds[i + 1]) for i in range(num_hosts)]
+
+
+def _expert_bytes_from_manifest(manifest: Dict,
+                                num_experts: int) -> Optional[List[int]]:
+    groups = manifest.get("groups")
+    if not groups:
+        return None
+    out = [0] * num_experts
+    for name, info in groups.items():
+        e = expert_of_group(name)
+        if e is not None and e < num_experts:
+            out[e] += int(info["bytes"])
+    return out if any(out) else None
+
+
+def _expert_split_fn(plan: "CompressionPlan"):
+    """Build the checkpointer ``split_fn`` realizing the expert-major
+    layout: each packed expert plane is cut along its expert axis, slice
+    ``j`` of class ``ci`` going to group ``slot<k>.expert<g>`` (scan-safe;
+    layers ride stacked inside the slice) or ``layer<li>.expert<g>``
+    (per-layer), where ``g = class_start + j`` is the global class-sorted
+    expert index. Everything else (router, attention, norms, embeddings)
+    stays in the default dense ``part*`` groups."""
+    metas = plan.metas()
+
+    def names(meta: MoEQuantMeta, ci: int, tag: str) -> List[str]:
+        _, e0, cnt = meta.class_slices()[ci]
+        return [f"{tag}.expert{e0 + j:04d}" for j in range(cnt)]
+
+    def split(path: str, arr) -> Optional[Tuple[int, List[str]]]:
+        m = _SCAN_Q.match(path)
+        if m:
+            slot, ci = int(m.group(1)), int(m.group(2))
+            return 1, names(metas[0], ci, f"slot{slot}")
+        m = _HET_Q.match(path)
+        if m:
+            li, ci = int(m.group(1)), int(m.group(2))
+            return 0, names(metas[li], ci, f"layer{li:02d}")
+        return None
+
+    return split
+
+
+def _expert_axes(params: Dict) -> Dict[str, int]:
+    """Key path -> expert axis, for every packed expert plane in ``params``
+    (the placement dual of :func:`_expert_split_fn`)."""
+    out = {}
+    for kp, _ in jax.tree_util.tree_flatten_with_path(params)[0]:
+        path = jax.tree_util.keystr(kp)
+        if _SCAN_Q.match(path):
+            out[path] = 1
+        elif _HET_Q.match(path):
+            out[path] = 0
+    return out
+
+
+def place_params(params: Dict, mesh, axis: str = "expert") -> Dict:
+    """Device-put an artifact param tree onto ``mesh``: packed expert
+    planes are sharded along their expert axis over the mesh axis carrying
+    expert parallelism (``axis``; ``"expert"`` resolves to ``"data"`` on
+    the standard (data, model) mesh), everything else replicated. Class
+    slices whose expert count does not divide the axis are demoted to
+    replicated (`sharding.partitioning` divisibility rule)."""
+    from repro.sharding import partitioning as part_lib
+    axis = _resolve_ep_axis(mesh, axis)
+    shardings = part_lib.expert_placement_shardings(
+        mesh, params, _expert_axes(params), axis=axis)
+    return jax.device_put(params, shardings)
+
+
+def _resolve_ep_axis(mesh, axis: str) -> str:
+    if axis in mesh.shape:
+        return axis
+    if axis == "expert" and "data" in mesh.shape:
+        # standard meshes name no literal 'expert' axis: EP rides the
+        # 'data' axis (DESIGN.md §5), so accept the logical name
+        return "data"
+    raise ValueError(f"mesh {tuple(mesh.shape)} has no axis {axis!r} "
+                     "to carry expert parallelism")
 
 
 @dataclass
@@ -131,7 +272,23 @@ class CalibrationRecord:
 def calibrate(model: DecoderModel, params: Dict, calib_tokens: jax.Array, *,
               bit_choices=(1, 2, 3), group_size: int = 128,
               **fw_kwargs) -> CalibrationRecord:
-    """Stage 1: one calibration pass + eps probes -> CalibrationRecord."""
+    """Stage 1: one instrumented forward pass -> :class:`CalibrationRecord`.
+
+    Captures per-MoE-layer FFN inputs, routing decisions and expert
+    significance stats, then runs the eps_{i,j} RTN probes for
+    ``(bit_choices, group_size)``. The record is the only stage output
+    that holds calibration arrays; :func:`plan` re-runs for free against
+    it, and probes for further quantizer settings can be added later via
+    :meth:`CalibrationRecord.ensure_eps`.
+
+    Args:
+        model: a MoE :class:`DecoderModel` (asserts ``cfg.is_moe``).
+        params: its dense (uncompressed) parameters.
+        calib_tokens: (B, S) int32 calibration batch.
+        bit_choices: candidate expert widths to probe.
+        group_size: quantization group size the probes assume.
+        **fw_kwargs: forwarded to ``model.forward`` (e.g. VLM prefixes).
+    """
     cfg = model.cfg
     assert cfg.is_moe, "MC's PMQ applies to MoE experts (DESIGN.md §4)"
     captured = capture_forward(model, params, calib_tokens, **fw_kwargs)
@@ -292,8 +449,24 @@ def _make_layer_plan(layer_id: int, bits: np.ndarray,
 
 def plan(record: CalibrationRecord, ccfg: CompressionConfig, *,
          layout: str = "per_layer") -> CompressionPlan:
-    """Stage 2: record -> CompressionPlan. Cheap, weight-free; re-planning
-    at a new ``target_bits`` reuses the record's cached eps tables."""
+    """Stage 2: record -> :class:`CompressionPlan`. Cheap and weight-free.
+
+    Solves the per-layer DP bit allocation (Eq. 4), class-sorts experts,
+    calibrates the ODP threshold/capacity, and predicts compressed bytes.
+    Re-planning the same record at a new ``ccfg.target_bits`` reuses the
+    cached eps tables — milliseconds, no model access.
+
+    Args:
+        record: output of :func:`calibrate` (must hold an eps table for
+            ``(ccfg.bit_choices, ccfg.group_size)``).
+        ccfg: compression settings (target bits, choices, GPTQ params).
+        layout: ``"per_layer"`` (paper formulation, independent optimum
+            per layer) or ``"uniform"`` (one class layout across layers —
+            scan-compatible, the production default for serving).
+
+    Returns a small JSON-serializable plan (``save``/``load``) consumed
+    by :func:`apply`.
+    """
     if layout not in ("per_layer", "uniform"):
         raise ValueError(f"unknown layout {layout!r} "
                          "(expected 'per_layer' or 'uniform')")
@@ -369,6 +542,15 @@ class CompressedArtifact:
     the per-layer ``params['moe_layers']`` list otherwise. ``runtime`` is
     the :class:`MCRuntime` consumed uniformly by ``model.forward`` and the
     serving engines for both layouts.
+
+    On disk the artifact uses the **expert-major shard layout** (artifact
+    v2): one fingerprinted shard group per (layer, expert) holding that
+    expert's packed planes, plus dense ``part*`` groups for everything
+    else — so a host owning experts ``[k0:k1)`` streams only its slice
+    (:meth:`load_sharded`). ``expert_range``/``load_stats`` are populated
+    on artifacts produced by a subset load: ``expert_range`` is the
+    class-sorted expert block this host holds (None = all experts) and
+    ``load_stats`` the byte/file accounting of the read.
     """
 
     params: Dict
@@ -376,6 +558,11 @@ class CompressedArtifact:
     runtime: MCRuntime
     plan: CompressionPlan
     report: MCReport
+    expert_range: Optional[Tuple[int, int]] = None
+    load_stats: Optional[ckpt_lib.LoadStats] = None
+    #: mesh the params were already place_params'd on (load_sharded sets
+    #: it so engine boot skips a redundant device_put)
+    placed_mesh: Optional[object] = None
 
     @property
     def scan_safe(self) -> bool:
@@ -385,29 +572,119 @@ class CompressedArtifact:
     def model_fingerprint(self) -> str:
         return self.plan.model_fingerprint
 
+    @property
+    def num_experts(self) -> int:
+        return len(self.plan.layers[0].bits)
+
+    @property
+    def is_partial(self) -> bool:
+        """True when this artifact holds only one host's expert slice."""
+        return (self.expert_range is not None
+                and self.expert_range != (0, self.num_experts))
+
     def save(self, directory) -> Path:
-        """Persist through the sharded checkpointer; the plan/metas/runtime
-        ride in the manifest so :meth:`load` needs no model or record."""
+        """Persist through the sharded checkpointer in the expert-major
+        layout; the plan/metas/runtime ride in the manifest so
+        :meth:`load` / :meth:`load_sharded` need no model or record."""
         meta = {"artifact": {
             "version": ARTIFACT_VERSION,
             "plan": self.plan.to_dict(),
             "odp": _odp_to_dict(self.runtime.odp),
             "scan_safe": self.scan_safe,
+            "shard_layout": "expert_major",
+            "num_experts": self.num_experts,
         }}
         return ckpt_lib.save_pytree(Path(directory), 0, self.params,
-                                    meta=meta)
+                                    meta=meta,
+                                    split_fn=_expert_split_fn(self.plan))
 
     @classmethod
-    def load(cls, directory) -> "CompressedArtifact":
-        params, manifest = ckpt_lib.load_pytree(Path(directory))
-        art = manifest.get("meta", {}).get("artifact")
-        if art is None:
+    def load(cls, directory, verify: bool = True) -> "CompressedArtifact":
+        """Full (single-host) restore: reads every shard group. Accepts
+        artifacts saved by this or any older artifact version; newer
+        versions fail with an upgrade message. ``verify=False`` skips the
+        per-file sha256 fingerprint checks."""
+        params, manifest, stats = ckpt_lib.load_pytree_subset(
+            Path(directory), None, verify=verify)
+        art = _artifact_meta(directory, manifest)
+        return cls._assemble(params, art, stats=stats)
+
+    @classmethod
+    def load_sharded(cls, directory, mesh=None, axis: str = "expert", *,
+                     expert_range: Optional[Tuple[int, int]] = None,
+                     num_hosts: Optional[int] = None,
+                     host: Optional[int] = None,
+                     verify: bool = True) -> "CompressedArtifact":
+        """Streaming restore for expert-parallel deployment.
+
+        Reads the dense shard groups plus only the (layer, expert) groups
+        of the class-sorted expert block this host owns, so per-host bytes
+        scale with its expert share instead of the artifact size
+        (``benchmarks/bench_artifact_loading.py`` measures this).
+
+        The owned block is, in priority order: ``expert_range=(k0, k1)``
+        explicitly; ``(num_hosts, host)`` — contiguous blocks
+        byte-balanced over the manifest's shard-group sizes
+        (:func:`byte_balanced_ranges`), ``host`` defaulting to
+        ``jax.process_index()``; else all experts — the single-process
+        case, where every device is addressable and parallelism comes
+        purely from placement. Subset loading needs the expert-major
+        layout; pre-v2 artifacts are refused with a re-save hint.
+
+        When ``mesh`` is given and the artifact is complete, params are
+        placed via :func:`place_params`: packed expert planes sharded
+        along their expert axis over the mesh axis carrying expert
+        parallelism (``axis``; the logical name ``"expert"`` resolves to
+        ``"data"`` on the standard mesh), the rest replicated. A partial
+        artifact (``is_partial``) is one host's stream — feed its
+        ``params`` to that host's local shard_map arguments; it cannot
+        boot a single-host engine.
+
+        ``verify=False`` skips sha256 fingerprint checks. Returns the
+        artifact with ``expert_range`` and ``load_stats`` populated.
+        """
+        directory = Path(directory)
+        manifest, _ = ckpt_lib.read_manifest(directory)
+        art = _artifact_meta(directory, manifest)
+        num_experts = art.get("num_experts",
+                              len(art["plan"]["layers"][0]["bits"]))
+        ebytes = _expert_bytes_from_manifest(manifest, num_experts)
+        if ebytes is None and (expert_range is not None
+                               or num_hosts is not None):
             raise ValueError(
-                f"{directory} is a plain checkpoint, not a CompressedArtifact"
-                " (manifest carries no 'artifact' metadata)")
-        if art["version"] > ARTIFACT_VERSION:
-            raise ValueError(f"artifact version {art['version']} is newer "
-                             f"than supported {ARTIFACT_VERSION}")
+                f"{directory} has no expert-major shard groups (artifact "
+                "saved by a pre-v2 version); per-host subset loading needs "
+                "them — load() it fully once and re-save() to upgrade")
+        if expert_range is None:
+            if num_hosts is not None:
+                h = jax.process_index() if host is None else host
+                if not 0 <= h < num_hosts:
+                    raise ValueError(
+                        f"host {h} out of range for {num_hosts} hosts")
+                expert_range = byte_balanced_ranges(ebytes, num_hosts)[h]
+            else:
+                expert_range = (0, num_experts)
+        k0, k1 = expert_range
+        if not 0 <= k0 < k1 <= num_experts:
+            raise ValueError(f"expert_range {expert_range} invalid for "
+                             f"{num_experts} experts")
+
+        def keep(path: str, group: str) -> bool:
+            e = expert_of_group(group)
+            return e is None or k0 <= e < k1
+
+        params, manifest, stats = ckpt_lib.load_pytree_subset(
+            directory, keep, verify=verify)
+        artifact = cls._assemble(params, art, stats=stats,
+                                 expert_range=(k0, k1))
+        if mesh is not None and not artifact.is_partial:
+            artifact.params = place_params(artifact.params, mesh, axis=axis)
+            artifact.placed_mesh = mesh
+        return artifact
+
+    @classmethod
+    def _assemble(cls, params: Dict, art: Dict, stats=None,
+                  expert_range=None) -> "CompressedArtifact":
         cplan = CompressionPlan.from_dict(art["plan"])
         metas = cplan.metas()
         odp_rt = _odp_from_dict(art["odp"])
@@ -418,13 +695,39 @@ class CompressedArtifact:
             layer_metas=None if scan_safe else tuple(metas))
         report = _report_from_plan(cplan, params, metas)
         return cls(params=params, metas=metas, runtime=runtime, plan=cplan,
-                   report=report)
+                   report=report, expert_range=expert_range,
+                   load_stats=stats)
+
+
+def _artifact_meta(directory, manifest: Dict) -> Dict:
+    """Extract + version-check the ``artifact`` manifest block."""
+    art = manifest.get("meta", {}).get("artifact")
+    if art is None:
+        raise ValueError(
+            f"{directory} is a plain checkpoint, not a CompressedArtifact"
+            " (manifest carries no 'artifact' metadata)")
+    if art["version"] > ARTIFACT_VERSION:
+        raise ValueError(
+            f"artifact version {art['version']} is newer than this build "
+            f"supports ({ARTIFACT_VERSION}); upgrade repro to load it "
+            "(artifacts written by older versions always load)")
+    return art
 
 
 def apply(model: DecoderModel, params: Dict, cplan: CompressionPlan,
           record: CalibrationRecord) -> CompressedArtifact:
-    """Stage 3: GPTQ + pack every expert at its planned width and assemble
-    the deployable artifact."""
+    """Stage 3 (the heavy one): GPTQ + pack every expert at its planned
+    width and assemble the deployable :class:`CompressedArtifact`.
+
+    Validates plan/record/model agreement (fingerprint, layer and expert
+    counts), GPTQs each expert on the tokens actually routed to it, packs
+    kernel-layout planes per bit class, and places the quantized layers
+    back into the model tree (scan-stacked when the plan is scan-safe,
+    as the ``params['moe_layers']`` list otherwise). The returned
+    artifact serves directly (``ServeEngine.from_artifact``) or persists
+    via :meth:`CompressedArtifact.save` in the expert-major shard layout
+    for sharded deployment loading.
+    """
     cfg = model.cfg
     if cplan.model_fingerprint != record.model_fingerprint:
         raise ValueError(

@@ -10,6 +10,15 @@ premise:
   :class:`~repro.core.pipeline.CompressedArtifact`: no calibration data, no
   GPTQ, just load + serve.
 
+Deployment topology is orthogonal (see ``docs/serving.md``):
+
+* ``--mesh DxM`` — build a (data, model) device mesh; artifacts stream in
+  via :meth:`CompressedArtifact.load_sharded` (expert-major shard groups,
+  per-host byte accounting printed) and packed expert planes are placed
+  expert-parallel over the ``data`` axis;
+* ``--ep`` — additionally route dense-expert MoE dispatch through the
+  explicit shard_map schedule (``sharding.moe_parallel``).
+
 Then serves a synthetic batched workload and reports throughput +
 compression stats.
 """
@@ -17,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 import numpy as np
@@ -29,27 +39,52 @@ from repro.models.model_registry import build_model
 from repro.serve.engine import Request, ServeEngine, StaticServeEngine
 
 
+def _parse_mesh(spec: str):
+    """``'2x1'`` -> a (data, model) mesh of that shape."""
+    try:
+        d, m = (int(v) for v in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects DxM (e.g. 2x1), got {spec!r}")
+    n = len(jax.devices())
+    if d * m > n:
+        raise SystemExit(f"--mesh {spec} needs {d * m} devices, "
+                         f"{n} visible (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={d * m} "
+                         "to simulate on CPU)")
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
 def serve(arch: str, *, smoke: bool = True, mc: bool = False,
           target_bits: float = 2.54, n_requests: int = 8,
           max_new: int = 16, batch_size: int = 4, prompt_len: int = 32,
           static: bool = False, mixed_lengths: bool = False,
-          layout: str = "uniform", artifact_path=None, save_artifact=None):
+          layout: str = "uniform", artifact_path=None, save_artifact=None,
+          mesh_spec: Optional[str] = None, ep_dispatch: bool = False):
     cfg = get_config(arch, smoke=smoke)
     model = build_model(cfg)
     engine_cls = StaticServeEngine if static else ServeEngine
+    mesh = _parse_mesh(mesh_spec) if mesh_spec else None
+    eng_kw = dict(batch_size=batch_size, mesh=mesh, ep_dispatch=ep_dispatch)
     artifact = None
     report = None
 
     if artifact_path is not None:
         t0 = time.time()
-        artifact = pipeline_lib.CompressedArtifact.load(artifact_path)
+        if mesh is not None:
+            artifact = pipeline_lib.CompressedArtifact.load_sharded(
+                artifact_path, mesh)
+            st = artifact.load_stats
+            print(f"[serve] sharded load: {st.bytes_read}/{st.total_bytes} "
+                  f"bytes ({st.read_fraction:.0%}) in {st.files_read} "
+                  f"files, {st.groups_read}/{st.total_groups} shard groups")
+        else:
+            artifact = pipeline_lib.CompressedArtifact.load(artifact_path)
         report = artifact.report
         print(f"[serve] loaded artifact from {artifact_path} in "
               f"{time.time() - t0:.2f}s: avg_bits={report.avg_bits:.2f} "
               f"layout={artifact.plan.layout} "
               f"scan_safe={artifact.scan_safe}")
-        eng = engine_cls.from_artifact(model, artifact,
-                                       batch_size=batch_size)
+        eng = engine_cls.from_artifact(model, artifact, **eng_kw)
     else:
         params = model.init(jax.random.PRNGKey(0))
         if mc:
@@ -79,10 +114,9 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
                       f"{time.time() - t0:.2f}s (boot it later with "
                       f"--artifact {save_artifact})")
         if artifact is not None:
-            eng = engine_cls.from_artifact(model, artifact,
-                                           batch_size=batch_size)
+            eng = engine_cls.from_artifact(model, artifact, **eng_kw)
         else:       # uncompressed serving
-            eng = engine_cls(model, params, batch_size=batch_size)
+            eng = engine_cls(model, params, **eng_kw)
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -122,12 +156,19 @@ def main():
                          "(skips calibration/compression entirely)")
     ap.add_argument("--save-artifact", default=None, metavar="DIR",
                     help="with --mc: persist the CompressedArtifact here")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve expert-parallel on a (data, model) device "
+                         "mesh, e.g. 2x1; artifacts stream in sharded")
+    ap.add_argument("--ep", action="store_true",
+                    help="with --mesh: explicit shard_map MoE dispatch "
+                         "(dense experts only)")
     args = ap.parse_args()
     serve(args.arch, mc=args.mc, target_bits=args.bits,
           n_requests=args.requests, max_new=args.max_new,
           batch_size=args.batch, static=args.static,
           mixed_lengths=args.mixed_lengths, layout=args.layout,
-          artifact_path=args.artifact, save_artifact=args.save_artifact)
+          artifact_path=args.artifact, save_artifact=args.save_artifact,
+          mesh_spec=args.mesh, ep_dispatch=args.ep)
 
 
 if __name__ == "__main__":

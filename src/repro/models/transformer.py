@@ -210,6 +210,23 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
 
 def _apply_ffn(p, h, cfg, kind, mc, token_imp, token_mask=None):
     if kind == "moe":
+        ep = shctx.ep_mesh()
+        ep_size = dict(ep.shape).get("data", 0) if ep is not None else 0
+        if (ep_size > 0 and h.shape[0] % ep_size == 0
+                and "w_in" in p["ffn"]
+                and not (mc and (mc.quant_meta or mc.layer_metas))):
+            # explicit expert-parallel dispatch (serving engines enter the
+            # EP-mesh context): deterministic 2xall_to_all + psum schedule,
+            # dense experts only — packed PMQ planes instead distribute by
+            # GSPMD placement through the gather path below. Engages when
+            # the batch tiles the data axis — the pool-wide decode step;
+            # batch-1 prefill falls back to the gather path.
+            from repro.sharding.moe_parallel import apply_moe_shard_map
+            y = apply_moe_shard_map(
+                p["ffn"], h, cfg, ep,
+                odp=mc.odp if mc else None,
+                token_importance=token_imp, token_mask=token_mask)
+            return y, {}
         return moe_lib.apply_moe(
             p["ffn"], h, cfg,
             odp=mc.odp if mc else None,

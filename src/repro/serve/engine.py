@@ -28,6 +28,7 @@ overflow capacity (the equivalence tests pin this down).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -42,6 +43,7 @@ from repro.config import ModelConfig
 from repro.models.layers import attention as attn_lib
 from repro.models.layers.attention import GLOBAL_WINDOW
 from repro.models.transformer import DecoderModel, MCRuntime
+from repro.sharding import context as shctx
 
 
 @dataclass
@@ -89,21 +91,89 @@ def _round_up(n: int, m: int) -> int:
 
 
 class _ArtifactBoot:
-    """Shared ``from_artifact`` constructor for both engines: boot serving
-    straight off a :class:`repro.core.pipeline.CompressedArtifact` (saved
-    offline, loaded with no calibration data) — params and the MC runtime
-    come from the artifact, covering scan-safe and per-layer layouts alike.
+    """Shared ``from_artifact`` constructor plus mesh plumbing for both
+    engines: boot serving straight off a
+    :class:`repro.core.pipeline.CompressedArtifact` (saved offline, loaded
+    with no calibration data) — params and the MC runtime come from the
+    artifact, covering scan-safe and per-layer layouts alike, optionally
+    placed on a device mesh for expert-parallel serving.
     """
 
     @classmethod
-    def from_artifact(cls, model: DecoderModel, artifact, **kwargs):
+    def from_artifact(cls, model: DecoderModel, artifact, mesh=None,
+                      **kwargs):
+        """Build an engine from a saved artifact.
+
+        Args:
+            model: the (uncompressed) model whose config fingerprint must
+                match what the artifact was compressed for.
+            artifact: a :class:`~repro.core.pipeline.CompressedArtifact`
+                from :meth:`~repro.core.pipeline.CompressedArtifact.load`
+                or ``load_sharded``. Partial artifacts (one host's expert
+                slice) are rejected — an engine needs the full layout.
+            mesh: optional ``jax.sharding.Mesh``. When given, packed
+                expert planes are sharded along their expert axis over the
+                mesh's expert-parallel axis (``data``) and all engine
+                compute runs with the mesh active, so XLA partitions MoE
+                dispatch across devices. Decoding stays token-identical to
+                the single-device engine.
+            **kwargs: forwarded to the engine constructor
+                (``batch_size``, ``eos_id``, ``ep_dispatch``, ...).
+        """
         fp = model.cfg.fingerprint()
         art_fp = getattr(artifact, "model_fingerprint", None)
         if art_fp and art_fp != fp:
             raise ValueError(
                 "artifact/model mismatch: the artifact was compressed for "
                 f"model config {art_fp}, this model is {fp}")
-        return cls(model, artifact.params, mc=artifact.runtime, **kwargs)
+        if getattr(artifact, "is_partial", False):
+            k0, k1 = artifact.expert_range
+            raise ValueError(
+                f"artifact holds only experts [{k0}:{k1}) of "
+                f"{artifact.num_experts} (a per-host stream from "
+                "load_sharded); an engine needs the full expert layout — "
+                "load without expert_range/num_hosts, or keep per-host "
+                "slices on their own hosts")
+        params = artifact.params
+        if mesh is not None and getattr(artifact, "placed_mesh",
+                                        None) is not mesh:
+            from repro.core.pipeline import place_params
+            params = place_params(params, mesh)
+        return cls(model, params, mc=artifact.runtime, mesh=mesh, **kwargs)
+
+    def _init_mesh(self, mesh, ep_dispatch: bool, mc) -> None:
+        self.mesh = mesh
+        self.ep_dispatch = ep_dispatch
+        if ep_dispatch:
+            if mesh is None:
+                raise ValueError("ep_dispatch=True requires a mesh")
+            if mc is not None and (mc.quant_meta is not None
+                                   or mc.layer_metas is not None):
+                raise ValueError(
+                    "ep_dispatch (shard_map expert parallelism) supports "
+                    "dense experts only; PMQ-quantized artifacts "
+                    "distribute by GSPMD placement — pass mesh without "
+                    "ep_dispatch")
+            dsize = dict(mesh.shape).get("data", 0)
+            if dsize == 0 or self.batch_size % dsize != 0:
+                raise ValueError(
+                    f"ep_dispatch needs batch_size ({self.batch_size}) "
+                    f"divisible by the mesh 'data' axis ({dsize}) — "
+                    "otherwise decode steps would silently fall back to "
+                    "the gather path instead of the shard_map schedule")
+
+    def _mesh_scope(self):
+        """Context activating the engine's mesh (sharding constraints,
+        shard_map) around all jitted compute; a no-op without a mesh."""
+        stack = contextlib.ExitStack()
+        if self.mesh is not None:
+            stack.enter_context(shctx.activate_mesh(self.mesh))
+            stack.enter_context(shctx.use_mesh_axes(
+                tuple(self.mesh.axis_names),
+                tuple(self.mesh.shape[a] for a in self.mesh.axis_names)))
+            if self.ep_dispatch:
+                stack.enter_context(shctx.use_ep_mesh(self.mesh))
+        return stack
 
 
 # --------------------------------------------------------------- continuous
@@ -132,12 +202,14 @@ class ServeEngine(_ArtifactBoot):
     def __init__(self, model: DecoderModel, params, *, batch_size: int = 4,
                  mc: Optional[MCRuntime] = None, pad_id: int = 0,
                  greedy: bool = True, eos_id: Optional[int] = None,
-                 max_seq_len: Optional[int] = None):
+                 max_seq_len: Optional[int] = None, mesh=None,
+                 ep_dispatch: bool = False):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
         self.num_slots = self.batch_size = batch_size
         self.mc = mc
+        self._init_mesh(mesh, ep_dispatch, mc)
         self.pad_id = pad_id
         if not greedy:
             raise NotImplementedError("sampling is not implemented; "
@@ -218,6 +290,10 @@ class ServeEngine(_ArtifactBoot):
 
     # ---- lifecycle ----
     def run(self, requests: List[Request]) -> List[Result]:
+        with self._mesh_scope():
+            return self._run(requests)
+
+    def _run(self, requests: List[Request]) -> List[Result]:
         if not requests:
             return []
         b = self.num_slots
@@ -347,7 +423,8 @@ class StaticServeEngine(_ArtifactBoot):
 
     def __init__(self, model: DecoderModel, params, *, batch_size: int = 4,
                  mc: Optional[MCRuntime] = None, pad_id: int = 0,
-                 greedy: bool = True, eos_id: Optional[int] = None):
+                 greedy: bool = True, eos_id: Optional[int] = None,
+                 mesh=None, ep_dispatch: bool = False):
         if not greedy:
             raise NotImplementedError("sampling is not implemented; "
                                       "only greedy decoding is supported")
@@ -356,6 +433,7 @@ class StaticServeEngine(_ArtifactBoot):
         self.params = params
         self.batch_size = batch_size
         self.mc = mc
+        self._init_mesh(mesh, ep_dispatch, mc)
         self.pad_id = pad_id
         self.greedy = greedy
         self.eos_id = eos_id
@@ -383,9 +461,19 @@ class StaticServeEngine(_ArtifactBoot):
         return jnp.asarray(toks), lmax
 
     def run(self, requests: List[Request]) -> List[Result]:
+        if self.ep_dispatch and len(requests) % self.batch_size:
+            # a final partial batch would not tile the data axis and
+            # would silently take the gather path instead of the
+            # shard_map schedule the flag requests
+            raise ValueError(
+                f"ep_dispatch requires the request count "
+                f"({len(requests)}) to be a multiple of batch_size "
+                f"({self.batch_size}); pad the workload or drop "
+                "ep_dispatch")
         out: List[Result] = []
-        for i in range(0, len(requests), self.batch_size):
-            out.extend(self._run_batch(requests[i:i + self.batch_size]))
+        with self._mesh_scope():
+            for i in range(0, len(requests), self.batch_size):
+                out.extend(self._run_batch(requests[i:i + self.batch_size]))
         return out
 
     def _run_batch(self, requests: List[Request]) -> List[Result]:

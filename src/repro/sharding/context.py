@@ -37,13 +37,38 @@ def axis_size(name: str) -> int:
 
 
 @contextlib.contextmanager
-def use_mesh_axes(axes: Optional[Tuple[str, ...]]):
-    prev = mesh_axes()
-    set_mesh_axes(axes)
+def use_mesh_axes(axes: Optional[Tuple[str, ...]],
+                  sizes: Optional[Tuple[int, ...]] = None):
+    prev, prev_sizes = mesh_axes(), getattr(_state, "sizes", {})
+    set_mesh_axes(axes, sizes)
     try:
         yield
     finally:
         set_mesh_axes(prev)
+        _state.sizes = prev_sizes
+
+
+def set_ep_mesh(mesh) -> None:
+    """Install a mesh for explicit expert-parallel MoE dispatch: while set,
+    dense-expert MoE layers route through
+    ``sharding.moe_parallel.apply_moe_shard_map`` instead of the GSPMD
+    gather path (see ``transformer._apply_ffn``)."""
+    _state.ep_mesh = mesh
+
+
+def ep_mesh():
+    """The active expert-parallel dispatch mesh, or None (gather path)."""
+    return getattr(_state, "ep_mesh", None)
+
+
+@contextlib.contextmanager
+def use_ep_mesh(mesh):
+    prev = ep_mesh()
+    set_ep_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_ep_mesh(prev)
 
 
 def batch_axes():

@@ -36,8 +36,14 @@ from repro.models.layers.moe import OdpRuntime, expert_capacity
 def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
                odp: Optional[OdpRuntime], capacity_scale: float,
                data_axis: str, model_axis: str,
-               token_importance: Optional[jax.Array]):
-    """Per-shard body. x_loc: (B_l, S, D); experts local (E_l, D, F_l)."""
+               token_importance: Optional[jax.Array],
+               token_mask: Optional[jax.Array] = None):
+    """Per-shard body. x_loc: (B_l, S, D); experts local (E_l, D, F_l).
+
+    token_mask: optional (B_l, S) bool — masked tokens (padding, inactive
+    decode slots) get zero routing weight, so they never enter the send
+    buffers or consume expert capacity; their output rows are zero.
+    """
     b_l, s, d = x_loc.shape
     e = cfg.num_experts
     e_l = w_in.shape[0]
@@ -50,23 +56,32 @@ def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
     probs = jax.nn.softmax(logits, axis=-1)
     topw, topi = jax.lax.top_k(probs, k)
     topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    if token_mask is not None:
+        topw = topw * token_mask.reshape(t_l, 1).astype(topw.dtype)
 
     eff_scale = capacity_scale
     if odp is not None and odp.enabled and k >= 2:
         protected = None
         if token_importance is not None and odp.protect_ratio > 0:
+            # masked (pad / idle-slot) tokens must not steal protection
+            # quota from live tokens — same rule as the gather path
             protected = odp_lib.protect_tokens(
-                token_importance.reshape(t_l), odp.protect_ratio)
+                token_importance.reshape(t_l), odp.protect_ratio,
+                valid=(token_mask.reshape(t_l)
+                       if token_mask is not None else None))
         keep = odp_lib.prune_mask(topw, odp.threshold, protected)
         topw = odp_lib.apply_pruning(topw, keep)
         eff_scale = eff_scale * odp.capacity_scale
 
     cap = expert_capacity(cfg, t_l, eff_scale)
 
-    # position of each assignment within its destination expert's quota
+    # position of each assignment within its destination expert's quota;
+    # dead assignments (ODP-pruned or token_mask'd: weight 0) must not
+    # occupy quota positions — only live ones enter the cumsum
     flat_e = topi.reshape(-1)                                  # (T_l*k,)
     flat_w = topw.reshape(-1)
-    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32) \
+        * (flat_w > 0).astype(jnp.int32)[:, None]
     pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1, flat_e[:, None],
                               axis=1)[:, 0]
     live = (pos < cap) & (flat_w > 0)
@@ -107,30 +122,37 @@ def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
                         odp: Optional[OdpRuntime] = None,
                         capacity_scale: float = 1.0,
                         token_importance: Optional[jax.Array] = None,
+                        token_mask: Optional[jax.Array] = None,
                         data_axis: str = "data",
                         model_axis: str = "model") -> jax.Array:
     """shard_map-wrapped MoE layer (dense experts).
 
     x sharded P(data, None, None); experts P(data, None, model).
+    token_importance / token_mask are optional (B, S) arrays sharded with
+    the batch (ODP protection scores / live-token mask — the serving
+    engines thread the latter so idle decode slots never send tokens).
     """
     fn = functools.partial(
         _local_moe, cfg=cfg, odp=odp, capacity_scale=capacity_scale,
         data_axis=data_axis, model_axis=model_axis)
 
-    imp_spec = P(data_axis, None) if token_importance is not None else None
-    in_specs = (P(data_axis, None, None), P(None, None),
+    in_specs = [P(data_axis, None, None), P(None, None),
                 P(data_axis, None, model_axis),
                 P(data_axis, None, model_axis),
-                P(data_axis, model_axis, None))
-    args = (x, p["router"], p["w_in"], p["w_gate"], p["w_out"])
-    if token_importance is not None:
-        body = lambda xl, r, wi, wg, wo, ti: fn(xl, r, wi, wg, wo,
-                                                token_importance=ti)
-        in_specs = in_specs + (imp_spec,)
-        args = args + (token_importance,)
-    else:
-        body = lambda xl, r, wi, wg, wo: fn(xl, r, wi, wg, wo,
-                                            token_importance=None)
+                P(data_axis, model_axis, None)]
+    args = [x, p["router"], p["w_in"], p["w_gate"], p["w_out"]]
+    have = []
+    for extra in (token_importance, token_mask):
+        if extra is not None:
+            in_specs.append(P(data_axis, None))
+            args.append(extra)
+        have.append(extra is not None)
+
+    def body(xl, r, wi, wg, wo, *rest):
+        it = iter(rest)
+        ti = next(it) if have[0] else None
+        tm = next(it) if have[1] else None
+        return fn(xl, r, wi, wg, wo, token_importance=ti, token_mask=tm)
 
     return shctx.shard_map(
-        body, mesh, in_specs, P(data_axis, None, None))(*args)
+        body, mesh, tuple(in_specs), P(data_axis, None, None))(*args)

@@ -77,6 +77,33 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+def expert_placement_shardings(mesh: Mesh, params, expert_axes,
+                               axis: str = "data"):
+    """NamedSharding tree for an artifact param tree under expert parallelism.
+
+    ``expert_axes`` maps key paths (``jax.tree_util.keystr``) of packed
+    expert planes to their expert axis; those leaves get that axis sharded
+    over mesh axis ``axis`` — subject to the module's divisibility rule
+    (:func:`sanitize_spec` demotes a class slice whose expert count does
+    not divide the axis to replicated rather than relying on GSPMD
+    padding). Every other leaf (router, attention, norms, embeddings) is
+    replicated, matching the serving layout where routing is computed
+    everywhere and only expert FFNs are distributed.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for kp, leaf in flat:
+        ax = expert_axes.get(jax.tree_util.keystr(kp))
+        if ax is None:
+            out.append(NamedSharding(mesh, P()))
+            continue
+        spec = [None] * np.ndim(leaf)
+        spec[ax] = axis
+        out.append(NamedSharding(
+            mesh, sanitize_spec(mesh, P(*spec), np.shape(leaf))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def spec_tree_to_shardings(mesh: Mesh, spec_tree, shape_tree):
     """Like shardings_for but tolerates structure mismatches by walking
     the shape tree and looking specs up positionally."""

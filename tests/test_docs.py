@@ -1,0 +1,34 @@
+"""Docs stay navigable: the CI ``docs-check`` invariants, fast-slice.
+
+Same checks the ``docs-check`` CI job runs — kept in the tier-1 fast
+slice so a broken link or an unparsable example fails locally before CI.
+"""
+import compileall
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_exist_and_linked():
+    names = {p.name for p in check_docs.doc_files(ROOT)}
+    assert {"README.md", "architecture.md", "artifact_format.md",
+            "serving.md"} <= names
+    readme = (ROOT / "README.md").read_text()
+    for doc in ("docs/architecture.md", "docs/artifact_format.md",
+                "docs/serving.md"):
+        assert doc in readme, f"README must link {doc}"
+
+
+def test_no_broken_relative_links():
+    bad = check_docs.broken_links(ROOT)
+    assert not bad, f"broken doc links: {bad}"
+
+
+def test_examples_compile():
+    assert compileall.compile_dir(str(ROOT / "examples"), quiet=1,
+                                  force=True), \
+        "examples/ must at least parse (CI docs-check runs compileall)"

@@ -1,0 +1,73 @@
+"""Docs link checker: fail on broken relative links in markdown docs.
+
+Scans ``README.md`` and ``docs/*.md`` for markdown links/images and
+verifies every **relative** target exists on disk (anchors stripped;
+``http(s)://``, ``mailto:`` and pure-anchor links are skipped). Used by
+the ``docs-check`` CI job together with ``python -m compileall
+examples/`` so documented entry points at least resolve and parse.
+
+    python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+# [text](target) and ![alt](target); stops at the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def _strip_code(text: str) -> str:
+    """Remove fenced and inline code spans (links in code are examples,
+    not navigation)."""
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return re.sub(r"`[^`\n]*`", "", text)
+
+
+def doc_files(root: Path) -> List[Path]:
+    out = [root / "README.md"]
+    out.extend(sorted((root / "docs").glob("*.md")))
+    return [p for p in out if p.exists()]
+
+
+def broken_links(root: Path) -> List[Tuple[Path, str]]:
+    """(file, target) for every relative link that does not resolve."""
+    bad = []
+    for md in doc_files(root):
+        for target in _LINK.findall(_strip_code(md.read_text())):
+            if target.startswith(_SKIP):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            base = root if path.startswith("/") else md.parent
+            resolved = (base / path.lstrip("/")).resolve()
+            if not resolved.exists():
+                bad.append((md, target))
+    return bad
+
+
+def main(argv: List[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else \
+        Path(__file__).resolve().parents[1]
+    files = doc_files(root)
+    if not files:
+        print(f"check_docs: no markdown docs found under {root}",
+              file=sys.stderr)
+        return 2
+    bad = broken_links(root)
+    for md, target in bad:
+        print(f"check_docs: broken link in {md.relative_to(root)}: "
+              f"{target}", file=sys.stderr)
+    if bad:
+        return 1
+    print(f"check_docs: {len(files)} files OK "
+          f"({', '.join(str(p.relative_to(root)) for p in files)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
