@@ -1,9 +1,17 @@
-"""Kernel benchmark: fused dequant GEMM vs references.
+"""Kernel benchmark: fused dequant GEMMs vs references.
 
-Correctness deltas (interpret mode vs jnp oracle), packed-size accounting
-(the HBM-bandwidth claim of the kernel), and CPU wall-clock for the XLA
-fallback path (relative across bit-widths; absolute numbers are CPU-bound
-and labeled as such — the TPU target numbers come from §Roofline).
+Three sections:
+
+* ``quant_matmul`` — correctness deltas (interpret mode vs jnp oracle),
+  packed-size accounting (the HBM-bandwidth claim of the kernel), and CPU
+  wall-clock for the XLA fallback path (relative across bit-widths;
+  absolute numbers are CPU-bound and labeled as such — the TPU target
+  numbers come from §Roofline);
+* ``moe_ffn`` — the fused grouped expert-FFN kernel vs its oracle per
+  bit-class mix;
+* launch accounting — ``pallas_call`` sites per MoE layer on the fused
+  single-launch path vs the staged per-class-launch baseline (before:
+  ``3 x num_classes``; after: 1), the probe the serving gate builds on.
 """
 from __future__ import annotations
 
@@ -13,14 +21,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Table
+from benchmarks.common import Table, pack_random_experts
+from repro.kernels import common as kcommon
 from repro.kernels.common import pack_kernel_layout
+from repro.kernels.moe_ffn.ops import moe_ffn_quant
+from repro.kernels.moe_ffn.ref import moe_ffn_ref
 from repro.kernels.quant_matmul.ops import quant_matmul
 from repro.kernels.quant_matmul.ref import quant_matmul_ref
 from repro.quant import rtn_quantize
 
 
-def run(verbose: bool = True):
+def _quant_matmul_table():
     k, n, m = 512, 512, 64
     x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
     w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
@@ -40,9 +51,10 @@ def run(verbose: bool = True):
         pb = sum(int(np.prod(p.shape)) for p in planes)
         sb = res.scales.size * 2 + (res.zeros.size * 2 if bits > 1 else 0)
 
-        fn = jax.jit(lambda xx: quant_matmul(
-            xx, planes, res.scales, res.zeros, bits=bits, group_size=128,
-            impl="auto"))
+        # quant_matmul is jitted internally — no outer jit wrapper needed
+        def fn(xx):
+            return quant_matmul(xx, planes, res.scales, res.zeros,
+                                bits=bits, group_size=128, impl="auto")
         fn(x).block_until_ready()
         t0 = time.time()
         for _ in range(10):
@@ -50,11 +62,50 @@ def run(verbose: bool = True):
         ms = (time.time() - t0) / 10 * 1e3
         t.add(bits, f"{err:.2e}", pb + sb,
               f"{(pb + sb) / bf16_bytes:.3f}x", round(ms, 2))
-    if verbose:
-        print(t.render())
-        print("(CPU wall-clock is the XLA fallback; TPU projections in "
-              "EXPERIMENTS.md §Roofline)")
     return t
+
+
+def _moe_ffn_table():
+    d, f, gs, pb, m = 128, 256, 128, 128, 8
+    t = Table("moe_ffn fused kernel: correctness + launch counts",
+              ["bit_classes", "max_abs_err(interp_vs_ref)",
+               "launches_fused", "launches_staged(before)"])
+    launches = {}
+    for bit_classes, counts in (((2,), (2,)), ((1, 2, 3), (1, 1, 1)),
+                                ((3, 4), (1, 1))):
+        experts_q, meta = pack_random_experts(bit_classes, counts, d=d,
+                                              f=f, gs=gs, pb=pb)
+        e = sum(counts)
+        x = jax.random.normal(jax.random.PRNGKey(2), (e, m, d))
+        cnts = jnp.asarray([m - 2 * (i % 2) for i in range(e)], jnp.int32)
+        classes = [experts_q[f"cls{ci}"] for ci in range(len(bit_classes))]
+        ref = moe_ffn_ref(x, classes, cnts, meta=meta, act="silu")
+        out = moe_ffn_quant(x, experts_q, cnts, meta=meta, act="silu",
+                            impl="interpret")
+        err = float(jnp.abs(out - ref).max())
+        with kcommon.override_impl("pallas"):
+            fused = kcommon.count_pallas_calls(
+                lambda xx: moe_ffn_quant(xx, experts_q, cnts, meta=meta,
+                                         act="silu"), x)
+        staged = 3 * len(bit_classes)
+        key = "x".join(str(b) for b in bit_classes)
+        launches[key] = {"fused": fused, "staged": staged}
+        t.add(key, f"{err:.2e}", fused, staged)
+    return t, launches
+
+
+def run(verbose: bool = True):
+    t_qmm = _quant_matmul_table()
+    t_ffn, launches = _moe_ffn_table()
+    if verbose:
+        print(t_qmm.render())
+        print()
+        print(t_ffn.render())
+        print("(CPU wall-clock is the XLA fallback; TPU projections in "
+              "EXPERIMENTS.md §Roofline. launches_staged is the pre-fusion "
+              "per-bit-class baseline: 3 quant_matmul launches per class.)")
+    return {"quant_matmul": t_qmm.to_dict(), "moe_ffn": t_ffn.to_dict(),
+            "launches_per_moe_layer": launches}
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
-"""Static lockstep batching vs continuous batching, mixed-length workload.
+"""Serving benchmarks: engines, cold start, and the quant-decode path.
 
-The regime where lockstep batching wastes the most: prompt and output
+``run`` — static lockstep vs continuous batching on a mixed-length
+workload. The regime where lockstep batching wastes the most: prompt and output
 lengths vary widely per request, so in a static batch every short request
 burns decode steps as padding until the batch-max ``max_new_tokens``
 finishes, and no queued request can start until the whole batch retires.
@@ -12,7 +13,14 @@ Reported per engine: decode throughput (useful tokens/s), slot occupancy
 latency (admission -> finish) mean/p95. The headline number is the
 continuous/static decode-throughput ratio.
 
-    PYTHONPATH=src python -m benchmarks.bench_serving
+``quant_decode`` — the PMQ decode hot path: fused single-launch grouped
+kernel (`kernels.moe_ffn`) vs the per-class-launch staged baseline
+(launch counts per MoE layer, the machine-independent probe) plus
+quant-vs-dense decode throughput and per-bit packed weight bytes.
+``--quant-gate`` asserts the fused path cuts launches by >= 1.5x — the
+CI slow job runs it.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--quant-gate]
 """
 from __future__ import annotations
 
@@ -113,8 +121,7 @@ def cold_start(verbose: bool = True, out_dir=None):
     cfg, model, params = _model()
     ccfg = CompressionConfig(enabled=True, target_bits=2.5, group_size=32,
                              odp_enabled=True)
-    rng = np.random.RandomState(7)
-    calib = rng.randint(1, cfg.vocab_size, size=(4, 48)).astype(np.int32)
+    rng = np.random.RandomState(8)
     req = Request(uid=0,
                   prompt=rng.randint(1, cfg.vocab_size, 16).astype(np.int32),
                   max_new_tokens=1)
@@ -125,11 +132,7 @@ def cold_start(verbose: bool = True, out_dir=None):
 
     # inline: everything between "node boots" and "first token out"
     t0 = time.time()
-    record = pipeline.calibrate(model, params, jax.numpy.asarray(calib),
-                                bit_choices=ccfg.bit_choices,
-                                group_size=ccfg.group_size)
-    plan = pipeline.plan(record, ccfg, layout="uniform")
-    artifact = pipeline.apply(model, params, plan, record)
+    artifact = _compress_smoke(cfg, model, params, ccfg)
     t_compress = time.time() - t0
     first_token(artifact)
     ttft_inline = time.time() - t0
@@ -155,6 +158,133 @@ def cold_start(verbose: bool = True, out_dir=None):
     return speedup
 
 
+def _compress_smoke(cfg, model, params, ccfg):
+    """The shared smoke-scale inline-compression recipe (calibrate ->
+    plan uniform -> apply); cold_start and quant_decode must measure the
+    same artifact pipeline."""
+    rng = np.random.RandomState(7)
+    calib = jax.numpy.asarray(
+        rng.randint(1, cfg.vocab_size, size=(4, 48)).astype(np.int32))
+    record = pipeline.calibrate(model, params, calib,
+                                bit_choices=ccfg.bit_choices,
+                                group_size=ccfg.group_size)
+    plan = pipeline.plan(record, ccfg, layout="uniform")
+    return pipeline.apply(model, params, plan, record)
+
+
+def quant_decode(verbose: bool = True, gate: bool = False,
+                 n_requests: int = 8, batch_size: int = 4):
+    """PMQ decode hot path: single-launch fused kernel vs baselines.
+
+    Reports (a) ``pallas_call`` launch sites per MoE layer for the fused
+    grouped path vs the staged per-class path — a trace-time probe, so
+    the number is machine-independent; (b) decode tokens/s of the dense
+    vs quantized continuous engines on the same workload (CPU ref path:
+    relative only); (c) per-bit packed weight bytes per expert. With
+    ``gate=True`` asserts launch reduction >= 1.5x (the CI gate).
+    """
+    from repro.core import pmq as pmq_lib
+    from repro.kernels import common as kcommon
+    from repro.models.layers import moe as moe_lib
+    from repro.models.layers.moe import MoEQuantMeta
+
+    cfg, model, params = _model()
+    artifact = _compress_smoke(
+        cfg, model, params,
+        CompressionConfig(enabled=True, target_bits=2.5, group_size=32,
+                          odp_enabled=False))
+    meta = artifact.metas[0]
+
+    # (a) launch counts per MoE layer, decode-shaped batch
+    moe_slots = [s for s in range(model.period)
+                 if model.slot_kinds[s] == "moe"]
+    ffn = jax.tree.map(lambda a: a[0],
+                       artifact.params[f"layers{moe_slots[0]}"]["ffn"])
+    xd = jax.random.normal(jax.random.PRNGKey(0),
+                           (batch_size, 1, cfg.d_model))
+    with kcommon.override_impl("pallas"):
+        fused = kcommon.count_pallas_calls(
+            lambda xx: moe_lib.apply_moe(
+                ffn, xx, cfg, quant_meta=meta, quant_path="fused")[0], xd)
+        staged = kcommon.count_pallas_calls(
+            lambda xx: moe_lib.apply_moe(
+                ffn, xx, cfg, quant_meta=meta, quant_path="staged")[0], xd)
+    launch_ratio = staged / max(fused, 1)
+
+    # (b) decode throughput, dense vs quantized engines, same workload
+    reqs = mixed_workload(cfg, n_requests)
+    dense_eng = ServeEngine(model, params, batch_size=batch_size)
+    _, _, _ = _run(dense_eng,
+                   [Request(r.uid, r.prompt, r.max_new_tokens)
+                    for r in reqs])
+    quant_eng = ServeEngine.from_artifact(model, artifact,
+                                          batch_size=batch_size)
+    _, _, _ = _run(quant_eng,
+                   [Request(r.uid, r.prompt, r.max_new_tokens)
+                    for r in reqs])
+    tok_dense = dense_eng.stats.decode_tokens_per_s
+    tok_quant = quant_eng.stats.decode_tokens_per_s
+
+    # (c) per-bit packed weight bytes (one expert, this model's dims)
+    per_bit_bytes = {}
+    for bits in sorted(set(meta.bit_classes)):
+        one = MoEQuantMeta(bit_classes=(bits,), class_counts=(1,),
+                           group_size=meta.group_size,
+                           pack_block=meta.pack_block)
+        per_bit_bytes[str(bits)] = pmq_lib.packed_expert_bytes_dims(
+            cfg.d_model, cfg.moe_d_ff, one)
+
+    t = Table("quant decode: fused single-launch vs per-class launches "
+              f"(classes {meta.bit_classes}, counts {meta.class_counts})",
+              ["metric", "value"])
+    t.add("launches/MoE-layer fused", fused)
+    t.add("launches/MoE-layer staged (before)", staged)
+    t.add("launch reduction", f"{launch_ratio:.1f}x")
+    t.add("decode tok/s dense", round(tok_dense, 1))
+    t.add("decode tok/s quant (CPU ref path)", round(tok_quant, 1))
+    if verbose:
+        print(t.render())
+        print(f"\nper-bit packed bytes/expert: {per_bit_bytes} "
+              f"(dense bf16: "
+              f"{pmq_lib.dense_expert_bytes_dims(1, cfg.d_model, cfg.moe_d_ff)})")
+    result = {
+        "launches_per_moe_layer": {"fused": fused, "staged": staged},
+        "launch_reduction": launch_ratio,
+        "decode_tok_s": {"dense": tok_dense, "quant": tok_quant},
+        "per_bit_weight_bytes": per_bit_bytes,
+        "bit_classes": list(meta.bit_classes),
+        "class_counts": list(meta.class_counts),
+    }
+    if gate:
+        assert launch_ratio >= 1.5, (
+            f"quant-decode gate: fused path must cut kernel launches by "
+            f">= 1.5x over the per-class baseline, got {launch_ratio:.2f}x "
+            f"({staged} -> {fused})")
+        if verbose:
+            print(f"quant-decode gate OK: {launch_ratio:.1f}x >= 1.5x")
+    return result
+
+
+def bench_all(verbose: bool = True):
+    """Aggregate payload for ``benchmarks.run --json`` (BENCH_serving)."""
+    speedup = run(verbose=verbose)
+    ttft = cold_start(verbose=verbose)
+    qd = quant_decode(verbose=verbose, gate=True)
+    return {"continuous_vs_static_decode_speedup": speedup,
+            "artifact_cold_start_speedup": ttft,
+            "quant_decode": qd}
+
+
 if __name__ == "__main__":
-    run()
-    cold_start()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quant-gate", action="store_true",
+                    help="run only the quant-decode section and assert "
+                         "the >= 1.5x launch-reduction gate")
+    args = ap.parse_args()
+    if args.quant_gate:
+        quant_decode(gate=True)
+    else:
+        run()
+        cold_start()
+        quant_decode(gate=True)

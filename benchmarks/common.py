@@ -53,6 +53,39 @@ def calib_tokens(cfg, n=6, seq=96, seed=1234):
     return jnp.asarray(ds.batch(0)["tokens"])
 
 
+def pack_random_experts(bit_classes, class_counts, d=128, f=256, gs=32,
+                        pb=128, seed=0):
+    """Random RTN-quantized per-class expert stacks in the artifact layout
+    (``experts_q`` dict + matching ``MoEQuantMeta``) — the fixture the
+    fused moe_ffn kernel benchmarks and tests share."""
+    from repro.kernels.common import pack_kernel_layout
+    from repro.models.layers.moe import MoEQuantMeta
+    from repro.quant import rtn_quantize
+    key = jax.random.PRNGKey(seed)
+    experts_q = {}
+    for ci, (bits, cnt) in enumerate(zip(bit_classes, class_counts)):
+        w = {}
+        for tag, din, dout in (("in", d, f), ("gate", d, f), ("out", f, d)):
+            planes_all, s_all, z_all = [], [], []
+            for _ in range(cnt):
+                key, k2 = jax.random.split(key)
+                mat = jax.random.normal(k2, (din, dout)) * 0.1
+                res = rtn_quantize(mat, bits=bits, group_size=gs)
+                planes_all.append(pack_kernel_layout(res.codes, bits, pb))
+                s_all.append(res.scales)
+                z_all.append(res.zeros)
+            for pi in range(len(planes_all[0])):
+                w[f"{tag}_p{pi}"] = jnp.stack([p[pi] for p in planes_all])
+            w[f"{tag}_s"] = jnp.stack(s_all)
+            if bits > 1:
+                w[f"{tag}_z"] = jnp.stack(z_all)
+        experts_q[f"cls{ci}"] = w
+    meta = MoEQuantMeta(bit_classes=tuple(bit_classes),
+                        class_counts=tuple(class_counts),
+                        group_size=gs, pack_block=pb)
+    return experts_q, meta
+
+
 class Table:
     """Minimal aligned-column table printer for bench output."""
 
@@ -75,6 +108,12 @@ class Table:
             out.append("  ".join(_fmt(v).ljust(w) for v, w in
                                  zip(r, widths)))
         return "\n".join(out)
+
+    def to_dict(self) -> dict:
+        """Machine-readable form for ``benchmarks.run --json``."""
+        return {"title": self.title,
+                "rows": [dict(zip([str(c) for c in self.cols], r))
+                         for r in self.rows]}
 
 
 def _fmt(v):

@@ -5,38 +5,80 @@ Runs one benchmark per paper table/figure at smoke scale (CPU container):
 * bench_allocation — Figs. 5-6, Tabs. 2/5/7 (PMQ vs baselines)
 * bench_odp        — Figs. 7-8, Tabs. 11-12 (pruning + protection)
 * bench_memory     — Tab. 4 / Fig. 1b / Tab. 13 (memory + speed)
-* bench_kernels    — kernel correctness/bytes (Tab. 13-14 kernel side)
+* bench_kernels    — kernel correctness/bytes/launch counts (Tab. 13-14)
 * bench_artifact_loading — per-host bytes/latency of sharded artifact
   streaming (the deployment half of the paper's pre-loading premise)
+* bench_serving    — engines + the quant-decode launch gate
+
+``--json [DIR]`` additionally writes one machine-readable
+``BENCH_<suite>.json`` per executed suite (kernel launch counts, decode
+tokens/s quant-vs-dense, per-bit weight bytes, ...) — the repo's perf
+trajectory; the CI slow job uploads them as artifacts.
 
 The multi-pod roofline tables (EXPERIMENTS.md §Roofline) are produced by
 ``repro.launch.dryrun`` + ``benchmarks.roofline_report``.
 """
 import argparse
-import sys
+import json
 import time
+from pathlib import Path
+
+
+def _jsonable(v):
+    """Best-effort conversion of bench returns to JSON-serializable data."""
+    import numpy as np
+    from benchmarks.common import Table
+    if isinstance(v, Table):
+        return v.to_dict()
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    return str(v)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="allocation|odp|memory|kernels|loading")
+                    help="allocation|odp|memory|kernels|loading|serving")
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="write BENCH_<suite>.json per suite into DIR "
+                         "(default: cwd)")
     args = ap.parse_args()
     t0 = time.time()
     from benchmarks import (bench_allocation, bench_artifact_loading,
-                            bench_kernels, bench_memory, bench_odp)
+                            bench_kernels, bench_memory, bench_odp,
+                            bench_serving)
     benches = {
         "kernels": bench_kernels.run,
         "memory": bench_memory.run,
         "odp": bench_odp.run,
         "allocation": bench_allocation.run,
         "loading": bench_artifact_loading.run,
+        "serving": bench_serving.bench_all,
     }
+    if args.only and args.only not in benches:
+        ap.error(f"unknown suite {args.only!r} "
+                 f"(choose from: {', '.join(benches)})")
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         print(f"\n#### benchmark: {name} " + "#" * 40)
-        fn(verbose=True)
+        result = fn(verbose=True)
+        if args.json is not None:
+            out = Path(args.json) / f"BENCH_{name}.json"
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_text(json.dumps(_jsonable(result), indent=2))
+            print(f"[benchmarks] wrote {out}")
     print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
 
 

@@ -381,6 +381,9 @@ class CompressionPlan:
                    for lp in self.layers)
 
     def metas(self) -> List[MoEQuantMeta]:
+        # MoEQuantMeta derives plane_suffixes at construction — the fused
+        # moe_ffn kernel and the expert-major shard layout both index
+        # packed planes through that precomputed field, never key scans
         return [MoEQuantMeta(bit_classes=lp.bit_classes,
                              class_counts=lp.class_counts,
                              group_size=self.group_size,

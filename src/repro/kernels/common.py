@@ -12,7 +12,9 @@ pack time (:func:`pack_kernel_layout`).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import threading
 from typing import Tuple
 
 import jax
@@ -104,6 +106,64 @@ def unpack_tile(plane_tile: jax.Array, plane_bits: int) -> jax.Array:
     return jnp.concatenate(parts, axis=0)
 
 
+def unpack_tile_blocks(plane_tile: jax.Array, plane_bits: int,
+                       pack_block: int) -> jax.Array:
+    """In-kernel unpack of a K-tile spanning >= 1 deinterleave blocks.
+
+    The kernel layout deinterleaves per ``pack_block`` logical rows; a tile
+    of ``q * pack_block`` logical rows holds ``q`` stacked blocks.  Static
+    per-block :func:`unpack_tile` + one concat keeps it Mosaic-legal.
+    """
+    if plane_bits == 8:
+        return plane_tile.astype(jnp.int32)
+    per = 8 // plane_bits
+    rows = pack_block // per
+    nb = plane_tile.shape[0] // rows
+    if nb == 1:
+        return unpack_tile(plane_tile, plane_bits)
+    parts = [unpack_tile(plane_tile[i * rows:(i + 1) * rows], plane_bits)
+             for i in range(nb)]
+    return jnp.concatenate(parts, axis=0)
+
+
+def dequant_tile(plane_tiles, scale_tile, zero_tile, *, bits: int, bk: int,
+                 group_size: int, pack_block: int, compute_dtype):
+    """Unpack + affine-dequant one (bk, bn) weight tile (shared by the
+    quant_matmul and fused moe_ffn kernels; ``bk`` may span several
+    ``pack_block`` deinterleave blocks)."""
+    split = _plane_split(bits)
+    if bits == 3:
+        lo = unpack_tile_blocks(plane_tiles[0], 2, pack_block)
+        hi = unpack_tile_blocks(plane_tiles[1], 1, pack_block)
+        codes = lo + (hi << 2)
+    else:
+        codes = unpack_tile_blocks(plane_tiles[0], split[0], pack_block)
+    codes = codes.astype(jnp.float32)
+    n_g = bk // group_size
+    bn = codes.shape[-1]
+    if bits == 1:
+        pm1 = codes * 2.0 - 1.0
+        if n_g == 1:
+            w = pm1 * scale_tile[0][None, :]
+        else:
+            w = (pm1.reshape(n_g, group_size, bn)
+                 * scale_tile[:, None, :]).reshape(bk, bn)
+    else:
+        if n_g == 1:
+            w = (codes - zero_tile[0][None, :]) * scale_tile[0][None, :]
+        else:
+            w = ((codes.reshape(n_g, group_size, bn)
+                  - zero_tile[:, None, :])
+                 * scale_tile[:, None, :]).reshape(bk, bn)
+    return w.astype(compute_dtype)
+
+
+def plane_suffixes(bits: int) -> Tuple[str, ...]:
+    """Packed-plane key suffixes (``p0``[, ``p1``]) for one bit width —
+    static, so MoE layers never have to scan param dicts for plane keys."""
+    return tuple(f"p{i}" for i in range(len(_plane_split(bits))))
+
+
 def pad_to_multiple(x: jax.Array, axis: int, multiple: int) -> jax.Array:
     n = x.shape[axis]
     rem = (-n) % multiple
@@ -121,6 +181,92 @@ def choose_bm(m_hint: int) -> int:
         if m_hint <= bm:
             return bm
     return DEFAULT_BM
+
+
+@functools.lru_cache(maxsize=None)
+def choose_ffn_blocks(m_hint: int, d_ff: int, pack_block: int
+                      ) -> Tuple[int, int]:
+    """(bm, bf) tiles for the fused expert-FFN kernel.
+
+    bm follows :func:`choose_bm` (decode regime M in 8..128).  bf — the
+    intermediate-width tile shared by the h/g accumulators and the second
+    GEMM's K step — must be a multiple of ``pack_block`` (the packed
+    deinterleave unit of the w_out planes) that divides ``d_ff``.  Small
+    decode tiles take a narrower bf so the dead-tile skip window stays
+    fine-grained; full tiles take the widest bf <= 512 to amortize the
+    second GEMM's accumulator traffic (table in docs/kernels.md).
+    """
+    bm = choose_bm(m_hint)
+    target = 256 if bm <= 32 else 512
+    bf = pack_block
+    q = 2
+    while (pack_block * q <= min(target, d_ff)
+           and d_ff % (pack_block * q) == 0):
+        bf = pack_block * q
+        q *= 2
+    return bm, bf
+
+
+def fit_block(n: int, requested: int, align: int = 8) -> int:
+    """Largest divisor of ``n`` that is <= ``requested`` and a multiple of
+    ``align``; 0 if none exists (caller should pad instead)."""
+    for cand in range(min(requested, n), align - 1, -1):
+        if n % cand == 0 and cand % align == 0:
+            return cand
+    return 0
+
+
+# ------------------------------------------------------ impl override hook
+_impl_override = threading.local()
+
+
+def impl_override():
+    """Active kernel-impl override (None | 'pallas' | 'interpret' | 'ref'):
+    what ``impl='auto'`` ops resolve to while :func:`override_impl` is
+    entered.  Lets tests and launch-count probes force the Pallas lowering
+    on CPU hosts without threading an impl argument through the model."""
+    return getattr(_impl_override, "value", None)
+
+
+@contextlib.contextmanager
+def override_impl(value: str):
+    prev = impl_override()
+    _impl_override.value = value
+    try:
+        yield
+    finally:
+        _impl_override.value = prev
+
+
+# ------------------------------------------------------- launch accounting
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations in ``fn``'s jaxpr (recursing
+    through nested jaxprs: jit/scan/cond/...).  This is the per-trace
+    kernel *launch-site* count — the probe the tests and benchmarks use to
+    assert the fused MoE path launches one kernel per layer instead of
+    three per bit-class."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _count_jaxpr(jaxpr.jaxpr)
+
+
+def _count_jaxpr(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            n += _count_param(v)
+    return n
+
+
+def _count_param(v) -> int:
+    if hasattr(v, "jaxpr"):          # ClosedJaxpr
+        return _count_jaxpr(v.jaxpr)
+    if hasattr(v, "eqns"):           # raw Jaxpr
+        return _count_jaxpr(v)
+    if isinstance(v, (tuple, list)):
+        return sum(_count_param(x) for x in v)
+    return 0
 
 
 def cdiv(a: int, b: int) -> int:

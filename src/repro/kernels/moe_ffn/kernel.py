@@ -1,0 +1,259 @@
+"""Pallas TPU kernel: fused grouped quantized-MoE expert FFN.
+
+One ``pallas_call`` per MoE layer computes the full gated FFN
+
+    y = (act(x @ Wg) * (x @ Wi)) @ Wo
+
+for **every expert of every bit class**, dequantizing all three packed
+projections in-kernel.  This replaces the staged path's three
+``quant_matmul`` launches per bit class (9 launches per layer at 3
+classes) and its HBM round-trip of the intermediate ``h``.
+
+Grid and tiling
+---------------
+::
+
+    grid = (E, M/bm, F/bf, D/bk)          # k innermost, then f, m, e
+
+    per (e, m):   y_acc (bm, D) f32 accumulator lives across (f, k)
+    per (e,m,f):  h_acc/g_acc (bm, bf) f32 accumulate the first GEMM
+                  over k; at k == nk-1 the gate activation fires and the
+                  second GEMM folds the (bm, bf) tile into y_acc.
+
+* the ``x`` tile ``(bm, bk)`` is indexed ``(e, m, k)`` — constant over
+  ``f``, so Pallas fetches it **once** per (e, m, k) and both the in- and
+  gate-projections consume the same VMEM tile;
+* the intermediate ``h`` never exists outside VMEM scratch;
+* ``bk == pack_block``: each in/gate weight K-step is exactly one
+  deinterleaved pack block; the w_out tile spans ``bf/pack_block`` blocks
+  (``common.unpack_tile_blocks``).
+
+Grouping over bit classes
+-------------------------
+Experts are class-sorted; grid dim 0 sweeps the **global** expert index.
+Each class contributes its own packed-plane/scale refs (static shapes per
+class) and a static segment ``[e0, e0+cnt)``; the kernel selects the
+segment's refs with ``pl.when`` on the expert id.  Out-of-segment index
+maps collapse to block (clamped-expert, 0, 0) so a class's planes are
+fetched only while the sweep is inside its segment (one stale-block fetch
+per boundary).
+
+Dead-slot skipping
+------------------
+``counts`` (scalar-prefetched, one int32 per expert) gives the number of
+live leading capacity rows.  M-tiles past the count skip both GEMMs
+(``pl.when``) — empty/underfull experts cost no MXU work — and output
+rows ``>= counts[e]`` are written as zeros (the contract the XLA oracle
+``ref.moe_ffn_ref`` mirrors).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import _plane_split, dequant_tile
+from repro.kernels.moe_ffn.ref import ACTIVATIONS
+
+
+@dataclass(frozen=True)
+class _ClassSpec:
+    """Static per-bit-class segment descriptor (ref layout bookkeeping)."""
+
+    bits: int
+    e0: int          # first global (class-sorted) expert index
+    cnt: int         # experts in the class
+    n_planes: int    # packed planes per projection (2 for 3-bit, else 1)
+    has_zeros: bool  # affine zero-points present (bits > 1)
+
+    @property
+    def refs_per_tag(self) -> int:
+        return self.n_planes + 1 + (1 if self.has_zeros else 0)
+
+    @property
+    def n_refs(self) -> int:
+        return 3 * self.refs_per_tag
+
+
+def _class_specs(meta) -> Tuple[_ClassSpec, ...]:
+    out = []
+    for bits, e0, cnt in meta.class_slices():
+        out.append(_ClassSpec(bits=int(bits), e0=int(e0), cnt=int(cnt),
+                              n_planes=len(_plane_split(bits)),
+                              has_zeros=bits > 1))
+    return tuple(out)
+
+
+def _read(ref):
+    return ref[...][0]          # drop the leading expert block dim
+
+
+def _moe_ffn_kernel(counts_ref, x_ref, *refs, classes: Tuple[_ClassSpec, ...],
+                    act: str, bm: int, bf: int, bk: int, d: int,
+                    group_size: int, pack_block: int, nf: int, nk: int,
+                    compute_dtype):
+    out_ref = refs[-4]
+    h_acc, g_acc, y_acc = refs[-3], refs[-2], refs[-1]
+    e = pl.program_id(0)
+    m = pl.program_id(1)
+    f = pl.program_id(2)
+    k = pl.program_id(3)
+    count = counts_ref[e]
+    live = (m * bm) < count
+    act_fn = ACTIVATIONS[act]
+
+    @pl.when(jnp.logical_and(f == 0, k == 0))
+    def _init_y():
+        y_acc[...] = jnp.zeros_like(y_acc)
+
+    @pl.when(k == 0)
+    def _init_hg():
+        h_acc[...] = jnp.zeros_like(h_acc)
+        g_acc[...] = jnp.zeros_like(g_acc)
+
+    x_tile = _read(x_ref).astype(compute_dtype)          # (bm, bk)
+
+    off = 0
+    for cls in classes:
+        base = off
+        off += cls.n_refs
+        seg = jnp.logical_and(e >= cls.e0, e < cls.e0 + cls.cnt)
+
+        def tag_refs(tag_idx, base=base, cls=cls):
+            lo = base + tag_idx * cls.refs_per_tag
+            planes = tuple(refs[lo + i] for i in range(cls.n_planes))
+            scale = refs[lo + cls.n_planes]
+            zero = refs[lo + cls.n_planes + 1] if cls.has_zeros else None
+            return planes, scale, zero
+
+        @pl.when(jnp.logical_and(live, seg))
+        def _first_gemm(cls=cls, tag_refs=tag_refs):
+            for tag_idx, acc in ((0, h_acc), (1, g_acc)):
+                planes, scale, zero = tag_refs(tag_idx)
+                w = dequant_tile(
+                    tuple(_read(p) for p in planes), _read(scale),
+                    _read(zero) if zero is not None else None,
+                    bits=cls.bits, bk=bk, group_size=group_size,
+                    pack_block=pack_block, compute_dtype=compute_dtype)
+                acc[...] += jnp.dot(x_tile, w,
+                                    preferred_element_type=jnp.float32)
+
+        @pl.when(jnp.logical_and(jnp.logical_and(live, seg), k == nk - 1))
+        def _second_gemm(cls=cls, tag_refs=tag_refs):
+            planes, scale, zero = tag_refs(2)
+            wo = dequant_tile(
+                tuple(_read(p) for p in planes), _read(scale),
+                _read(zero) if zero is not None else None,
+                bits=cls.bits, bk=bf, group_size=group_size,
+                pack_block=pack_block, compute_dtype=compute_dtype)
+            a = (act_fn(g_acc[...]) * h_acc[...]).astype(compute_dtype)
+            y_acc[...] += jnp.dot(a, wo, preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(f == nf - 1, k == nk - 1))
+    def _write():
+        rows = m * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+        y = jnp.where(rows < count, y_acc[...], 0.0)
+        out_ref[...] = y.astype(out_ref.dtype)[None]
+
+
+def moe_ffn_pallas(x: jax.Array, class_args, counts: jax.Array, *,
+                   meta, act: str, block_m: int, block_f: int,
+                   compute_dtype=jnp.float32, out_dtype=jnp.float32,
+                   interpret: bool = False) -> jax.Array:
+    """x: (E, M, D) class-sorted; class_args: per-class flat ref groups.
+
+    ``class_args[ci]`` is the tuple ``(in planes..., in_s, [in_z],
+    gate planes..., gate_s, [gate_z], out planes..., out_s, [out_z])``
+    with kernel-layout packed planes (``meta.pack_block`` deinterleave).
+    ``counts``: (E,) int32 live leading rows per expert.
+    """
+    e, m, d = x.shape
+    gs, pack_block = meta.group_size, meta.pack_block
+    classes = _class_specs(meta)
+    f_dim = class_args[0][classes[0].n_planes].shape[-1]   # in_s: (cnt,.,F)
+    bm, bf, bk = block_m, block_f, pack_block
+    assert m % bm == 0 and f_dim % bf == 0 and d % bk == 0, (m, f_dim, d)
+    assert bf % pack_block == 0 and bk % gs == 0 and bf % gs == 0
+    nm, nf, nk = m // bm, f_dim // bf, d // bk
+    grid = (e, nm, nf, nk)
+
+    def im_x(e_, m_, f_, k_, *_):
+        return (e_, m_, k_)
+
+    def im_out(e_, m_, f_, k_, *_):
+        return (e_, m_, 0)
+
+    def seg_idx(cls, e_):
+        ins = jnp.logical_and(e_ >= cls.e0, e_ < cls.e0 + cls.cnt)
+        ec = jnp.clip(e_ - cls.e0, 0, cls.cnt - 1)
+        return ins, ec
+
+    def im_kf(cls):
+        # in/gate tiles advance with (k, f) inside the class segment and
+        # pin to block (ec, 0, 0) outside it -> no out-of-segment traffic
+        def im(e_, m_, f_, k_, *_):
+            ins, ec = seg_idx(cls, e_)
+            return (ec, jnp.where(ins, k_, 0), jnp.where(ins, f_, 0))
+        return im
+
+    def im_f(cls):
+        def im(e_, m_, f_, k_, *_):
+            ins, ec = seg_idx(cls, e_)
+            return (ec, jnp.where(ins, f_, 0), 0)
+        return im
+
+    in_specs = [pl.BlockSpec((1, bm, bk), im_x)]
+    args = [x]
+    for cls, cargs in zip(classes, class_args):
+        split = _plane_split(cls.bits)
+        it = iter(cargs)
+        for tag in ("in", "gate", "out"):
+            first = tag != "out"
+            for pb_bits in split:
+                plane = next(it)
+                if first:
+                    shape = (1, bk * pb_bits // 8, bf)
+                    in_specs.append(pl.BlockSpec(shape, im_kf(cls)))
+                else:
+                    shape = (1, bf * pb_bits // 8, d)
+                    in_specs.append(pl.BlockSpec(shape, im_f(cls)))
+                args.append(plane)
+            n_sz = 1 + (1 if cls.has_zeros else 0)
+            for _ in range(n_sz):
+                sz = next(it)
+                if first:
+                    in_specs.append(
+                        pl.BlockSpec((1, bk // gs, bf), im_kf(cls)))
+                else:
+                    in_specs.append(
+                        pl.BlockSpec((1, bf // gs, d), im_f(cls)))
+                args.append(sz.astype(jnp.float32))
+        assert next(it, None) is None
+
+    kern = functools.partial(
+        _moe_ffn_kernel, classes=classes, act=act, bm=bm, bf=bf, bk=bk,
+        d=d, group_size=gs, pack_block=pack_block, nf=nf, nk=nk,
+        compute_dtype=compute_dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, d), im_out),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bf), jnp.float32),
+            pltpu.VMEM((bm, bf), jnp.float32),
+            pltpu.VMEM((bm, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, m, d), out_dtype),
+        interpret=interpret,
+    )(counts.astype(jnp.int32), *args)

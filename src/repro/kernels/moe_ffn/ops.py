@@ -1,0 +1,120 @@
+"""Public op: fused grouped quantized expert FFN (one launch per layer).
+
+``moe_ffn_quant`` consumes the class-sorted packed expert params exactly
+as they sit in a compressed artifact (``experts_q = {"cls0": {...}, ...}``)
+plus the per-expert live-row counts, and returns the gated-FFN output for
+every expert in a **single** ``pallas_call`` — the staged alternative
+launches ``3 x num_classes`` ``quant_matmul`` kernels and round-trips the
+intermediate activation through HBM.
+
+Dispatches to the Pallas TPU kernel on TPU backends (or in interpret mode
+for CPU validation) and to the XLA reference otherwise, honoring
+``kernels.common.override_impl`` so tests/benchmarks can force either
+lowering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.common import plane_suffixes
+from repro.kernels.moe_ffn.kernel import moe_ffn_pallas
+from repro.kernels.moe_ffn.ref import moe_ffn_ref
+
+
+def _use_pallas(mode: str) -> bool:
+    if mode == "auto":
+        return common.on_tpu()
+    return mode in ("pallas", "interpret")
+
+
+def class_arg_lists(experts_q: Dict, meta) -> List[List[jax.Array]]:
+    """Flatten ``experts_q`` into the kernel's per-class ref order using
+    the static plane suffixes (no param-dict key scans)."""
+    out = []
+    for ci, (bits, _, _) in enumerate(meta.class_slices()):
+        w = experts_q[f"cls{ci}"]
+        flat: List[jax.Array] = []
+        for tag in ("in", "gate", "out"):
+            for s in plane_suffixes(bits):
+                flat.append(w[f"{tag}_{s}"])
+            flat.append(w[f"{tag}_s"])
+            if bits > 1:
+                flat.append(w[f"{tag}_z"])
+        out.append(flat)
+    return out
+
+
+def _validate(d: int, f: int, meta) -> None:
+    pb, gs = meta.pack_block, meta.group_size
+    if d % pb:
+        raise ValueError(
+            f"moe_ffn_quant: d_model={d} is not a multiple of "
+            f"pack_block={pb}; the packed plane layout fixes the K tiling "
+            "— repack with a pack_block dividing d_model")
+    if f % pb:
+        raise ValueError(
+            f"moe_ffn_quant: moe_d_ff={f} is not a multiple of "
+            f"pack_block={pb}; repack with a pack_block dividing moe_d_ff")
+    if pb % gs:
+        raise ValueError(
+            f"moe_ffn_quant: pack_block={pb} must be a multiple of "
+            f"group_size={gs} so scale rows tile with the K step")
+
+
+def moe_ffn_quant(x: jax.Array, experts_q: Dict, counts: jax.Array, *,
+                  meta, act: str, impl: str = "auto", block_m: int = 0,
+                  block_f: int = 0, out_dtype=jnp.float32) -> jax.Array:
+    """Fused ``y[e] = (act(x[e] @ Wg[e]) * (x[e] @ Wi[e])) @ Wo[e]``.
+
+    Args:
+        x: (E, M, D) class-sorted expert token blocks (capacity slots).
+        experts_q: packed per-class planes, the artifact layout
+            (``cls{ci}`` -> ``{in,gate,out}_{p*,s,z}``).
+        counts: (E,) int32 — live leading rows per expert; output rows
+            ``>= counts[e]`` are zero and dead M-tiles skip their GEMMs.
+        meta: :class:`repro.models.layers.moe.MoEQuantMeta` (static).
+        act: gate activation name (``cfg.mlp_act``).
+    """
+    # resolve the thread-local override *outside* the jit boundary so the
+    # resolved impl is part of the trace cache key
+    if impl == "auto":
+        impl = common.impl_override() or "auto"
+    return _moe_ffn_quant(x, experts_q, counts, meta=meta, act=act,
+                          impl=impl, block_m=block_m, block_f=block_f,
+                          out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("meta", "act", "impl", "block_m", "block_f",
+                     "out_dtype"))
+def _moe_ffn_quant(x: jax.Array, experts_q: Dict, counts: jax.Array, *,
+                   meta, act: str, impl: str, block_m: int,
+                   block_f: int, out_dtype) -> jax.Array:
+    e, m, d = x.shape
+    f_dim = experts_q["cls0"]["in_s"].shape[-1]
+    _validate(d, f_dim, meta)
+
+    if not _use_pallas(impl):
+        classes = [experts_q[f"cls{ci}"]
+                   for ci in range(len(meta.bit_classes))]
+        return moe_ffn_ref(x, classes, counts, meta=meta, act=act,
+                           out_dtype=out_dtype)
+    class_args = class_arg_lists(experts_q, meta)
+
+    interpret = (impl == "interpret") or not common.on_tpu()
+    bm, bf = common.choose_ffn_blocks(m, f_dim, meta.pack_block)
+    if block_m:
+        bm = block_m
+    if block_f:
+        bf = block_f
+    xp = common.pad_to_multiple(x, 1, bm)
+    out = moe_ffn_pallas(xp, class_args, counts, meta=meta, act=act,
+                         block_m=bm, block_f=bf, out_dtype=out_dtype,
+                         interpret=interpret)
+    return out[:, :m, :]

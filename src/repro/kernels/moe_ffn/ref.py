@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the fused grouped quantized expert-FFN kernel.
+
+Semantics contract (shared with the Pallas kernel):
+
+* input ``x`` is the class-sorted expert token matrix ``(E, M, D)`` — the
+  gathered capacity slots of every expert, experts ordered by ascending
+  bit class exactly as the packed planes are stored;
+* per expert, rows ``>= counts[e]`` of the output are **zero** (dead
+  capacity slots are skipped by the kernel, so their contents must be
+  pinned, not left unspecified);
+* each live row is the gated FFN ``y = (act(x @ Wg) * (x @ Wi)) @ Wo``
+  with all three projections dequantized from that expert's packed planes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import plane_suffixes
+from repro.kernels.quant_matmul.ref import dequant_ref
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def _dequant_class(w: Dict, tag: str, bits: int, d_in: int, group_size: int,
+                   pack_block: int, dtype):
+    """Dequantize one class's (cnt, d_in, d_out) projection stack."""
+    planes = tuple(w[f"{tag}_{s}"] for s in plane_suffixes(bits))
+    scales = w[f"{tag}_s"]
+    zeros = w.get(f"{tag}_z")
+    deq = functools.partial(dequant_ref, bits=bits, group_size=group_size,
+                            d_in=d_in, pack_block=pack_block, dtype=dtype)
+    if zeros is None:
+        return jax.vmap(lambda ps, s: deq(ps, s, None))(planes, scales)
+    return jax.vmap(lambda ps, s, z: deq(ps, s, z))(planes, scales, zeros)
+
+
+def moe_ffn_ref(x: jax.Array, class_params: Sequence[Dict],
+                counts: jax.Array, *, meta, act: str,
+                compute_dtype=jnp.float32,
+                out_dtype=jnp.float32) -> jax.Array:
+    """x: (E, M, D) class-sorted expert rows -> (E, M, D)."""
+    e, m, d = x.shape
+    act_fn = ACTIVATIONS[act]
+    gs, pb = meta.group_size, meta.pack_block
+    outs = []
+    for ci, (bits, e0, cnt) in enumerate(meta.class_slices()):
+        w = class_params[ci]
+        f = w["in_s"].shape[-1]
+        xc = x[e0:e0 + cnt].astype(compute_dtype)
+        wi = _dequant_class(w, "in", bits, d, gs, pb, compute_dtype)
+        wg = _dequant_class(w, "gate", bits, d, gs, pb, compute_dtype)
+        wo = _dequant_class(w, "out", bits, f, gs, pb, compute_dtype)
+        h = jnp.einsum("emd,edf->emf", xc, wi,
+                       preferred_element_type=jnp.float32)
+        g = jnp.einsum("emd,edf->emf", xc, wg,
+                       preferred_element_type=jnp.float32)
+        a = (act_fn(g) * h).astype(compute_dtype)
+        y = jnp.einsum("emf,efd->emd", a, wo,
+                       preferred_element_type=jnp.float32)
+        outs.append(y)
+    y = jnp.concatenate(outs, axis=0)
+    mask = jnp.arange(m)[None, :] < counts[:, None]
+    return jnp.where(mask[..., None], y, 0.0).astype(out_dtype)

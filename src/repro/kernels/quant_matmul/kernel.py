@@ -26,37 +26,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import _plane_split, unpack_tile
+from repro.kernels.common import _plane_split, dequant_tile
 
 
 def _dequant_tile(plane_tiles, scale_tile, zero_tile, bits: int,
                   bk: int, group_size: int, compute_dtype):
-    """Unpack + affine-dequant one (bk, bn) weight tile."""
-    split = _plane_split(bits)
-    if bits == 3:
-        lo = unpack_tile(plane_tiles[0], 2)
-        hi = unpack_tile(plane_tiles[1], 1)
-        codes = lo + (hi << 2)
-    else:
-        codes = unpack_tile(plane_tiles[0], split[0])
-    codes = codes.astype(jnp.float32)
-    n_g = bk // group_size
-    bn = codes.shape[-1]
-    if bits == 1:
-        pm1 = codes * 2.0 - 1.0
-        if n_g == 1:
-            w = pm1 * scale_tile[0][None, :]
-        else:
-            w = (pm1.reshape(n_g, group_size, bn)
-                 * scale_tile[:, None, :]).reshape(bk, bn)
-    else:
-        if n_g == 1:
-            w = (codes - zero_tile[0][None, :]) * scale_tile[0][None, :]
-        else:
-            w = ((codes.reshape(n_g, group_size, bn)
-                  - zero_tile[:, None, :])
-                 * scale_tile[:, None, :]).reshape(bk, bn)
-    return w.astype(compute_dtype)
+    """Unpack + affine-dequant one (bk, bn) weight tile (bk == pack_block
+    here: quant_matmul's K tile is exactly one deinterleave block)."""
+    return dequant_tile(plane_tiles, scale_tile, zero_tile, bits=bits,
+                        bk=bk, group_size=group_size, pack_block=bk,
+                        compute_dtype=compute_dtype)
 
 
 def _qmm_kernel(x_ref, *refs, bits: int, group_size: int, bk: int,

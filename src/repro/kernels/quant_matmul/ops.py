@@ -25,19 +25,56 @@ def _use_pallas(mode: str) -> bool:
     return mode in ("pallas", "interpret")
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("bits", "group_size", "pack_block", "impl", "block_m",
-                     "block_n", "block_k", "out_dtype"))
+def _fit_n(n: int, block_n: int):
+    """(block_n', pad_n): shrink block_n to a divisor of n, or — when no
+    aligned divisor exists — pad N up to the next sublane-aligned multiple
+    a block can tile. Returns the block plus the padded N (== n if none)."""
+    bn = common.fit_block(n, block_n)
+    if bn:
+        return bn, n
+    pad_n = -(-n // 8) * 8
+    bn = common.fit_block(pad_n, block_n)
+    return bn, pad_n
+
+
+def _pad_last(arr, pad_n: int):
+    return common.pad_to_multiple(arr, arr.ndim - 1, pad_n)
+
+
 def quant_matmul(x: jax.Array, planes: Tuple[jax.Array, ...],
                  scales: jax.Array, zeros: Optional[jax.Array], *, bits: int,
                  group_size: int = 128, pack_block: int = 128,
                  impl: str = "auto", block_m: int = 0, block_n: int = 128,
-                 block_k: int = 128, out_dtype=jnp.float32) -> jax.Array:
+                 block_k: int = 0, out_dtype=jnp.float32) -> jax.Array:
     """``y = x @ dequant(planes)``.
 
     x: ``(..., K)`` (or ``(E, M, K)`` with per-expert planes ``(E, ., N)``).
+    ``block_k`` is fixed by the packed layout at ``pack_block`` (one K step
+    = one deinterleave block); passing any other value is an error.
     """
+    if block_k and block_k != pack_block:
+        raise ValueError(
+            f"quant_matmul: block_k={block_k} conflicts with "
+            f"pack_block={pack_block} — the deinterleaved plane layout "
+            "fixes the K tile at pack_block; omit block_k")
+    # resolve the thread-local override *outside* the jit boundary so the
+    # resolved impl is part of the trace cache key
+    if impl == "auto":
+        impl = common.impl_override() or "auto"
+    return _quant_matmul(x, planes, scales, zeros, bits=bits,
+                         group_size=group_size, pack_block=pack_block,
+                         impl=impl, block_m=block_m, block_n=block_n,
+                         out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group_size", "pack_block", "impl", "block_m",
+                     "block_n", "out_dtype"))
+def _quant_matmul(x: jax.Array, planes: Tuple[jax.Array, ...],
+                  scales: jax.Array, zeros: Optional[jax.Array], *,
+                  bits: int, group_size: int, pack_block: int, impl: str,
+                  block_m: int, block_n: int, out_dtype) -> jax.Array:
     if not _use_pallas(impl):
         return quant_matmul_ref(x, planes, scales, zeros, bits=bits,
                                 group_size=group_size, pack_block=pack_block,
@@ -56,10 +93,30 @@ def quant_matmul(x: jax.Array, planes: Tuple[jax.Array, ...],
     bm = block_m or common.choose_bm(m)
     xm = common.pad_to_multiple(xm, xm.ndim - 2, bm)
 
+    # the packed deinterleave layout fixes the K tiling: one K step is
+    # exactly one pack_block, so a non-multiple K cannot be retiled here
+    if k % pack_block:
+        raise ValueError(
+            f"quant_matmul: contraction dim K={k} is not a multiple of "
+            f"pack_block={pack_block}; the kernel-layout planes fix the K "
+            "tiling at pack time — repack with a pack_block dividing K "
+            "(d_model / moe_d_ff for the in/gate / out projections)")
+    block_k = pack_block
+    if block_k % group_size:
+        raise ValueError(
+            f"quant_matmul: pack_block={pack_block} must be a multiple of "
+            f"group_size={group_size} so per-group scales tile the K step")
+
+    n = planes[0].shape[-1]
+    bn, pad_n = _fit_n(n, block_n)
+    if pad_n != n:
+        planes = tuple(_pad_last(p, pad_n) for p in planes)
+        scales = _pad_last(scales, pad_n)
+        zeros = _pad_last(zeros, pad_n) if zeros is not None else None
+
     out = quant_matmul_pallas(
         xm, planes, scales, zeros, bits=bits, group_size=group_size,
-        block_m=bm, block_n=block_n, block_k=block_k, out_dtype=out_dtype,
+        block_m=bm, block_n=bn, block_k=block_k, out_dtype=out_dtype,
         interpret=interpret)
-    out = out[..., :m, :]
-    n = out.shape[-1]
+    out = out[..., :m, :n]
     return out.reshape((e,) + lead + (n,)) if batched else out.reshape(lead + (n,))

@@ -16,8 +16,12 @@ Deployment topology is orthogonal (see ``docs/serving.md``):
   via :meth:`CompressedArtifact.load_sharded` (expert-major shard groups,
   per-host byte accounting printed) and packed expert planes are placed
   expert-parallel over the ``data`` axis;
-* ``--ep`` — additionally route dense-expert MoE dispatch through the
-  explicit shard_map schedule (``sharding.moe_parallel``).
+* ``--ep`` — additionally route MoE dispatch through the explicit
+  shard_map schedule (``sharding.moe_parallel``): dense expert stacks
+  take the bf16 TP'd body, compressed artifacts take the quantized body
+  (per-class packed planes sharded over ``data``, fused grouped
+  ``kernels.moe_ffn`` kernel per shard — every bit class's expert count
+  must divide the data axis).
 
 Then serves a synthetic batched workload and reports throughput +
 compression stats.
@@ -161,7 +165,8 @@ def main():
                          "mesh, e.g. 2x1; artifacts stream in sharded")
     ap.add_argument("--ep", action="store_true",
                     help="with --mesh: explicit shard_map MoE dispatch "
-                         "(dense experts only)")
+                         "(dense experts or quantized artifacts whose "
+                         "class counts divide the data axis)")
     args = ap.parse_args()
     serve(args.arch, mc=args.mc, target_bits=args.bits,
           n_requests=args.requests, max_new=args.max_new,

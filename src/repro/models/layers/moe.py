@@ -11,8 +11,11 @@ one-hot dispatch tensor — memory O(B*E*C*d) = O(k * cf * tokens * d)):
    form of the paper's dynamic compute saving;
 3. per expert, top-C token selection by router score (capacity dropping);
 4. batched expert FFN — dense bf16 einsum, or the **PMQ quantized path**:
-   experts are stored class-sorted by allocated bit-width and each class runs
-   the fused dequant GEMM (`kernels.quant_matmul`) on its packed planes;
+   experts are stored class-sorted by allocated bit-width and the whole
+   gated FFN runs as one grouped fused dequant kernel over every class
+   (`kernels.moe_ffn`, a single ``pallas_call`` per layer with per-expert
+   live-row counts; `quant_path='staged'` keeps the legacy per-class
+   `kernels.quant_matmul` composition as the oracle/baseline);
 5. weighted scatter-combine (+ optional always-on shared expert — llama4 —
    and/or parallel dense residual branch — arctic).
 
@@ -31,6 +34,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.core import odp as odp_lib
+from repro.kernels import common as kcommon
+from repro.kernels.moe_ffn.ops import moe_ffn_quant
 from repro.kernels.quant_matmul.ops import quant_matmul
 from repro.models.layers.core import (_dense_init, init_mlp, mlp_activation,
                                       specs_mlp)
@@ -46,6 +51,21 @@ class MoEQuantMeta:
     class_counts: Tuple[int, ...]    # experts per class; sums to num_experts
     group_size: int = 128
     pack_block: int = 128
+    #: per-class packed-plane key suffixes (("p0",) or ("p0", "p1")) —
+    #: precomputed here (pipeline.apply populates it; __post_init__ derives
+    #: it for direct constructions) so the hot path never rescans param
+    #: dict keys per trace.
+    plane_suffixes: Tuple[Tuple[str, ...], ...] = ()
+
+    def __post_init__(self):
+        if not self.plane_suffixes:
+            object.__setattr__(
+                self, "plane_suffixes",
+                tuple(kcommon.plane_suffixes(b) for b in self.bit_classes))
+
+    @property
+    def num_experts(self) -> int:
+        return sum(self.class_counts)
 
     def class_slices(self):
         out, start = [], 0
@@ -140,19 +160,31 @@ def _expert_ffn_dense(p, xg, cfg: ModelConfig):
     return jnp.einsum("becf,efd->becd", h, p["w_out"].astype(dt))
 
 
-def _expert_ffn_quant(p, xg, cfg: ModelConfig, meta: MoEQuantMeta):
-    """PMQ path: per bit-class fused dequant GEMMs over class-sorted experts."""
+def _expert_ffn_quant(p, xe, cfg: ModelConfig, meta: MoEQuantMeta,
+                      counts: jax.Array, quant_path: str = "fused"):
+    """PMQ path over class-sorted expert rows ``xe: (E, M, D)``.
+
+    ``counts``: (E,) int32 live leading rows per expert — rows past the
+    count come out zero and (in the fused kernel) skip their GEMMs.
+
+    ``quant_path='fused'`` runs the whole gated FFN as **one** grouped
+    ``pallas_call`` (`kernels.moe_ffn`); ``'staged'`` is the legacy
+    composition — three ``quant_matmul`` launches per bit class with the
+    intermediate activation round-tripping HBM — kept as the equivalence
+    oracle and the launch-count baseline for the benchmarks.
+    """
+    if quant_path == "fused":
+        return moe_ffn_quant(xe, p["experts_q"], counts, meta=meta,
+                             act=cfg.mlp_act, out_dtype=jnp.float32)
     act = mlp_activation(cfg)
-    b, e, c, d = xg.shape
+    e, m, d = xe.shape
     outs = []
     for ci, (bits, e0, cnt) in enumerate(meta.class_slices()):
         w = p["experts_q"][f"cls{ci}"]
-        xc = xg[:, e0:e0 + cnt]                                  # (B,ec,C,D)
-        xc = xc.transpose(1, 0, 2, 3).reshape(cnt, b * c, d)
+        xc = xe[e0:e0 + cnt]                                     # (ec,M,D)
 
-        def planes(tag):
-            keys = sorted(k for k in w if k.startswith(f"{tag}_p"))
-            return tuple(w[k] for k in keys)
+        def planes(tag, ci=ci):
+            return tuple(w[f"{tag}_{s}"] for s in meta.plane_suffixes[ci])
 
         def qmm(tag, xin):
             return quant_matmul(
@@ -162,10 +194,10 @@ def _expert_ffn_quant(p, xg, cfg: ModelConfig, meta: MoEQuantMeta):
 
         h = qmm("in", xc)
         g = qmm("gate", xc)
-        h = (act(g) * h).astype(xg.dtype)
-        y = qmm("out", h).astype(xg.dtype)                       # (ec,B*C,D)
-        outs.append(y.reshape(cnt, b, c, d).transpose(1, 0, 2, 3))
-    return jnp.concatenate(outs, axis=1)
+        outs.append(qmm("out", act(g) * h))                      # (ec,M,D)
+    y = jnp.concatenate(outs, axis=0)
+    mask = jnp.arange(m)[None, :] < counts[:, None]
+    return jnp.where(mask[..., None], y, 0.0)
 
 
 def apply_moe(
@@ -175,6 +207,7 @@ def apply_moe(
     quant_meta: Optional[MoEQuantMeta] = None,
     capacity_scale: float = 1.0,
     token_mask: Optional[jax.Array] = None,
+    quant_path: str = "fused",
 ) -> Tuple[jax.Array, Dict]:
     """MoE layer forward. x: (B, S, D) -> (y, aux).
 
@@ -234,10 +267,28 @@ def apply_moe(
     valid = (gscore > 0) & (w_sel > 0)
     w_sel = jnp.where(valid, w_sel, 0.0)
 
-    xg = jax.vmap(lambda xb, ib: xb[ib])(x, gidx)                # (B,E,C,D)
     if quant_meta is not None:
-        ye = _expert_ffn_quant(p, xg, cfg, quant_meta)
+        counts = valid.sum(-1).astype(jnp.int32)                 # (B,E)
+        if b == 1:
+            # decode fast path (and batch-1 prefill): gather straight to
+            # (E, C, D) — no (B, E, C, D) materialization or transpose —
+            # with exact per-expert live counts (top_k sorts scores, so
+            # valid slots are a prefix)
+            xe = x[0][gidx[0]]
+            ce = counts[0]
+        else:
+            xg = jax.vmap(lambda xb, ib: xb[ib])(x, gidx)        # (B,E,C,D)
+            xe = xg.transpose(1, 0, 2, 3).reshape(e, b * cap, d)
+            # per-batch-row valid prefixes interleave, so only fully idle
+            # experts can skip; the rest run all b*C rows
+            ce = jnp.where(counts.sum(0) > 0, b * cap, 0).astype(jnp.int32)
+        ye = _expert_ffn_quant(p, xe, cfg, quant_meta, ce,
+                               quant_path=quant_path)
+        ye = (ye.reshape(e, b, cap, d).transpose(1, 0, 2, 3)
+              if b > 1 else ye[None])
+        ye = ye.astype(x.dtype)
     else:
+        xg = jax.vmap(lambda xb, ib: xb[ib])(x, gidx)            # (B,E,C,D)
         ye = _expert_ffn_dense(p, xg, cfg)
     ye = ye * w_sel[..., None].astype(ye.dtype)
 

@@ -212,26 +212,31 @@ def _apply_ffn(p, h, cfg, kind, mc, token_imp, token_mask=None):
     if kind == "moe":
         ep = shctx.ep_mesh()
         ep_size = dict(ep.shape).get("data", 0) if ep is not None else 0
-        if (ep_size > 0 and h.shape[0] % ep_size == 0
-                and "w_in" in p["ffn"]
-                and not (mc and (mc.quant_meta or mc.layer_metas))):
+        qm = mc.quant_meta if mc else None
+        if ep_size > 0 and h.shape[0] % ep_size == 0:
             # explicit expert-parallel dispatch (serving engines enter the
-            # EP-mesh context): deterministic 2xall_to_all + psum schedule,
-            # dense experts only — packed PMQ planes instead distribute by
-            # GSPMD placement through the gather path below. Engages when
-            # the batch tiles the data axis — the pool-wide decode step;
-            # batch-1 prefill falls back to the gather path.
+            # EP-mesh context): deterministic 2xall_to_all (+ psum on the
+            # dense TP'd path) — engages when the batch tiles the data
+            # axis, i.e. the pool-wide decode step; batch-1 prefill falls
+            # back to the gather path below. Dense expert stacks take the
+            # bf16 body; packed PMQ planes take the quantized body (class
+            # stacks sharded over `data`, fused grouped kernel per shard).
             from repro.sharding.moe_parallel import apply_moe_shard_map
-            y = apply_moe_shard_map(
-                p["ffn"], h, cfg, ep,
-                odp=mc.odp if mc else None,
-                token_importance=token_imp, token_mask=token_mask)
-            return y, {}
+            dense_ok = ("w_in" in p["ffn"] and qm is None
+                        and not (mc and mc.layer_metas))
+            quant_ok = qm is not None and "experts_q" in p["ffn"]
+            if dense_ok or quant_ok:
+                y = apply_moe_shard_map(
+                    p["ffn"], h, cfg, ep,
+                    quant_meta=qm if quant_ok else None,
+                    odp=mc.odp if mc else None,
+                    token_importance=token_imp, token_mask=token_mask)
+                return y, {}
         return moe_lib.apply_moe(
             p["ffn"], h, cfg,
             odp=mc.odp if mc else None,
             token_importance=token_imp,
-            quant_meta=mc.quant_meta if mc else None,
+            quant_meta=qm,
             token_mask=token_mask)
     return core_lib.apply_mlp(p["ffn"], h, cfg), {}
 

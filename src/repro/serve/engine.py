@@ -147,14 +147,18 @@ class _ArtifactBoot:
         if ep_dispatch:
             if mesh is None:
                 raise ValueError("ep_dispatch=True requires a mesh")
+            dsize = dict(mesh.shape).get("data", 0)
             if mc is not None and (mc.quant_meta is not None
                                    or mc.layer_metas is not None):
-                raise ValueError(
-                    "ep_dispatch (shard_map expert parallelism) supports "
-                    "dense experts only; PMQ-quantized artifacts "
-                    "distribute by GSPMD placement — pass mesh without "
-                    "ep_dispatch")
-            dsize = dict(mesh.shape).get("data", 0)
+                # quantized shard_map EP shards every bit class's packed
+                # plane stack over the data axis — validate the layout up
+                # front so misfits fail at boot, not at first decode
+                from repro.sharding.moe_parallel import \
+                    validate_ep_quant_meta
+                metas = (mc.layer_metas if mc.layer_metas is not None
+                         else (mc.quant_meta,))
+                for meta in metas:
+                    validate_ep_quant_meta(meta, max(dsize, 1))
             if dsize == 0 or self.batch_size % dsize != 0:
                 raise ValueError(
                     f"ep_dispatch needs batch_size ({self.batch_size}) "

@@ -10,6 +10,21 @@ over ``model`` (TP), tokens exchanged with exactly
 — the textbook DP x EP x TP schedule, and the layout the §Roofline
 collective terms can be read off directly.
 
+Two expert bodies share the routing/dispatch/combine machinery:
+
+* **dense** — bf16 expert stacks, FFN width TP-sharded over ``model``;
+* **quantized** — the packed per-class PMQ planes of a compressed
+  artifact, each class's plane stack sharded along its expert axis over
+  ``data`` and the local FFN running the fused grouped kernel
+  (`kernels.moe_ffn`, one ``pallas_call`` per layer per shard).  Because
+  experts are class-sorted globally but sharded per class, a static
+  lookup table remaps global expert ids to **shard-major EP slots**
+  (shard ``r`` owns the ``r``-th block of every class); the table is the
+  only difference between the two dispatch paths.  Requires every class
+  count to divide the ``data`` axis — otherwise a class would straddle
+  shards with unequal plane shapes; use GSPMD placement (``mesh=``
+  without ``ep_dispatch``) for such layouts.
+
 Capacity semantics: each source shard may send up to
 ``cap = ceil(k * T_local * cf * capacity_scale / E)`` tokens to each global
 expert; overflow drops (GShard). ODP integrates as in the gather path —
@@ -28,39 +43,69 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.core import odp as odp_lib
+from repro.kernels.moe_ffn.ops import moe_ffn_quant
 from repro.sharding import context as shctx
 from repro.models.layers.core import mlp_activation
-from repro.models.layers.moe import OdpRuntime, expert_capacity
+from repro.models.layers.moe import (MoEQuantMeta, OdpRuntime,
+                                     expert_capacity)
 
 
-def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
-               odp: Optional[OdpRuntime], capacity_scale: float,
-               data_axis: str, model_axis: str,
-               token_importance: Optional[jax.Array],
-               token_mask: Optional[jax.Array] = None):
-    """Per-shard body. x_loc: (B_l, S, D); experts local (E_l, D, F_l).
+# ------------------------------------------------------- EP layout helpers
+def validate_ep_quant_meta(meta: MoEQuantMeta, dp: int) -> None:
+    """Quantized EP shards every bit class over ``dp`` expert shards."""
+    if any(c % dp for c in meta.class_counts):
+        raise ValueError(
+            f"quantized ep_dispatch needs every bit-class expert count to "
+            f"divide the mesh 'data' axis ({dp}); got class_counts="
+            f"{tuple(meta.class_counts)} for bit_classes="
+            f"{tuple(meta.bit_classes)} — re-plan with divisible class "
+            "sizes or serve with GSPMD placement (mesh= without ep)")
 
-    token_mask: optional (B_l, S) bool — masked tokens (padding, inactive
-    decode slots) get zero routing weight, so they never enter the send
-    buffers or consume expert capacity; their output rows are zero.
+
+def local_quant_meta(meta: MoEQuantMeta, dp: int) -> MoEQuantMeta:
+    """The per-shard class layout: same classes, counts / dp."""
+    return MoEQuantMeta(
+        bit_classes=meta.bit_classes,
+        class_counts=tuple(c // dp for c in meta.class_counts),
+        group_size=meta.group_size, pack_block=meta.pack_block,
+        plane_suffixes=meta.plane_suffixes)
+
+
+def ep_slot_table(meta: MoEQuantMeta, dp: int) -> np.ndarray:
+    """Global class-sorted expert index -> shard-major EP slot.
+
+    Sharding each class's plane stack over ``dp`` gives shard ``r`` rows
+    ``[r*cnt/dp, (r+1)*cnt/dp)`` of every class; the shard's local expert
+    order is therefore the class order with per-class blocks. The EP slot
+    of global expert ``e0 + o`` (class offset ``o``) is
+    ``shard * E_l + local_class_start + o % (cnt/dp)``.
     """
-    b_l, s, d = x_loc.shape
-    e = cfg.num_experts
-    e_l = w_in.shape[0]
-    dp = e // e_l
-    k = cfg.top_k
-    t_l = b_l * s
+    e = meta.num_experts
+    e_l = e // dp
+    table = np.zeros(e, np.int64)
+    local_start = 0
+    for bits, e0, cnt in meta.class_slices():
+        per = cnt // dp
+        for o in range(cnt):
+            table[e0 + o] = (o // per) * e_l + local_start + o % per
+        local_start += per
+    return table
 
-    x_flat = x_loc.reshape(t_l, d)
+
+# ------------------------------------------- shared routing/dispatch bodies
+def _route_local(x_flat, router, cfg: ModelConfig, odp: Optional[OdpRuntime],
+                 capacity_scale: float, token_importance, token_mask, t_l):
+    """Per-shard routing with ODP pruning/protection; returns (topw, topi,
+    cap) — identical math to the gather path's router block."""
     logits = x_flat.astype(jnp.float32) @ router.astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
-    topw, topi = jax.lax.top_k(probs, k)
+    topw, topi = jax.lax.top_k(probs, cfg.top_k)
     topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
     if token_mask is not None:
         topw = topw * token_mask.reshape(t_l, 1).astype(topw.dtype)
 
     eff_scale = capacity_scale
-    if odp is not None and odp.enabled and k >= 2:
+    if odp is not None and odp.enabled and cfg.top_k >= 2:
         protected = None
         if token_importance is not None and odp.protect_ratio > 0:
             # masked (pad / idle-slot) tokens must not steal protection
@@ -74,12 +119,26 @@ def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
         eff_scale = eff_scale * odp.capacity_scale
 
     cap = expert_capacity(cfg, t_l, eff_scale)
+    return topw, topi, cap
 
+
+def _fill_send(x_flat, topi, topw, e: int, cap: int, t_l: int, k: int,
+               remap=None):
+    """Scatter assignments into per-(EP-slot, quota-position) send rows.
+
+    ``remap``: optional (E,) global-expert -> EP-slot table (quantized
+    layout); identity for the dense contiguous sharding. Returns
+    ``(send (e*cap, D), slot, flat_w, tok_ids)`` — ``slot`` indexes both
+    the send buffer and the returned expert outputs.
+    """
+    d = x_flat.shape[-1]
+    flat_e = topi.reshape(-1)                                  # (T_l*k,)
+    if remap is not None:
+        flat_e = remap[flat_e]
+    flat_w = topw.reshape(-1)
     # position of each assignment within its destination expert's quota;
     # dead assignments (ODP-pruned or token_mask'd: weight 0) must not
     # occupy quota positions — only live ones enter the cumsum
-    flat_e = topi.reshape(-1)                                  # (T_l*k,)
-    flat_w = topw.reshape(-1)
     oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32) \
         * (flat_w > 0).astype(jnp.int32)[:, None]
     pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1, flat_e[:, None],
@@ -87,10 +146,43 @@ def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
     live = (pos < cap) & (flat_w > 0)
     slot = jnp.where(live, flat_e * cap + pos, e * cap)        # sentinel
 
-    send = jnp.zeros((e * cap + 1, d), x_loc.dtype)
+    send = jnp.zeros((e * cap + 1, d), x_flat.dtype)
     tok_ids = jnp.repeat(jnp.arange(t_l), k)
     send = send.at[slot].set(x_flat[tok_ids], mode="drop")
-    send = send[:-1].reshape(dp, e_l, cap, d)
+    return send[:-1], slot, flat_w, tok_ids
+
+
+def _combine_local(ret, slot, flat_w, tok_ids, e: int, cap: int, t_l: int):
+    d = ret.shape[-1]
+    y_slots = jnp.concatenate(
+        [ret.reshape(e * cap, d), jnp.zeros((1, d), ret.dtype)], axis=0)
+    y_assign = y_slots[slot] * flat_w[:, None].astype(ret.dtype)
+    return jax.ops.segment_sum(y_assign, tok_ids, num_segments=t_l)
+
+
+def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
+               odp: Optional[OdpRuntime], capacity_scale: float,
+               data_axis: str, model_axis: str,
+               token_importance: Optional[jax.Array],
+               token_mask: Optional[jax.Array] = None):
+    """Per-shard dense body. x_loc: (B_l, S, D); experts (E_l, D, F_l).
+
+    token_mask: optional (B_l, S) bool — masked tokens (padding, inactive
+    decode slots) get zero routing weight, so they never enter the send
+    buffers or consume expert capacity; their output rows are zero.
+    """
+    b_l, s, d = x_loc.shape
+    e = cfg.num_experts
+    e_l = w_in.shape[0]
+    dp = e // e_l
+    t_l = b_l * s
+
+    x_flat = x_loc.reshape(t_l, d)
+    topw, topi, cap = _route_local(x_flat, router, cfg, odp, capacity_scale,
+                                   token_importance, token_mask, t_l)
+    send, slot, flat_w, tok_ids = _fill_send(
+        x_flat, topi, topw, e, cap, t_l, cfg.top_k)
+    send = send.reshape(dp, e_l, cap, d)
 
     # dispatch: destination-major -> expert-major
     recv = jax.lax.all_to_all(send, data_axis, split_axis=0, concat_axis=0,
@@ -109,29 +201,107 @@ def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
     back = ye.reshape(e_l, dp, cap, d).transpose(1, 0, 2, 3)
     ret = jax.lax.all_to_all(back, data_axis, split_axis=0, concat_axis=0,
                              tiled=False)
-    y_slots = jnp.concatenate(
-        [ret.reshape(e * cap, d),
-         jnp.zeros((1, d), ret.dtype)], axis=0)
+    y = _combine_local(ret, slot, flat_w, tok_ids, e, cap, t_l)
+    return y.reshape(b_l, s, d).astype(x_loc.dtype)
 
-    y_assign = y_slots[slot] * flat_w[:, None].astype(ret.dtype)
-    y = jax.ops.segment_sum(y_assign, tok_ids, num_segments=t_l)
+
+def _local_moe_quant(x_loc, router, experts_q, cfg: ModelConfig,
+                     local_meta: MoEQuantMeta, remap,
+                     odp: Optional[OdpRuntime], capacity_scale: float,
+                     data_axis: str,
+                     token_importance: Optional[jax.Array],
+                     token_mask: Optional[jax.Array] = None):
+    """Per-shard quantized body: packed per-class planes, fused FFN.
+
+    ``experts_q`` holds this shard's slice of every class's plane stack
+    (``local_meta`` class layout); ``remap`` is the static shard-major EP
+    slot table. The FFN width is not TP-sharded — planes replicate over
+    ``model`` and no psum is needed (every model shard computes the full,
+    identical output).
+    """
+    b_l, s, d = x_loc.shape
+    e = cfg.num_experts
+    e_l = local_meta.num_experts
+    dp = e // e_l
+    t_l = b_l * s
+
+    x_flat = x_loc.reshape(t_l, d)
+    topw, topi, cap = _route_local(x_flat, router, cfg, odp, capacity_scale,
+                                   token_importance, token_mask, t_l)
+    send, slot, flat_w, tok_ids = _fill_send(
+        x_flat, topi, topw, e, cap, t_l, cfg.top_k, remap=remap)
+    send = send.reshape(dp, e_l, cap, d)
+
+    recv = jax.lax.all_to_all(send, data_axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    xe = recv.transpose(1, 0, 2, 3).reshape(e_l, dp * cap, d)
+
+    # EP slots are not count-prefix-ordered (each source shard fills its
+    # own quota prefix), so no dead-row skipping here: all dp*cap rows run.
+    # Empty slots are zero vectors and the gated FFN maps 0 -> 0.
+    counts = jnp.full((e_l,), dp * cap, jnp.int32)
+    ye = moe_ffn_quant(xe, experts_q, counts, meta=local_meta,
+                       act=cfg.mlp_act,
+                       out_dtype=jnp.float32).astype(x_loc.dtype)
+
+    back = ye.reshape(e_l, dp, cap, d).transpose(1, 0, 2, 3)
+    ret = jax.lax.all_to_all(back, data_axis, split_axis=0, concat_axis=0,
+                             tiled=False)
+    y = _combine_local(ret, slot, flat_w, tok_ids, e, cap, t_l)
     return y.reshape(b_l, s, d).astype(x_loc.dtype)
 
 
 def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
+                        quant_meta: Optional[MoEQuantMeta] = None,
                         odp: Optional[OdpRuntime] = None,
                         capacity_scale: float = 1.0,
                         token_importance: Optional[jax.Array] = None,
                         token_mask: Optional[jax.Array] = None,
                         data_axis: str = "data",
                         model_axis: str = "model") -> jax.Array:
-    """shard_map-wrapped MoE layer (dense experts).
+    """shard_map-wrapped MoE layer (dense or PMQ-quantized experts).
 
-    x sharded P(data, None, None); experts P(data, None, model).
+    x sharded P(data, None, None). Dense experts P(data, None, model);
+    with ``quant_meta``, ``p['experts_q']`` packed planes are sharded
+    along their expert axis over ``data`` (every class count must divide
+    the axis) and the local FFN runs the fused grouped quantized kernel.
     token_importance / token_mask are optional (B, S) arrays sharded with
     the batch (ODP protection scores / live-token mask — the serving
     engines thread the latter so idle decode slots never send tokens).
     """
+    extras, extra_specs, have = [], [], []
+    for extra in (token_importance, token_mask):
+        if extra is not None:
+            extra_specs.append(P(data_axis, None))
+            extras.append(extra)
+        have.append(extra is not None)
+
+    def unpack_extras(rest):
+        it = iter(rest)
+        ti = next(it) if have[0] else None
+        tm = next(it) if have[1] else None
+        return ti, tm
+
+    if quant_meta is not None:
+        dp = dict(mesh.shape)[data_axis]
+        validate_ep_quant_meta(quant_meta, dp)
+        lmeta = local_quant_meta(quant_meta, dp)
+        remap = jnp.asarray(ep_slot_table(quant_meta, dp))
+        fn = functools.partial(
+            _local_moe_quant, cfg=cfg, local_meta=lmeta, remap=remap,
+            odp=odp, capacity_scale=capacity_scale, data_axis=data_axis)
+
+        in_specs = [P(data_axis, None, None), P(None, None),
+                    P(data_axis)] + extra_specs
+        args = [x, p["router"], p["experts_q"]] + extras
+
+        def body(xl, r, eq, *rest):
+            ti, tm = unpack_extras(rest)
+            return fn(xl, r, eq, token_importance=ti, token_mask=tm)
+
+        return shctx.shard_map(
+            body, mesh, tuple(in_specs), P(data_axis, None, None))(*args)
+
     fn = functools.partial(
         _local_moe, cfg=cfg, odp=odp, capacity_scale=capacity_scale,
         data_axis=data_axis, model_axis=model_axis)
@@ -139,19 +309,11 @@ def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
     in_specs = [P(data_axis, None, None), P(None, None),
                 P(data_axis, None, model_axis),
                 P(data_axis, None, model_axis),
-                P(data_axis, model_axis, None)]
-    args = [x, p["router"], p["w_in"], p["w_gate"], p["w_out"]]
-    have = []
-    for extra in (token_importance, token_mask):
-        if extra is not None:
-            in_specs.append(P(data_axis, None))
-            args.append(extra)
-        have.append(extra is not None)
+                P(data_axis, model_axis, None)] + extra_specs
+    args = [x, p["router"], p["w_in"], p["w_gate"], p["w_out"]] + extras
 
     def body(xl, r, wi, wg, wo, *rest):
-        it = iter(rest)
-        ti = next(it) if have[0] else None
-        tm = next(it) if have[1] else None
+        ti, tm = unpack_extras(rest)
         return fn(xl, r, wi, wg, wo, token_importance=ti, token_mask=tm)
 
     return shctx.shard_map(

@@ -1,0 +1,303 @@
+"""Fused grouped quantized-MoE FFN kernel: oracle equivalence + wiring.
+
+Slow slice: interpret-mode Pallas kernel vs the jnp oracle across bit
+mixes, ragged per-expert counts (incl. zero-token experts) and multi-tile
+grids. Fast slice: the staged-vs-fused equivalence through ``apply_moe``
+(CPU ref path), the decode-regroup path, the launch-count probe (one
+``pallas_call`` per MoE layer vs 3 x num_classes), the quantized
+shard_map EP body vs the gather path on a single-device mesh, and the
+``quant_matmul`` block auto-shrink/pad satellite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import pack_random_experts as _pack_experts
+from repro.config import CompressionConfig
+from repro.configs import get_config
+from repro.core import pmq as pmq_lib
+from repro.kernels import common as kcommon
+from repro.kernels.common import pack_kernel_layout
+from repro.kernels.moe_ffn.ops import moe_ffn_quant
+from repro.kernels.moe_ffn.ref import moe_ffn_ref
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.models.layers import moe as moe_lib
+from repro.models.layers.moe import MoEQuantMeta
+from repro.quant import rtn_quantize
+
+
+def _ref(x, experts_q, counts, meta, act="silu"):
+    classes = [experts_q[f"cls{ci}"]
+               for ci in range(len(meta.bit_classes))]
+    return moe_ffn_ref(x, classes, counts, meta=meta, act=act)
+
+
+def _quant_moe_layer(cfg, bits_per_expert, seed=0):
+    """A quantized MoE layer (params + meta) at forced per-expert widths."""
+    p = moe_lib.init_moe(jax.random.PRNGKey(seed), cfg)
+    ccfg = CompressionConfig(enabled=True, target_bits=2.5, group_size=32)
+    rng = np.random.RandomState(seed)
+    calib_x = jnp.asarray(
+        rng.randn(64, cfg.d_model).astype(np.float32))
+    idx = np.stack([rng.permutation(cfg.num_experts)[:cfg.top_k]
+                    for _ in range(64)])
+    bits = np.asarray(bits_per_expert, np.int64)
+    order = np.argsort(bits, kind="stable")
+    classes, counts = np.unique(bits[order], return_counts=True)
+    pack_block = 128 if (cfg.d_model % 128 == 0
+                         and cfg.moe_d_ff % 128 == 0) else ccfg.group_size
+    meta = MoEQuantMeta(bit_classes=tuple(int(b) for b in classes),
+                        class_counts=tuple(int(c) for c in counts),
+                        group_size=ccfg.group_size, pack_block=pack_block)
+    qp = pmq_lib.quantize_moe_layer(cfg, ccfg, p, calib_x, idx,
+                                    bits_per_expert=bits, order=order,
+                                    meta=meta)
+    return qp, meta
+
+
+@pytest.mark.slow
+class TestFusedKernelVsOracle:
+    @pytest.mark.parametrize("bits", [1, 2, 3, 4])
+    def test_single_class(self, bits):
+        experts_q, meta = _pack_experts((bits,), (3,))
+        x = jax.random.normal(jax.random.PRNGKey(bits), (3, 16, 128))
+        counts = jnp.asarray([16, 5, 0], jnp.int32)   # full/ragged/empty
+        ref = _ref(x, experts_q, counts, meta)
+        out = moe_ffn_quant(x, experts_q, counts, meta=meta, act="silu",
+                            impl="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("mix,counts", [
+        ((1, 2, 3), (2, 1, 2)), ((2, 4), (2, 2)), ((1, 4), (1, 3)),
+    ])
+    def test_grouped_classes_ragged(self, mix, counts):
+        e = sum(counts)
+        experts_q, meta = _pack_experts(mix, counts)
+        x = jax.random.normal(jax.random.PRNGKey(7), (e, 24, 128))
+        cnts = jnp.asarray([(3 * i) % 25 for i in range(e)], jnp.int32)
+        ref = _ref(x, experts_q, cnts, meta)
+        out = moe_ffn_quant(x, experts_q, cnts, meta=meta, act="silu",
+                            impl="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_zero_token_expert_is_exact_zero(self):
+        experts_q, meta = _pack_experts((2, 3), (1, 1))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 128))
+        counts = jnp.asarray([0, 8], jnp.int32)
+        out = moe_ffn_quant(x, experts_q, counts, meta=meta, act="silu",
+                            impl="interpret")
+        assert float(jnp.abs(out[0]).max()) == 0.0
+        assert float(jnp.abs(out[1]).max()) > 0.0
+
+    def test_multi_tile_grid(self):
+        # force NM > 1, NF > 1: M=32 @ bm=8, F=256 @ bf=128
+        experts_q, meta = _pack_experts((2,), (2,), f=256, pb=128)
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 128))
+        counts = jnp.asarray([9, 32], jnp.int32)
+        ref = _ref(x, experts_q, counts, meta)
+        out = moe_ffn_quant(x, experts_q, counts, meta=meta, act="silu",
+                            impl="interpret", block_m=8, block_f=128)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_activation_variants(self):
+        experts_q, meta = _pack_experts((3,), (2,))
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 128))
+        counts = jnp.asarray([8, 8], jnp.int32)
+        for act in ("silu", "gelu", "relu"):
+            ref = _ref(x, experts_q, counts, meta, act=act)
+            out = moe_ffn_quant(x, experts_q, counts, meta=meta, act=act,
+                                impl="interpret")
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestRefVsStagedComposition:
+    """The fused oracle is token-identical to the staged per-expert
+    quant_matmul_ref composition on live rows (the pre-fusion math)."""
+
+    @pytest.mark.parametrize("mix,counts", [((1, 2, 3, 4), (1, 1, 1, 1)),
+                                            ((2,), (3,))])
+    def test_matches(self, mix, counts):
+        e = sum(counts)
+        gs, pb, d, f = 32, 128, 128, 256
+        experts_q, meta = _pack_experts(mix, counts, d=d, f=f, gs=gs, pb=pb)
+        m = 8
+        x = jax.random.normal(jax.random.PRNGKey(9), (e, m, d))
+        cnts = jnp.asarray([m] * e, jnp.int32)
+        fused = _ref(x, experts_q, cnts, meta)
+        for ci, (bits, e0, cnt) in enumerate(meta.class_slices()):
+            w = experts_q[f"cls{ci}"]
+            for j in range(cnt):
+                def one(tag, xin, j=j, w=w, bits=bits, ci=ci):
+                    planes = tuple(w[f"{tag}_{s}"][j]
+                                   for s in meta.plane_suffixes[ci])
+                    z = w.get(f"{tag}_z")
+                    return quant_matmul_ref(
+                        xin, planes, w[f"{tag}_s"][j],
+                        z[j] if z is not None else None, bits=bits,
+                        group_size=gs, pack_block=pb)
+                h = one("in", x[e0 + j])
+                g = one("gate", x[e0 + j])
+                y = one("out", jax.nn.silu(g) * h)
+                np.testing.assert_allclose(np.asarray(fused[e0 + j]),
+                                           np.asarray(y),
+                                           rtol=1e-5, atol=1e-5)
+
+
+class TestApplyMoeFusedPath:
+    def _cfg(self):
+        return get_config("mixtral-8x7b", smoke=True).replace(
+            dtype="float32", d_model=128, moe_d_ff=256, num_experts=8,
+            capacity_factor=8.0)
+
+    def test_prefill_fused_equals_staged(self):
+        cfg = self._cfg()
+        qp, meta = _quant_moe_layer(cfg, [1, 1, 2, 2, 2, 3, 3, 3])
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 128))
+        yf, _ = moe_lib.apply_moe(qp, x, cfg, quant_meta=meta,
+                                  quant_path="fused")
+        ys, _ = moe_lib.apply_moe(qp, x, cfg, quant_meta=meta,
+                                  quant_path="staged")
+        np.testing.assert_allclose(np.asarray(yf), np.asarray(ys),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_decode_regroup_fused_equals_staged(self):
+        cfg = self._cfg()
+        qp, meta = _quant_moe_layer(cfg, [1, 2, 2, 2, 3, 3, 4, 4])
+        xd = jax.random.normal(jax.random.PRNGKey(3), (6, 1, 128))
+        yf, auxf = moe_lib.apply_moe(qp, xd, cfg, quant_meta=meta,
+                                     quant_path="fused")
+        ys, auxs = moe_lib.apply_moe(qp, xd, cfg, quant_meta=meta,
+                                     quant_path="staged")
+        assert yf.shape == (6, 1, 128)
+        np.testing.assert_allclose(np.asarray(yf), np.asarray(ys),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(auxf["topk_idx"]),
+                                      np.asarray(auxs["topk_idx"]))
+
+    def test_token_mask_zeroes_inactive_slots(self):
+        cfg = self._cfg()
+        qp, meta = _quant_moe_layer(cfg, [2] * 8)
+        xd = jax.random.normal(jax.random.PRNGKey(5), (4, 1, 128))
+        mask = jnp.asarray([[True], [False], [True], [False]])
+        y, _ = moe_lib.apply_moe(qp, xd, cfg, quant_meta=meta,
+                                 token_mask=mask)
+        assert float(jnp.abs(y[1]).max()) == 0.0
+        assert float(jnp.abs(y[0]).max()) > 0.0
+
+    def test_launch_count_probe(self):
+        """Acceptance: ONE pallas_call per MoE layer on the fused quant
+        path, replacing 3 x num_classes on the staged baseline."""
+        cfg = self._cfg()
+        qp, meta = _quant_moe_layer(cfg, [1, 1, 2, 2, 2, 3, 3, 3])
+        n_classes = len(meta.bit_classes)
+        assert n_classes == 3
+        xd = jax.random.normal(jax.random.PRNGKey(4), (4, 1, 128))
+        with kcommon.override_impl("pallas"):
+            fused = kcommon.count_pallas_calls(
+                lambda xx: moe_lib.apply_moe(
+                    qp, xx, cfg, quant_meta=meta, quant_path="fused")[0],
+                xd)
+            staged = kcommon.count_pallas_calls(
+                lambda xx: moe_lib.apply_moe(
+                    qp, xx, cfg, quant_meta=meta, quant_path="staged")[0],
+                xd)
+        assert fused == 1, fused
+        assert staged == 3 * n_classes, staged
+
+    def test_plane_suffixes_precomputed(self):
+        meta = MoEQuantMeta(bit_classes=(1, 3), class_counts=(2, 2))
+        assert meta.plane_suffixes == (("p0",), ("p0", "p1"))
+        # explicit construction (pipeline.apply) round-trips unchanged
+        meta2 = MoEQuantMeta(bit_classes=(1, 3), class_counts=(2, 2),
+                             plane_suffixes=(("p0",), ("p0", "p1")))
+        assert meta == meta2
+
+
+class TestQuantizedShardMapEP:
+    """Quantized ep_dispatch vs the gather path (single-device mesh; the
+    simulated 2-device engine equivalence lives in test_moe_parallel)."""
+
+    def test_ep_matches_gather(self):
+        from repro.sharding.moe_parallel import apply_moe_shard_map
+        from repro.sharding import context as shctx
+        cfg = get_config("mixtral-8x7b", smoke=True).replace(
+            dtype="float32", d_model=128, moe_d_ff=256, num_experts=8,
+            capacity_factor=8.0)
+        qp, meta = _quant_moe_layer(cfg, [1, 1, 2, 2, 3, 3, 3, 3])
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 128))
+        y_ref, _ = moe_lib.apply_moe(qp, x, cfg, quant_meta=meta)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with shctx.use_mesh_axes(("data", "model"), (1, 1)), \
+                shctx.activate_mesh(mesh):
+            y_ep = jax.jit(lambda p_, x_: apply_moe_shard_map(
+                p_, x_, cfg, mesh, quant_meta=meta))(qp, x)
+        rel = float(jnp.linalg.norm(y_ep - y_ref)
+                    / jnp.linalg.norm(y_ref))
+        assert rel < 2e-3, rel
+
+    def test_ep_slot_table_shard_major(self):
+        from repro.sharding.moe_parallel import (ep_slot_table,
+                                                 local_quant_meta,
+                                                 validate_ep_quant_meta)
+        meta = MoEQuantMeta(bit_classes=(1, 2, 3), class_counts=(2, 4, 2))
+        table = ep_slot_table(meta, 2)
+        # shard 0: cls0[0], cls1[0:2], cls2[0]; shard 1: the second halves
+        np.testing.assert_array_equal(table, [0, 4, 1, 2, 5, 6, 3, 7])
+        lm = local_quant_meta(meta, 2)
+        assert lm.class_counts == (1, 2, 1)
+        with pytest.raises(ValueError, match="divide"):
+            validate_ep_quant_meta(
+                MoEQuantMeta(bit_classes=(1, 2), class_counts=(3, 5)), 2)
+
+
+class TestQuantMatmulBlockFit:
+    """Satellite: non-multiple N auto-shrinks/pads; bad K errors clearly."""
+
+    def _mk(self, k, n, bits=2, gs=32):
+        w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.1
+        res = rtn_quantize(w, bits=bits, group_size=gs)
+        planes = pack_kernel_layout(res.codes, bits, 128)
+        return planes, res
+
+    def test_block_n_shrinks_to_divisor(self):
+        k, n = 128, 96          # 96 % 128 != 0 -> shrink block_n to 96
+        planes, res = self._mk(k, n)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, k))
+        ref = quant_matmul_ref(x, planes, res.scales, res.zeros, bits=2,
+                               group_size=32, pack_block=128)
+        out = quant_matmul(x, planes, res.scales, res.zeros, bits=2,
+                           group_size=32, impl="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_block_n_pads_when_unaligned(self):
+        k, n = 128, 100         # no aligned divisor -> pad N to 104
+        planes, res = self._mk(k, n)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, k))
+        ref = quant_matmul_ref(x, planes, res.scales, res.zeros, bits=2,
+                               group_size=32, pack_block=128)
+        out = quant_matmul(x, planes, res.scales, res.zeros, bits=2,
+                           group_size=32, impl="interpret")
+        assert out.shape == (4, n)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bad_k_raises_named_error(self):
+        planes, res = self._mk(128, 128)
+        x = jax.random.normal(jax.random.PRNGKey(3), (4, 192))
+        with pytest.raises(ValueError, match="K=192.*pack_block=128"):
+            quant_matmul(x, planes, res.scales, res.zeros, bits=2,
+                         group_size=32, impl="interpret")
+
+    def test_bad_group_size_raises(self):
+        planes, res = self._mk(128, 128, gs=32)
+        x = jax.random.normal(jax.random.PRNGKey(4), (4, 128))
+        with pytest.raises(ValueError, match="group_size"):
+            quant_matmul(x, planes, res.scales, res.zeros, bits=2,
+                         group_size=48, impl="interpret")
