@@ -43,19 +43,25 @@ def build_artifact(directory, *, num_experts: int = 16, d_model: int = 64,
                    moe_d_ff: int = 1024, num_layers: int = 2,
                    vocab_size: int = 128, group_size: int = 32,
                    target_bits: float = 2.5, layout: str = "uniform",
-                   seed: int = 0):
+                   seed: int = 0, bits_override=None,
+                   capacity_factor: float = 4.0):
     """Compress a reduced expert-heavy Mixtral and save the artifact.
 
     Expert-heavy on purpose (wide ``moe_d_ff``, small attention): in real
     MoE LLMs experts are >96% of the weights, and the per-host savings of
     sharded loading scale with exactly that ratio.
 
+    ``bits_override``: optional per-expert bit widths forced into every
+    layer's plan — the distributed benches/tests use it to pin class
+    counts that divide the expert-parallel axis.
+
     Returns ``(model, artifact, step_dir)``.
     """
     cfg = get_config("mixtral-8x7b", smoke=True).replace(
         dtype="float32", num_layers=num_layers, d_model=d_model,
         d_ff=d_model, moe_d_ff=moe_d_ff, num_experts=num_experts,
-        vocab_size=vocab_size, capacity_factor=4.0, scan_layers=False)
+        vocab_size=vocab_size, capacity_factor=capacity_factor,
+        scan_layers=False)
     model = DecoderModel(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     calib = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, 48), 0,
@@ -66,6 +72,12 @@ def build_artifact(directory, *, num_experts: int = 16, d_model: int = 64,
     ccfg = CompressionConfig(enabled=True, target_bits=target_bits,
                              group_size=group_size, odp_enabled=True)
     cplan = pipeline.plan(record, ccfg, layout=layout)
+    if bits_override is not None:
+        bits = np.asarray(bits_override)
+        assert bits.shape == (num_experts,), bits.shape
+        cplan.layers = [pipeline._make_layer_plan(lp.layer, bits,
+                                                  lp.objective)
+                        for lp in cplan.layers]
     artifact = pipeline.apply(model, params, cplan, record)
     step_dir = artifact.save(directory)
     return model, artifact, step_dir
@@ -82,19 +94,63 @@ def _tree_equal(a, b) -> bool:
                for k in pa)
 
 
+def distributed_placement_report(directory, built, n_procs: int = 2):
+    """Per-process bytes of the **distributed boot path**: what each
+    ``jax.distributed`` process streams — and holds resident after
+    ``pipeline.distributed_params`` placement — when booting from its
+    placement slice (one block per bit class,
+    ``moe_parallel.ep_owned_ranges``) plus the replicated dense groups.
+
+    Returns per-process rows, or ``{"skipped": reason}`` when the class
+    layout cannot split over ``n_procs`` (counts must divide the axis).
+    """
+    from repro.sharding import moe_parallel as mp
+    meta = built.metas[0]
+    try:
+        # only the layout question is skippable — a class layout that
+        # cannot split over n_procs is a property of the artifact, while
+        # a failing load below is a real error that must propagate
+        shard_ranges = [mp.ep_owned_ranges(meta, n_procs, r)
+                        for r in range(n_procs)]
+    except ValueError as e:
+        return {"skipped": str(e)}
+    rows = []
+    for ranges in shard_ranges:
+        def keep(path, group, ranges=ranges):
+            e = pipeline.expert_of_group(group)
+            return e is None or any(a <= e < b for a, b in ranges)
+
+        t0 = time.time()
+        _, _, st = ckpt_lib.load_pytree_subset(directory, keep)
+        rows.append({
+            "ranges": list(ranges),
+            "placed_bytes": st.bytes_read,
+            "frac": st.read_fraction,
+            "groups": f"{st.groups_read}/{st.total_groups}",
+            "seconds": time.time() - t0,
+        })
+    return {"procs": rows, "max_proc_frac": max(r["frac"] for r in rows)}
+
+
 def run(n_hosts: int = 2, verbose: bool = True,
         directory: Optional[str] = None, **build_kw) -> Dict:
     """Build + save an artifact, then measure full vs per-host loading.
 
     Returns a dict with ``total_bytes``, ``full_s``, per-``hosts`` entries
     (``experts``, ``bytes``, ``frac``, ``groups``, ``seconds``),
-    ``max_host_frac`` and ``union_exact``.
+    ``max_host_frac``, ``union_exact``, and the ``distributed`` per-process
+    placed-bytes report for the multi-process boot path.
     """
     tmp = None
     if directory is None:
         tmp = tempfile.TemporaryDirectory()
         directory = tmp.name
     directory = Path(directory) / "artifact"
+    if "bits_override" not in build_kw and \
+            build_kw.get("num_experts", 16) == 16:
+        # pin class counts (6, 4, 6) so the distributed report can split
+        # every class over the default 2-process axis
+        build_kw["bits_override"] = [1] * 6 + [2] * 4 + [3] * 6
     try:
         t0 = time.time()
         _, built, _ = build_artifact(directory, **build_kw)
@@ -125,6 +181,8 @@ def run(n_hosts: int = 2, verbose: bool = True,
 
         merged = ckpt_lib.merge_subset_trees(parts)
         union_exact = _tree_equal(merged, full.params)
+        distributed = distributed_placement_report(directory, built,
+                                                   n_procs=n_hosts)
 
         out = {
             "total_bytes": total_bytes,
@@ -134,6 +192,7 @@ def run(n_hosts: int = 2, verbose: bool = True,
             "hosts": hosts,
             "max_host_frac": max(h["frac"] for h in hosts),
             "union_exact": union_exact,
+            "distributed": distributed,
         }
         if verbose:
             print(f"artifact: {total_bytes / 1e6:.2f} MB, "
@@ -152,6 +211,23 @@ def run(n_hosts: int = 2, verbose: bool = True,
             print(f"union of host subsets == full tree: {union_exact}")
             print(f"max per-host fraction: {out['max_host_frac']:.0%} "
                   "(acceptance: < 60% at 2 hosts)")
+            if "skipped" in distributed:
+                print("distributed boot report skipped: "
+                      f"{distributed['skipped']}")
+            else:
+                tab = Table("distributed boot (per jax.distributed "
+                            "process: placement slice + dense groups)",
+                            ["proc", "expert ranges", "placed_bytes",
+                             "frac", "groups", "load_s"])
+                for r, row in enumerate(distributed["procs"]):
+                    tab.add(f"{r}/{n_hosts}",
+                            str([f"[{a}:{b})" for a, b in row["ranges"]]),
+                            f"{row['placed_bytes'] / 1e6:.2f} MB",
+                            f"{row['frac']:.0%}", row["groups"],
+                            f"{row['seconds']:.2f}")
+                print(tab.render())
+                print("max per-process placed fraction: "
+                      f"{distributed['max_proc_frac']:.0%}")
         return out
     finally:
         if tmp is not None:

@@ -51,6 +51,8 @@ from repro.core.significance import ExpertStats
 from repro.checkpoint import checkpointer as ckpt_lib
 from repro.models.layers.moe import MoEQuantMeta, OdpRuntime
 from repro.models.transformer import DecoderModel, MCRuntime
+from repro.sharding import partitioning as part_lib
+from repro.sharding.partitioning import meshes_equal  # re-export
 
 #: Artifact metadata version. v1 artifacts (size-chunked shards, no
 #: expert-major groups) are still loadable; v2 adds the expert-major shard
@@ -188,6 +190,161 @@ def _resolve_ep_axis(mesh, axis: str) -> str:
         return "data"
     raise ValueError(f"mesh {tuple(mesh.shape)} has no axis {axis!r} "
                      "to carry expert parallelism")
+
+
+# --------------------------------------------- multi-process distribution
+def expert_shard_expectation(mesh, segments, axis: str = "expert",
+                             process_index: Optional[int] = None
+                             ) -> Tuple[Tuple[int, int], ...]:
+    """Which global experts one process must hold to serve on ``mesh``.
+
+    Under the standard expert-parallel placement every class segment of
+    ``segments`` (``(start, count)`` per bit class; a dense stack is the
+    single segment ``(0, E)``) is split evenly along the mesh axis
+    carrying expert parallelism. A process's expectation is the union of
+    the blocks owned by its *addressable* devices — exactly the slice
+    its per-host artifact stream must contain, no more (overlap) and no
+    less (gap). ``process_index`` defaults to ``jax.process_index()``.
+
+    Returns sorted disjoint merged ``((k0, k1), ...)`` global ranges.
+    Raises when a class count does not divide the EP axis (the placement
+    would demote to replicated, which a partial stream cannot satisfy)
+    or when the process owns no devices of the mesh.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import moe_parallel as mp
+    eax = _resolve_ep_axis(mesh, axis)
+    dp = dict(mesh.shape)[eax]
+    pidx = jax.process_index() if process_index is None else process_index
+    probe = NamedSharding(mesh, P(eax))
+    imap = probe.devices_indices_map((dp,))
+    shards = sorted({idx[0].indices(dp)[0] for d, idx in imap.items()
+                     if d.process_index == pidx})
+    if not shards:
+        raise ValueError(
+            f"process {pidx} owns no devices of the mesh "
+            f"(processes {part_lib.mesh_process_indices(mesh)})")
+    ranges = []
+    for r in shards:
+        ranges.extend(mp.ep_owned_ranges(tuple(segments), dp, r))
+    return mp.merge_ranges(ranges)
+
+
+def distributed_params(params: Dict, mesh, stats: ckpt_lib.LoadStats,
+                       axis: str = "expert") -> Dict:
+    """Map one process's (possibly partial) param tree onto its
+    addressable shard of the globally-placed tree.
+
+    The dual of :func:`place_params` for multi-process meshes: split
+    expert planes (recorded in ``stats.split_axes`` by the subset load)
+    become global arrays sharded along their expert axis over the EP
+    mesh axis, each addressable device receiving its rows out of the
+    process-local block recorded in ``stats.partial`` — the union of all
+    processes' slices *is* the placed global tree and no process ever
+    materializes foreign experts. Every other leaf is replicated onto
+    the process's addressable devices. Built on
+    ``jax.make_array_from_single_device_arrays``, so the same code path
+    serves real ``jax.distributed`` processes and single-process meshes
+    (where it coincides with :func:`place_params`).
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    eax = _resolve_ep_axis(mesh, axis)
+    dp = dict(mesh.shape)[eax]
+    pidx = jax.process_index()
+    local = [d for d in mesh.devices.flat if d.process_index == pidx]
+    if not local:
+        raise ValueError(f"process {pidx} owns no devices of the mesh")
+
+    def build(shape, sharding, bufs):
+        return jax.make_array_from_single_device_arrays(
+            shape, sharding, bufs)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        arr = np.asarray(leaf)
+        ax = stats.split_axes.get(path)
+        if ax is None:                         # dense leaf -> replicated
+            out.append(build(arr.shape, NamedSharding(mesh, P()),
+                             [jax.device_put(arr, d) for d in local]))
+            continue
+        start, stop, count = stats.partial.get(
+            path, (0, arr.shape[ax], arr.shape[ax]))
+        gshape = arr.shape[:ax] + (count,) + arr.shape[ax + 1:]
+        if count % dp:
+            # the placement demotes this plane to replicated
+            # (divisibility rule) — only a full load can satisfy that
+            if (start, stop) != (0, count):
+                raise ValueError(
+                    f"cannot place partial plane {path}: its expert axis "
+                    f"({count}) does not divide the EP mesh axis ({dp}), "
+                    "so placement demotes it to replicated — which needs "
+                    f"every expert, not rows [{start}:{stop})")
+            out.append(build(gshape, NamedSharding(mesh, P()),
+                             [jax.device_put(arr, d) for d in local]))
+            continue
+        spec = [None] * arr.ndim
+        spec[ax] = eax
+        sharding = NamedSharding(mesh, P(*spec))
+        imap = sharding.devices_indices_map(gshape)
+        bufs = []
+        for d in local:
+            g0, g1, _ = imap[d][ax].indices(count)
+            if not (start <= g0 and g1 <= stop):
+                raise ValueError(
+                    f"plane {path}: device {d} expects global expert "
+                    f"rows [{g0}:{g1}) but this process holds "
+                    f"[{start}:{stop}) — the artifact slice does not "
+                    "match the mesh's placement expectation")
+            sl = (slice(None),) * ax + (slice(g0 - start, g1 - start),)
+            bufs.append(jax.device_put(arr[sl], d))
+        out.append(build(gshape, sharding, bufs))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _owned_expert_ranges(num_experts: int, segments, ebytes, *,
+                         mesh=None, axis: str = "expert",
+                         expert_range=None, num_hosts=None, host=None,
+                         process_index=None):
+    """Resolve which global experts this caller owns, in priority order:
+    explicit ``expert_range`` > byte-balanced ``(num_hosts, host)`` >
+    the multi-process mesh placement expectation > all experts. Explicit
+    and byte-balanced selections against a multi-process mesh must equal
+    the expectation exactly — overlap/gap/misalignment fails loudly.
+    Returns ``(ranges, multiprocess)``.
+    """
+    multiproc = part_lib.mesh_spans_processes(mesh)
+    ranges = None
+    if expert_range is not None:
+        k0, k1 = expert_range
+        if not 0 <= k0 < k1 <= num_experts:
+            raise ValueError(f"expert_range {tuple(expert_range)} invalid "
+                             f"for {num_experts} experts")
+        ranges = ((int(k0), int(k1)),)
+    elif num_hosts is not None:
+        h = jax.process_index() if host is None else host
+        if not 0 <= h < num_hosts:
+            raise ValueError(f"host {h} out of range for {num_hosts} hosts")
+        ranges = (byte_balanced_ranges(ebytes, num_hosts)[h],)
+    if multiproc:
+        from repro.sharding.moe_parallel import merge_ranges
+        expected = expert_shard_expectation(mesh, segments, axis=axis,
+                                            process_index=process_index)
+        if ranges is not None and merge_ranges(ranges) != expected:
+            pidx = (jax.process_index() if process_index is None
+                    else process_index)
+            raise ValueError(
+                f"requested expert ranges {tuple(sorted(ranges))} do not "
+                f"match the mesh placement expectation {expected} for "
+                f"process {pidx} — omit expert_range/num_hosts to stream "
+                "exactly the expected slice")
+        ranges = expected
+    elif ranges is None:
+        ranges = ((0, num_experts),)
+    return ranges, multiproc
 
 
 @dataclass
@@ -561,7 +718,14 @@ class CompressedArtifact:
     runtime: MCRuntime
     plan: CompressionPlan
     report: MCReport
+    #: hull of the owned experts (min start, max stop); kept for messages
+    #: and back-compat — ``expert_ranges`` is authoritative
     expert_range: Optional[Tuple[int, int]] = None
+    #: sorted disjoint global ranges of the experts this artifact holds.
+    #: A contiguous per-host stream is one range; a multi-process mesh
+    #: slice is one block per bit class (``expert_shard_expectation``).
+    #: None = everything (a full load).
+    expert_ranges: Optional[Tuple[Tuple[int, int], ...]] = None
     load_stats: Optional[ckpt_lib.LoadStats] = None
     #: mesh the params were already place_params'd on (load_sharded sets
     #: it so engine boot skips a redundant device_put)
@@ -582,8 +746,31 @@ class CompressedArtifact:
     @property
     def is_partial(self) -> bool:
         """True when this artifact holds only one host's expert slice."""
+        if self.expert_ranges is not None:
+            owned = sum(b - a for a, b in self.expert_ranges)
+            return owned < self.num_experts
         return (self.expert_range is not None
                 and self.expert_range != (0, self.num_experts))
+
+    @property
+    def owned_ranges(self) -> Tuple[Tuple[int, int], ...]:
+        """The owned global expert ranges (full artifacts own all)."""
+        if self.expert_ranges is not None:
+            return self.expert_ranges
+        return (self.expert_range if self.expert_range is not None
+                else (0, self.num_experts),)
+
+    def class_segments(self) -> Tuple[Tuple[int, int], ...]:
+        """(start, count) per bit class — the segmentation the
+        expert-parallel placement splits over the EP axis. Requires a
+        scan-safe plan (per-layer layouts have no single segmentation
+        and cannot boot a multi-process engine)."""
+        if not self.plan.scan_safe:
+            raise ValueError(
+                "per-layer artifacts have no layer-invariant class "
+                "segmentation; multi-process distributed serving needs a "
+                "scan-safe artifact — re-plan with layout='uniform'")
+        return self.metas[0].class_segments()
 
     def save(self, directory) -> Path:
         """Persist through the sharded checkpointer in the expert-major
@@ -617,34 +804,43 @@ class CompressedArtifact:
                      expert_range: Optional[Tuple[int, int]] = None,
                      num_hosts: Optional[int] = None,
                      host: Optional[int] = None,
-                     verify: bool = True) -> "CompressedArtifact":
+                     verify: bool = True,
+                     process_index: Optional[int] = None
+                     ) -> "CompressedArtifact":
         """Streaming restore for expert-parallel deployment.
 
         Reads the dense shard groups plus only the (layer, expert) groups
-        of the class-sorted expert block this host owns, so per-host bytes
+        of the class-sorted experts this host owns, so per-host bytes
         scale with its expert share instead of the artifact size
         (``benchmarks/bench_artifact_loading.py`` measures this).
 
-        The owned block is, in priority order: ``expert_range=(k0, k1)``
-        explicitly; ``(num_hosts, host)`` — contiguous blocks
+        The owned experts are, in priority order: ``expert_range=(k0,
+        k1)`` explicitly; ``(num_hosts, host)`` — contiguous blocks
         byte-balanced over the manifest's shard-group sizes
         (:func:`byte_balanced_ranges`), ``host`` defaulting to
-        ``jax.process_index()``; else all experts — the single-process
-        case, where every device is addressable and parallelism comes
-        purely from placement. Subset loading needs the expert-major
-        layout; pre-v2 artifacts are refused with a re-save hint.
+        ``jax.process_index()``; else, on a mesh spanning several
+        processes, the **placement expectation** for this process
+        (:func:`expert_shard_expectation`: one block per bit class);
+        else all experts — the single-process case, where every device
+        is addressable and parallelism comes purely from placement.
+        Subset loading needs the expert-major layout; pre-v2 artifacts
+        are refused with a re-save hint.
 
-        When ``mesh`` is given and the artifact is complete, params are
-        placed via :func:`place_params`: packed expert planes sharded
-        along their expert axis over the mesh axis carrying expert
-        parallelism (``axis``; the logical name ``"expert"`` resolves to
-        ``"data"`` on the standard mesh), the rest replicated. A partial
-        artifact (``is_partial``) is one host's stream — feed its
-        ``params`` to that host's local shard_map arguments; it cannot
-        boot a single-host engine.
+        When ``mesh`` is single-process and the artifact is complete,
+        params are placed via :func:`place_params`: packed expert planes
+        sharded along their expert axis over the mesh axis carrying
+        expert parallelism (``axis``; the logical name ``"expert"``
+        resolves to ``"data"`` on the standard mesh), the rest
+        replicated. When ``mesh`` spans processes, the loaded slice is
+        assembled straight into this process's addressable shard of the
+        globally-placed tree (:func:`distributed_params`) — the partial
+        stream *is* the local arguments of the expert-parallel schedule,
+        and an explicit ``expert_range``/``num_hosts`` that disagrees
+        with the expectation fails loudly. A partial artifact loaded
+        without a mesh cannot boot a single-host engine.
 
         ``verify=False`` skips sha256 fingerprint checks. Returns the
-        artifact with ``expert_range`` and ``load_stats`` populated.
+        artifact with ``expert_ranges`` and ``load_stats`` populated.
         """
         directory = Path(directory)
         manifest, _ = ckpt_lib.read_manifest(directory)
@@ -652,42 +848,57 @@ class CompressedArtifact:
         num_experts = art.get("num_experts",
                               len(art["plan"]["layers"][0]["bits"]))
         ebytes = _expert_bytes_from_manifest(manifest, num_experts)
+        multiproc = part_lib.mesh_spans_processes(mesh)
         if ebytes is None and (expert_range is not None
-                               or num_hosts is not None):
+                               or num_hosts is not None or multiproc):
             raise ValueError(
                 f"{directory} has no expert-major shard groups (artifact "
                 "saved by a pre-v2 version); per-host subset loading needs "
                 "them — load() it fully once and re-save() to upgrade")
-        if expert_range is None:
-            if num_hosts is not None:
-                h = jax.process_index() if host is None else host
-                if not 0 <= h < num_hosts:
-                    raise ValueError(
-                        f"host {h} out of range for {num_hosts} hosts")
-                expert_range = byte_balanced_ranges(ebytes, num_hosts)[h]
-            else:
-                expert_range = (0, num_experts)
-        k0, k1 = expert_range
-        if not 0 <= k0 < k1 <= num_experts:
-            raise ValueError(f"expert_range {expert_range} invalid for "
-                             f"{num_experts} experts")
+        segments = _plan_segments(art) if multiproc else None
+        ranges, _ = _owned_expert_ranges(
+            num_experts, segments, ebytes, mesh=mesh, axis=axis,
+            expert_range=expert_range, num_hosts=num_hosts, host=host,
+            process_index=process_index)
 
         def keep(path: str, group: str) -> bool:
             e = expert_of_group(group)
-            return e is None or k0 <= e < k1
+            return e is None or any(a <= e < b for a, b in ranges)
 
         params, manifest, stats = ckpt_lib.load_pytree_subset(
             directory, keep, verify=verify)
         artifact = cls._assemble(params, art, stats=stats,
-                                 expert_range=(k0, k1))
-        if mesh is not None and not artifact.is_partial:
-            artifact.params = place_params(artifact.params, mesh, axis=axis)
-            artifact.placed_mesh = mesh
+                                 expert_ranges=ranges)
+        if mesh is not None:
+            if multiproc:
+                artifact.params = distributed_params(
+                    artifact.params, mesh, stats, axis=axis)
+                artifact.placed_mesh = mesh
+            elif not artifact.is_partial:
+                artifact.params = place_params(artifact.params, mesh,
+                                               axis=axis)
+                artifact.placed_mesh = mesh
         return artifact
 
     @classmethod
+    def merge(cls, parts: List["CompressedArtifact"]
+              ) -> "CompressedArtifact":
+        """Reassemble a full artifact from per-host partial loads whose
+        ranges tile ``[0, num_experts)`` exactly (the simulated
+        multi-host path of ``launch.serve --num-hosts``); split planes
+        are concatenated via ``checkpointer.merge_subset_trees``."""
+        if not parts:
+            raise ValueError("no artifact parts to merge")
+        base = parts[0]
+        params = ckpt_lib.merge_subset_trees(
+            [(p.params, p.load_stats) for p in parts])
+        report = _report_from_plan(base.plan, params, base.metas)
+        return cls(params=params, metas=base.metas, runtime=base.runtime,
+                   plan=base.plan, report=report)
+
+    @classmethod
     def _assemble(cls, params: Dict, art: Dict, stats=None,
-                  expert_range=None) -> "CompressedArtifact":
+                  expert_ranges=None) -> "CompressedArtifact":
         cplan = CompressionPlan.from_dict(art["plan"])
         metas = cplan.metas()
         odp_rt = _odp_from_dict(art["odp"])
@@ -697,9 +908,26 @@ class CompressedArtifact:
             quant_meta=metas[0] if scan_safe else None,
             layer_metas=None if scan_safe else tuple(metas))
         report = _report_from_plan(cplan, params, metas)
+        hull = ((expert_ranges[0][0], expert_ranges[-1][1])
+                if expert_ranges else None)
         return cls(params=params, metas=metas, runtime=runtime, plan=cplan,
-                   report=report, expert_range=expert_range,
+                   report=report, expert_range=hull,
+                   expert_ranges=(tuple(expert_ranges)
+                                  if expert_ranges else None),
                    load_stats=stats)
+
+
+def _plan_segments(art: Dict) -> Tuple[Tuple[int, int], ...]:
+    """Layer-invariant (start, count) class segments from a manifest's
+    plan block; per-layer (non-scan-safe) layouts are refused — they
+    have no single segmentation a multi-process placement could split."""
+    cplan = CompressionPlan.from_dict(art["plan"])
+    if not cplan.scan_safe:
+        raise ValueError(
+            "multi-process distributed serving needs a scan-safe artifact "
+            "(one class layout across layers); this artifact is per-layer "
+            "— re-plan with layout='uniform'")
+    return cplan.metas()[0].class_segments()
 
 
 def _artifact_meta(directory, manifest: Dict) -> Dict:
@@ -798,6 +1026,102 @@ def apply(model: DecoderModel, params: Dict, cplan: CompressionPlan,
         avg_bits=avg_bits)
     return CompressedArtifact(params=new_params, metas=metas,
                               runtime=runtime, plan=cplan, report=report)
+
+
+# --------------------------------------------- dense expert checkpoints
+# Dense (uncompressed) expert stacks under the slot-stacked layer trees:
+#   ['layers<slot>']['ffn']['w_in'|'w_gate'|'w_out']  (steps, E, D|F, F|D)
+_DENSE_W = re.compile(
+    r"^\['layers(\d+)'\]\['ffn'\]\['w_(in|gate|out)'\]$")
+
+
+def save_dense_expert_params(directory, params: Dict) -> Path:
+    """Persist an *uncompressed* MoE param tree in the expert-major
+    shard layout.
+
+    Each dense expert stack (``w_in``/``w_gate``/``w_out``, expert axis
+    1 under the slot-stacked layers) is split one fingerprinted shard
+    group per (slot, expert), exactly like a quantized artifact's packed
+    planes — so :func:`load_dense_expert_params` can stream per-host
+    expert slices with the same byte accounting and drive the dense
+    expert-parallel serving path (``ServeEngine(..., ep_dispatch=True)``)
+    from partial per-host checkpoints.
+    """
+    num_experts = None
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if _DENSE_W.match(jax.tree_util.keystr(kp)):
+            num_experts = int(np.shape(leaf)[1])
+            break
+    if num_experts is None:
+        raise ValueError(
+            "params hold no dense expert stacks "
+            "(['layers<k>']['ffn']['w_in'|'w_gate'|'w_out']) — "
+            "quantized params persist via CompressedArtifact.save")
+
+    def split(path: str, arr) -> Optional[Tuple[int, List[str]]]:
+        m = _DENSE_W.match(path)
+        if m is None:
+            return None
+        slot = int(m.group(1))
+        return 1, [f"slot{slot}.expert{j:04d}"
+                   for j in range(arr.shape[1])]
+
+    meta = {"dense_moe": {"num_experts": num_experts}}
+    return ckpt_lib.save_pytree(Path(directory), 0, params, meta=meta,
+                                split_fn=split)
+
+
+def load_dense_expert_params(directory, mesh=None, axis: str = "expert", *,
+                             expert_range: Optional[Tuple[int, int]] = None,
+                             num_hosts: Optional[int] = None,
+                             host: Optional[int] = None,
+                             verify: bool = True,
+                             process_index: Optional[int] = None):
+    """Streaming restore of a :func:`save_dense_expert_params` checkpoint.
+
+    Same owned-expert resolution as
+    :meth:`CompressedArtifact.load_sharded` (explicit range >
+    byte-balanced ``(num_hosts, host)`` > multi-process mesh placement
+    expectation > everything) with the dense stacks forming one class
+    segment ``(0, E)`` — so byte-balanced contiguous host blocks *are*
+    the placement expectation whenever ``E`` divides the EP axis. On a
+    mesh the loaded slice is assembled into the placed global tree
+    (:func:`distributed_params`; partial slices require a multi-process
+    mesh whose expectation they match).
+
+    Returns ``(params, stats, ranges)``.
+    """
+    directory = Path(directory)
+    manifest, _ = ckpt_lib.read_manifest(directory)
+    dm = manifest.get("meta", {}).get("dense_moe")
+    if dm is None:
+        raise ValueError(
+            f"{directory} was not written by save_dense_expert_params "
+            "(manifest carries no 'dense_moe' metadata)")
+    num_experts = int(dm["num_experts"])
+    ebytes = _expert_bytes_from_manifest(manifest, num_experts)
+    ranges, multiproc = _owned_expert_ranges(
+        num_experts, ((0, num_experts),), ebytes, mesh=mesh, axis=axis,
+        expert_range=expert_range, num_hosts=num_hosts, host=host,
+        process_index=process_index)
+
+    def keep(path: str, group: str) -> bool:
+        e = expert_of_group(group)
+        return e is None or any(a <= e < b for a, b in ranges)
+
+    params, manifest, stats = ckpt_lib.load_pytree_subset(
+        directory, keep, verify=verify)
+    owned = sum(b - a for a, b in ranges)
+    if mesh is not None:
+        if multiproc or owned == num_experts:
+            params = distributed_params(params, mesh, stats, axis=axis)
+        else:
+            raise ValueError(
+                f"partial dense checkpoint (experts {ranges} of "
+                f"{num_experts}) cannot be placed on a single-process "
+                "mesh — every device is addressable, so the full stack "
+                "is required; load without num_hosts/expert_range")
+    return params, stats, ranges
 
 
 # ---------------------------------------------------------------- helpers

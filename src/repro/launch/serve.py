@@ -21,7 +21,15 @@ Deployment topology is orthogonal (see ``docs/serving.md``):
   take the bf16 TP'd body, compressed artifacts take the quantized body
   (per-class packed planes sharded over ``data``, fused grouped
   ``kernels.moe_ffn`` kernel per shard — every bit class's expert count
-  must divide the data axis).
+  must divide the data axis);
+* ``--num-hosts H [--host h]`` — *simulated* multi-host streaming on one
+  process: every host's byte-balanced artifact slice is streamed and
+  byte-accounted separately (``--host`` picks which host's view leads),
+  then the slices are merged to boot the engine;
+* ``--coordinator ADDR --processes N --process-id I`` — real
+  ``jax.distributed`` boot (gloo collectives on CPU): with a ``--mesh``
+  spanning the processes, each process streams only its placement slice
+  of the artifact and serves as one shard of the distributed engine.
 
 Then serves a synthetic batched workload and reports throughput +
 compression stats.
@@ -41,6 +49,7 @@ from repro.core import pipeline as pipeline_lib
 from repro.data.pipeline import calibration_batch
 from repro.models.model_registry import build_model
 from repro.serve.engine import Request, ServeEngine, StaticServeEngine
+from repro.sharding import partitioning as part_lib
 
 
 def _parse_mesh(spec: str):
@@ -49,6 +58,9 @@ def _parse_mesh(spec: str):
         d, m = (int(v) for v in spec.lower().split("x"))
     except ValueError:
         raise SystemExit(f"--mesh expects DxM (e.g. 2x1), got {spec!r}")
+    if d < 1 or m < 1:
+        raise SystemExit(f"--mesh expects positive dims DxM (e.g. 2x1), "
+                         f"got {spec!r}")
     n = len(jax.devices())
     if d * m > n:
         raise SystemExit(f"--mesh {spec} needs {d * m} devices, "
@@ -58,12 +70,35 @@ def _parse_mesh(spec: str):
     return jax.make_mesh((d, m), ("data", "model"))
 
 
+def init_distributed(coordinator: str, num_processes: int,
+                     process_id: int) -> None:
+    """``jax.distributed`` boot for multi-process serving.
+
+    CPU backends get the gloo collectives implementation first — the
+    default (``'none'``) cannot run cross-process computations. Must run
+    before any other jax call touches devices.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except AttributeError:      # option absent on this jax version
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
 def serve(arch: str, *, smoke: bool = True, mc: bool = False,
           target_bits: float = 2.54, n_requests: int = 8,
           max_new: int = 16, batch_size: int = 4, prompt_len: int = 32,
           static: bool = False, mixed_lengths: bool = False,
           layout: str = "uniform", artifact_path=None, save_artifact=None,
-          mesh_spec: Optional[str] = None, ep_dispatch: bool = False):
+          mesh_spec: Optional[str] = None, ep_dispatch: bool = False,
+          num_hosts: Optional[int] = None, host: Optional[int] = None,
+          coordinator: Optional[str] = None,
+          num_processes: Optional[int] = None,
+          process_id: Optional[int] = None):
+    if coordinator is not None:
+        init_distributed(coordinator, num_processes, process_id)
     cfg = get_config(arch, smoke=smoke)
     model = build_model(cfg)
     engine_cls = StaticServeEngine if static else ServeEngine
@@ -72,13 +107,52 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
     artifact = None
     report = None
 
+    if num_hosts is not None and part_lib.mesh_spans_processes(mesh):
+        raise SystemExit(
+            "--num-hosts simulates multi-host streaming on a single "
+            "process; on a real multi-process mesh drop it — each "
+            "process streams its own slice automatically")
     if artifact_path is not None:
         t0 = time.time()
-        if mesh is not None:
+        if num_hosts is not None:
+            order = list(range(num_hosts))
+            if host is not None:
+                if not 0 <= host < num_hosts:
+                    raise SystemExit(f"--host {host} out of range for "
+                                     f"--num-hosts {num_hosts}")
+                order.remove(host)
+                order.insert(0, host)
+            parts = []
+            for h in order:
+                part = pipeline_lib.CompressedArtifact.load_sharded(
+                    artifact_path, num_hosts=num_hosts, host=h)
+                st = part.load_stats
+                k0, k1 = part.expert_range
+                print(f"[serve] host {h}/{num_hosts} streams experts "
+                      f"[{k0}:{k1}): {st.bytes_read}/{st.total_bytes} "
+                      f"bytes ({st.read_fraction:.0%}), "
+                      f"{st.groups_read}/{st.total_groups} shard groups")
+                parts.append(part)
+            print("[serve] simulated multi-host: merging host slices to "
+                  "boot a single-process engine")
+            artifact = pipeline_lib.CompressedArtifact.merge(parts)
+            if mesh is not None:
+                artifact.params = pipeline_lib.place_params(
+                    artifact.params, mesh)
+                artifact.placed_mesh = mesh
+        elif mesh is not None:
+            # load_sharded resolves single- vs multi-process internally:
+            # on a mesh spanning processes this process streams only the
+            # slice its addressable devices own — the partial artifact
+            # becomes the local shard of the distributed engine
             artifact = pipeline_lib.CompressedArtifact.load_sharded(
                 artifact_path, mesh)
             st = artifact.load_stats
-            print(f"[serve] sharded load: {st.bytes_read}/{st.total_bytes} "
+            who = (f"process {jax.process_index()} streamed experts "
+                   f"{artifact.expert_ranges}"
+                   if part_lib.mesh_spans_processes(mesh)
+                   else "sharded load")
+            print(f"[serve] {who}: {st.bytes_read}/{st.total_bytes} "
                   f"bytes ({st.read_fraction:.0%}) in {st.files_read} "
                   f"files, {st.groups_read}/{st.total_groups} shard groups")
         else:
@@ -167,13 +241,33 @@ def main():
                     help="with --mesh: explicit shard_map MoE dispatch "
                          "(dense experts or quantized artifacts whose "
                          "class counts divide the data axis)")
+    ap.add_argument("--num-hosts", type=int, default=None, metavar="H",
+                    help="with --artifact: simulate H-host streaming — "
+                         "each host's byte-balanced slice is loaded and "
+                         "accounted separately, then merged to boot")
+    ap.add_argument("--host", type=int, default=None, metavar="I",
+                    help="with --num-hosts: lead with host I's stream")
+    ap.add_argument("--coordinator", default=None, metavar="ADDR",
+                    help="jax.distributed coordinator (host:port); with "
+                         "--processes/--process-id boots this process as "
+                         "one shard of a multi-process engine")
+    ap.add_argument("--processes", type=int, default=None, metavar="N")
+    ap.add_argument("--process-id", type=int, default=None, metavar="I")
     args = ap.parse_args()
+    if args.host is not None and args.num_hosts is None:
+        ap.error("--host requires --num-hosts")
+    if args.coordinator is not None and (args.processes is None
+                                         or args.process_id is None):
+        ap.error("--coordinator requires --processes and --process-id")
     serve(args.arch, mc=args.mc, target_bits=args.bits,
           n_requests=args.requests, max_new=args.max_new,
           batch_size=args.batch, static=args.static,
           mixed_lengths=args.mixed_lengths, layout=args.layout,
           artifact_path=args.artifact, save_artifact=args.save_artifact,
-          mesh_spec=args.mesh, ep_dispatch=args.ep)
+          mesh_spec=args.mesh, ep_dispatch=args.ep,
+          num_hosts=args.num_hosts, host=args.host,
+          coordinator=args.coordinator, num_processes=args.processes,
+          process_id=args.process_id)
 
 
 if __name__ == "__main__":

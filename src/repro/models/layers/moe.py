@@ -74,6 +74,12 @@ class MoEQuantMeta:
             start += cnt
         return out
 
+    def class_segments(self) -> Tuple[Tuple[int, int], ...]:
+        """(global start, count) per bit class — the segmentation the
+        expert-parallel placement and the per-host artifact streams share
+        (``sharding.moe_parallel.ep_owned_ranges``)."""
+        return tuple((e0, cnt) for _, e0, cnt in self.class_slices())
+
 
 @dataclass(frozen=True)
 class OdpRuntime:

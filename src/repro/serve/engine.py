@@ -44,6 +44,7 @@ from repro.models.layers import attention as attn_lib
 from repro.models.layers.attention import GLOBAL_WINDOW
 from repro.models.transformer import DecoderModel, MCRuntime
 from repro.sharding import context as shctx
+from repro.sharding import partitioning as part_lib
 
 
 @dataclass
@@ -90,6 +91,16 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+def _fetch(x) -> np.ndarray:
+    """Host value of a possibly multi-process global array. The engines
+    replicate every cross-host output inside the jitted step, so any
+    addressable shard carries the full value; plain arrays (and numpy)
+    pass straight through."""
+    if getattr(x, "is_fully_addressable", True):
+        return np.asarray(x)
+    return np.asarray(x.addressable_data(0))
+
+
 class _ArtifactBoot:
     """Shared ``from_artifact`` constructor plus mesh plumbing for both
     engines: boot serving straight off a
@@ -109,45 +120,111 @@ class _ArtifactBoot:
                 match what the artifact was compressed for.
             artifact: a :class:`~repro.core.pipeline.CompressedArtifact`
                 from :meth:`~repro.core.pipeline.CompressedArtifact.load`
-                or ``load_sharded``. Partial artifacts (one host's expert
-                slice) are rejected — an engine needs the full layout.
+                or ``load_sharded``. A partial artifact (one host's
+                expert slice) boots only a process of a **multi-process
+                mesh** whose placement expectation it matches exactly —
+                its planes become this process's addressable shard of
+                the global expert-parallel arrays; anything else is
+                rejected loudly (no mesh, wrong slice, overlap/gap).
             mesh: optional ``jax.sharding.Mesh``. When given, packed
                 expert planes are sharded along their expert axis over the
                 mesh's expert-parallel axis (``data``) and all engine
                 compute runs with the mesh active, so XLA partitions MoE
                 dispatch across devices. Decoding stays token-identical to
-                the single-device engine.
+                the single-device engine. An artifact already placed on an
+                equal mesh (same axes, shape, and device order — identity
+                not required) is not re-placed.
             **kwargs: forwarded to the engine constructor
                 (``batch_size``, ``eos_id``, ``ep_dispatch``, ...).
         """
+        from repro.core import pipeline as pl
         fp = model.cfg.fingerprint()
         art_fp = getattr(artifact, "model_fingerprint", None)
         if art_fp and art_fp != fp:
             raise ValueError(
                 "artifact/model mismatch: the artifact was compressed for "
                 f"model config {art_fp}, this model is {fp}")
-        if getattr(artifact, "is_partial", False):
-            k0, k1 = artifact.expert_range
-            raise ValueError(
-                f"artifact holds only experts [{k0}:{k1}) of "
-                f"{artifact.num_experts} (a per-host stream from "
-                "load_sharded); an engine needs the full expert layout — "
-                "load without expert_range/num_hosts, or keep per-host "
-                "slices on their own hosts")
         params = artifact.params
-        if mesh is not None and getattr(artifact, "placed_mesh",
-                                        None) is not mesh:
-            from repro.core.pipeline import place_params
-            params = place_params(params, mesh)
+        placed = getattr(artifact, "placed_mesh", None)
+        if getattr(artifact, "is_partial", False):
+            if mesh is None:
+                k0, k1 = artifact.expert_range
+                raise ValueError(
+                    f"artifact holds only experts [{k0}:{k1}) of "
+                    f"{artifact.num_experts} (a per-host stream from "
+                    "load_sharded); an engine needs the full expert "
+                    "layout — load without expert_range/num_hosts, or "
+                    "pass the multi-process mesh this slice was streamed "
+                    "for")
+            from repro.sharding.moe_parallel import merge_ranges
+            got = merge_ranges(artifact.owned_ranges)
+            expected = pl.expert_shard_expectation(
+                mesh, artifact.class_segments())
+            if got != expected:
+                raise ValueError(
+                    f"partial artifact holds experts {got} but process "
+                    f"{jax.process_index()} of the mesh expects exactly "
+                    f"{expected} — the per-host stream and the "
+                    "expert-parallel placement overlap/gap/misalign; "
+                    "stream with load_sharded(dir, mesh) to get the "
+                    "expected slice")
+            if not pl.meshes_equal(placed, mesh):
+                if placed is not None:
+                    raise ValueError(
+                        "partial artifact was already placed on a "
+                        "different mesh; its planes are global arrays "
+                        "that cannot be re-mapped here — re-stream with "
+                        "CompressedArtifact.load_sharded(dir, mesh) for "
+                        "this mesh")
+                if artifact.load_stats is None:
+                    raise ValueError(
+                        "partial artifact carries no LoadStats, so its "
+                        "planes cannot be mapped onto the mesh; re-load "
+                        "it via CompressedArtifact.load_sharded")
+                params = pl.distributed_params(params, mesh,
+                                               artifact.load_stats)
+        elif mesh is not None and not pl.meshes_equal(placed, mesh):
+            if part_lib.mesh_spans_processes(mesh):
+                # a full artifact on a multi-process mesh: place_params'
+                # device_put cannot reach the other processes' devices —
+                # assemble this process's shard instead (works because a
+                # full load carries every expert), or point the caller at
+                # the streaming path
+                stats = getattr(artifact, "load_stats", None)
+                if stats is None:
+                    raise ValueError(
+                        "cannot place an in-memory artifact on a mesh "
+                        "spanning processes; save it and boot each "
+                        "process via CompressedArtifact.load_sharded("
+                        "dir, mesh)")
+                params = pl.distributed_params(params, mesh, stats)
+            else:
+                params = pl.place_params(params, mesh)
         return cls(model, params, mc=artifact.runtime, mesh=mesh, **kwargs)
 
     def _init_mesh(self, mesh, ep_dispatch: bool, mc) -> None:
         self.mesh = mesh
         self.ep_dispatch = ep_dispatch
+        self._distributed = part_lib.mesh_spans_processes(mesh)
         if ep_dispatch:
             if mesh is None:
                 raise ValueError("ep_dispatch=True requires a mesh")
+            # the mesh axis must exist before anything else is judged:
+            # validating quant metas against a phantom axis would die
+            # inside the class-divisibility check with a misleading
+            # message (or silently validate against 1)
             dsize = dict(mesh.shape).get("data", 0)
+            if dsize == 0:
+                raise ValueError(
+                    "ep_dispatch needs a mesh with a 'data' axis to "
+                    "carry expert parallelism; mesh axes are "
+                    f"{tuple(mesh.axis_names)}")
+            if self.batch_size % dsize != 0:
+                raise ValueError(
+                    f"ep_dispatch needs batch_size ({self.batch_size}) "
+                    f"divisible by the mesh 'data' axis ({dsize}) — "
+                    "otherwise decode steps would silently fall back to "
+                    "the gather path instead of the shard_map schedule")
             if mc is not None and (mc.quant_meta is not None
                                    or mc.layer_metas is not None):
                 # quantized shard_map EP shards every bit class's packed
@@ -158,13 +235,32 @@ class _ArtifactBoot:
                 metas = (mc.layer_metas if mc.layer_metas is not None
                          else (mc.quant_meta,))
                 for meta in metas:
-                    validate_ep_quant_meta(meta, max(dsize, 1))
-            if dsize == 0 or self.batch_size % dsize != 0:
-                raise ValueError(
-                    f"ep_dispatch needs batch_size ({self.batch_size}) "
-                    f"divisible by the mesh 'data' axis ({dsize}) — "
-                    "otherwise decode steps would silently fall back to "
-                    "the gather path instead of the shard_map schedule")
+                    validate_ep_quant_meta(meta, dsize)
+
+    def _init_host_io(self):
+        """Host<->device conventions, distribution-aware. On a mesh
+        spanning processes every engine input enters jit as numpy (each
+        process holds the identical value — the SPMD serving loop — and
+        jit treats it as replicated), and every output the host loop
+        reads is constrained fully-replicated *inside* the jitted step
+        so any addressable shard carries the whole value (``_fetch``).
+        Returns the in-jit replicator (identity off-mesh)."""
+        if getattr(self, "_distributed", False):
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep_sh = NamedSharding(self.mesh, PartitionSpec())
+            self._arr = np.asarray
+            self._scalar = np.int32
+            return lambda a: jax.lax.with_sharding_constraint(a, rep_sh)
+        self._arr = jnp.asarray
+        self._scalar = jnp.int32
+        return lambda a: a
+
+    def _host_caches(self, caches):
+        """Fresh caches enter the distributed jit as numpy leaves (see
+        ``_init_host_io``); subsequent steps carry global arrays."""
+        if not getattr(self, "_distributed", False):
+            return caches
+        return jax.tree.map(np.asarray, caches)
 
     def _mesh_scope(self):
         """Context activating the engine's mesh (sharding constraints,
@@ -230,6 +326,7 @@ class ServeEngine(_ArtifactBoot):
                       and bool(np.all(kinds["chunk"] == GLOBAL_WINDOW)))
         self._bucketed_prefill = (all_global
                                   and self.cfg.family not in ("ssm", "hybrid"))
+        _rep = self._init_host_io()
 
         def _prefill(params, tokens, length, caches):
             kw = {}
@@ -241,7 +338,7 @@ class ServeEngine(_ArtifactBoot):
                 params, tokens, caches=caches, mc=self.mc, **kw)
             last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
                                                 keepdims=False)
-            nxt = jnp.argmax(last, -1).astype(jnp.int32)        # (1,)
+            nxt = _rep(jnp.argmax(last, -1).astype(jnp.int32))  # (1,)
             # void the padded tail's cache entries: keys the pad tokens wrote
             # at positions >= length must never be attended to
             new_caches = _void_tail(new_caches, length)
@@ -263,7 +360,7 @@ class ServeEngine(_ArtifactBoot):
                 params, caches, cur[:, None], pos, mc=self.mc,
                 token_mask=active[:, None])
             nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-            nxt = jnp.where(active, nxt, jnp.int32(pad_id))
+            nxt = _rep(jnp.where(active, nxt, jnp.int32(pad_id)))
             return nxt, new_caches
 
         self._prefill = jax.jit(_prefill)
@@ -302,7 +399,7 @@ class ServeEngine(_ArtifactBoot):
             return []
         b = self.num_slots
         capacity = self._capacity_for(requests)
-        caches = self.model.init_caches(b, capacity)
+        caches = self._host_caches(self.model.init_caches(b, capacity))
         self._scratch = None          # reusable batch-1 prefill cache
         pending = deque(enumerate(requests))
         active = np.zeros(b, bool)
@@ -342,9 +439,9 @@ class ServeEngine(_ArtifactBoot):
 
             t0 = time.time()
             nxt, caches = self._decode(
-                self.params, caches, jnp.asarray(cur), jnp.asarray(pos),
-                jnp.asarray(active))
-            nxt = np.asarray(nxt)
+                self.params, caches, self._arr(cur), self._arr(pos),
+                self._arr(active))
+            nxt = _fetch(nxt)
             self.stats.decode_s += time.time() - t0
             self.stats.decode_steps += 1
             self.stats.slot_steps += b
@@ -384,13 +481,13 @@ class ServeEngine(_ArtifactBoot):
         # Recurrent (SSM/hybrid) state can't be voided -> fresh each time.
         one = self._scratch
         if one is None or not self._bucketed_prefill:
-            one = self.model.init_caches(1, capacity)
-        nxt, one = self._prefill(self.params, jnp.asarray(toks),
-                                 jnp.int32(ln), one)
+            one = self._host_caches(self.model.init_caches(1, capacity))
+        nxt, one = self._prefill(self.params, self._arr(toks),
+                                 self._scalar(ln), one)
         if self._bucketed_prefill:
             self._scratch = one
-        caches = self._insert(caches, one, jnp.int32(s))
-        first = int(np.asarray(nxt)[0])
+        caches = self._insert(caches, one, self._scalar(s))
+        first = int(_fetch(nxt)[0])
         prefill_s = time.time() - t0
         self.stats.prefill_s += prefill_s
 
@@ -443,15 +540,17 @@ class StaticServeEngine(_ArtifactBoot):
         self.eos_id = eos_id
         self.stats = EngineStats()
 
+        _rep = self._init_host_io()
+
         def _prefill(params, tokens, caches):
             logits, new_caches, _ = model.forward(
                 params, tokens, caches=caches, mc=self.mc)
-            return logits[:, -1], new_caches
+            return _rep(logits[:, -1]), new_caches
 
         def _decode(params, caches, tokens, pos):
             logits, new_caches = model.decode_step(params, caches, tokens,
                                                    pos, mc=self.mc)
-            return logits[:, -1], new_caches
+            return _rep(logits[:, -1]), new_caches
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
@@ -462,7 +561,7 @@ class StaticServeEngine(_ArtifactBoot):
         toks = np.full((b, lmax), self.pad_id, np.int32)
         for i, r in enumerate(requests):
             toks[i, lmax - len(r.prompt):] = r.prompt   # left padding
-        return jnp.asarray(toks), lmax
+        return self._arr(toks), lmax
 
     def run(self, requests: List[Request]) -> List[Result]:
         if self.ep_dispatch and len(requests) % self.batch_size:
@@ -484,7 +583,14 @@ class StaticServeEngine(_ArtifactBoot):
         b = len(requests)
         tokens, lmax = self._make_batch(requests)
         max_new = max(r.max_new_tokens for r in requests)
-        caches = self.model.init_caches(b, lmax + max_new)
+        caches = self._host_caches(self.model.init_caches(b, lmax + max_new))
+
+        def _next(logits):
+            # distributed: logits come back replicated — argmax on host
+            # keeps the loop free of eager multi-process device ops
+            if self._distributed:
+                return np.argmax(_fetch(logits), -1).astype(np.int32)
+            return jnp.argmax(logits, -1).astype(jnp.int32)
 
         t0 = time.time()
         logits, caches = self._prefill(self.params, tokens, caches)
@@ -493,15 +599,15 @@ class StaticServeEngine(_ArtifactBoot):
 
         generated = np.zeros((b, max_new), np.int32)
         t0 = time.time()
-        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        cur = _next(logits)
         for t in range(max_new):
-            generated[:, t] = np.asarray(cur)
+            generated[:, t] = _fetch(cur)
             if t == max_new - 1:        # last recorded token needs no step
                 break
             logits, caches = self._decode(
                 self.params, caches, cur[:, None],
-                jnp.asarray(lmax + t, jnp.int32))
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+                self._scalar(lmax + t))
+            cur = _next(logits)
         jax.block_until_ready(logits)
         decode_s = time.time() - t0
 

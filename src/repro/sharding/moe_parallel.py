@@ -62,6 +62,94 @@ def validate_ep_quant_meta(meta: MoEQuantMeta, dp: int) -> None:
             "sizes or serve with GSPMD placement (mesh= without ep)")
 
 
+def ep_class_segments(spec) -> Tuple[Tuple[int, int], ...]:
+    """Normalize to ``((start, count), ...)`` class segments: a
+    :class:`MoEQuantMeta` yields its bit-class segmentation, a plain
+    expert count the single dense segment ``((0, E),)``, and an already
+    segment-shaped sequence passes through."""
+    if isinstance(spec, MoEQuantMeta):
+        return spec.class_segments()
+    if isinstance(spec, (int, np.integer)):
+        return ((0, int(spec)),)
+    return tuple((int(a), int(b)) for a, b in spec)
+
+
+def ep_owned_ranges(meta_or_experts, dp: int,
+                    shard: int) -> Tuple[Tuple[int, int], ...]:
+    """Global expert ranges EP shard ``shard`` owns under the standard
+    placement: every class's plane stack (or the dense expert stack) is
+    split evenly over the ``dp`` shards of the EP axis, shard ``r``
+    taking the ``r``-th block of each class. Adjacent per-class blocks
+    are merged, so the result is the minimal sorted disjoint cover.
+
+    This is the contract between per-host artifact streams and the
+    distributed engine: a host whose addressable devices sit in EP shard
+    ``r`` must hold exactly these experts (and no others) to serve as
+    one process of a multi-process mesh (`core.pipeline`).
+    """
+    segments = ep_class_segments(meta_or_experts)
+    if not 0 <= shard < dp:
+        raise ValueError(f"shard {shard} out of range for dp={dp}")
+    out: list = []
+    for e0, cnt in segments:
+        if cnt % dp:
+            raise ValueError(
+                f"expert-parallel placement needs every class expert "
+                f"count to divide the EP axis ({dp}); got a class of "
+                f"{cnt} experts (segments={segments})")
+        per = cnt // dp
+        r = (e0 + shard * per, e0 + (shard + 1) * per)
+        if out and out[-1][1] == r[0]:
+            out[-1] = (out[-1][0], r[1])
+        else:
+            out.append(r)
+    return tuple(out)
+
+
+def merge_ranges(ranges) -> Tuple[Tuple[int, int], ...]:
+    """Canonicalize ``(start, stop)`` ranges: sort and merge adjacent or
+    overlapping runs (the form :func:`ep_owned_ranges` emits)."""
+    rs = sorted((int(a), int(b)) for a, b in ranges)
+    out: list = []
+    for a, b in rs:
+        if out and a <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], b))
+        else:
+            out.append((a, b))
+    return tuple(out)
+
+
+def ep_shard_for_ranges(meta_or_experts, dp: int, ranges) -> int:
+    """Inverse of :func:`ep_owned_ranges`: which EP shard owns exactly
+    ``ranges``? Raises ``ValueError`` naming the overlap / gap /
+    misalignment when the ranges match no shard — the loud-failure path
+    for booting a host from a mismatched per-host artifact stream."""
+    norm = merge_ranges(ranges)
+    for r in range(dp):
+        if ep_owned_ranges(meta_or_experts, dp, r) == norm:
+            return r
+    got = _range_set(norm)
+    best = min(range(dp), key=lambda r: len(got.symmetric_difference(
+        _range_set(ep_owned_ranges(meta_or_experts, dp, r)))))
+    want = _range_set(ep_owned_ranges(meta_or_experts, dp, best))
+    extra, missing = sorted(got - want), sorted(want - got)
+    detail = "; ".join(
+        ([f"foreign experts {extra} overlap other shards"] if extra
+         else [])
+        + ([f"gap — experts {missing} are missing"] if missing else []))
+    raise ValueError(
+        f"expert ranges {norm} match no EP shard of a {dp}-way axis "
+        f"(class segments {ep_class_segments(meta_or_experts)}); closest "
+        f"is shard {best}: {detail or 'same experts, split differently'}")
+
+
+def _range_set(ranges) -> set:
+    out: set = set()
+    for a, b in ranges:
+        out.update(range(a, b))
+    return out
+
+
 def local_quant_meta(meta: MoEQuantMeta, dp: int) -> MoEQuantMeta:
     """The per-shard class layout: same classes, counts / dp."""
     return MoEQuantMeta(
@@ -79,6 +167,12 @@ def ep_slot_table(meta: MoEQuantMeta, dp: int) -> np.ndarray:
     order is therefore the class order with per-class blocks. The EP slot
     of global expert ``e0 + o`` (class offset ``o``) is
     ``shard * E_l + local_class_start + o % (cnt/dp)``.
+
+    Only the *global* class layout enters the table, so a process whose
+    planes are local (a per-host partial artifact) still derives the
+    full remap from the plan's meta; :func:`ep_owned_ranges` /
+    :func:`ep_shard_for_ranges` map its ``expert_range`` to the shard
+    whose rows those planes are.
     """
     e = meta.num_experts
     e_l = e // dp

@@ -77,6 +77,34 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+def meshes_equal(a: Optional[Mesh], b: Optional[Mesh]) -> bool:
+    """True when two meshes describe the same device layout: same axis
+    names, same shape, same devices in the same order. Identity is *not*
+    required — a mesh rebuilt over the same devices places arrays
+    identically, so callers deciding whether to re-place params must use
+    this, never ``is`` (`serve.engine.from_artifact`)."""
+    if a is None or b is None:
+        return False                 # "no mesh" never equals a mesh
+    if a is b:
+        return True
+    if a.axis_names != b.axis_names or a.devices.shape != b.devices.shape:
+        return False
+    return all(da is db or da.id == db.id for da, db in
+               zip(a.devices.flat, b.devices.flat))
+
+
+def mesh_process_indices(mesh: Mesh) -> Tuple[int, ...]:
+    """Sorted process indices owning at least one device of the mesh."""
+    return tuple(sorted({d.process_index for d in mesh.devices.flat}))
+
+
+def mesh_spans_processes(mesh: Optional[Mesh]) -> bool:
+    """True when the mesh's devices belong to more than one process —
+    the regime where each process holds only its addressable shards and
+    engines must boot from per-host partial artifacts."""
+    return mesh is not None and len(mesh_process_indices(mesh)) > 1
+
+
 def expert_placement_shardings(mesh: Mesh, params, expert_axes,
                                axis: str = "data"):
     """NamedSharding tree for an artifact param tree under expert parallelism.

@@ -24,14 +24,19 @@ import sys
 import textwrap
 from pathlib import Path
 
+import jax
 import numpy as np
 import pytest
 
 from benchmarks.bench_artifact_loading import build_artifact, _tree_equal
 from repro.checkpoint import checkpointer as ckpt_lib
+from repro.configs import get_config
 from repro.core import pipeline
 from repro.launch.mesh import single_device_mesh
+from repro.models.layers.moe import MoEQuantMeta
+from repro.models.transformer import DecoderModel
 from repro.serve.engine import Request, ServeEngine
+from repro.sharding import moe_parallel as mp
 
 ROOT = Path(__file__).resolve().parents[1]
 
@@ -106,8 +111,54 @@ class TestShardedLoading:
             [(0, 3), (3, 4)]
         assert pipeline.byte_balanced_ranges([5, 1, 1, 1, 1], 2) == \
             [(0, 1), (1, 5)]
+        # 1 host: everything; H == E: exactly one expert per host
+        assert pipeline.byte_balanced_ranges([3, 1, 2], 1) == [(0, 3)]
+        assert pipeline.byte_balanced_ranges([3, 1, 2], 3) == \
+            [(0, 1), (1, 2), (2, 3)]
         with pytest.raises(ValueError, match="cannot split"):
             pipeline.byte_balanced_ranges([1], 2)
+
+    def test_single_host_load_is_full(self, saved):
+        _, _, d, _ = saved
+        art = pipeline.CompressedArtifact.load_sharded(d, num_hosts=1,
+                                                       host=0)
+        assert art.expert_range == (0, art.num_experts)
+        assert not art.is_partial
+        st = art.load_stats
+        assert st.bytes_read == st.total_bytes
+
+    def test_num_hosts_equals_num_experts(self, saved):
+        _, artifact, d, _ = saved
+        e = artifact.num_experts
+        arts = [pipeline.CompressedArtifact.load_sharded(
+            d, num_hosts=e, host=h) for h in range(e)]
+        ranges = [a.expert_range for a in arts]
+        assert ranges[0][0] == 0 and ranges[-1][1] == e
+        for (_, a1), (b0, _) in zip(ranges, ranges[1:]):
+            assert a1 == b0, "one-expert blocks must tile [0, E)"
+        assert all(k1 - k0 == 1 for k0, k1 in ranges)
+        assert all(a.is_partial for a in arts)
+
+    def test_host_out_of_range(self, saved):
+        _, _, d, _ = saved
+        with pytest.raises(ValueError, match="out of range"):
+            pipeline.CompressedArtifact.load_sharded(d, num_hosts=2,
+                                                     host=2)
+        with pytest.raises(ValueError, match="out of range"):
+            pipeline.CompressedArtifact.load_sharded(d, num_hosts=2,
+                                                     host=-1)
+
+    def test_partial_rejection_message_on_meshless_engine(self, saved):
+        model, _, d, _ = saved
+        art = pipeline.CompressedArtifact.load_sharded(
+            d, num_hosts=2, host=1)
+        k0, k1 = art.expert_range
+        with pytest.raises(ValueError) as exc:
+            ServeEngine.from_artifact(model, art)
+        msg = str(exc.value)
+        assert f"[{k0}:{k1})" in msg
+        assert "per-host stream" in msg
+        assert "full expert layout" in msg
 
     def test_mesh_serving_token_identical(self, saved):
         model, _, d, _ = saved
@@ -250,6 +301,117 @@ class TestSplitLeaves:
         # array either
         with pytest.raises(ValueError, match="do not tile"):
             ckpt_lib.merge_subset_trees([(t0, s0)])
+
+
+# ------------------------------------------- distributed placement (fast)
+class TestDistributedPlacement:
+    """Pure range/expectation algebra plus the single-process behavior of
+    the multi-process assembly path; the real 2-process run lives in
+    ``tests/test_distributed_serving.py``."""
+
+    def test_ep_owned_ranges_per_class_blocks(self):
+        meta = MoEQuantMeta(bit_classes=(1, 2, 3), class_counts=(2, 4, 2),
+                            group_size=32, pack_block=32)
+        assert mp.ep_owned_ranges(meta, 2, 0) == ((0, 1), (2, 4), (6, 7))
+        assert mp.ep_owned_ranges(meta, 2, 1) == ((1, 2), (4, 6), (7, 8))
+        # dense experts: one segment, contiguous equal blocks
+        assert mp.ep_owned_ranges(8, 2, 0) == ((0, 4),)
+        assert mp.ep_owned_ranges(8, 4, 3) == ((6, 8),)
+        # adjacent per-class blocks merge (single class == dense)
+        assert mp.ep_owned_ranges(((0, 4),), 2, 1) == ((2, 4),)
+        with pytest.raises(ValueError, match="divide"):
+            mp.ep_owned_ranges(((0, 3), (3, 5)), 2, 0)
+        with pytest.raises(ValueError, match="out of range"):
+            mp.ep_owned_ranges(8, 2, 2)
+
+    def test_ep_shard_for_ranges_inverse_and_loud(self):
+        meta = MoEQuantMeta(bit_classes=(1, 2, 3), class_counts=(2, 4, 2),
+                            group_size=32, pack_block=32)
+        for r in range(2):
+            assert mp.ep_shard_for_ranges(
+                meta, 2, mp.ep_owned_ranges(meta, 2, r)) == r
+        with pytest.raises(ValueError, match="gap"):
+            mp.ep_shard_for_ranges(meta, 2, ((0, 1),))
+        with pytest.raises(ValueError, match="overlap"):
+            mp.ep_shard_for_ranges(meta, 2, ((0, 2), (2, 4), (6, 7)))
+
+    def test_expectation_on_single_process_mesh_is_everything(self):
+        mesh = single_device_mesh()
+        # segments are (start, count); dp=1 owns every class block, and
+        # adjacent blocks merge into the full range
+        assert pipeline.expert_shard_expectation(
+            mesh, ((0, 3), (3, 5)), process_index=0) == ((0, 8),)
+        with pytest.raises(ValueError, match="owns no devices"):
+            pipeline.expert_shard_expectation(mesh, ((0, 8),),
+                                              process_index=1)
+
+    def test_partial_boot_on_wrong_mesh_is_loud(self, saved):
+        model, _, d, _ = saved
+        art = pipeline.CompressedArtifact.load_sharded(
+            d, expert_range=(0, 4))
+        with pytest.raises(ValueError, match="expects exactly"):
+            ServeEngine.from_artifact(model, art,
+                                      mesh=single_device_mesh())
+
+    def test_distributed_params_single_process_matches_tree(self, saved):
+        _, _, d, _ = saved
+        full = pipeline.CompressedArtifact.load(d)
+        placed = pipeline.distributed_params(
+            full.params, single_device_mesh(), full.load_stats)
+        assert _tree_equal(placed, full.params)
+
+    def test_merge_reconstructs_full_artifact(self, saved):
+        model, _, d, _ = saved
+        full = pipeline.CompressedArtifact.load(d)
+        parts = [pipeline.CompressedArtifact.load_sharded(
+            d, num_hosts=2, host=h) for h in range(2)]
+        merged = pipeline.CompressedArtifact.merge(parts)
+        assert not merged.is_partial
+        assert _tree_equal(merged.params, full.params)
+        # a merged artifact boots where its parts could not
+        ServeEngine.from_artifact(model, merged, batch_size=2)
+
+
+class TestDenseExpertCheckpoints:
+    def _model(self):
+        cfg = get_config("mixtral-8x7b", smoke=True).replace(
+            dtype="float32", num_layers=2, d_model=32, d_ff=32,
+            moe_d_ff=64, num_experts=4, vocab_size=64, scan_layers=False)
+        model = DecoderModel(cfg)
+        return model, model.init(jax.random.PRNGKey(0))
+
+    def test_roundtrip_and_partial_stream(self, tmp_path):
+        _, params = self._model()
+        pipeline.save_dense_expert_params(tmp_path / "ck", params)
+        full, st, ranges = pipeline.load_dense_expert_params(
+            tmp_path / "ck")
+        assert ranges == ((0, 4),)
+        assert _tree_equal(full, params)
+
+        part, st2, r2 = pipeline.load_dense_expert_params(
+            tmp_path / "ck", num_hosts=2, host=0)
+        assert r2 == ((0, 2),)
+        assert st2.bytes_read < st.bytes_read
+        # a partial dense stream cannot land on a single-process mesh
+        with pytest.raises(ValueError, match="single-process mesh"):
+            pipeline.load_dense_expert_params(
+                tmp_path / "ck", single_device_mesh(), num_hosts=2,
+                host=0)
+
+    def test_placed_full_load_on_mesh(self, tmp_path):
+        _, params = self._model()
+        pipeline.save_dense_expert_params(tmp_path / "ck", params)
+        placed, _, _ = pipeline.load_dense_expert_params(
+            tmp_path / "ck", single_device_mesh())
+        assert _tree_equal(placed, params)
+
+    def test_wrong_checkpoint_kinds_are_loud(self, saved, tmp_path):
+        _, artifact, d, _ = saved
+        with pytest.raises(ValueError, match="dense_moe"):
+            pipeline.load_dense_expert_params(d)
+        with pytest.raises(ValueError, match="no dense expert stacks"):
+            pipeline.save_dense_expert_params(tmp_path / "bad",
+                                              artifact.params)
 
 
 # ----------------------------------------------------- multi-device (slow)
