@@ -15,7 +15,7 @@ import jax
 from benchmarks.common import Table, calib_tokens, trained_smoke_mixtral
 from repro.config import CompressionConfig
 from repro.configs import get_config
-from repro.core import mc as mc_lib
+from repro.core import pipeline as pipeline_lib
 from repro.launch.dryrun import synthetic_meta
 from repro.core.pmq import dense_expert_bytes, packed_expert_bytes
 
@@ -63,8 +63,12 @@ def measured_speed() -> Table:
     calib = calib_tokens(cfg)
     ccfg = CompressionConfig(enabled=True, target_bits=2.5, group_size=32,
                              odp_enabled=True)
-    qparams, runtime, report = mc_lib.compress(model, params, ccfg, calib,
-                                               layout="uniform")
+    record = pipeline_lib.calibrate(model, params, calib,
+                                    bit_choices=tuple(ccfg.bit_choices),
+                                    group_size=ccfg.group_size)
+    cplan = pipeline_lib.plan(record, ccfg, layout="uniform")
+    art = pipeline_lib.apply(model, params, cplan, record)
+    qparams, runtime, report = art.params, art.runtime, art.report
     t = Table("serve throughput (smoke Mixtral, CPU; relative — Tab. 13)",
               ["config", "decode_tok_s", "prefill_s", "act_param_reduction"])
     rng = np.random.RandomState(0)

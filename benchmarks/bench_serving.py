@@ -34,7 +34,8 @@ from repro.config import CompressionConfig
 from repro.configs import get_config
 from repro.core import pipeline
 from repro.models.model_registry import build_model
-from repro.serve.engine import Request, ServeEngine, StaticServeEngine
+from repro.serve.engine import (GenerationOptions, Request, ServeEngine,
+                                StaticServeEngine)
 
 
 def _model(seed: int = 0):
@@ -57,14 +58,13 @@ def mixed_workload(cfg, n_requests: int = 16, seed: int = 0):
         mn = int(rng.choice([4, 6, 8, 12, 16, 24, 32, 48]))
         reqs.append(Request(
             uid=i, prompt=rng.randint(1, cfg.vocab_size, pl).astype(np.int32),
-            max_new_tokens=mn))
+            options=GenerationOptions(max_new_tokens=mn)))
     return reqs
 
 
 def _run(engine, reqs):
     # warmup pass compiles prefill/decode so timing measures steady state
-    warm = [Request(uid=-1 - i, prompt=r.prompt.copy(),
-                    max_new_tokens=r.max_new_tokens)
+    warm = [Request(uid=-1 - i, prompt=r.prompt.copy(), options=r.opts)
             for i, r in enumerate(reqs)]
     engine.run(warm)
     engine.stats.__init__()
@@ -81,11 +81,11 @@ def run(verbose: bool = True, n_requests: int = 16, batch_size: int = 4):
 
     static = StaticServeEngine(model, params, batch_size=batch_size)
     _, wall_s, lat_s = _run(
-        static, [Request(r.uid, r.prompt, r.max_new_tokens) for r in reqs])
+        static, [Request(r.uid, r.prompt, options=r.opts) for r in reqs])
 
     cont = ServeEngine(model, params, batch_size=batch_size)
     _, wall_c, lat_c = _run(
-        cont, [Request(r.uid, r.prompt, r.max_new_tokens) for r in reqs])
+        cont, [Request(r.uid, r.prompt, options=r.opts) for r in reqs])
 
     t = Table("serving: static lockstep vs continuous batching "
               f"({n_requests} reqs, pool {batch_size}, mixed lengths)",
@@ -124,11 +124,11 @@ def cold_start(verbose: bool = True, out_dir=None):
     rng = np.random.RandomState(8)
     req = Request(uid=0,
                   prompt=rng.randint(1, cfg.vocab_size, 16).astype(np.int32),
-                  max_new_tokens=1)
+                  options=GenerationOptions(max_new_tokens=1))
 
     def first_token(artifact):
         eng = ServeEngine.from_artifact(model, artifact, batch_size=1)
-        return eng.run([Request(req.uid, req.prompt, req.max_new_tokens)])
+        return eng.run([Request(req.uid, req.prompt, options=req.opts)])
 
     # inline: everything between "node boots" and "first token out"
     t0 = time.time()
@@ -215,12 +215,12 @@ def quant_decode(verbose: bool = True, gate: bool = False,
     reqs = mixed_workload(cfg, n_requests)
     dense_eng = ServeEngine(model, params, batch_size=batch_size)
     _, _, _ = _run(dense_eng,
-                   [Request(r.uid, r.prompt, r.max_new_tokens)
+                   [Request(r.uid, r.prompt, options=r.opts)
                     for r in reqs])
     quant_eng = ServeEngine.from_artifact(model, artifact,
                                           batch_size=batch_size)
     _, _, _ = _run(quant_eng,
-                   [Request(r.uid, r.prompt, r.max_new_tokens)
+                   [Request(r.uid, r.prompt, options=r.opts)
                     for r in reqs])
     tok_dense = dense_eng.stats.decode_tokens_per_s
     tok_quant = quant_eng.stats.decode_tokens_per_s
@@ -265,14 +265,97 @@ def quant_decode(verbose: bool = True, gate: bool = False,
     return result
 
 
+def odp_decode(verbose: bool = True, gate: bool = False,
+               n_requests: int = 8, batch_size: int = 4):
+    """Online Dynamic Pruning on the decode hot path: ``odp='off'`` vs the
+    artifact-default threshold on the same engine.
+
+    Reports (a) activated expert-params per token — counted from the MoE
+    dispatch's live capacity rows (``aux['active_rows']``), so the number
+    is machine-independent: pruned slots become dead rows the fused kernel
+    skips; (b) decode tokens/s of the continuous engine at each knob
+    setting (CPU ref path: relative only). With ``gate=True`` asserts the
+    default threshold cuts activated expert-params/token by >= 10%.
+    """
+    import jax.numpy as jnp
+
+    cfg, model, params = _model()
+    artifact = _compress_smoke(
+        cfg, model, params,
+        CompressionConfig(enabled=True, target_bits=2.5, group_size=32,
+                          odp_enabled=True))
+    odp = artifact.runtime.odp
+
+    # (a) live dispatch rows per MoE layer, off vs calibrated threshold
+    rng = np.random.RandomState(3)
+    toks = jax.numpy.asarray(
+        rng.randint(1, cfg.vocab_size, (4, 48)).astype(np.int32))
+    per_expert_row = 3 * cfg.d_model * cfg.moe_d_ff      # w1, w3, w2
+
+    def act_params_per_token(thr: float) -> float:
+        _, _, aux = model.forward(
+            artifact.params, toks, scan=False, collect_aux=True,
+            mc=artifact.runtime,
+            odp_threshold=jnp.full((toks.shape[0],), thr, jnp.float32))
+        rows = sum(int(np.asarray(a["active_rows"]).sum())
+                   for a in aux["per_layer"] if "active_rows" in a)
+        return rows * per_expert_row / toks.size
+
+    act_off = act_params_per_token(0.0)
+    act_on = act_params_per_token(float(odp.threshold))
+    reduction = 1.0 - act_on / max(act_off, 1e-9)
+
+    # (b) decode throughput at each knob setting, same mixed workload
+    def reqs(knob):
+        return [Request(uid=r.uid, prompt=r.prompt.copy(),
+                        options=GenerationOptions(
+                            max_new_tokens=r.opts.max_new_tokens, odp=knob))
+                for r in mixed_workload(cfg, n_requests)]
+
+    eng = ServeEngine.from_artifact(model, artifact, batch_size=batch_size)
+    _run(eng, reqs("off"))
+    tok_off = eng.stats.decode_tokens_per_s
+    _run(eng, reqs("default"))
+    tok_on = eng.stats.decode_tokens_per_s
+
+    t = Table("ODP decode: off vs artifact-default threshold "
+              f"(mu={odp.threshold:.3f}, plan prune rate "
+              f"{artifact.report.odp_prune_rate:.1%})",
+              ["metric", "odp=off", "odp=default"])
+    t.add("activated params/token", f"{act_off / 1e6:.2f}M",
+          f"{act_on / 1e6:.2f}M")
+    t.add("decode tok/s (CPU ref path)", round(tok_off, 1),
+          round(tok_on, 1))
+    if verbose:
+        print(t.render())
+        print(f"\nactivated expert-param reduction: {reduction:.1%}")
+    result = {
+        "activated_params_per_token": {"off": act_off, "default": act_on},
+        "activated_param_reduction": reduction,
+        "decode_tok_s": {"off": tok_off, "default": tok_on},
+        "odp_threshold": float(odp.threshold),
+        "plan_prune_rate": artifact.report.odp_prune_rate,
+    }
+    if gate:
+        assert reduction >= 0.10, (
+            f"odp-decode gate: the artifact-default threshold must cut "
+            f"activated expert-params/token by >= 10% vs odp='off', got "
+            f"{reduction:.1%}")
+        if verbose:
+            print(f"odp-decode gate OK: {reduction:.1%} >= 10%")
+    return result
+
+
 def bench_all(verbose: bool = True):
     """Aggregate payload for ``benchmarks.run --json`` (BENCH_serving)."""
     speedup = run(verbose=verbose)
     ttft = cold_start(verbose=verbose)
     qd = quant_decode(verbose=verbose, gate=True)
+    od = odp_decode(verbose=verbose)
     return {"continuous_vs_static_decode_speedup": speedup,
             "artifact_cold_start_speedup": ttft,
-            "quant_decode": qd}
+            "quant_decode": qd,
+            "odp_decode": od}
 
 
 if __name__ == "__main__":

@@ -1,7 +1,6 @@
 """Compress once, offline: calibrate -> plan -> apply -> saved artifact.
 
-Demonstrates the staged API's two payoffs over the old one-shot
-``mc.compress()``:
+Demonstrates the staged API's two payoffs over a one-shot pipeline:
 
 * **re-planning is free** — a second ``plan()`` at a different bit budget
   reuses the record's cached eps probe tables (no forward pass, no RTN

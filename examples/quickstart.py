@@ -3,9 +3,9 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Shows the staged public API: build model -> ``calibrate`` -> ``plan`` ->
-``apply`` -> forward with the artifact's MCRuntime. (The old one-shot
-``mc.compress(model, params, ccfg, calib)`` still works as a shim that
-composes these stages.)
+``apply`` -> forward with the artifact's MCRuntime. (The same surface is
+re-exported at the package root: ``repro.calibrate`` / ``repro.plan`` /
+``repro.apply`` / ``repro.CompressedArtifact``.)
 """
 import jax
 import jax.numpy as jnp

@@ -20,10 +20,11 @@ from repro.configs import get_config
 from repro.core import pipeline
 from repro.data.pipeline import calibration_batch
 from repro.models.model_registry import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (EngineConfig, GenerationOptions, Request,
+                                ServeEngine)
 
 
-def _requests(cfg, n=6, seed=0):
+def _requests(cfg, n=6, seed=0, odp="default"):
     rng = np.random.RandomState(seed)
     reqs = []
     for i in range(n):   # mixed lengths: continuous batching's home turf
@@ -31,7 +32,7 @@ def _requests(cfg, n=6, seed=0):
         mn = int(rng.randint(3, 13))
         reqs.append(Request(
             uid=i, prompt=rng.randint(1, cfg.vocab_size, pl).astype(np.int32),
-            max_new_tokens=mn))
+            options=GenerationOptions(max_new_tokens=mn, odp=odp)))
     return reqs
 
 
@@ -60,7 +61,8 @@ def main():
               f"scan_safe={loaded.scan_safe}")
 
         reqs = _requests(cfg)
-        engine = ServeEngine.from_artifact(model, loaded, batch_size=3)
+        engine = ServeEngine.from_artifact(
+            model, loaded, config=EngineConfig(batch_size=3))
         results = engine.run(reqs)
 
         # the loaded artifact must match the in-memory one token-for-token
@@ -69,6 +71,13 @@ def main():
         for r, rr in zip(results, ref):
             np.testing.assert_array_equal(r.tokens, rr.tokens)
         print("token-for-token identical to the inline compression path ✓")
+
+        # the per-request ODP knob: 'off' disables pruning for a request,
+        # an explicit ratio prunes harder — all inside ONE compiled decode
+        # step (the knob is a jit input, not a retrace)
+        mixed = _requests(cfg, odp="off")[:2] + _requests(cfg, odp=0.5)[2:]
+        engine.run(mixed)
+        print("mixed per-request odp knobs served without retracing ✓")
 
         print("\nsample generations (token ids):")
         for r in results[:3]:

@@ -5,6 +5,56 @@ mixture compression (PMQ mixed-precision expert quantization + ODP online
 dynamic pruning) as first-class features of a multi-pod training/serving
 stack, together with the substrate (model zoo, distribution, checkpointing,
 fault tolerance, data, serving) required to run it at scale.
+
+The package root re-exports the staged compression API and the serving
+engines (lazily — importing ``repro`` stays cheap)::
+
+    import repro
+
+    record = repro.calibrate(model, params, calib_tokens, ...)
+    plan = repro.plan(record, ccfg)
+    artifact = repro.apply(model, params, plan, record)
+    artifact.save(path)
+
+    eng = repro.ServeEngine.from_artifact(
+        model, repro.CompressedArtifact.load(path))
+    results = eng.run([repro.Request(uid=0, prompt=toks,
+                                     options=repro.GenerationOptions(
+                                         max_new_tokens=32, odp=0.3))])
 """
 
 __version__ = "1.0.0"
+
+# name -> defining module, resolved lazily (PEP 562) so that importing the
+# package root does not pull in jax/the model stack until first use
+_EXPORTS = {
+    "calibrate": "repro.core.pipeline",
+    "plan": "repro.core.pipeline",
+    "apply": "repro.core.pipeline",
+    "CalibrationRecord": "repro.core.pipeline",
+    "CompressionPlan": "repro.core.pipeline",
+    "CompressedArtifact": "repro.core.pipeline",
+    "MCReport": "repro.core.pipeline",
+    "ServeEngine": "repro.serve.engine",
+    "StaticServeEngine": "repro.serve.engine",
+    "EngineConfig": "repro.serve.engine",
+    "Request": "repro.serve.engine",
+    "GenerationOptions": "repro.serve.engine",
+    "Result": "repro.serve.engine",
+}
+
+__all__ = ["__version__", *_EXPORTS]
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value          # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(__all__)

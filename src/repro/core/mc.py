@@ -1,66 +1,27 @@
 """MC — the Mixture Compressor facade (PMQ + ODP, paper Sec. 3).
 
-.. deprecated::
-    The monolithic ``compress()`` is a thin shim over the staged API in
-    :mod:`repro.core.pipeline` — ``calibrate -> plan -> apply`` — which
-    separates the one-time calibration pass from cheap re-planning and the
-    heavy GPTQ stage, and yields a serializable
-    :class:`~repro.core.pipeline.CompressedArtifact` that serving loads
-    directly (no calibration data at deploy time). New code should call the
-    stages; ``compress()`` remains for existing callers and composes them.
+The monolithic ``compress()`` / ``quantized_forward()`` shims are **gone**
+(they were deprecated for a full release): use the staged API in
+:mod:`repro.core.pipeline` — ``calibrate -> plan -> apply`` — which
+separates the one-time calibration pass from cheap re-planning and the
+heavy GPTQ stage, and yields a serializable
+:class:`~repro.core.pipeline.CompressedArtifact` that serving loads
+directly (no calibration data at deploy time)::
+
+    record = pipeline.calibrate(model, params, calib_tokens,
+                                bit_choices=ccfg.bit_choices,
+                                group_size=ccfg.group_size)
+    plan = pipeline.plan(record, ccfg)
+    artifact = pipeline.apply(model, params, plan, record)
+    logits, _, _ = model.forward(params, tokens, mc=artifact.runtime)
+
+The names below remain importable from here for existing callers; the same
+surface is also re-exported at the package root (``repro.calibrate`` etc.).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
-
-import jax
-
-from repro.config import CompressionConfig
-from repro.core import pipeline as pipeline_lib
-# Re-exported for backwards compatibility — these now live in pipeline.py.
+# Re-exported for backwards compatibility — these live in pipeline.py.
 from repro.core.pipeline import (  # noqa: F401
     CalibrationRecord, CompressedArtifact, CompressionPlan, MCReport,
-    _get_moe_params, capture_forward as calibrate_forward)
-from repro.models.layers.moe import MoEQuantMeta, OdpRuntime
-from repro.models.transformer import DecoderModel, MCRuntime
-
-
-def compress(model: DecoderModel, params: Dict, ccfg: CompressionConfig,
-             calib_tokens: jax.Array, *, layout: str = "per_layer",
-             **fw_kwargs) -> Tuple[Dict, MCRuntime, MCReport]:
-    """Full MC pipeline in one call (deprecated shim).
-
-    Equivalent to::
-
-        record = pipeline.calibrate(model, params, calib_tokens,
-                                    bit_choices=ccfg.bit_choices,
-                                    group_size=ccfg.group_size)
-        plan = pipeline.plan(record, ccfg, layout=layout)
-        artifact = pipeline.apply(model, params, plan, record)
-
-    but discards the record (so every call re-calibrates) and the artifact
-    wrapper (so nothing can be saved). Prefer the staged API.
-    """
-    record = pipeline_lib.calibrate(
-        model, params, calib_tokens, bit_choices=tuple(ccfg.bit_choices),
-        group_size=ccfg.group_size, **fw_kwargs)
-    plan = pipeline_lib.plan(record, ccfg, layout=layout)
-    artifact = pipeline_lib.apply(model, params, plan, record)
-    return artifact.params, artifact.runtime, artifact.report
-
-
-def quantized_forward(model: DecoderModel, params: Dict,
-                      metas: List[MoEQuantMeta], tokens: jax.Array, *,
-                      odp: Optional[OdpRuntime] = None, **fw_kwargs):
-    """Deprecated: heterogeneous per-layer metas now ride on
-    ``MCRuntime.layer_metas`` and ``model.forward`` consumes both layouts
-    uniformly — call ``model.forward(params, tokens, mc=artifact.runtime)``.
-    """
-    if "moe_layers" not in params:
-        # metas turned out identical -> apply() stacked them; plain path
-        return model.forward(params, tokens, scan=False,
-                             mc=MCRuntime(odp=odp, quant_meta=metas[0]),
-                             **fw_kwargs)
-    return model.forward(params, tokens,
-                         mc=MCRuntime(odp=odp, layer_metas=tuple(metas)),
-                         **fw_kwargs)
+    _get_moe_params, apply, calibrate, plan,
+    capture_forward as calibrate_forward)

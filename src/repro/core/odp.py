@@ -33,13 +33,17 @@ class OdpConfig:
     enabled: bool = True
 
 
-def prune_mask(topk_weights: jax.Array, threshold: float,
+def prune_mask(topk_weights: jax.Array, threshold,
                protected: Optional[jax.Array] = None) -> jax.Array:
     """Which (token, slot) routing assignments survive ODP.
 
     Args:
       topk_weights: (..., k) routing weights, slot 0 = primary (descending).
-      threshold: mu of Eq. 5.
+      threshold: mu of Eq. 5 — a Python float (static), or a traced array
+        broadcastable against the token axes (e.g. per-token ``(...,)`` or
+        per-row) for the serving engines' per-request knob. A threshold of
+        0.0 keeps every slot (``ratio >= 0`` always), which is how
+        ``odp='off'`` rides through the jitted decode without retracing.
       protected: (...,) bool — protected tokens keep every slot.
 
     Returns (..., k) bool keep-mask. Slot 0 is always kept; slots >= 1 are
@@ -51,6 +55,8 @@ def prune_mask(topk_weights: jax.Array, threshold: float,
         return jnp.ones_like(topk_weights, dtype=bool)
     w0 = jnp.maximum(topk_weights[..., :1], 1e-9)
     ratio = topk_weights / w0
+    if isinstance(threshold, jax.Array) and threshold.ndim == ratio.ndim - 1:
+        threshold = threshold[..., None]
     keep = ratio >= threshold
     keep = keep.at[..., 0].set(True)
     if protected is not None:
@@ -60,11 +66,17 @@ def prune_mask(topk_weights: jax.Array, threshold: float,
 
 def apply_pruning(topk_weights: jax.Array, keep: jax.Array,
                   renormalize: bool = True) -> jax.Array:
-    """Zero pruned slots; optionally renormalize the survivors to sum 1."""
+    """Zero pruned slots; optionally renormalize the survivors to sum 1.
+
+    Tokens whose slots all survive pass through **bit-exactly** — the
+    renormalizing division is bypassed for them, so an all-keep mask (the
+    per-request ``odp='off'`` path) cannot introduce float drift against a
+    run with ODP absent entirely.
+    """
     w = jnp.where(keep, topk_weights, 0.0)
     if renormalize:
         denom = jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
-        w = w / denom
+        w = jnp.where(keep.all(-1, keepdims=True), topk_weights, w / denom)
     return w
 
 
@@ -104,9 +116,19 @@ def token_importance_from_running(tl1: jax.Array, attn_recv: jax.Array,
     return tl1 * attn_recv / jnp.maximum(counts, 1.0)
 
 
-def pruned_fraction(keep: jax.Array, topk: int) -> jax.Array:
-    """Fraction of expert activations removed (the paper's ~15% metric)."""
-    return 1.0 - keep.sum() / (np.prod(keep.shape[:-1]) * topk)
+def pruned_fraction(keep: jax.Array, topk: int,
+                    valid: Optional[jax.Array] = None) -> jax.Array:
+    """Fraction of expert activations removed (the paper's ~15% metric).
+
+    valid: optional (...,) bool — restrict the accounting to live tokens
+    (serving pools carry idle-slot / pad rows whose keep-masks are
+    meaningless and would dilute the metric).
+    """
+    if valid is None:
+        return 1.0 - keep.sum() / (np.prod(keep.shape[:-1]) * topk)
+    v = valid.astype(keep.dtype)
+    kept = (keep & valid[..., None]).sum()
+    return 1.0 - kept / jnp.maximum(v.sum() * topk, 1)
 
 
 def calibrate(ratio_samples: np.ndarray, protect_ratio: float = 0.02
@@ -138,7 +160,53 @@ def plan_odp(ratio_samples: np.ndarray, top_k: int, *,
         "capacity_scale": capacity_scale_from_prune_rate(
             rate, top_k, protect_ratio),
         "protect_ratio": float(protect_ratio),
+        "ratio_quantiles": ratio_quantiles(ratios),
     }
+
+
+#: quantile grid resolution for the calibration ratio table (33 points at
+#: levels 0, 1/32, ..., 1) — enough for per-request prune-ratio -> threshold
+#: interpolation to land within a couple percent of the requested rate.
+QUANTILE_POINTS = 33
+
+
+def ratio_quantiles(ratio_samples: np.ndarray,
+                    points: int = QUANTILE_POINTS) -> list:
+    """Evenly-spaced quantiles of the calibration w_s/w_0 ratio samples.
+
+    The table rides in the plan / artifact (``OdpRuntime.ratio_quantiles``)
+    so serving can map a requested prune *ratio* to a threshold mu without
+    the calibration set: pruning slot s of a token iff w_s/w_0 < mu removes
+    a ``P(ratio < mu)`` fraction of secondary slots, so the quantile
+    function **is** the ratio->threshold map.
+    """
+    levels = np.linspace(0.0, 1.0, points)
+    return [float(v) for v in np.quantile(np.asarray(ratio_samples), levels)]
+
+
+def threshold_for_prune_ratio(quantiles, prune_ratio: float,
+                              top_k: int) -> float:
+    """Invert the calibration ratio distribution: the threshold mu at which
+    ODP prunes ``prune_ratio`` of all routed expert slots.
+
+    ``prune_ratio`` counts pruned slots among **all** top-k slots (the
+    paper's ~15% metric); only the k-1 secondary slots are prunable, so the
+    quantile level is ``prune_ratio * k / (k - 1)``, clipped to [0, 1].
+    """
+    if not quantiles:
+        raise ValueError(
+            "no calibration ratio_quantiles available — the artifact "
+            "predates the quantile table (re-plan with odp_enabled=True) "
+            "so an explicit prune ratio cannot be mapped to a threshold; "
+            "use odp='default' or odp='off'")
+    if not 0.0 <= prune_ratio <= 1.0:
+        raise ValueError(f"prune ratio must be in [0, 1], got {prune_ratio}")
+    if top_k < 2:
+        return 0.0
+    q = np.asarray(quantiles, np.float64)
+    levels = np.linspace(0.0, 1.0, q.size)
+    level = min(prune_ratio * top_k / (top_k - 1), 1.0)
+    return float(np.interp(level, levels, q))
 
 
 def capacity_scale_from_prune_rate(prune_rate: float, top_k: int,

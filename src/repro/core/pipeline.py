@@ -28,8 +28,10 @@ This module exposes each stage as a first-class step so compression runs
    host only the dense groups plus the expert block it owns and place
    packed planes expert-parallel on a device mesh.
 
-The legacy one-shot ``repro.core.mc.compress`` remains as a thin shim that
-composes these stages.
+These stages (plus the serving engines) are re-exported at the package
+root — ``repro.calibrate`` / ``repro.plan`` / ``repro.apply`` /
+``repro.CompressedArtifact``. The legacy one-shot ``repro.core.mc``
+shims are gone; that module is now re-exports only.
 """
 from __future__ import annotations
 
@@ -1177,7 +1179,8 @@ def _odp_to_dict(odp: Optional[OdpRuntime]) -> Optional[Dict]:
         return None
     return {"threshold": odp.threshold, "protect_ratio": odp.protect_ratio,
             "capacity_scale": odp.capacity_scale, "enabled": odp.enabled,
-            "importance_metric": odp.importance_metric}
+            "importance_metric": odp.importance_metric,
+            "ratio_quantiles": list(odp.ratio_quantiles)}
 
 
 def _odp_from_dict(d: Optional[Dict]) -> Optional[OdpRuntime]:
@@ -1188,7 +1191,8 @@ def _odp_from_dict(d: Optional[Dict]) -> Optional[OdpRuntime]:
         protect_ratio=float(d["protect_ratio"]),
         capacity_scale=float(d.get("capacity_scale", 1.0)),
         enabled=bool(d.get("enabled", True)),
-        importance_metric=d.get("importance_metric", "eq6"))
+        importance_metric=d.get("importance_metric", "eq6"),
+        ratio_quantiles=tuple(d.get("ratio_quantiles") or ()))
 
 
 def _report_from_plan(cplan: CompressionPlan, params: Dict,

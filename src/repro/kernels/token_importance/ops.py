@@ -9,6 +9,32 @@ from repro.kernels.token_importance.kernel import token_importance_pallas
 from repro.kernels.token_importance.ref import token_importance_ref
 
 
+@jax.jit
+def token_importance_decode(x, received, counts=None):
+    """Decode-path Eq. 6: importance of the *current* step's tokens.
+
+    x: (B, S, D) hidden states entering the MoE block; received: (B, S)
+    attention each of the same tokens received this step (query-aligned —
+    ``apply_attention`` gathers the cached-branch column sums back at the
+    slots the queries wrote); counts: optional (S,) / (B, S) number of
+    queries that could have attended each token (the Eq. 6 denominator —
+    mask-aware callers pass suffix counts of *valid* queries so pad tails
+    do not deflate live tokens' scores). Returns (B, S) float32.
+
+    This is the serving-side sibling of :func:`token_importance`: the
+    square (H, L, L) Pallas kernel serves calibration/prefill shapes,
+    while decode steps have already reduced the probabilities to column
+    sums inside ``attend`` — what remains is an elementwise combine that
+    XLA fuses into the surrounding dispatch, so no dedicated kernel is
+    warranted (S is 1 in the decode hot path).
+    """
+    tl1 = jnp.sum(jnp.abs(x.astype(jnp.float32)), axis=-1)      # (B, S)
+    imp = tl1 * received.astype(jnp.float32)
+    if counts is not None:
+        imp = imp / jnp.maximum(counts.astype(jnp.float32), 1.0)
+    return imp
+
+
 @functools.partial(jax.jit, static_argnames=("impl",))
 def token_importance(probs, t, *, impl="auto"):
     """probs: (H, L, L) or (B, H, L, L); t matching (L, d) / (B, L, d)."""

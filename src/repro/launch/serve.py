@@ -48,8 +48,21 @@ from repro.configs import get_config
 from repro.core import pipeline as pipeline_lib
 from repro.data.pipeline import calibration_batch
 from repro.models.model_registry import build_model
-from repro.serve.engine import Request, ServeEngine, StaticServeEngine
+from repro.serve.engine import (EngineConfig, GenerationOptions, Request,
+                                ServeEngine, StaticServeEngine)
 from repro.sharding import partitioning as part_lib
+
+
+def _parse_odp(spec: str):
+    """``'off'`` / ``'default'`` / a prune ratio like ``'0.3'``."""
+    if spec in ("off", "default"):
+        return spec
+    try:
+        return float(spec)
+    except ValueError:
+        raise SystemExit(
+            f"--odp expects 'off', 'default' or a prune ratio in [0, 1), "
+            f"got {spec!r}")
 
 
 def _parse_mesh(spec: str):
@@ -96,14 +109,15 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
           num_hosts: Optional[int] = None, host: Optional[int] = None,
           coordinator: Optional[str] = None,
           num_processes: Optional[int] = None,
-          process_id: Optional[int] = None):
+          process_id: Optional[int] = None, odp="default"):
     if coordinator is not None:
         init_distributed(coordinator, num_processes, process_id)
     cfg = get_config(arch, smoke=smoke)
     model = build_model(cfg)
     engine_cls = StaticServeEngine if static else ServeEngine
     mesh = _parse_mesh(mesh_spec) if mesh_spec else None
-    eng_kw = dict(batch_size=batch_size, mesh=mesh, ep_dispatch=ep_dispatch)
+    eng_cfg = EngineConfig(batch_size=batch_size, mesh=mesh,
+                           ep_dispatch=ep_dispatch, odp=odp)
     artifact = None
     report = None
 
@@ -162,7 +176,7 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
               f"{time.time() - t0:.2f}s: avg_bits={report.avg_bits:.2f} "
               f"layout={artifact.plan.layout} "
               f"scan_safe={artifact.scan_safe}")
-        eng = engine_cls.from_artifact(model, artifact, **eng_kw)
+        eng = engine_cls.from_artifact(model, artifact, config=eng_cfg)
     else:
         params = model.init(jax.random.PRNGKey(0))
         if mc:
@@ -192,9 +206,9 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
                       f"{time.time() - t0:.2f}s (boot it later with "
                       f"--artifact {save_artifact})")
         if artifact is not None:
-            eng = engine_cls.from_artifact(model, artifact, **eng_kw)
+            eng = engine_cls.from_artifact(model, artifact, config=eng_cfg)
         else:       # uncompressed serving
-            eng = engine_cls(model, params, **eng_kw)
+            eng = engine_cls(model, params, config=eng_cfg)
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -205,7 +219,7 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
             mn = int(rng.randint(max(2, max_new // 4), max_new + 1))
         reqs.append(Request(
             uid=i, prompt=rng.randint(1, cfg.vocab_size, pl).astype(np.int32),
-            max_new_tokens=mn))
+            options=GenerationOptions(max_new_tokens=mn)))
     results = eng.run(reqs)
     s = eng.stats
     print(f"[serve] {s.requests} requests, {s.generated_tokens} tokens, "
@@ -253,6 +267,13 @@ def main():
                          "one shard of a multi-process engine")
     ap.add_argument("--processes", type=int, default=None, metavar="N")
     ap.add_argument("--process-id", type=int, default=None, metavar="I")
+    ap.add_argument("--odp", default="default", metavar="KNOB",
+                    help="engine-wide Online Dynamic Pruning knob: "
+                         "'default' (the artifact's calibrated threshold), "
+                         "'off' (no pruning — token-identical to serving "
+                         "without ODP), or an explicit prune ratio in "
+                         "[0, 1) mapped via the calibration quantiles; "
+                         "requests can still override per request")
     args = ap.parse_args()
     if args.host is not None and args.num_hosts is None:
         ap.error("--host requires --num-hosts")
@@ -267,7 +288,7 @@ def main():
           mesh_spec=args.mesh, ep_dispatch=args.ep,
           num_hosts=args.num_hosts, host=args.host,
           coordinator=args.coordinator, num_processes=args.processes,
-          process_id=args.process_id)
+          process_id=args.process_id, odp=_parse_odp(args.odp))
 
 
 if __name__ == "__main__":

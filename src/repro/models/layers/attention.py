@@ -137,11 +137,15 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array, *,
            softcap: float = 0.0, need_colsums: bool = False,
            kscale: Optional[jax.Array] = None,
            vscale: Optional[jax.Array] = None,
+           q_valid: Optional[jax.Array] = None,
            ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Core GQA attention.
 
     q: (B, Sq, Nq, H); k/v: (B, Sk, Nkv, H); mask: (B?, Sq, Sk) bool.
     kscale/vscale: (B, Sk, Nkv) — int8-KV scales folded into scores/probs.
+    q_valid: optional (B, Sq) bool — invalid (pad / idle-slot) queries are
+    excluded from the colsums reduction, so ODP importance only counts
+    attention received from *live* tokens; attention outputs are unaffected.
     Returns (out (B, Sq, Nq, H), colsums (B, Sk) or None) — colsums are the
     mean-over-heads attention each key position received (for ODP Eq. 6).
     """
@@ -172,7 +176,10 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array, *,
     out = jnp.einsum("bkgqs,bskh->bqkgh", pv.astype(qg.dtype), vv)
     colsums = None
     if need_colsums:
-        colsums = probs.sum(axis=(1, 2, 3)) / nq      # (B, Sk)
+        cp = probs
+        if q_valid is not None:
+            cp = cp * q_valid.astype(cp.dtype)[:, None, None, :, None]
+        colsums = cp.sum(axis=(1, 2, 3)) / nq         # (B, Sk)
     return out.reshape(b, sq, nq, h), colsums
 
 
@@ -186,11 +193,14 @@ def apply_attention(
     kv_src: Optional[jax.Array] = None,
     cache: Optional[KVCache] = None,
     need_colsums: bool = False,
+    q_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[KVCache], Optional[jax.Array]]:
     """One attention layer.
 
     positions: (Sq,) absolute positions of the query tokens (decode: the
     single new position). kv_src: encoder states for cross-attention.
+    q_valid: optional (B, Sq) bool live-token mask, forwarded to the
+    colsums reduction only (see :func:`attend`).
     Returns (output, updated cache, attention-received colsums).
     """
     b, sq, d = x.shape
@@ -237,6 +247,7 @@ def apply_attention(
 
     new_cache = None
     kscale = vscale = None
+    q_slots = None              # cache slots this step's queries wrote
     if cache is not None and kv_src is None:
         cap = cache.k.shape[1]
         s_new = k.shape[1]
@@ -281,6 +292,7 @@ def apply_attention(
                 kscale, vscale = cks, cvs
             new_cache = KVCache(ck, cv, cpos, cache.ring, cks, cvs)
             k, v = ck, cv
+            q_slots = idx
             k_valid = cpos >= 0
             mask = build_mask(positions, cpos, causal=causal, window=window,
                               chunk=chunk, prefix_len=prefix_len,
@@ -303,6 +315,7 @@ def apply_attention(
                 kscale, vscale = cks, cvs
             new_cache = KVCache(ck, cv, cpos, cache.ring, cks, cvs)
             k, v = ck, cv
+            q_slots = positions % cap if cache.ring else positions  # (Sq,)
             k_pos = cpos
             k_valid = cpos >= 0
             mask = build_mask(positions, k_pos, causal=causal, window=window,
@@ -316,7 +329,16 @@ def apply_attention(
 
     out, colsums = attend(q, k, v, mask, softcap=cfg.attn_logit_softcap,
                           need_colsums=need_colsums, kscale=kscale,
-                          vscale=vscale)
+                          vscale=vscale, q_valid=q_valid)
+    if colsums is not None and q_slots is not None:
+        # cached branches attend over the whole cache, so colsums span its
+        # capacity — gather at the slots this step's queries wrote, giving
+        # the (B, Sq) attention received by the *current* tokens (the
+        # decode-time Eq. 6 numerator, query-aligned like the no-cache path)
+        if q_slots.ndim == 1:
+            colsums = jnp.take(colsums, q_slots, axis=1)
+        else:
+            colsums = jnp.take_along_axis(colsums, q_slots, axis=1)
     out = out.reshape(b, sq, nq * h) @ p["wo"].astype(dt)
     if "bo" in p:
         out = out + p["bo"].astype(dt)

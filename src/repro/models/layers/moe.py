@@ -89,6 +89,11 @@ class OdpRuntime:
     ``eq6`` (paper: l1 x attention received), ``l1`` (attention-free archs,
     DESIGN.md §4), or the Tab. 11 ablation baselines ``kurtosis`` /
     ``variance`` / ``mean``.
+
+    ratio_quantiles: quantile table of the calibration w_s/w_0 ratio
+    distribution (``core.odp.ratio_quantiles``) — lets serving map a
+    per-request prune *ratio* to a threshold mu without the calibration
+    set. Empty for artifacts planned before the table existed.
     """
 
     threshold: float
@@ -96,6 +101,7 @@ class OdpRuntime:
     capacity_scale: float = 1.0
     enabled: bool = True
     importance_metric: str = "eq6"
+    ratio_quantiles: Tuple[float, ...] = ()
 
 
 def init_moe(key, cfg: ModelConfig) -> Params:
@@ -213,6 +219,7 @@ def apply_moe(
     quant_meta: Optional[MoEQuantMeta] = None,
     capacity_scale: float = 1.0,
     token_mask: Optional[jax.Array] = None,
+    odp_threshold: Optional[jax.Array] = None,
     quant_path: str = "fused",
 ) -> Tuple[jax.Array, Dict]:
     """MoE layer forward. x: (B, S, D) -> (y, aux).
@@ -223,8 +230,19 @@ def apply_moe(
     token_mask: optional (B, S) bool — False tokens (padding, inactive
     decode slots) are withheld from dispatch so they never consume expert
     capacity; their output rows are zero.
+
+    odp_threshold: optional (B,) float32 — per-row **dynamic** ODP
+    threshold, a traced value (the serving engines' per-request knob rides
+    through jit here; changing it never retraces). Overrides
+    ``odp.threshold``; a row of 0.0 keeps every slot, bit-identically to
+    ODP being off. In dynamic mode the static ``odp.capacity_scale`` is NOT
+    applied (rows opting out must never lose capacity) — the saving shows
+    up as dead capacity rows the fused kernel skips instead.
     """
     b, s, d = x.shape
+    if odp_threshold is not None:
+        odp_threshold = jnp.broadcast_to(
+            odp_threshold.reshape(b, -1), (b, s))
     decode_regroup = s == 1 and b > 1
     if decode_regroup:
         x = x.reshape(1, b, d)
@@ -232,6 +250,8 @@ def apply_moe(
             token_importance = token_importance.reshape(1, b)
         if token_mask is not None:
             token_mask = token_mask.reshape(1, b)
+        if odp_threshold is not None:
+            odp_threshold = odp_threshold.reshape(1, b)
         b, s = 1, b
 
     x32 = x.astype(jnp.float32)
@@ -249,11 +269,15 @@ def apply_moe(
             protected = odp_lib.protect_tokens(token_importance,
                                                odp.protect_ratio,
                                                valid=token_mask)
-        keep = odp_lib.prune_mask(topw, odp.threshold, protected)
+        thr = (odp_threshold if odp_threshold is not None
+               else odp.threshold)
+        keep = odp_lib.prune_mask(topw, thr, protected)
         topw = odp_lib.apply_pruning(topw, keep)
         aux["odp_keep"] = keep
-        aux["odp_pruned_frac"] = odp_lib.pruned_fraction(keep, cfg.top_k)
-        eff_scale = eff_scale * odp.capacity_scale
+        aux["odp_pruned_frac"] = odp_lib.pruned_fraction(
+            keep, cfg.top_k, valid=token_mask)
+        if odp_threshold is None:
+            eff_scale = eff_scale * odp.capacity_scale
 
     e = cfg.num_experts
     cap = expert_capacity(cfg, s, eff_scale)
@@ -272,6 +296,9 @@ def apply_moe(
     w_sel = jnp.take_along_axis(full_w.transpose(0, 2, 1), gidx, -1)
     valid = (gscore > 0) & (w_sel > 0)
     w_sel = jnp.where(valid, w_sel, 0.0)
+    # live dispatched rows per expert — the activated-expert-params metric
+    # (ODP pruning shrinks these; the fused kernel skips the dead rows)
+    aux["active_rows"] = valid.sum(-1).astype(jnp.int32)        # (B,E)
 
     if quant_meta is not None:
         counts = valid.sum(-1).astype(jnp.int32)                 # (B,E)

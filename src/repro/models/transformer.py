@@ -25,6 +25,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.kernels.token_importance import ops as ti_ops
 from repro.models.layers import attention as attn_lib
 from repro.models.layers import core as core_lib
 from repro.models.layers import moe as moe_lib
@@ -135,11 +136,16 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
                 mc: Optional[MCRuntime] = None,
                 capture: bool = False,
                 token_mask: Optional[jax.Array] = None,
+                odp_threshold: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Any, Dict]:
     """One residual block. Returns (x, new_cache, aux).
 
     capture=True additionally stores the FFN/MoE input activations in aux
     (PMQ calibration taps them for Hessians and eps_{i,j}).
+
+    odp_threshold: optional (B,) traced per-row ODP threshold (the serving
+    engines' per-request knob) — forwarded to the MoE dispatch, where it
+    overrides the runtime's static ``odp.threshold``.
     """
     aux: Dict = {}
     if kind in ("mamba1", "mamba2"):
@@ -155,7 +161,7 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
     attn_out, new_cache, colsums = attn_lib.apply_attention(
         p["attn"], h, cfg=cfg, positions=positions, window=window,
         chunk=chunk, prefix_len=prefix_len, cache=cache,
-        need_colsums=need_colsums)
+        need_colsums=need_colsums, q_valid=token_mask)
     if cfg.pre_post_norm:
         attn_out = core_lib.apply_norm(p["post_attn"], attn_out, cfg)
 
@@ -179,14 +185,23 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
             tl1 = jnp.sum(jnp.abs(x.astype(jnp.float32)), -1)
             token_imp = tl1 * colsums / denom
         else:
-            # decode: importance of the *current* tokens from running stats
-            tl1 = jnp.sum(jnp.abs(x.astype(jnp.float32)), -1)
-            token_imp = tl1 * colsums[:, -1:] if colsums.shape[-1] == 1 \
-                else tl1
+            # cached branches (serving prefill + decode): colsums come
+            # back query-aligned (B, S) — attention the *current* tokens
+            # received this step. The denominator counts the queries that
+            # could attend each token; with a token_mask, only valid
+            # queries count (suffix sums), so a padded prefill tail can
+            # neither feed nor deflate live tokens' importance.
+            if token_mask is not None:
+                tm = token_mask.astype(jnp.float32)
+                counts = jnp.cumsum(tm[:, ::-1], axis=1)[:, ::-1]
+            else:
+                counts = (seq - jnp.arange(seq)).astype(jnp.float32)
+            token_imp = ti_ops.token_importance_decode(x, colsums,
+                                                       counts=counts)
 
     if cfg.use_parallel_residual:
         ffn_out, moe_aux = _apply_ffn(p, h, cfg, kind, mc, token_imp,
-                                      token_mask)
+                                      token_mask, odp_threshold)
         if cfg.pre_post_norm:
             ffn_out = core_lib.apply_norm(p["post_ffn"], ffn_out, cfg)
         aux.update(moe_aux)
@@ -198,7 +213,7 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
     x = x + attn_out
     h2 = core_lib.apply_norm(p["norm_ffn"], x, cfg)
     ffn_out, moe_aux = _apply_ffn(p, h2, cfg, kind, mc, token_imp,
-                                  token_mask)
+                                  token_mask, odp_threshold)
     if cfg.pre_post_norm:
         ffn_out = core_lib.apply_norm(p["post_ffn"], ffn_out, cfg)
     aux.update(moe_aux)
@@ -208,7 +223,8 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
     return x + ffn_out, new_cache, aux
 
 
-def _apply_ffn(p, h, cfg, kind, mc, token_imp, token_mask=None):
+def _apply_ffn(p, h, cfg, kind, mc, token_imp, token_mask=None,
+               odp_threshold=None):
     if kind == "moe":
         ep = shctx.ep_mesh()
         ep_size = dict(ep.shape).get("data", 0) if ep is not None else 0
@@ -230,14 +246,16 @@ def _apply_ffn(p, h, cfg, kind, mc, token_imp, token_mask=None):
                     p["ffn"], h, cfg, ep,
                     quant_meta=qm if quant_ok else None,
                     odp=mc.odp if mc else None,
-                    token_importance=token_imp, token_mask=token_mask)
+                    token_importance=token_imp, token_mask=token_mask,
+                    odp_threshold=odp_threshold)
                 return y, {}
         return moe_lib.apply_moe(
             p["ffn"], h, cfg,
             odp=mc.odp if mc else None,
             token_importance=token_imp,
             quant_meta=qm,
-            token_mask=token_mask)
+            token_mask=token_mask,
+            odp_threshold=odp_threshold)
     return core_lib.apply_mlp(p["ffn"], h, cfg), {}
 
 
@@ -318,6 +336,7 @@ class DecoderModel:
                 moe_layer_params: Optional[list] = None,
                 moe_layer_metas: Optional[list] = None,
                 token_mask: Optional[jax.Array] = None,
+                odp_threshold: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Any, Dict]:
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
@@ -350,7 +369,7 @@ class DecoderModel:
                 p_l, x, cfg, self.slot_kinds[slot], positions=positions,
                 window=w, chunk=c, prefix_len=prefix_len, cache=cache_l,
                 mc=mc, capture=capture and not use_scan,
-                token_mask=token_mask)
+                token_mask=token_mask, odp_threshold=odp_threshold)
 
         aux_all: Dict = {}
         if use_scan:
@@ -412,7 +431,8 @@ class DecoderModel:
                         window=win_arr[step, slot],
                         chunk=chunk_arr[step, slot],
                         prefix_len=prefix_len, cache=cache_l, mc=mc_l,
-                        capture=capture, token_mask=token_mask)
+                        capture=capture, token_mask=token_mask,
+                        odp_threshold=odp_threshold)
                     ncs.append(nc)
                     if collect_aux:
                         per_layer_aux.append(aux)
@@ -467,14 +487,17 @@ class DecoderModel:
 
     def decode_step(self, params, caches, tokens, pos, *,
                     mc: Optional[MCRuntime] = None,
-                    token_mask: Optional[jax.Array] = None):
+                    token_mask: Optional[jax.Array] = None,
+                    odp_threshold: Optional[jax.Array] = None):
         """tokens: (B, 1); pos: scalar int32 position shared by the batch,
         or (B,) int32 per-row positions (continuous-batching slots).
         token_mask: optional (B, 1) bool — masked rows (inactive slots)
-        are withheld from MoE dispatch so they can't consume capacity."""
+        are withheld from MoE dispatch so they can't consume capacity.
+        odp_threshold: optional (B,) float32 traced per-row ODP threshold
+        (the engines' per-request quality/latency knob; 0.0 = keep all)."""
         logits, new_caches, _ = self.forward(
             params, tokens, caches=caches, start_pos=pos, mc=mc,
-            token_mask=token_mask)
+            token_mask=token_mask, odp_threshold=odp_threshold)
         return logits, new_caches
 
 

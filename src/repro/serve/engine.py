@@ -31,28 +31,140 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.core import odp as odp_lib
 from repro.models.layers import attention as attn_lib
 from repro.models.layers.attention import GLOBAL_WINDOW
 from repro.models.transformer import DecoderModel, MCRuntime
 from repro.sharding import context as shctx
 from repro.sharding import partitioning as part_lib
 
+#: the ODP knob's string settings; any float in [0, 1) is also accepted
+#: (an explicit prune ratio, mapped through the artifact's calibration
+#: ratio-quantile table).
+ODP_KNOBS = ("off", "default")
+
+
+@dataclass(frozen=True)
+class GenerationOptions:
+    """Per-request generation options (frozen, hashable).
+
+    odp is the per-request **quality/latency knob** for Online Dynamic
+    Pruning:
+
+    * ``"default"`` — the artifact's calibrated threshold (a no-op when
+      the engine's runtime carries no ODP calibration);
+    * ``"off"`` — no pruning; token-for-token identical to serving the
+      same artifact with ODP absent;
+    * a float prune ratio in ``[0, 1)`` — prune that fraction of routed
+      expert slots, mapped to a threshold via the artifact's calibration
+      ratio quantiles (:func:`repro.core.odp.threshold_for_prune_ratio`).
+
+    The knob is a **jit input** to the engines' decode step (a per-slot
+    threshold array), so mixing settings across requests never retraces.
+    """
+
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    odp: Union[str, float] = "default"
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if isinstance(self.odp, str):
+            if self.odp not in ODP_KNOBS:
+                raise ValueError(
+                    f"odp must be one of {ODP_KNOBS} or a prune ratio in "
+                    f"[0, 1); got {self.odp!r}")
+        elif not 0.0 <= float(self.odp) < 1.0:
+            raise ValueError(
+                f"an explicit odp prune ratio must lie in [0, 1); got "
+                f"{self.odp!r}")
+
 
 @dataclass
 class Request:
+    """A generation request.
+
+    Pass per-request settings via ``options``. ``max_new_tokens`` /
+    ``eos_id`` remain as **deprecated aliases** (one release; they will be
+    removed next release) and may not be combined with ``options``.
+    """
+
     uid: int
     prompt: np.ndarray           # (L,) int32
-    max_new_tokens: int = 16
+    max_new_tokens: Optional[int] = None      # deprecated -> options
+    eos_id: Optional[int] = None              # deprecated -> options
+    options: Optional[GenerationOptions] = None
+
+    def __post_init__(self):
+        if self.max_new_tokens is not None or self.eos_id is not None:
+            if self.options is not None:
+                raise ValueError(
+                    "pass either Request(options=...) or the deprecated "
+                    "max_new_tokens/eos_id fields, not both")
+            warnings.warn(
+                "Request(max_new_tokens=..., eos_id=...) is deprecated; "
+                "pass Request(options=GenerationOptions(...)). The loose "
+                "fields will be removed in the next release.",
+                DeprecationWarning, stacklevel=3)
+
+    @property
+    def opts(self) -> GenerationOptions:
+        """The effective options (deprecated aliases folded in)."""
+        if self.options is not None:
+            return self.options
+        return GenerationOptions(
+            max_new_tokens=(16 if self.max_new_tokens is None
+                            else self.max_new_tokens),
+            eos_id=self.eos_id)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """One shared keyword surface for both engines and ``from_artifact``.
+
+    ``odp`` is the engine-wide default for the per-request knob (same
+    semantics as :class:`GenerationOptions.odp`); requests override it.
+    ``max_seq_len`` only applies to the continuous engine (the lockstep
+    engine sizes its cache per batch). Unknown keywords raise ``TypeError``
+    naming the valid fields — nothing is silently swallowed.
+    """
+
+    batch_size: int = 4
+    pad_id: int = 0
+    greedy: bool = True
     eos_id: Optional[int] = None
+    max_seq_len: Optional[int] = None
+    mesh: Any = None
+    ep_dispatch: bool = False
+    odp: Union[str, float] = "default"
+
+
+def _merge_config(config: Optional[EngineConfig],
+                  kwargs: Dict) -> EngineConfig:
+    """Fold loose keyword args into an EngineConfig, loudly rejecting
+    unknown names (the old ``**kwargs``-swallowing surface is gone)."""
+    cfg = config if config is not None else EngineConfig()
+    if kwargs:
+        fields = {f.name for f in dataclasses.fields(EngineConfig)}
+        unknown = sorted(set(kwargs) - fields)
+        if unknown:
+            raise TypeError(
+                f"unknown engine option(s) {unknown}; valid EngineConfig "
+                f"fields: {sorted(fields)}")
+        cfg = dataclasses.replace(cfg, **kwargs)
+    return cfg
 
 
 @dataclass
@@ -112,7 +224,7 @@ class _ArtifactBoot:
 
     @classmethod
     def from_artifact(cls, model: DecoderModel, artifact, mesh=None,
-                      **kwargs):
+                      config: Optional[EngineConfig] = None, **kwargs):
         """Build an engine from a saved artifact.
 
         Args:
@@ -134,10 +246,18 @@ class _ArtifactBoot:
                 the single-device engine. An artifact already placed on an
                 equal mesh (same axes, shape, and device order — identity
                 not required) is not re-placed.
-            **kwargs: forwarded to the engine constructor
-                (``batch_size``, ``eos_id``, ``ep_dispatch``, ...).
+            config: an :class:`EngineConfig`; ``mesh`` (above) overrides
+                its mesh field when given.
+            **kwargs: individual :class:`EngineConfig` fields
+                (``batch_size``, ``eos_id``, ``ep_dispatch``, ``odp``,
+                ...) overriding ``config``; unknown names raise
+                ``TypeError``.
         """
         from repro.core import pipeline as pl
+        config = _merge_config(config, kwargs)
+        if mesh is not None:
+            config = dataclasses.replace(config, mesh=mesh)
+        mesh = config.mesh
         fp = model.cfg.fingerprint()
         art_fp = getattr(artifact, "model_fingerprint", None)
         if art_fp and art_fp != fp:
@@ -200,7 +320,54 @@ class _ArtifactBoot:
                 params = pl.distributed_params(params, mesh, stats)
             else:
                 params = pl.place_params(params, mesh)
-        return cls(model, params, mc=artifact.runtime, mesh=mesh, **kwargs)
+        return cls(model, params, mc=artifact.runtime, config=config)
+
+    def _init_odp(self, mc, default_knob) -> None:
+        """Boot the ODP knob: remember the runtime (if any, enabled) and
+        resolve the engine-wide default knob to its threshold once."""
+        odp = getattr(mc, "odp", None) if mc is not None else None
+        self._odp_rt = odp if (odp is not None and odp.enabled) else None
+        # when a runtime carries ODP the threshold becomes a jit *input*
+        # of the engine's prefill/decode steps (per-slot float32), so any
+        # mix of per-request settings shares one compiled step
+        self._odp_dynamic = self._odp_rt is not None
+        self._odp_default_thr = self._resolve_odp(default_knob)
+
+    def _resolve_odp(self, knob: Union[str, float]) -> float:
+        """Map an ODP knob to the per-slot threshold fed into the jitted
+        steps. 0.0 keeps every routed slot (= pruning off, bit-exact)."""
+        odp = self._odp_rt
+        if isinstance(knob, str):
+            if knob == "off":
+                return 0.0
+            if knob == "default":
+                return float(odp.threshold) if odp is not None else 0.0
+            raise ValueError(
+                f"odp knob must be one of {ODP_KNOBS} or a prune ratio in "
+                f"[0, 1); got {knob!r}")
+        ratio = float(knob)
+        if not 0.0 <= ratio < 1.0:
+            raise ValueError(
+                f"an explicit odp prune ratio must lie in [0, 1); got "
+                f"{knob!r}")
+        if ratio == 0.0:
+            return 0.0
+        if odp is None:
+            raise ValueError(
+                "an explicit odp prune ratio needs an ODP-enabled runtime "
+                "(an artifact planned with odp_enabled=True); this "
+                "engine's runtime carries none — use odp='off' or "
+                "odp='default'")
+        return float(odp_lib.threshold_for_prune_ratio(
+            odp.ratio_quantiles, ratio, self.cfg.top_k))
+
+    def _slot_threshold(self, opts: GenerationOptions) -> float:
+        """Per-request threshold: ``"default"`` inherits the engine-wide
+        knob (``EngineConfig.odp``, itself defaulting to the artifact's
+        calibrated threshold); anything else resolves directly."""
+        if opts.odp == "default":
+            return self._odp_default_thr
+        return self._resolve_odp(opts.odp)
 
     def _init_mesh(self, mesh, ep_dispatch: bool, mc) -> None:
         self.mesh = mesh
@@ -280,6 +447,7 @@ class _ArtifactBoot:
 @dataclass
 class _Slot:
     req: Request
+    opts: GenerationOptions           # resolved once at admission
     req_idx: int                      # position in the submitted batch
     prefill_s: float
     admitted_t: float
@@ -299,26 +467,28 @@ class ServeEngine(_ArtifactBoot):
     clobber live ring entries / pollute the recurrence.
     """
 
-    def __init__(self, model: DecoderModel, params, *, batch_size: int = 4,
-                 mc: Optional[MCRuntime] = None, pad_id: int = 0,
-                 greedy: bool = True, eos_id: Optional[int] = None,
-                 max_seq_len: Optional[int] = None, mesh=None,
-                 ep_dispatch: bool = False):
+    def __init__(self, model: DecoderModel, params, *,
+                 mc: Optional[MCRuntime] = None,
+                 config: Optional[EngineConfig] = None, **kwargs):
+        config = _merge_config(config, kwargs)
+        self.config = config
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
-        self.num_slots = self.batch_size = batch_size
+        self.num_slots = self.batch_size = config.batch_size
         self.mc = mc
-        self._init_mesh(mesh, ep_dispatch, mc)
-        self.pad_id = pad_id
-        if not greedy:
+        self._init_mesh(config.mesh, config.ep_dispatch, mc)
+        self.pad_id = config.pad_id
+        if not config.greedy:
             raise NotImplementedError("sampling is not implemented; "
                                       "only greedy decoding is supported")
-        self.greedy = greedy
-        self.eos_id = eos_id
-        self.max_seq_len = max_seq_len
+        self.greedy = config.greedy
+        self.eos_id = config.eos_id
+        self.max_seq_len = config.max_seq_len
+        self._init_odp(mc, config.odp)
         self.stats = EngineStats()
         self._scratch = None
+        pad_id = config.pad_id
 
         kinds = getattr(model, "kinds", None)
         all_global = (kinds is not None
@@ -327,13 +497,16 @@ class ServeEngine(_ArtifactBoot):
         self._bucketed_prefill = (all_global
                                   and self.cfg.family not in ("ssm", "hybrid"))
         _rep = self._init_host_io()
+        dyn = self._odp_dynamic
 
-        def _prefill(params, tokens, length, caches):
+        def _prefill(params, tokens, length, caches, thr):
             kw = {}
             if self._bucketed_prefill:
                 # pad-tail tokens must not consume MoE expert capacity
                 kw["token_mask"] = (
                     jnp.arange(tokens.shape[1])[None, :] < length)
+            if dyn:
+                kw["odp_threshold"] = thr        # (1,) per-request knob
             logits, new_caches, _ = model.forward(
                 params, tokens, caches=caches, mc=self.mc, **kw)
             last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
@@ -353,12 +526,13 @@ class ServeEngine(_ArtifactBoot):
                     (0, slot) + (0,) * (pl.ndim - 2)),
                 pool, one)
 
-        def _decode(params, caches, cur, pos, active):
+        def _decode(params, caches, cur, pos, active, thr):
             # inactive slots are masked out of MoE dispatch so their junk
             # tokens never consume expert capacity from live requests
+            kw = {"odp_threshold": thr} if dyn else {}   # (B,) per slot
             logits, new_caches = model.decode_step(
                 params, caches, cur[:, None], pos, mc=self.mc,
-                token_mask=active[:, None])
+                token_mask=active[:, None], **kw)
             nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
             nxt = _rep(jnp.where(active, nxt, jnp.int32(pad_id)))
             return nxt, new_caches
@@ -371,7 +545,7 @@ class ServeEngine(_ArtifactBoot):
 
     # ---- sizing ----
     def _capacity_for(self, requests: List[Request]) -> int:
-        need = max(len(r.prompt) + r.max_new_tokens for r in requests)
+        need = max(len(r.prompt) + r.opts.max_new_tokens for r in requests)
         if self.max_seq_len is not None:
             # hard memory bound AND stable compiled shapes across runs
             if need > self.max_seq_len:
@@ -407,6 +581,9 @@ class ServeEngine(_ArtifactBoot):
         pos = np.zeros(b, np.int32)           # its absolute position
         gen: List[List[int]] = [[] for _ in range(b)]
         slots: List[Optional[_Slot]] = [None] * b
+        # per-slot ODP threshold — a jit input of _decode, so requests at
+        # different knob settings coexist in one compiled step
+        thr = np.full(b, self._odp_default_thr, np.float32)
         done: Dict[int, Result] = {}          # keyed by submission index
 
         def finish(s: int, reason: str):
@@ -427,12 +604,12 @@ class ServeEngine(_ArtifactBoot):
                 while not active[s] and pending:
                     idx, req = pending.popleft()
                     caches = self._admit(req, idx, s, capacity, caches,
-                                         active, cur, pos, gen, slots)
-                    eos = req.eos_id if req.eos_id is not None else \
-                        self.eos_id
+                                         active, cur, pos, gen, slots, thr)
+                    ro = slots[s].opts
+                    eos = ro.eos_id if ro.eos_id is not None else self.eos_id
                     if eos is not None and gen[s] and gen[s][0] == eos:
                         finish(s, "eos")
-                    elif req.max_new_tokens <= 1:
+                    elif ro.max_new_tokens <= 1:
                         finish(s, "length")
             if not active.any():
                 continue
@@ -440,7 +617,7 @@ class ServeEngine(_ArtifactBoot):
             t0 = time.time()
             nxt, caches = self._decode(
                 self.params, caches, self._arr(cur), self._arr(pos),
-                self._arr(active))
+                self._arr(active), self._arr(thr))
             nxt = _fetch(nxt)
             self.stats.decode_s += time.time() - t0
             self.stats.decode_steps += 1
@@ -454,25 +631,27 @@ class ServeEngine(_ArtifactBoot):
                 sl.n_new += 1
                 cur[s] = tok
                 pos[s] += 1
-                eos = sl.req.eos_id if sl.req.eos_id is not None else \
+                eos = sl.opts.eos_id if sl.opts.eos_id is not None else \
                     self.eos_id
                 if eos is not None and tok == eos:
                     finish(s, "eos")
-                elif sl.n_new >= sl.req.max_new_tokens:
+                elif sl.n_new >= sl.opts.max_new_tokens:
                     finish(s, "length")
 
         return [done[i] for i in range(len(requests))]
 
     def _admit(self, req: Request, idx: int, s: int, capacity: int, caches,
-               active, cur, pos, gen, slots):
+               active, cur, pos, gen, slots, thr):
+        opts = req.opts
         prompt = np.asarray(req.prompt, np.int32)
         ln = len(prompt)
-        assert ln + req.max_new_tokens <= capacity, (
+        assert ln + opts.max_new_tokens <= capacity, (
             f"request {req.uid}: prompt {ln} + max_new "
-            f"{req.max_new_tokens} exceeds pool capacity {capacity}")
+            f"{opts.max_new_tokens} exceeds pool capacity {capacity}")
         lb = self._bucket(ln, capacity)
         toks = np.full((1, lb), self.pad_id, np.int32)
         toks[0, :ln] = prompt
+        thr[s] = self._slot_threshold(opts)
 
         t0 = time.time()
         # reuse one batch-1 scratch cache across admissions when the model
@@ -483,7 +662,8 @@ class ServeEngine(_ArtifactBoot):
         if one is None or not self._bucketed_prefill:
             one = self._host_caches(self.model.init_caches(1, capacity))
         nxt, one = self._prefill(self.params, self._arr(toks),
-                                 self._scalar(ln), one)
+                                 self._scalar(ln), one,
+                                 self._arr(thr[s:s + 1]))
         if self._bucketed_prefill:
             self._scratch = one
         caches = self._insert(caches, one, self._scalar(s))
@@ -495,8 +675,8 @@ class ServeEngine(_ArtifactBoot):
         cur[s] = first
         pos[s] = ln                       # first generated token's position
         gen[s] = [first]
-        slots[s] = _Slot(req=req, req_idx=idx, prefill_s=prefill_s,
-                         admitted_t=t0)
+        slots[s] = _Slot(req=req, opts=opts, req_idx=idx,
+                         prefill_s=prefill_s, admitted_t=t0)
         return caches
 
 
@@ -522,34 +702,39 @@ class StaticServeEngine(_ArtifactBoot):
     lockstep loop cannot retire them early; that waste is the point).
     """
 
-    def __init__(self, model: DecoderModel, params, *, batch_size: int = 4,
-                 mc: Optional[MCRuntime] = None, pad_id: int = 0,
-                 greedy: bool = True, eos_id: Optional[int] = None,
-                 mesh=None, ep_dispatch: bool = False):
-        if not greedy:
+    def __init__(self, model: DecoderModel, params, *,
+                 mc: Optional[MCRuntime] = None,
+                 config: Optional[EngineConfig] = None, **kwargs):
+        config = _merge_config(config, kwargs)
+        if not config.greedy:
             raise NotImplementedError("sampling is not implemented; "
                                       "only greedy decoding is supported")
+        self.config = config
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
-        self.batch_size = batch_size
+        self.batch_size = config.batch_size
         self.mc = mc
-        self._init_mesh(mesh, ep_dispatch, mc)
-        self.pad_id = pad_id
-        self.greedy = greedy
-        self.eos_id = eos_id
+        self._init_mesh(config.mesh, config.ep_dispatch, mc)
+        self.pad_id = config.pad_id
+        self.greedy = config.greedy
+        self.eos_id = config.eos_id
+        self._init_odp(mc, config.odp)
         self.stats = EngineStats()
 
         _rep = self._init_host_io()
+        dyn = self._odp_dynamic
 
-        def _prefill(params, tokens, caches):
+        def _prefill(params, tokens, caches, thr):
+            kw = {"odp_threshold": thr} if dyn else {}   # (B,) per row
             logits, new_caches, _ = model.forward(
-                params, tokens, caches=caches, mc=self.mc)
+                params, tokens, caches=caches, mc=self.mc, **kw)
             return _rep(logits[:, -1]), new_caches
 
-        def _decode(params, caches, tokens, pos):
+        def _decode(params, caches, tokens, pos, thr):
+            kw = {"odp_threshold": thr} if dyn else {}
             logits, new_caches = model.decode_step(params, caches, tokens,
-                                                   pos, mc=self.mc)
+                                                   pos, mc=self.mc, **kw)
             return _rep(logits[:, -1]), new_caches
 
         self._prefill = jax.jit(_prefill)
@@ -582,7 +767,10 @@ class StaticServeEngine(_ArtifactBoot):
     def _run_batch(self, requests: List[Request]) -> List[Result]:
         b = len(requests)
         tokens, lmax = self._make_batch(requests)
-        max_new = max(r.max_new_tokens for r in requests)
+        opts = [r.opts for r in requests]
+        max_new = max(o.max_new_tokens for o in opts)
+        thr = self._arr(np.array([self._slot_threshold(o) for o in opts],
+                                 np.float32))
         caches = self._host_caches(self.model.init_caches(b, lmax + max_new))
 
         def _next(logits):
@@ -593,7 +781,7 @@ class StaticServeEngine(_ArtifactBoot):
             return jnp.argmax(logits, -1).astype(jnp.int32)
 
         t0 = time.time()
-        logits, caches = self._prefill(self.params, tokens, caches)
+        logits, caches = self._prefill(self.params, tokens, caches, thr)
         logits.block_until_ready()
         prefill_s = time.time() - t0
 
@@ -606,7 +794,7 @@ class StaticServeEngine(_ArtifactBoot):
                 break
             logits, caches = self._decode(
                 self.params, caches, cur[:, None],
-                self._scalar(lmax + t))
+                self._scalar(lmax + t), thr)
             cur = _next(logits)
         jax.block_until_ready(logits)
         decode_s = time.time() - t0
@@ -614,9 +802,10 @@ class StaticServeEngine(_ArtifactBoot):
         out = []
         useful = 0
         for i, r in enumerate(requests):
-            toks = generated[i, :r.max_new_tokens]
+            toks = generated[i, :opts[i].max_new_tokens]
             reason = "length"
-            eos = r.eos_id if r.eos_id is not None else self.eos_id
+            eos = opts[i].eos_id if opts[i].eos_id is not None \
+                else self.eos_id
             if eos is not None:
                 hits = np.nonzero(toks == eos)[0]
                 if hits.size:

@@ -187,10 +187,54 @@ def ep_slot_table(meta: MoEQuantMeta, dp: int) -> np.ndarray:
 
 
 # ------------------------------------------- shared routing/dispatch bodies
+def _protect_local(token_importance, token_mask, odp, t_l, shape, data_axis):
+    """Gather-path-equivalent token-protection quotas on a data shard.
+
+    :func:`~repro.core.odp.protect_tokens` budgets ``ceil(ratio * L)``
+    tokens per last-axis row. The gather path applies that per (b, s)
+    sequence row, and regroups decode (s == 1) into a single (1, b) pool
+    over all batch slots. Batch rows are shard-local under data
+    parallelism, so prefill protection stays local; the decode pool spans
+    shards, so it takes one (b_l,)-sized all_gather of importance/mask
+    before slicing the local verdicts back out. Keeping the grouping
+    identical makes the per-request ODP knob deployment-path-independent:
+    gather and EP dispatch prune the same tokens.
+    """
+    if shape is None:
+        return odp_lib.protect_tokens(
+            token_importance.reshape(t_l), odp.protect_ratio,
+            valid=(token_mask.reshape(t_l)
+                   if token_mask is not None else None))
+    b_l, s = shape
+    if s > 1 or data_axis is None:
+        prot = odp_lib.protect_tokens(
+            token_importance.reshape(b_l, s), odp.protect_ratio,
+            valid=(token_mask.reshape(b_l, s)
+                   if token_mask is not None else None))
+        return prot.reshape(t_l)
+    imp_g = jax.lax.all_gather(token_importance.reshape(b_l), data_axis,
+                               tiled=True)
+    val_g = (jax.lax.all_gather(token_mask.reshape(b_l), data_axis,
+                                tiled=True)
+             if token_mask is not None else None)
+    prot_g = odp_lib.protect_tokens(
+        imp_g[None, :], odp.protect_ratio,
+        valid=(val_g[None, :] if val_g is not None else None))[0]
+    start = jax.lax.axis_index(data_axis) * b_l
+    return jax.lax.dynamic_slice_in_dim(prot_g, start, b_l)
+
+
 def _route_local(x_flat, router, cfg: ModelConfig, odp: Optional[OdpRuntime],
-                 capacity_scale: float, token_importance, token_mask, t_l):
+                 capacity_scale: float, token_importance, token_mask, t_l,
+                 odp_threshold=None, shape=None, data_axis=None):
     """Per-shard routing with ODP pruning/protection; returns (topw, topi,
-    cap) — identical math to the gather path's router block."""
+    cap) — identical math to the gather path's router block.
+
+    odp_threshold: optional (t_l,) traced per-token threshold (the
+    engines' per-request knob); overrides ``odp.threshold`` and suppresses
+    the static capacity shrink, exactly as in the gather path.
+    shape: the local (b_l, s) layout; with ``data_axis`` it makes token
+    protection grouping-equivalent to the gather path (see below)."""
     logits = x_flat.astype(jnp.float32) @ router.astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     topw, topi = jax.lax.top_k(probs, cfg.top_k)
@@ -204,13 +248,14 @@ def _route_local(x_flat, router, cfg: ModelConfig, odp: Optional[OdpRuntime],
         if token_importance is not None and odp.protect_ratio > 0:
             # masked (pad / idle-slot) tokens must not steal protection
             # quota from live tokens — same rule as the gather path
-            protected = odp_lib.protect_tokens(
-                token_importance.reshape(t_l), odp.protect_ratio,
-                valid=(token_mask.reshape(t_l)
-                       if token_mask is not None else None))
-        keep = odp_lib.prune_mask(topw, odp.threshold, protected)
+            protected = _protect_local(token_importance, token_mask, odp,
+                                       t_l, shape, data_axis)
+        thr = (odp_threshold if odp_threshold is not None
+               else odp.threshold)
+        keep = odp_lib.prune_mask(topw, thr, protected)
         topw = odp_lib.apply_pruning(topw, keep)
-        eff_scale = eff_scale * odp.capacity_scale
+        if odp_threshold is None:
+            eff_scale = eff_scale * odp.capacity_scale
 
     cap = expert_capacity(cfg, t_l, eff_scale)
     return topw, topi, cap
@@ -222,8 +267,11 @@ def _fill_send(x_flat, topi, topw, e: int, cap: int, t_l: int, k: int,
 
     ``remap``: optional (E,) global-expert -> EP-slot table (quantized
     layout); identity for the dense contiguous sharding. Returns
-    ``(send (e*cap, D), slot, flat_w, tok_ids)`` — ``slot`` indexes both
-    the send buffer and the returned expert outputs.
+    ``(send (e*cap, D), slot, flat_w, tok_ids, sent)`` — ``slot`` indexes
+    both the send buffer and the returned expert outputs; ``sent`` is the
+    (e,) count of live rows this shard occupies in each destination
+    expert's quota (the per-source live-prefix lengths the quantized body's
+    row compaction consumes).
     """
     d = x_flat.shape[-1]
     flat_e = topi.reshape(-1)                                  # (T_l*k,)
@@ -239,11 +287,13 @@ def _fill_send(x_flat, topi, topw, e: int, cap: int, t_l: int, k: int,
                               axis=1)[:, 0]
     live = (pos < cap) & (flat_w > 0)
     slot = jnp.where(live, flat_e * cap + pos, e * cap)        # sentinel
+    sent = jax.ops.segment_sum(live.astype(jnp.int32), flat_e,
+                               num_segments=e)                 # (e,)
 
     send = jnp.zeros((e * cap + 1, d), x_flat.dtype)
     tok_ids = jnp.repeat(jnp.arange(t_l), k)
     send = send.at[slot].set(x_flat[tok_ids], mode="drop")
-    return send[:-1], slot, flat_w, tok_ids
+    return send[:-1], slot, flat_w, tok_ids, sent
 
 
 def _combine_local(ret, slot, flat_w, tok_ids, e: int, cap: int, t_l: int):
@@ -258,7 +308,8 @@ def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
                odp: Optional[OdpRuntime], capacity_scale: float,
                data_axis: str, model_axis: str,
                token_importance: Optional[jax.Array],
-               token_mask: Optional[jax.Array] = None):
+               token_mask: Optional[jax.Array] = None,
+               odp_threshold: Optional[jax.Array] = None):
     """Per-shard dense body. x_loc: (B_l, S, D); experts (E_l, D, F_l).
 
     token_mask: optional (B_l, S) bool — masked tokens (padding, inactive
@@ -272,9 +323,12 @@ def _local_moe(x_loc, router, w_in, w_gate, w_out, cfg: ModelConfig,
     t_l = b_l * s
 
     x_flat = x_loc.reshape(t_l, d)
+    thr = _flat_threshold(odp_threshold, b_l, s)
     topw, topi, cap = _route_local(x_flat, router, cfg, odp, capacity_scale,
-                                   token_importance, token_mask, t_l)
-    send, slot, flat_w, tok_ids = _fill_send(
+                                   token_importance, token_mask, t_l,
+                                   odp_threshold=thr, shape=(b_l, s),
+                                   data_axis=data_axis)
+    send, slot, flat_w, tok_ids, _ = _fill_send(
         x_flat, topi, topw, e, cap, t_l, cfg.top_k)
     send = send.reshape(dp, e_l, cap, d)
 
@@ -304,7 +358,8 @@ def _local_moe_quant(x_loc, router, experts_q, cfg: ModelConfig,
                      odp: Optional[OdpRuntime], capacity_scale: float,
                      data_axis: str,
                      token_importance: Optional[jax.Array],
-                     token_mask: Optional[jax.Array] = None):
+                     token_mask: Optional[jax.Array] = None,
+                     odp_threshold: Optional[jax.Array] = None):
     """Per-shard quantized body: packed per-class planes, fused FFN.
 
     ``experts_q`` holds this shard's slice of every class's plane stack
@@ -312,6 +367,14 @@ def _local_moe_quant(x_loc, router, experts_q, cfg: ModelConfig,
     slot table. The FFN width is not TP-sharded — planes replicate over
     ``model`` and no psum is needed (every model shard computes the full,
     identical output).
+
+    Received rows arrive (source, quota-slot)-ordered — each source fills
+    its own quota prefix, so live rows are NOT one contiguous prefix. A
+    static-shape compaction (exclusive-cumsum offsets over the per-source
+    live counts, exchanged alongside the tokens) packs them into one, so
+    the fused kernel's per-expert ``counts`` skip every dead capacity tile
+    — this is where ODP-pruned / idle-slot rows turn into saved FLOPs on
+    the expert-parallel path.
     """
     b_l, s, d = x_loc.shape
     e = cfg.num_experts
@@ -320,23 +383,42 @@ def _local_moe_quant(x_loc, router, experts_q, cfg: ModelConfig,
     t_l = b_l * s
 
     x_flat = x_loc.reshape(t_l, d)
+    thr = _flat_threshold(odp_threshold, b_l, s)
     topw, topi, cap = _route_local(x_flat, router, cfg, odp, capacity_scale,
-                                   token_importance, token_mask, t_l)
-    send, slot, flat_w, tok_ids = _fill_send(
+                                   token_importance, token_mask, t_l,
+                                   odp_threshold=thr, shape=(b_l, s),
+                                   data_axis=data_axis)
+    send, slot, flat_w, tok_ids, sent = _fill_send(
         x_flat, topi, topw, e, cap, t_l, cfg.top_k, remap=remap)
     send = send.reshape(dp, e_l, cap, d)
 
     recv = jax.lax.all_to_all(send, data_axis, split_axis=0, concat_axis=0,
                               tiled=False)
+    # cnt[src, e] = live rows source shard `src` sent local expert `e`
+    cnt = jax.lax.all_to_all(sent.reshape(dp, e_l), data_axis,
+                             split_axis=0, concat_axis=0, tiled=False)
     xe = recv.transpose(1, 0, 2, 3).reshape(e_l, dp * cap, d)
 
-    # EP slots are not count-prefix-ordered (each source shard fills its
-    # own quota prefix), so no dead-row skipping here: all dp*cap rows run.
-    # Empty slots are zero vectors and the gated FFN maps 0 -> 0.
-    counts = jnp.full((e_l,), dp * cap, jnp.int32)
-    ye = moe_ffn_quant(xe, experts_q, counts, meta=local_meta,
+    # compact each expert's rows to a live prefix: source `src`'s rows
+    # [0, cnt[src]) move to [off[src], off[src] + cnt[src]) — disjoint by
+    # construction; dead rows scatter to a sentinel row that is sliced off
+    cnt_e = cnt.T                                               # (e_l, dp)
+    off = jnp.cumsum(cnt_e, axis=1) - cnt_e                     # exclusive
+    jrow = jnp.arange(cap)[None, None, :]
+    live_rows = jrow < cnt_e[:, :, None]                        # (e_l,dp,cap)
+    dest = jnp.where(live_rows, off[:, :, None] + jrow,
+                     dp * cap).reshape(e_l, dp * cap)
+    comp = jax.vmap(
+        lambda rows, dd: jnp.zeros((dp * cap + 1, d), rows.dtype)
+        .at[dd].set(rows, mode="drop"))(xe, dest)[:, :-1]
+    counts = cnt_e.sum(1).astype(jnp.int32)         # (e_l,) live prefixes
+    ye = moe_ffn_quant(comp, experts_q, counts, meta=local_meta,
                        act=cfg.mlp_act,
                        out_dtype=jnp.float32).astype(x_loc.dtype)
+    # un-compact: gather each (source, quota-slot) row's output back; the
+    # appended zero row serves the dead slots
+    ye = jnp.concatenate([ye, jnp.zeros((e_l, 1, d), ye.dtype)], axis=1)
+    ye = jax.vmap(lambda rows, dd: rows[dd])(ye, dest)
 
     back = ye.reshape(e_l, dp, cap, d).transpose(1, 0, 2, 3)
     ret = jax.lax.all_to_all(back, data_axis, split_axis=0, concat_axis=0,
@@ -345,12 +427,21 @@ def _local_moe_quant(x_loc, router, experts_q, cfg: ModelConfig,
     return y.reshape(b_l, s, d).astype(x_loc.dtype)
 
 
+def _flat_threshold(odp_threshold, b_l: int, s: int):
+    """(B_l,) per-row dynamic threshold -> (B_l*S,) per-token, or None."""
+    if odp_threshold is None:
+        return None
+    return jnp.broadcast_to(odp_threshold.reshape(b_l, -1),
+                            (b_l, s)).reshape(b_l * s)
+
+
 def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
                         quant_meta: Optional[MoEQuantMeta] = None,
                         odp: Optional[OdpRuntime] = None,
                         capacity_scale: float = 1.0,
                         token_importance: Optional[jax.Array] = None,
                         token_mask: Optional[jax.Array] = None,
+                        odp_threshold: Optional[jax.Array] = None,
                         data_axis: str = "data",
                         model_axis: str = "model") -> jax.Array:
     """shard_map-wrapped MoE layer (dense or PMQ-quantized experts).
@@ -362,11 +453,15 @@ def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
     token_importance / token_mask are optional (B, S) arrays sharded with
     the batch (ODP protection scores / live-token mask — the serving
     engines thread the latter so idle decode slots never send tokens).
+    odp_threshold is the optional (B,) per-row dynamic ODP threshold
+    (traced — the per-request knob), sharded with the batch too.
     """
     extras, extra_specs, have = [], [], []
-    for extra in (token_importance, token_mask):
+    for extra, spec in ((token_importance, P(data_axis, None)),
+                        (token_mask, P(data_axis, None)),
+                        (odp_threshold, P(data_axis))):
         if extra is not None:
-            extra_specs.append(P(data_axis, None))
+            extra_specs.append(spec)
             extras.append(extra)
         have.append(extra is not None)
 
@@ -374,7 +469,8 @@ def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
         it = iter(rest)
         ti = next(it) if have[0] else None
         tm = next(it) if have[1] else None
-        return ti, tm
+        thr = next(it) if have[2] else None
+        return ti, tm, thr
 
     if quant_meta is not None:
         dp = dict(mesh.shape)[data_axis]
@@ -390,8 +486,9 @@ def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
         args = [x, p["router"], p["experts_q"]] + extras
 
         def body(xl, r, eq, *rest):
-            ti, tm = unpack_extras(rest)
-            return fn(xl, r, eq, token_importance=ti, token_mask=tm)
+            ti, tm, thr = unpack_extras(rest)
+            return fn(xl, r, eq, token_importance=ti, token_mask=tm,
+                      odp_threshold=thr)
 
         return shctx.shard_map(
             body, mesh, tuple(in_specs), P(data_axis, None, None))(*args)
@@ -407,8 +504,9 @@ def apply_moe_shard_map(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, *,
     args = [x, p["router"], p["w_in"], p["w_gate"], p["w_out"]] + extras
 
     def body(xl, r, wi, wg, wo, *rest):
-        ti, tm = unpack_extras(rest)
-        return fn(xl, r, wi, wg, wo, token_importance=ti, token_mask=tm)
+        ti, tm, thr = unpack_extras(rest)
+        return fn(xl, r, wi, wg, wo, token_importance=ti, token_mask=tm,
+                  odp_threshold=thr)
 
     return shctx.shard_map(
         body, mesh, tuple(in_specs), P(data_axis, None, None))(*args)

@@ -7,6 +7,8 @@ Validates the paper's qualitative claims at smoke scale:
 * ODP prunes a meaningful fraction of expert activations with bounded
   logit drift; token protection reduces the drift.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +18,7 @@ pytestmark = pytest.mark.slow
 
 from repro.config import CompressionConfig
 from repro.configs import get_config
-from repro.core import mc as mc_lib
+from repro.core import pipeline
 from repro.models.layers.moe import OdpRuntime
 from repro.models.transformer import DecoderModel, MCRuntime
 
@@ -38,7 +40,12 @@ def _compress(setup, target_bits, layout="uniform", group=32):
     cfg, model, params, tokens, _ = setup
     ccfg = CompressionConfig(enabled=True, target_bits=target_bits,
                              group_size=group, odp_enabled=True)
-    return mc_lib.compress(model, params, ccfg, tokens, layout=layout)
+    record = pipeline.calibrate(model, params, tokens,
+                                bit_choices=tuple(ccfg.bit_choices),
+                                group_size=ccfg.group_size)
+    cplan = pipeline.plan(record, ccfg, layout=layout)
+    art = pipeline.apply(model, params, cplan, record)
+    return art.params, art.runtime, art.report
 
 
 def _rel_err(a, b):
@@ -88,8 +95,8 @@ class TestPMQ:
     def test_per_layer_layout(self, setup):
         cfg, model, params, tokens, ref = setup
         qp, runtime, report = _compress(setup, 2.6, layout="per_layer")
-        logits, _, _ = mc_lib.quantized_forward(
-            model, qp, report.pmq.metas, tokens)
+        logits, _, _ = model.forward(
+            qp, tokens, mc=dataclasses.replace(runtime, odp=None))
         assert bool(jnp.isfinite(logits).all())
         assert _rel_err(logits, ref) < 0.5
 

@@ -163,27 +163,30 @@ class TestArtifactRoundtrip:
             pipeline.CompressedArtifact.load(tmp_path / "ck")
 
 
-class TestShimCompat:
-    def test_compress_shim_matches_staged(self, setup, uniform_artifact):
-        """mc.compress() must stay equivalent to composing the stages."""
-        cfg, model, params, calib, record = setup
-        qp, runtime, report = mc_lib.compress(model, params, _ccfg(2.5),
-                                              calib, layout="uniform")
-        art = uniform_artifact
-        assert runtime.quant_meta == art.runtime.quant_meta
-        assert report.avg_bits == art.report.avg_bits
-        l1, _, _ = model.forward(qp, calib, mc=runtime)
-        l2, _, _ = model.forward(art.params, calib, mc=art.runtime)
-        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+class TestPublicSurface:
+    def test_monolithic_shims_removed(self):
+        """compress()/quantized_forward() finished their deprecation
+        cycle — the facade now only re-exports the staged API."""
+        assert not hasattr(mc_lib, "compress")
+        assert not hasattr(mc_lib, "quantized_forward")
+        assert mc_lib.calibrate is pipeline.calibrate
+        assert mc_lib.plan is pipeline.plan
+        assert mc_lib.apply is pipeline.apply
 
-    def test_quantized_forward_shim(self, setup):
-        cfg, model, params, calib, record = setup
-        plan = _hetero_plan(record)
-        art = pipeline.apply(model, params, plan, record)
-        l1, _, _ = mc_lib.quantized_forward(model, art.params, art.metas,
-                                            calib, odp=art.runtime.odp)
-        l2, _, _ = model.forward(art.params, calib, mc=art.runtime)
-        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    def test_package_root_reexports(self):
+        import repro
+        assert repro.calibrate is pipeline.calibrate
+        assert repro.plan is pipeline.plan
+        assert repro.apply is pipeline.apply
+        assert repro.CompressedArtifact is pipeline.CompressedArtifact
+        from repro.serve import engine as engine_lib
+        assert repro.ServeEngine is engine_lib.ServeEngine
+        assert repro.StaticServeEngine is engine_lib.StaticServeEngine
+        assert repro.Request is engine_lib.Request
+        assert repro.GenerationOptions is engine_lib.GenerationOptions
+        assert repro.EngineConfig is engine_lib.EngineConfig
+        with pytest.raises(AttributeError):
+            repro.compress
 
 
 class TestUniformCounts:

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.config import CompressionConfig, TrainConfig
 from repro.configs import get_config
-from repro.core import mc as mc_lib
+from repro.core import pipeline
 from repro.data.pipeline import (SyntheticTextConfig, SyntheticTokenDataset,
                                  calibration_batch)
 from repro.models.model_registry import build_model
@@ -46,8 +46,12 @@ def test_full_mc_lifecycle():
     ccfg = CompressionConfig(enabled=True, target_bits=2.54, group_size=32,
                              odp_enabled=True)
     calib = jnp.asarray(calibration_batch(cfg, 4, 48))
-    qparams, runtime, report = mc_lib.compress(model, state.params, ccfg,
-                                               calib, layout="uniform")
+    record = pipeline.calibrate(model, state.params, calib,
+                                bit_choices=tuple(ccfg.bit_choices),
+                                group_size=ccfg.group_size)
+    cplan = pipeline.plan(record, ccfg, layout="uniform")
+    art = pipeline.apply(model, state.params, cplan, record)
+    qparams, runtime, report = art.params, art.runtime, art.report
     assert report.avg_bits <= 2.54 + 1e-9
     assert report.pmq.compression_ratio > 0.7
     assert runtime.quant_meta is not None
