@@ -1,0 +1,110 @@
+"""Fleet serving benchmark: availability, recovery, delta re-shard bytes.
+
+Boots a small fleet of block-owning replicas from one expert-major
+artifact and drives three scripted scenarios through the router:
+
+* ``baseline``   — no faults: every admitted request completes;
+* ``replica_kill`` — one replica dies mid-decode: the supervisor detects
+  the silence, its requests retry on the survivor, availability stays 1;
+* ``host_loss``  — one replica loses a host mid-decode: in-flight work is
+  drained, only the orphaned expert blocks are re-streamed (delta bytes
+  strictly below a full reload), and the drained requests resume
+  token-identically.
+
+The JSON (``BENCH_fleet.json`` via ``benchmarks.run --json``) carries the
+numbers CI gates on: per-scenario completed/admitted counts, recovery
+ticks, and delta vs full-reload bytes.
+"""
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.bench_artifact_loading import build_artifact
+from repro.runtime.supervisor import (FaultEvent, FaultInjector, KILL_HOST,
+                                      KILL_REPLICA)
+from repro.serve.engine import GenerationOptions, Request
+from repro.serve.fleet import ShardedReplica
+from repro.serve.router import FleetRouter, RouterConfig
+
+
+def _requests(vocab: int, n: int, max_new: int):
+    return [Request(uid=i,
+                    prompt=np.arange(1 + i, 9 + i, dtype=np.int32) % vocab,
+                    options=GenerationOptions(max_new_tokens=max_new,
+                                              odp="off"))
+            for i in range(n)]
+
+
+def _fleet(model, directory, hb, *, replicas, injector):
+    pool = [ShardedReplica(model, directory, replica_id=i, num_hosts=2,
+                           blocks_per_host=2, batch_size=2, odp="off")
+            for i in range(replicas)]
+    return FleetRouter(pool, hb, config=RouterConfig(),
+                       injector=injector), pool
+
+
+def run(verbose: bool = True, n_requests: int = 6, max_new: int = 6):
+    work = Path(tempfile.mkdtemp(prefix="bench_fleet_"))
+    model, _, _ = build_artifact(
+        work / "artifact", num_experts=16, d_model=32, moe_d_ff=384,
+        vocab_size=64, group_size=32, capacity_factor=32.0)
+    art_dir = work / "artifact"
+    vocab = model.cfg.vocab_size
+    out = {}
+
+    # -- baseline: no faults ------------------------------------------------
+    router, _ = _fleet(model, art_dir, work / "hb0", replicas=2,
+                       injector=FaultInjector([]))
+    rpt = router.run(_requests(vocab, n_requests, max_new))
+    baseline = {r.uid: [int(t) for t in r.tokens]
+                for r in rpt.completed.values()}
+    out["baseline"] = {
+        "admitted": rpt.admitted, "completed": len(rpt.completed),
+        "availability": rpt.availability, "ticks": rpt.ticks,
+    }
+
+    # -- replica kill mid-decode -------------------------------------------
+    router, _ = _fleet(
+        model, art_dir, work / "hb1", replicas=2,
+        injector=FaultInjector([FaultEvent(tick=3, kind=KILL_REPLICA,
+                                           replica=0)]))
+    rpt = router.run(_requests(vocab, n_requests, max_new))
+    got = {r.uid: [int(t) for t in r.tokens] for r in rpt.completed.values()}
+    out["replica_kill"] = {
+        "admitted": rpt.admitted, "completed": len(rpt.completed),
+        "availability": rpt.availability, "ticks": rpt.ticks,
+        "retries": rpt.retries, "deaths": rpt.deaths,
+        "token_identical": got == baseline,
+    }
+
+    # -- host loss mid-decode: live delta re-shard --------------------------
+    router, pool = _fleet(
+        model, art_dir, work / "hb2", replicas=1,
+        injector=FaultInjector([FaultEvent(tick=3, kind=KILL_HOST,
+                                           replica=0, host=0)]))
+    rpt = router.run(_requests(vocab, n_requests, max_new))
+    got = {r.uid: [int(t) for t in r.tokens] for r in rpt.completed.values()}
+    ev = rpt.reshards[0]
+    st = pool[0].load_stats
+    out["host_loss"] = {
+        "admitted": rpt.admitted, "completed": len(rpt.completed),
+        "availability": rpt.availability, "ticks": rpt.ticks,
+        "requeued": ev.requeued, "blocks_moved": ev.blocks_moved,
+        "delta_bytes": ev.delta_bytes,
+        "full_reload_bytes": ev.full_reload_bytes,
+        "delta_fraction": ev.delta_bytes / max(ev.full_reload_bytes, 1),
+        "cumulative_bytes_read": st.bytes_read,
+        "reads": st.reads,
+        "token_identical": got == baseline,
+    }
+
+    if verbose:
+        for name, row in out.items():
+            print(f"[fleet] {name}: " + ", ".join(
+                f"{k}={v}" for k, v in row.items() if k != "deaths"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

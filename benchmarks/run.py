@@ -9,6 +9,8 @@ Runs one benchmark per paper table/figure at smoke scale (CPU container):
 * bench_artifact_loading — per-host bytes/latency of sharded artifact
   streaming (the deployment half of the paper's pre-loading premise)
 * bench_serving    — engines + the quant-decode launch gate
+* bench_fleet      — elastic fleet: availability under replica/host
+  faults + delta re-shard bytes vs full reload
 
 ``--json [DIR]`` additionally writes one machine-readable
 ``BENCH_<suite>.json`` per executed suite (kernel launch counts, decode
@@ -48,7 +50,8 @@ def _jsonable(v):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="allocation|odp|memory|kernels|loading|serving")
+                    help="allocation|odp|memory|kernels|loading|serving|"
+                         "fleet")
     ap.add_argument("--json", nargs="?", const=".", default=None,
                     metavar="DIR",
                     help="write BENCH_<suite>.json per suite into DIR "
@@ -56,8 +59,8 @@ def main():
     args = ap.parse_args()
     t0 = time.time()
     from benchmarks import (bench_allocation, bench_artifact_loading,
-                            bench_kernels, bench_memory, bench_odp,
-                            bench_serving)
+                            bench_fleet, bench_kernels, bench_memory,
+                            bench_odp, bench_serving)
     benches = {
         "kernels": bench_kernels.run,
         "memory": bench_memory.run,
@@ -65,6 +68,7 @@ def main():
         "allocation": bench_allocation.run,
         "loading": bench_artifact_loading.run,
         "serving": bench_serving.bench_all,
+        "fleet": bench_fleet.run,
     }
     if args.only and args.only not in benches:
         ap.error(f"unknown suite {args.only!r} "

@@ -41,6 +41,10 @@ _EXPORTS = {
     "Request": "repro.serve.engine",
     "GenerationOptions": "repro.serve.engine",
     "Result": "repro.serve.engine",
+    "FleetRouter": "repro.serve.router",
+    "RouterConfig": "repro.serve.router",
+    "FleetReport": "repro.serve.router",
+    "ShardedReplica": "repro.serve.fleet",
 }
 
 __all__ = ["__version__", *_EXPORTS]

@@ -68,7 +68,14 @@ SplitFn = Callable[[str, np.ndarray], Optional[Tuple[int, Sequence[str]]]]
 
 @dataclass
 class LoadStats:
-    """Byte/file accounting for one (possibly partial) checkpoint read."""
+    """Byte/file accounting for one (possibly partial) checkpoint read.
+
+    A fleet host that re-shards accumulates several reads over its
+    lifetime (boot stream + every delta block it takes over); fold them
+    with :meth:`accumulate` so ``bytes_read``/``read_fraction`` report
+    the host's *cumulative* streaming cost against the one artifact —
+    the number ``benchmarks/bench_fleet.py`` compares to a full reload.
+    """
 
     bytes_read: int = 0
     total_bytes: int = 0
@@ -76,6 +83,9 @@ class LoadStats:
     total_files: int = 0
     groups_read: int = 0
     total_groups: int = 0
+    #: how many separate subset reads this accounting covers (1 for a
+    #: plain load; boot + each re-shard delta for a fleet host)
+    reads: int = 1
     #: key path -> stacking axis, for every split leaf that was loaded
     split_axes: Dict[str, int] = field(default_factory=dict)
     #: key path -> (start, stop, count) when only a contiguous sub-range of
@@ -85,6 +95,22 @@ class LoadStats:
     @property
     def read_fraction(self) -> float:
         return self.bytes_read / max(self.total_bytes, 1)
+
+    def accumulate(self, other: "LoadStats") -> "LoadStats":
+        """Fold another read of the *same* checkpoint into this one (in
+        place): read counters add, totals take the max (identical when
+        both reads saw the same manifest). Split-leaf bookkeeping is
+        deliberately NOT merged — disjoint ranges only compose at the
+        part level (:func:`merge_subset_trees`), not inside one stats
+        record. Returns ``self`` for chaining."""
+        self.bytes_read += other.bytes_read
+        self.files_read += other.files_read
+        self.groups_read += other.groups_read
+        self.reads += other.reads
+        self.total_bytes = max(self.total_bytes, other.total_bytes)
+        self.total_files = max(self.total_files, other.total_files)
+        self.total_groups = max(self.total_groups, other.total_groups)
+        return self
 
 
 def _path_str(kp) -> str:

@@ -307,6 +307,90 @@ def distributed_params(params: Dict, mesh, stats: ckpt_lib.LoadStats,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def expert_range_delta(old_ranges, new_ranges
+                       ) -> Tuple[Tuple[int, int], ...]:
+    """Expert ranges in ``new_ranges`` but not ``old_ranges`` — the
+    **delta** a host must stream after a re-shard changes its ownership
+    from one ``expert_ranges`` plan to another (already-resident experts
+    are never re-read). Both inputs are ``(start, stop)`` iterables;
+    returns sorted disjoint merged ranges (empty tuple = nothing to
+    stream)."""
+    from repro.sharding.moe_parallel import merge_ranges
+    old = merge_ranges(old_ranges) if old_ranges else ()
+    out = []
+    for a, b in (merge_ranges(new_ranges) if new_ranges else ()):
+        cur = a
+        for oa, ob in old:
+            if ob <= cur or oa >= b:
+                continue
+            if oa > cur:
+                out.append((cur, min(oa, b)))
+            cur = max(cur, ob)
+            if cur >= b:
+                break
+        if cur < b:
+            out.append((cur, b))
+    return tuple(out)
+
+
+def load_expert_blocks(directory, ranges, *, include_dense: bool = False,
+                       verify: bool = True):
+    """Stream selected expert blocks of an expert-major artifact.
+
+    The low-level read behind fleet re-sharding (``serve.fleet``): each
+    contiguous ``(k0, k1)`` of ``ranges`` is loaded as its own subset
+    part via the range-filtered :func:`checkpoint.load_pytree_subset`
+    read — only that block's shard groups are opened — and
+    ``include_dense=True`` additionally loads the dense (non-expert)
+    groups once as a leading part. The returned ``(tree, stats)`` parts
+    compose with ``checkpointer.merge_subset_trees`` whenever the union
+    of everyone's blocks tiles ``[0, E)``.
+
+    Unlike :meth:`CompressedArtifact.load_sharded` this returns raw
+    parts, not an artifact: a re-shard folds new blocks into holdings
+    that already exist, and the delta bytes are exactly
+    ``sum(p.bytes_read for _, p in parts)``.
+    """
+    directory = Path(directory)
+    parts = []
+    if include_dense:
+        tree, _, stats = ckpt_lib.load_pytree_subset(
+            directory, lambda p, g: expert_of_group(g) is None,
+            verify=verify)
+        parts.append((tree, stats))
+    for k0, k1 in ranges:
+        if k1 <= k0:
+            raise ValueError(f"empty expert block ({k0}, {k1})")
+
+        def keep(path, group, k0=k0, k1=k1):
+            e = expert_of_group(group)
+            return e is not None and k0 <= e < k1
+
+        tree, _, stats = ckpt_lib.load_pytree_subset(directory, keep,
+                                                     verify=verify)
+        parts.append((tree, stats))
+    return parts
+
+
+def artifact_expert_bytes(directory) -> Tuple[int, List[int]]:
+    """``(num_experts, per-expert on-disk bytes)`` of an expert-major
+    artifact, from the manifest alone (no tensor data read). The byte
+    weights feed the fleet's block planner
+    (:func:`repro.runtime.elastic.initial_assignment`)."""
+    directory = Path(directory)
+    manifest, _ = ckpt_lib.read_manifest(directory)
+    art = _artifact_meta(directory, manifest)
+    num_experts = art.get("num_experts",
+                          len(art["plan"]["layers"][0]["bits"]))
+    ebytes = _expert_bytes_from_manifest(manifest, num_experts)
+    if ebytes is None:
+        raise ValueError(
+            f"{directory} has no expert-major shard groups (artifact "
+            "saved by a pre-v2 version); block planning needs them — "
+            "load() it fully once and re-save() to upgrade")
+    return num_experts, ebytes
+
+
 def _owned_expert_ranges(num_experts: int, segments, ebytes, *,
                          mesh=None, axis: str = "expert",
                          expert_range=None, num_hosts=None, host=None,
@@ -897,6 +981,20 @@ class CompressedArtifact:
         report = _report_from_plan(base.plan, params, base.metas)
         return cls(params=params, metas=base.metas, runtime=base.runtime,
                    plan=base.plan, report=report)
+
+    @classmethod
+    def from_parts(cls, directory, parts) -> "CompressedArtifact":
+        """Assemble a full artifact from raw ``(tree, stats)`` parts as
+        returned by :func:`load_expert_blocks` — one dense part plus
+        expert blocks whose union tiles ``[0, num_experts)`` exactly.
+        Metadata (plan/runtime) comes from the artifact manifest; the
+        fleet's block-owning replicas (``serve.fleet``) boot through
+        this."""
+        directory = Path(directory)
+        manifest, _ = ckpt_lib.read_manifest(directory)
+        art = _artifact_meta(directory, manifest)
+        params = ckpt_lib.merge_subset_trees(list(parts))
+        return cls._assemble(params, art)
 
     @classmethod
     def _assemble(cls, params: Dict, art: Dict, stats=None,

@@ -29,7 +29,15 @@ Deployment topology is orthogonal (see ``docs/serving.md``):
 * ``--coordinator ADDR --processes N --process-id I`` — real
   ``jax.distributed`` boot (gloo collectives on CPU): with a ``--mesh``
   spanning the processes, each process streams only its placement slice
-  of the artifact and serves as one shard of the distributed engine.
+  of the artifact and serves as one shard of the distributed engine;
+* ``--fleet --replicas N --fleet-hosts H`` — elastic fault-tolerant
+  fleet serving (requires ``--artifact``): N block-owning replicas
+  behind the admission-controlled router (``serve.router``), each
+  assembled from H per-host expert-block streams. Deterministic fault
+  injection via ``--inject-failure replica:<r>@<tick>`` /
+  ``host:<r>.<h>@<tick>`` / ``join:<r>@<tick>`` exercises failover and
+  live delta-streamed re-sharding; the run reports availability,
+  recovery events and delta vs full-reload bytes.
 
 Then serves a synthetic batched workload and reports throughput +
 compression stats.
@@ -229,6 +237,75 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
     return results, eng.stats, report
 
 
+def serve_fleet(arch: str, *, artifact_path, smoke: bool = True,
+                replicas: int = 2, fleet_hosts: int = 2,
+                blocks_per_host: int = 2, n_requests: int = 8,
+                max_new: int = 16, batch_size: int = 4,
+                prompt_len: int = 32, inject=(), sla: Optional[int] = None,
+                max_queue: int = 64, max_retries: int = 2,
+                heartbeat_dir=None, odp="default"):
+    """Boot an elastic fleet from a saved artifact and serve through the
+    router, with optional scripted fault injection. Returns the
+    :class:`~repro.serve.router.FleetReport`."""
+    import tempfile
+    from repro.runtime.supervisor import FaultInjector, parse_fault_spec
+    from repro.serve.fleet import ShardedReplica
+    from repro.serve.router import FleetRouter, RouterConfig
+
+    if artifact_path is None:
+        raise SystemExit("--fleet requires --artifact DIR (fleet replicas "
+                         "boot from per-host expert-block streams)")
+    cfg = get_config(arch, smoke=smoke)
+    model = build_model(cfg)
+    t0 = time.time()
+    pool = []
+    for i in range(replicas):
+        rep = ShardedReplica(model, artifact_path, replica_id=i,
+                             num_hosts=fleet_hosts,
+                             blocks_per_host=blocks_per_host,
+                             batch_size=batch_size, odp=odp)
+        st = rep.load_stats
+        print(f"[fleet] replica {i}: {fleet_hosts} hosts x "
+              f"{blocks_per_host} blocks, boot streamed "
+              f"{st.bytes_read}/{st.total_bytes} bytes in {st.reads} reads")
+        pool.append(rep)
+    print(f"[fleet] {replicas} replicas booted in {time.time() - t0:.2f}s")
+
+    events = [parse_fault_spec(s) for s in inject]
+    hb = heartbeat_dir or tempfile.mkdtemp(prefix="fleet_hb_")
+    router = FleetRouter(
+        pool, hb,
+        config=RouterConfig(max_queue=max_queue, default_sla=sla,
+                            max_retries=max_retries),
+        injector=FaultInjector(events))
+
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.randint(1, cfg.vocab_size,
+                                       prompt_len).astype(np.int32),
+                    options=GenerationOptions(max_new_tokens=max_new))
+            for i in range(n_requests)]
+    t0 = time.time()
+    report = router.run(reqs)
+    wall = time.time() - t0
+    print(f"[fleet] {report.ticks} ticks in {wall:.2f}s: "
+          f"{len(report.completed)}/{report.admitted} admitted requests "
+          f"completed (availability {report.availability:.1%}), "
+          f"{report.retries} retries, "
+          f"{len(report.shed_queue_full)} shed at admission, "
+          f"{len(report.shed_deadline)} shed past deadline, "
+          f"{len(report.sla_misses)} SLA misses")
+    for d in report.deaths:
+        print(f"[fleet] death: replica {d['replica']} at tick {d['tick']} "
+              f"({d['reason']})")
+    for ev in report.reshards:
+        print(f"[fleet] reshard: {ev.kind} host {ev.host} — streamed "
+              f"{ev.delta_bytes}/{ev.full_reload_bytes} expert bytes "
+              f"({ev.blocks_moved} blocks, {ev.requeued} requeued, "
+              f"{ev.recovery_s:.2f}s); {ev.note}")
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
@@ -267,6 +344,35 @@ def main():
                          "one shard of a multi-process engine")
     ap.add_argument("--processes", type=int, default=None, metavar="N")
     ap.add_argument("--process-id", type=int, default=None, metavar="I")
+    ap.add_argument("--fleet", action="store_true",
+                    help="elastic fleet serving behind the router "
+                         "(requires --artifact); see --replicas, "
+                         "--fleet-hosts, --inject-failure")
+    ap.add_argument("--replicas", type=int, default=2, metavar="N",
+                    help="with --fleet: engine replicas behind the router")
+    ap.add_argument("--fleet-hosts", type=int, default=2, metavar="H",
+                    help="with --fleet: hosts per replica (each streams "
+                         "its expert-block share of the artifact)")
+    ap.add_argument("--blocks-per-host", type=int, default=2, metavar="B",
+                    help="with --fleet: block granularity for the "
+                         "re-shard planner")
+    ap.add_argument("--inject-failure", action="append", default=[],
+                    metavar="SPEC",
+                    help="with --fleet: scripted fault, repeatable — "
+                         "'replica:<r>@<tick>' kills a replica, "
+                         "'host:<r>.<h>@<tick>' kills one host (live "
+                         "delta re-shard), 'join:<r>@<tick>' joins a "
+                         "fresh host")
+    ap.add_argument("--sla", type=int, default=None, metavar="TICKS",
+                    help="with --fleet: per-request completion deadline "
+                         "in scheduling ticks (late queued requests are "
+                         "shed)")
+    ap.add_argument("--max-queue", type=int, default=64, metavar="Q",
+                    help="with --fleet: admission queue bound (overflow "
+                         "is shed)")
+    ap.add_argument("--max-retries", type=int, default=2, metavar="R",
+                    help="with --fleet: retries per request after "
+                         "replica deaths")
     ap.add_argument("--odp", default="default", metavar="KNOB",
                     help="engine-wide Online Dynamic Pruning knob: "
                          "'default' (the artifact's calibrated threshold), "
@@ -280,6 +386,18 @@ def main():
     if args.coordinator is not None and (args.processes is None
                                          or args.process_id is None):
         ap.error("--coordinator requires --processes and --process-id")
+    if args.fleet:
+        if args.artifact is None:
+            ap.error("--fleet requires --artifact")
+        serve_fleet(args.arch, artifact_path=args.artifact,
+                    replicas=args.replicas, fleet_hosts=args.fleet_hosts,
+                    blocks_per_host=args.blocks_per_host,
+                    n_requests=args.requests, max_new=args.max_new,
+                    batch_size=args.batch, inject=args.inject_failure,
+                    sla=args.sla, max_queue=args.max_queue,
+                    max_retries=args.max_retries,
+                    odp=_parse_odp(args.odp))
+        return
     serve(args.arch, mc=args.mc, target_bits=args.bits,
           n_requests=args.requests, max_new=args.max_new,
           batch_size=args.batch, static=args.static,

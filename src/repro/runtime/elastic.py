@@ -6,11 +6,25 @@ count, (2) recomputing shardings for it, (3) rescaling the data plan.
 ``plan_elastic`` shrinks the ``data`` axis first (pure DP/FSDP degree —
 model math unchanged), dropping to smaller power-of-two factors; the
 ``model`` axis is preserved so TP-sharded kernels keep their tile shapes.
+
+**Serving elasticity** (the fleet layer, ``serve.fleet``) works at the
+granularity of expert **blocks** instead of mesh axes: a replica's
+artifact is cut into contiguous byte-weighted blocks of class-sorted
+experts (``core.pipeline.byte_balanced_ranges``), each owned by exactly
+one host. On topology change, ownership is re-planned here —
+:func:`plan_host_loss` re-homes a dead host's blocks onto the lightest
+survivors, :func:`plan_host_join` peels blocks off the heaviest hosts
+for a fresh one — and every move names exactly the bytes that must be
+*streamed* (the delta); blocks already resident never move, so re-shard
+traffic is the dead/joined share of the artifact, not a full reload.
+:func:`mesh_reshard_delta` is the mesh-native equivalent for real
+multi-process replicas: old vs new ``expert_shard_expectation``, delta
+per surviving process.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -79,3 +93,221 @@ def validate_resharding(param_shapes: Dict[str, Tuple[int, ...]],
             elif shape[0] % data != 0 and shape[0] > data:
                 issues[path] = f"dim {shape[0]} ! % data={data}"
     return issues
+
+
+# ---------------------------------------------- serving: block ownership
+@dataclass(frozen=True)
+class BlockAssignment:
+    """Which host owns which expert block of one replica's artifact.
+
+    ``blocks`` are contiguous, sorted, disjoint global expert ranges that
+    tile ``[0, E)`` exactly (the invariant ``serve.fleet`` relies on to
+    merge host holdings back into a full param tree); ``block_bytes`` is
+    each block's on-disk weight and ``owner[i]`` the host id holding
+    ``blocks[i]``.
+    """
+
+    blocks: Tuple[Tuple[int, int], ...]
+    block_bytes: Tuple[int, ...]
+    owner: Tuple[int, ...]
+
+    def __post_init__(self):
+        pos = 0
+        for a, b in self.blocks:
+            if a != pos or b <= a:
+                raise ValueError(
+                    f"blocks {self.blocks} do not tile [0, E) — gap or "
+                    f"overlap at expert {pos}")
+            pos = b
+        if not (len(self.blocks) == len(self.block_bytes) == len(self.owner)):
+            raise ValueError("blocks/block_bytes/owner length mismatch")
+
+    @property
+    def hosts(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.owner)))
+
+    def ranges_of(self, host: int) -> Tuple[Tuple[int, int], ...]:
+        return tuple(b for b, o in zip(self.blocks, self.owner)
+                     if o == host)
+
+    def bytes_of(self, host: int) -> int:
+        return sum(w for w, o in zip(self.block_bytes, self.owner)
+                   if o == host)
+
+    @property
+    def max_host_bytes(self) -> int:
+        return max(self.bytes_of(h) for h in self.hosts)
+
+
+@dataclass(frozen=True)
+class BlockMove:
+    """One unit of re-shard traffic: stream ``block`` (``nbytes`` on the
+    wire) to ``dst``. ``src`` is the previous owner — the dead host for a
+    loss, a surviving donor for a join — and streams nothing (blocks are
+    read back from the artifact store, never peer-to-peer)."""
+
+    block: Tuple[int, int]
+    nbytes: int
+    src: Optional[int]
+    dst: int
+
+
+@dataclass(frozen=True)
+class ServingReshardPlan:
+    """Delta plan for one replica topology change.
+
+    ``moves`` name every block that changes owner; ``delta_bytes`` (the
+    sum of moved block bytes) is what the survivors actually stream,
+    asserted strictly below ``full_reload_bytes`` (what rebooting the
+    replica from scratch would read) by the fleet tests/benchmarks.
+    """
+
+    old: BlockAssignment
+    new: BlockAssignment
+    moves: Tuple[BlockMove, ...]
+    delta_bytes: int
+    full_reload_bytes: int
+    note: str
+
+
+def _block_weights(ebytes: Sequence[int],
+                   blocks: Sequence[Tuple[int, int]]) -> Tuple[int, ...]:
+    return tuple(int(sum(ebytes[a:b])) for a, b in blocks)
+
+
+def initial_assignment(ebytes: Sequence[int], hosts: Sequence[int],
+                       blocks_per_host: int = 2) -> BlockAssignment:
+    """Cut the expert axis into byte-balanced blocks and spread them over
+    ``hosts`` (longest-processing-time greedy: heaviest block to the
+    lightest host). ``blocks_per_host > 1`` gives the re-shard planner
+    granularity — on a host loss the orphaned blocks can go to
+    *different* survivors instead of one host eating the whole share.
+    """
+    from repro.core.pipeline import byte_balanced_ranges
+    hosts = list(hosts)
+    if not hosts:
+        raise ValueError("need at least one host")
+    n_blocks = min(max(len(hosts) * max(blocks_per_host, 1), 1),
+                   len(ebytes))
+    blocks = tuple((int(a), int(b))
+                   for a, b in byte_balanced_ranges(ebytes, n_blocks))
+    weights = _block_weights(ebytes, blocks)
+    load = {h: 0 for h in hosts}
+    owner = [0] * len(blocks)
+    for i in sorted(range(len(blocks)), key=lambda i: (-weights[i], i)):
+        dst = min(hosts, key=lambda h: (load[h], h))
+        owner[i] = dst
+        load[dst] += weights[i]
+    return BlockAssignment(blocks=blocks, block_bytes=weights,
+                           owner=tuple(owner))
+
+
+def plan_host_loss(assignment: BlockAssignment,
+                   dead_host: int) -> ServingReshardPlan:
+    """Re-home a dead host's blocks onto the lightest survivors.
+
+    Only the orphaned blocks move (and therefore stream); every
+    survivor's resident blocks stay put. Raises when the dead host is
+    the last one — there is nothing left to serve from.
+    """
+    if dead_host not in assignment.owner:
+        raise ValueError(f"host {dead_host} owns no blocks "
+                         f"(hosts: {assignment.hosts})")
+    survivors = [h for h in assignment.hosts if h != dead_host]
+    if not survivors:
+        raise ValueError(
+            f"host {dead_host} is the last host of the replica — a "
+            "1-host replica cannot re-shard, only die (router-level "
+            "replica failover handles that)")
+    load = {h: assignment.bytes_of(h) for h in survivors}
+    owner = list(assignment.owner)
+    moves: List[BlockMove] = []
+    orphans = [i for i, o in enumerate(owner) if o == dead_host]
+    for i in sorted(orphans, key=lambda i: (-assignment.block_bytes[i], i)):
+        dst = min(survivors, key=lambda h: (load[h], h))
+        moves.append(BlockMove(block=assignment.blocks[i],
+                               nbytes=assignment.block_bytes[i],
+                               src=dead_host, dst=dst))
+        owner[i] = dst
+        load[dst] += assignment.block_bytes[i]
+    new = BlockAssignment(blocks=assignment.blocks,
+                          block_bytes=assignment.block_bytes,
+                          owner=tuple(owner))
+    delta = sum(m.nbytes for m in moves)
+    total = sum(assignment.block_bytes)
+    return ServingReshardPlan(
+        old=assignment, new=new, moves=tuple(moves), delta_bytes=delta,
+        full_reload_bytes=total,
+        note=(f"host {dead_host} lost: {len(moves)} block(s), "
+              f"{delta}/{total} expert bytes re-streamed onto "
+              f"{sorted(set(m.dst for m in moves))}"))
+
+
+def plan_host_join(assignment: BlockAssignment,
+                   new_host: int) -> ServingReshardPlan:
+    """Peel blocks off the heaviest hosts for a freshly joined one.
+
+    Moves a block only while it strictly improves balance (the donor
+    stays heavier than the joiner would become), so join traffic is
+    bounded by the joiner's fair share. Donors *drop* their moved blocks
+    from memory; only the joiner streams.
+    """
+    if new_host in assignment.owner:
+        raise ValueError(f"host {new_host} already owns blocks")
+    owner = list(assignment.owner)
+    load = {h: assignment.bytes_of(h) for h in assignment.hosts}
+    load[new_host] = 0
+    moves: List[BlockMove] = []
+    while True:
+        best = None
+        for i, o in enumerate(owner):
+            if o == new_host:
+                continue
+            w = assignment.block_bytes[i]
+            # strict improvement: after the move the donor must still
+            # carry at least as much as the joiner — otherwise we just
+            # swapped the imbalance around
+            if load[o] - w >= load[new_host] + w and \
+                    (best is None or w > assignment.block_bytes[best]
+                     or (w == assignment.block_bytes[best] and i < best)):
+                best = i
+        if best is None:
+            break
+        o = owner[best]
+        moves.append(BlockMove(block=assignment.blocks[best],
+                               nbytes=assignment.block_bytes[best],
+                               src=o, dst=new_host))
+        load[o] -= assignment.block_bytes[best]
+        load[new_host] += assignment.block_bytes[best]
+        owner[best] = new_host
+    if not moves:
+        raise ValueError(
+            "no block move improves balance — cut the artifact into more "
+            "blocks (blocks_per_host) to give the planner granularity")
+    new = BlockAssignment(blocks=assignment.blocks,
+                          block_bytes=assignment.block_bytes,
+                          owner=tuple(owner))
+    delta = sum(m.nbytes for m in moves)
+    total = sum(assignment.block_bytes)
+    return ServingReshardPlan(
+        old=assignment, new=new, moves=tuple(moves), delta_bytes=delta,
+        full_reload_bytes=total,
+        note=(f"host {new_host} joined: streams {len(moves)} block(s), "
+              f"{delta}/{total} expert bytes; donors drop them"))
+
+
+def mesh_reshard_delta(old_mesh, new_mesh, segments,
+                       process_index: int = 0
+                       ) -> Tuple[Tuple[int, int], ...]:
+    """Mesh-native re-shard delta for one surviving process: the expert
+    ranges its **new** placement expectation demands that its **old** one
+    did not already hold — exactly what it must stream from the artifact
+    after the fleet re-meshes (``jax.sharding.Mesh`` args, real or
+    simulated devices)."""
+    from repro.core.pipeline import (expert_range_delta,
+                                     expert_shard_expectation)
+    old = expert_shard_expectation(old_mesh, segments,
+                                   process_index=process_index)
+    new = expert_shard_expectation(new_mesh, segments,
+                                   process_index=process_index)
+    return expert_range_delta(old, new)

@@ -21,30 +21,58 @@ import numpy as np
 
 @dataclass
 class Heartbeat:
-    """Per-worker liveness file (shared filesystem / object store)."""
+    """Per-worker liveness file (shared filesystem / object store).
+
+    Used by both the training loop and the serving fleet supervisor
+    (``runtime.supervisor``). ``beat`` takes an optional ``now`` so a
+    serving controller can run the whole liveness protocol on a logical
+    clock — deterministic failure-detection tests, no wall-clock sleeps.
+    """
 
     directory: Path
     worker_id: int = 0
 
-    def beat(self, step: int, extra: Optional[Dict] = None):
+    def beat(self, step: int, extra: Optional[Dict] = None,
+             now: Optional[float] = None):
         self.directory.mkdir(parents=True, exist_ok=True)
-        rec = {"worker": self.worker_id, "step": step, "time": time.time()}
+        rec = {"worker": self.worker_id, "step": step,
+               "time": time.time() if now is None else float(now)}
         if extra:
             rec.update(extra)
         tmp = self.directory / f".hb_{self.worker_id}.tmp"
         tmp.write_text(json.dumps(rec))
         os.rename(tmp, self.directory / f"hb_{self.worker_id}.json")
 
+    def retire(self):
+        """Remove this worker's liveness file (clean shutdown — a retired
+        worker is *not* dead and must not trip the detector)."""
+        try:
+            (self.directory / f"hb_{self.worker_id}.json").unlink()
+        except FileNotFoundError:
+            pass
+
+    @staticmethod
+    def read_all(directory: Path) -> Dict[int, Dict]:
+        """All parseable heartbeat records, keyed by worker id. A corrupt
+        or partially-written file (a worker died mid-``os.rename``, or the
+        shared store gave a torn read) is skipped, not raised: an
+        unparseable heartbeat must never take the *detector* down."""
+        out: Dict[int, Dict] = {}
+        for f in sorted(Path(directory).glob("hb_*.json")):
+            try:
+                rec = json.loads(f.read_text())
+                out[int(rec["worker"])] = rec
+            except (json.JSONDecodeError, KeyError, TypeError, ValueError,
+                    OSError):
+                continue
+        return out
+
     @staticmethod
     def dead_workers(directory: Path, timeout_s: float,
                      now: Optional[float] = None) -> List[int]:
-        now = now or time.time()
-        dead = []
-        for f in Path(directory).glob("hb_*.json"):
-            rec = json.loads(f.read_text())
-            if now - rec["time"] > timeout_s:
-                dead.append(rec["worker"])
-        return sorted(dead)
+        now = time.time() if now is None else now
+        return sorted(w for w, rec in Heartbeat.read_all(directory).items()
+                      if now - rec["time"] > timeout_s)
 
 
 @dataclass
@@ -90,6 +118,9 @@ class StragglerDetector:
 
 @dataclass
 class FaultToleranceReport:
+    #: restarts actually *completed* (the loop went back around); a crash
+    #: that exhausts ``max_restarts`` re-raises without counting here —
+    #: its description is the last entry of ``failures``
     restarts: int = 0
     failures: List[str] = field(default_factory=list)
     straggler_events: int = 0
@@ -138,10 +169,17 @@ def run_with_fault_tolerance(
                 report.completed_steps = step + 1
             return report
         except Exception as e:  # noqa: BLE001 — the whole point
-            restarts += 1
-            report.restarts = restarts
-            report.failures.append(
-                f"{type(e).__name__}: {e} @ restart {restarts}")
-            if restarts > max_restarts:
+            if report.restarts >= max_restarts:
+                # fatal: budget exhausted. Record the final failure but do
+                # NOT count a restart — none happens; we re-raise.
+                report.failures.append(
+                    f"{type(e).__name__}: {e} (fatal — max_restarts="
+                    f"{max_restarts} exhausted)")
+                # post-mortem accounting for the caller (the exception
+                # escapes before the report can be returned)
+                e.ft_report = report
                 raise
+            report.restarts += 1
+            report.failures.append(
+                f"{type(e).__name__}: {e} @ restart {report.restarts}")
             continue

@@ -1,0 +1,154 @@
+"""Fleet supervision for serving: liveness, stragglers, fault injection.
+
+The serving counterpart of ``runtime.fault_tolerance``'s training loop.
+A :class:`FleetSupervisor` watches a directory of per-replica
+:class:`~repro.runtime.fault_tolerance.Heartbeat` files and reports which
+replicas have gone silent; the router (``serve.router``) reacts by
+requeueing their in-flight requests, and the sharded replica layer
+(``serve.fleet``) reacts to *host* loss by re-sharding expert blocks onto
+the survivors (``runtime.elastic``).
+
+Everything runs on a **logical clock**: the router advances ``now`` by
+one tick per scheduling round and both heartbeats and timeouts are
+expressed in ticks. Failure detection is therefore exactly reproducible
+— no wall-clock sleeps in tests, no flaky timing margins — while the
+same code path serves real deployments by feeding ``time.time()``.
+
+Deterministic fault injection rides the same clock:
+:class:`FaultInjector` holds a script of ``(tick, kind, target)`` events
+(kill a replica, kill one host of a replica, join a host) that the
+router consults once per tick. CI's fleet smoke and
+``benchmarks/bench_fleet.py`` drive every recovery path through these
+hooks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.runtime.fault_tolerance import Heartbeat, StragglerDetector
+
+#: fault-injection event kinds
+KILL_REPLICA = "kill_replica"
+KILL_HOST = "kill_host"
+JOIN_HOST = "join_host"
+_KINDS = (KILL_REPLICA, KILL_HOST, JOIN_HOST)
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault: at logical tick ``tick``, apply ``kind`` to
+    ``replica`` (and, for host events, ``host`` within that replica)."""
+
+    tick: int
+    kind: str
+    replica: int
+    host: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{_KINDS}")
+        if self.kind in (KILL_HOST, JOIN_HOST) and self.host is None:
+            raise ValueError(f"{self.kind} needs a host index")
+
+
+def parse_fault_spec(spec: str) -> FaultEvent:
+    """Parse the CLI grammar: ``replica:<r>@<tick>`` kills replica ``r``;
+    ``host:<r>.<h>@<tick>`` kills host ``h`` of replica ``r``;
+    ``join:<r>@<tick>`` joins a fresh host to replica ``r``."""
+    try:
+        head, tick = spec.rsplit("@", 1)
+        kind, target = head.split(":", 1)
+        t = int(tick)
+        if kind == "replica":
+            return FaultEvent(tick=t, kind=KILL_REPLICA, replica=int(target))
+        if kind == "host":
+            r, h = target.split(".")
+            return FaultEvent(tick=t, kind=KILL_HOST, replica=int(r),
+                              host=int(h))
+        if kind == "join":
+            return FaultEvent(tick=t, kind=JOIN_HOST, replica=int(target),
+                              host=-1)
+    except (ValueError, IndexError):
+        pass
+    raise ValueError(
+        f"bad fault spec {spec!r}; expected 'replica:<r>@<tick>', "
+        "'host:<r>.<h>@<tick>' or 'join:<r>@<tick>'")
+
+
+class FaultInjector:
+    """Deterministic fault script, consulted once per router tick.
+
+    ``due(tick)`` returns (and consumes) every event scheduled at or
+    before ``tick`` — events fire exactly once, in tick order.
+    """
+
+    def __init__(self, events: List[FaultEvent] = ()):
+        self._events = sorted(events, key=lambda e: e.tick)
+        self.fired: List[FaultEvent] = []
+
+    def due(self, tick: int) -> List[FaultEvent]:
+        out = []
+        while self._events and self._events[0].tick <= tick:
+            out.append(self._events.pop(0))
+        self.fired.extend(out)
+        return out
+
+    @property
+    def pending(self) -> int:
+        return len(self._events)
+
+
+@dataclass
+class FleetSupervisor:
+    """Heartbeat-based failure detection over a replica fleet.
+
+    Each live replica beats into ``directory`` once per scheduling tick
+    (``beat``); ``check(now)`` returns the replicas whose last beat is
+    older than ``timeout`` ticks — each reported exactly once, so the
+    router acts on a death exactly once. A per-replica
+    :class:`StragglerDetector` additionally flags replicas whose step
+    time z-scores out (slow host, contended accelerator); stragglers are
+    reported via ``stragglers`` but not auto-evicted — eviction is a
+    policy decision left to the operator/router.
+    """
+
+    directory: Path
+    timeout: float = 3.0
+    straggler_z: float = 4.0
+    _beats: Dict[int, Heartbeat] = field(default_factory=dict)
+    _detectors: Dict[int, StragglerDetector] = field(default_factory=dict)
+    _reported: Set[int] = field(default_factory=set)
+    stragglers: List[Dict] = field(default_factory=list)
+
+    def beat(self, replica: int, step: int, now: float,
+             step_s: Optional[float] = None, **extra):
+        hb = self._beats.get(replica)
+        if hb is None:
+            hb = self._beats[replica] = Heartbeat(
+                directory=Path(self.directory), worker_id=replica)
+        hb.beat(step, extra=dict(extra) or None, now=now)
+        if step_s is not None:
+            det = self._detectors.setdefault(
+                replica, StragglerDetector(z_threshold=self.straggler_z))
+            if det.observe(step, step_s):
+                self.stragglers.append(
+                    {"replica": replica, "step": step, "dt": step_s})
+
+    def retire(self, replica: int):
+        """Clean shutdown: stop tracking without declaring a death."""
+        hb = self._beats.pop(replica, None)
+        if hb is not None:
+            hb.retire()
+        self._reported.discard(replica)
+
+    def check(self, now: float) -> List[int]:
+        """Newly-dead replicas (silent > ``timeout``), each reported once."""
+        dead = Heartbeat.dead_workers(Path(self.directory), self.timeout,
+                                      now=now)
+        fresh = [r for r in dead if r not in self._reported]
+        self._reported.update(fresh)
+        return fresh

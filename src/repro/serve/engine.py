@@ -34,7 +34,7 @@ import time
 import warnings
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -454,6 +454,58 @@ class _Slot:
     n_new: int = 1                    # prefill emits the first token
 
 
+@dataclass
+class Requeued:
+    """A drained request: the original admission plus everything it had
+    already generated.
+
+    Produced by :meth:`ServeEngine.drain` when the fleet layer pulls
+    in-flight work off a replica (re-shard, migration, shutdown).
+    :meth:`continuation` rebuilds the :class:`Request` that resumes it
+    exactly — prompt extended by the emitted tokens, token budget reduced,
+    options preserved — so greedy decode after drain/requeue is
+    **token-identical** to the uninterrupted run (the engine's
+    prefill/decode equivalence, pinned by ``tests/test_serve_engine.py``,
+    is exactly what makes the re-prefilled continuation exact). The
+    caller stitches ``prior_tokens`` back in front of the continuation's
+    result (``serve.fleet`` does this per uid).
+    """
+
+    request: Request
+    prior_tokens: np.ndarray          # (n,) int32; empty for never-admitted
+
+    def continuation(self) -> Request:
+        if len(self.prior_tokens) == 0:
+            return self.request
+        opts = self.request.opts
+        prompt = np.concatenate([
+            np.asarray(self.request.prompt, np.int32),
+            np.asarray(self.prior_tokens, np.int32)])
+        return Request(
+            uid=self.request.uid, prompt=prompt,
+            options=GenerationOptions(
+                max_new_tokens=opts.max_new_tokens - len(self.prior_tokens),
+                eos_id=opts.eos_id, odp=opts.odp))
+
+
+@dataclass
+class _PoolSession:
+    """Live state of one stepwise serving session over the slot pool."""
+
+    capacity: int
+    caches: Any
+    pending: deque                    # (submission idx, Request)
+    active: np.ndarray                # (B,) bool
+    cur: np.ndarray                   # (B,) last sampled token per slot
+    pos: np.ndarray                   # (B,) its absolute position
+    gen: List[List[int]]
+    slots: List[Optional[_Slot]]
+    thr: np.ndarray                   # (B,) per-slot ODP threshold
+    done: Dict[int, Result]           # keyed by submission index
+    n_submitted: int
+    scope: contextlib.ExitStack
+
+
 class ServeEngine(_ArtifactBoot):
     """Continuous-batching engine over a fixed pool of decode slots.
 
@@ -488,6 +540,7 @@ class ServeEngine(_ArtifactBoot):
         self._init_odp(mc, config.odp)
         self.stats = EngineStats()
         self._scratch = None
+        self._session: Optional[_PoolSession] = None
         pad_id = config.pad_id
 
         kinds = getattr(model, "kinds", None)
@@ -565,80 +618,179 @@ class ServeEngine(_ArtifactBoot):
 
     # ---- lifecycle ----
     def run(self, requests: List[Request]) -> List[Result]:
-        with self._mesh_scope():
-            return self._run(requests)
-
-    def _run(self, requests: List[Request]) -> List[Result]:
         if not requests:
             return []
+        self.begin(requests)
+        while self.busy:
+            self.pump()
+        return self.collect()
+
+    # ---- stepwise session API (drives run(); the fleet layer drives it
+    #      directly so it can interleave scheduling rounds with heartbeats,
+    #      fault handling and live re-sharding) ----
+    @property
+    def busy(self) -> bool:
+        """True while the current session has pending or in-flight work."""
+        s = self._session
+        return s is not None and (bool(s.pending) or bool(s.active.any()))
+
+    def begin(self, requests: List[Request]) -> None:
+        """Open a serving session over the slot pool. The mesh scope is
+        held for the whole session (closed by ``collect``)."""
+        if self._session is not None:
+            raise RuntimeError("a serving session is already active; "
+                               "collect() or drain() it first")
+        if not requests:
+            raise ValueError("begin() needs at least one request")
         b = self.num_slots
         capacity = self._capacity_for(requests)
-        caches = self._host_caches(self.model.init_caches(b, capacity))
+        scope = self._mesh_scope()
+        scope.__enter__()
         self._scratch = None          # reusable batch-1 prefill cache
-        pending = deque(enumerate(requests))
-        active = np.zeros(b, bool)
-        cur = np.zeros(b, np.int32)           # last sampled token per slot
-        pos = np.zeros(b, np.int32)           # its absolute position
-        gen: List[List[int]] = [[] for _ in range(b)]
-        slots: List[Optional[_Slot]] = [None] * b
-        # per-slot ODP threshold — a jit input of _decode, so requests at
-        # different knob settings coexist in one compiled step
-        thr = np.full(b, self._odp_default_thr, np.float32)
-        done: Dict[int, Result] = {}          # keyed by submission index
+        self._session = _PoolSession(
+            capacity=capacity,
+            caches=self._host_caches(self.model.init_caches(b, capacity)),
+            pending=deque(enumerate(requests)),
+            active=np.zeros(b, bool),
+            cur=np.zeros(b, np.int32),
+            pos=np.zeros(b, np.int32),
+            gen=[[] for _ in range(b)],
+            slots=[None] * b,
+            # per-slot ODP threshold — a jit input of _decode, so requests
+            # at different knob settings coexist in one compiled step
+            thr=np.full(b, self._odp_default_thr, np.float32),
+            done={},
+            n_submitted=len(requests),
+            scope=scope)
 
-        def finish(s: int, reason: str):
-            sl = slots[s]
-            now = time.time()
-            done[sl.req_idx] = Result(
-                uid=sl.req.uid, tokens=np.asarray(gen[s], np.int32),
-                prefill_s=sl.prefill_s,
-                decode_s=now - sl.admitted_t - sl.prefill_s,
-                new_tokens=sl.n_new, finish_reason=reason)
-            self.stats.requests += 1
-            self.stats.generated_tokens += sl.n_new
-            active[s] = False
-            slots[s] = None
+    def submit(self, requests: List[Request]) -> None:
+        """Queue more requests into the open session; they are admitted
+        as slots free up, exactly like the initial batch. Every request
+        must fit the session's capacity (fixed at ``begin``)."""
+        sess = self._session
+        if sess is None:
+            raise RuntimeError("no active session; begin() first")
+        for r in requests:
+            need = len(r.prompt) + r.opts.max_new_tokens
+            if need > sess.capacity:
+                raise ValueError(
+                    f"request {r.uid}: needs {need} cache positions > "
+                    f"session capacity {sess.capacity}; set max_seq_len "
+                    "to size the pool for late arrivals")
+            sess.pending.append((sess.n_submitted, r))
+            sess.n_submitted += 1
 
-        while pending or active.any():
-            for s in range(b):
-                while not active[s] and pending:
-                    idx, req = pending.popleft()
-                    caches = self._admit(req, idx, s, capacity, caches,
-                                         active, cur, pos, gen, slots, thr)
-                    ro = slots[s].opts
-                    eos = ro.eos_id if ro.eos_id is not None else self.eos_id
-                    if eos is not None and gen[s] and gen[s][0] == eos:
-                        finish(s, "eos")
-                    elif ro.max_new_tokens <= 1:
-                        finish(s, "length")
-            if not active.any():
-                continue
+    def _finish(self, s: int, reason: str):
+        sess = self._session
+        sl = sess.slots[s]
+        now = time.time()
+        sess.done[sl.req_idx] = Result(
+            uid=sl.req.uid, tokens=np.asarray(sess.gen[s], np.int32),
+            prefill_s=sl.prefill_s,
+            decode_s=now - sl.admitted_t - sl.prefill_s,
+            new_tokens=sl.n_new, finish_reason=reason)
+        self.stats.requests += 1
+        self.stats.generated_tokens += sl.n_new
+        sess.active[s] = False
+        sess.slots[s] = None
 
-            t0 = time.time()
-            nxt, caches = self._decode(
-                self.params, caches, self._arr(cur), self._arr(pos),
-                self._arr(active), self._arr(thr))
-            nxt = _fetch(nxt)
-            self.stats.decode_s += time.time() - t0
-            self.stats.decode_steps += 1
-            self.stats.slot_steps += b
-            self.stats.active_slot_steps += int(active.sum())
+    def pump(self) -> int:
+        """One scheduling round: admit pending requests into free slots,
+        advance every active slot by one decode step, retire finished
+        requests. Returns the number of slots still active afterwards."""
+        sess = self._session
+        if sess is None:
+            raise RuntimeError("no active session; begin() first")
+        b = self.num_slots
+        for s in range(b):
+            while not sess.active[s] and sess.pending:
+                idx, req = sess.pending.popleft()
+                sess.caches = self._admit(
+                    req, idx, s, sess.capacity, sess.caches, sess.active,
+                    sess.cur, sess.pos, sess.gen, sess.slots, sess.thr)
+                ro = sess.slots[s].opts
+                eos = ro.eos_id if ro.eos_id is not None else self.eos_id
+                if eos is not None and sess.gen[s] and sess.gen[s][0] == eos:
+                    self._finish(s, "eos")
+                elif ro.max_new_tokens <= 1:
+                    self._finish(s, "length")
+        if not sess.active.any():
+            return 0
 
-            for s in np.nonzero(active)[0]:
-                sl = slots[s]
-                tok = int(nxt[s])
-                gen[s].append(tok)
-                sl.n_new += 1
-                cur[s] = tok
-                pos[s] += 1
-                eos = sl.opts.eos_id if sl.opts.eos_id is not None else \
-                    self.eos_id
-                if eos is not None and tok == eos:
-                    finish(s, "eos")
-                elif sl.n_new >= sl.opts.max_new_tokens:
-                    finish(s, "length")
+        t0 = time.time()
+        nxt, sess.caches = self._decode(
+            self.params, sess.caches, self._arr(sess.cur),
+            self._arr(sess.pos), self._arr(sess.active), self._arr(sess.thr))
+        nxt = _fetch(nxt)
+        self.stats.decode_s += time.time() - t0
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += b
+        self.stats.active_slot_steps += int(sess.active.sum())
 
-        return [done[i] for i in range(len(requests))]
+        for s in np.nonzero(sess.active)[0]:
+            sl = sess.slots[s]
+            tok = int(nxt[s])
+            sess.gen[s].append(tok)
+            sl.n_new += 1
+            sess.cur[s] = tok
+            sess.pos[s] += 1
+            eos = sl.opts.eos_id if sl.opts.eos_id is not None else \
+                self.eos_id
+            if eos is not None and tok == eos:
+                self._finish(s, "eos")
+            elif sl.n_new >= sl.opts.max_new_tokens:
+                self._finish(s, "length")
+        return int(sess.active.sum())
+
+    def drain(self) -> List[Requeued]:
+        """Snapshot and release every in-flight and still-pending request.
+
+        Active slots become :class:`Requeued` records carrying their
+        generated-so-far tokens; never-admitted pending requests come back
+        with an empty prefix. The session stays open (finished results
+        remain collectable); the pool is left fully idle, so the caller
+        may ``collect()`` and ``begin()`` a fresh session — e.g. after
+        swapping ``self.params`` for a re-sharded replica."""
+        sess = self._session
+        if sess is None:
+            raise RuntimeError("no active session; begin() first")
+        out: List[Tuple[int, Requeued]] = []
+        for s in range(self.num_slots):
+            if sess.active[s]:
+                sl = sess.slots[s]
+                out.append((sl.req_idx, Requeued(
+                    request=sl.req,
+                    prior_tokens=np.asarray(sess.gen[s], np.int32))))
+                sess.active[s] = False
+                sess.slots[s] = None
+        for idx, req in sess.pending:
+            out.append((idx, Requeued(request=req,
+                                      prior_tokens=np.zeros(0, np.int32))))
+        sess.pending.clear()
+        return [r for _, r in sorted(out, key=lambda t: t[0])]
+
+    def take_finished(self) -> List[Result]:
+        """Pop finished results out of the open session without closing
+        it (submission order). Lets the fleet layer report completions
+        per scheduling round instead of at session end."""
+        sess = self._session
+        if sess is None:
+            return []
+        out = [sess.done.pop(i) for i in sorted(sess.done)]
+        return out
+
+    def collect(self) -> List[Result]:
+        """Close the session and return finished results in submission
+        order (drained requests are absent — they finish elsewhere)."""
+        sess = self._session
+        if sess is None:
+            raise RuntimeError("no active session; begin() first")
+        if self.busy:
+            raise RuntimeError("session still has in-flight work; "
+                               "pump() it dry or drain() first")
+        self._session = None
+        sess.scope.close()
+        return [sess.done[i] for i in sorted(sess.done)]
 
     def _admit(self, req: Request, idx: int, s: int, capacity: int, caches,
                active, cur, pos, gen, slots, thr):

@@ -1,0 +1,239 @@
+"""Block-owning engine replicas with live elastic re-sharding.
+
+One :class:`ShardedReplica` is a serving engine whose artifact is held as
+**blocks**: the expert axis is cut into contiguous byte-balanced blocks
+(:func:`repro.runtime.elastic.initial_assignment`), each owned by exactly
+one host of the replica. The replica boots by streaming the dense groups
+once plus every block through the range-filtered subset reads
+(:func:`repro.core.pipeline.load_expert_blocks`) and merging the parts
+into the full param tree (``checkpointer.merge_subset_trees``) — the same
+per-host streaming discipline ``launch.serve --num-hosts`` simulates, but
+with re-shardable granularity.
+
+Topology changes are **delta-streamed**:
+
+* ``lose_host(h)`` — h's blocks are orphaned (its memory is gone). The
+  planner re-homes them onto the lightest survivors
+  (:func:`~repro.runtime.elastic.plan_host_loss`) and only those blocks
+  are re-read from the artifact store; every survivor-resident block
+  stays put. In-flight requests are drained off the engine first
+  (:meth:`~repro.serve.engine.ServeEngine.drain`), re-admitted as
+  generated-prefix continuations after the params swap, and their results
+  stitched back together per uid — greedy decode makes the resumed stream
+  token-identical to an uninterrupted run.
+* ``join_host()`` — blocks peel off the heaviest hosts
+  (:func:`~repro.runtime.elastic.plan_host_join`); the joiner streams
+  them, donors simply drop theirs. Serving is not interrupted.
+
+``LoadStats.accumulate`` folds boot + every delta read into one
+accounting record, so ``delta_bytes < full reload`` is asserted on real
+read counters, not estimates (``tests/test_fleet_serving.py``,
+``benchmarks/bench_fleet.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import pipeline as pl
+from repro.runtime import elastic
+from repro.serve.engine import (EngineConfig, Request, Requeued, Result,
+                                ServeEngine)
+
+
+@dataclass(frozen=True)
+class ReshardEvent:
+    """One completed topology change on a replica."""
+
+    kind: str                         # "host_loss" | "host_join"
+    host: int
+    delta_bytes: int                  # bytes actually re-streamed
+    full_reload_bytes: int            # what a from-scratch boot would read
+    blocks_moved: int
+    requeued: int                     # in-flight requests drained+resumed
+    recovery_s: float
+    note: str
+
+
+class ShardedReplica:
+    """One engine replica assembled from per-host expert-block streams.
+
+    Drives the engine through its stepwise session API (``begin`` /
+    ``submit`` / ``pump`` / ``take_finished``) so the router can
+    interleave scheduling rounds with heartbeats and fault handling; all
+    results come back through :meth:`pump`, already stitched across any
+    drain/resume cycles.
+    """
+
+    def __init__(self, model, directory, *, replica_id: int = 0,
+                 num_hosts: int = 2, blocks_per_host: int = 2,
+                 verify: bool = True,
+                 config: Optional[EngineConfig] = None, **engine_kwargs):
+        self.replica_id = replica_id
+        self.directory = Path(directory)
+        self._verify = verify
+        self.alive = True
+        self.reshards: List[ReshardEvent] = []
+        #: per-uid tokens generated in sessions that were drained away
+        self._prior: Dict[object, np.ndarray] = {}
+        #: results finished right before a reshard, awaiting the next pump
+        self._leftover_results: List[Result] = []
+
+        num_experts, ebytes = pl.artifact_expert_bytes(self.directory)
+        self.num_experts = num_experts
+        self.assignment = elastic.initial_assignment(
+            ebytes, list(range(num_hosts)), blocks_per_host=blocks_per_host)
+        self._dense = pl.load_expert_blocks(
+            self.directory, (), include_dense=True, verify=verify)[0]
+        self.load_stats = dataclasses.replace(self._dense[1])
+        self._blocks: Dict[int, Tuple] = {}
+        for bi, blk in enumerate(self.assignment.blocks):
+            part = pl.load_expert_blocks(self.directory, [blk],
+                                         verify=verify)[0]
+            self._blocks[bi] = part
+            self.load_stats.accumulate(part[1])
+
+        artifact = pl.CompressedArtifact.from_parts(
+            self.directory, self._ordered_parts())
+        self.engine = ServeEngine.from_artifact(
+            model, artifact, config=config, **engine_kwargs)
+
+    # ---- holdings ----
+    def _ordered_parts(self) -> List[Tuple]:
+        return [self._dense] + [self._blocks[i]
+                                for i in range(len(self.assignment.blocks))]
+
+    @property
+    def hosts(self) -> Tuple[int, ...]:
+        return self.assignment.hosts
+
+    @property
+    def busy(self) -> bool:
+        return self.alive and self.engine.busy
+
+    # ---- request flow (router-facing) ----
+    def submit(self, requests: List[Request]) -> None:
+        if not self.alive:
+            raise RuntimeError(f"replica {self.replica_id} is dead")
+        if not requests:
+            return
+        if self.engine._session is None:
+            self.engine.begin(list(requests))
+        else:
+            self.engine.submit(list(requests))
+
+    def pump(self) -> List[Result]:
+        """One scheduling round; returns requests that finished, with
+        pre-drain prefixes stitched back in."""
+        if not self.alive:
+            return []
+        out = list(self._leftover_results)
+        self._leftover_results.clear()
+        if self.engine._session is None:
+            return out
+        self.engine.pump()
+        out.extend(self._stitch(r) for r in self.engine.take_finished())
+        if not self.engine.busy:
+            self.engine.collect()     # close the idle session
+        return out
+
+    def _stitch(self, r: Result) -> Result:
+        prior = self._prior.pop(r.uid, None)
+        if prior is None or len(prior) == 0:
+            return r
+        return Result(uid=r.uid,
+                      tokens=np.concatenate([prior,
+                                             np.asarray(r.tokens, np.int32)]),
+                      prefill_s=r.prefill_s, decode_s=r.decode_s,
+                      new_tokens=len(prior) + r.new_tokens,
+                      finish_reason=r.finish_reason)
+
+    # ---- failure / elasticity ----
+    def kill(self) -> None:
+        """Replica-level death: engine and all its state are gone. The
+        router requeues this replica's outstanding *originals* (any
+        generated prefix died with the replica's memory)."""
+        self.alive = False
+        self.engine = None
+        self._prior.clear()
+
+    def _drain_for_reshard(self) -> List[Requeued]:
+        if self.engine._session is None:
+            return []
+        requeued = self.engine.drain()
+        # finished-but-unharvested results survive the reshard; keep them
+        # for the next pump() by reopening their session bucket below
+        leftovers = [self._stitch(r) for r in self.engine.collect()]
+        self._leftover_results.extend(leftovers)
+        for rq in requeued:
+            prior = self._prior.get(rq.request.uid)
+            tokens = np.asarray(rq.prior_tokens, np.int32)
+            self._prior[rq.request.uid] = (
+                tokens if prior is None or len(prior) == 0
+                else np.concatenate([prior, tokens]))
+        return requeued
+
+    def _resume(self, requeued: List[Requeued]) -> None:
+        conts = [rq.continuation() for rq in requeued]
+        if conts:
+            self.engine.begin(conts)
+
+    def lose_host(self, host: int) -> ReshardEvent:
+        """Live re-shard after losing one host of the replica.
+
+        Raises ``ValueError`` when ``host`` is the last one — the caller
+        must treat that as replica death (:meth:`kill`).
+        """
+        if not self.alive:
+            raise RuntimeError(f"replica {self.replica_id} is dead")
+        plan = elastic.plan_host_loss(self.assignment, host)
+        t0 = time.time()
+        requeued = self._drain_for_reshard()
+        for mv in plan.moves:
+            bi = self.assignment.blocks.index(mv.block)
+            part = pl.load_expert_blocks(self.directory, [mv.block],
+                                         verify=self._verify)[0]
+            self._blocks[bi] = part
+            self.load_stats.accumulate(part[1])
+        self.assignment = plan.new
+        artifact = pl.CompressedArtifact.from_parts(
+            self.directory, self._ordered_parts())
+        self.engine.params = artifact.params
+        self._resume(requeued)
+        ev = ReshardEvent(
+            kind="host_loss", host=host, delta_bytes=plan.delta_bytes,
+            full_reload_bytes=plan.full_reload_bytes,
+            blocks_moved=len(plan.moves), requeued=len(requeued),
+            recovery_s=time.time() - t0, note=plan.note)
+        self.reshards.append(ev)
+        return ev
+
+    def join_host(self, host: Optional[int] = None) -> ReshardEvent:
+        """Rebalance blocks onto a freshly joined host. Only the joiner
+        streams (donors drop their moved blocks); serving continues
+        uninterrupted — no drain, no params swap."""
+        if not self.alive:
+            raise RuntimeError(f"replica {self.replica_id} is dead")
+        if host is None:
+            host = max(self.assignment.hosts) + 1
+        plan = elastic.plan_host_join(self.assignment, host)
+        t0 = time.time()
+        for mv in plan.moves:
+            bi = self.assignment.blocks.index(mv.block)
+            part = pl.load_expert_blocks(self.directory, [mv.block],
+                                         verify=self._verify)[0]
+            self._blocks[bi] = part
+            self.load_stats.accumulate(part[1])
+        self.assignment = plan.new
+        ev = ReshardEvent(
+            kind="host_join", host=host, delta_bytes=plan.delta_bytes,
+            full_reload_bytes=plan.full_reload_bytes,
+            blocks_moved=len(plan.moves), requeued=0,
+            recovery_s=time.time() - t0, note=plan.note)
+        self.reshards.append(ev)
+        return ev

@@ -1,0 +1,259 @@
+"""Fleet router: request queue, admission control, dispatch, failover.
+
+The front door of fleet serving. Requests enter a bounded queue
+(**admission control**: a full queue sheds the request immediately —
+back-pressure beats unbounded latency) with an optional per-request SLA
+deadline in ticks; a request whose deadline has already passed when it
+reaches the head of the queue is shed rather than dispatched (it could
+only waste a slot another request still inside its deadline needs).
+
+Dispatch is least-outstanding-first over the live replicas. The router
+drives everything on the **logical clock** (one tick = one scheduling
+round = one decode step per replica): each tick it
+
+1. fires due :class:`~repro.runtime.supervisor.FaultInjector` events
+   (kill a replica / kill a host / join a host),
+2. dispatches queued requests onto live replicas,
+3. pumps every live replica one decode step and records completions,
+4. beats the :class:`~repro.runtime.supervisor.FleetSupervisor` for the
+   live replicas and asks it for newly-dead ones — a dead replica's
+   outstanding requests are **requeued from their originals** (its memory
+   died with it) and retried on the survivors, up to
+   ``max_retries`` per request.
+
+Host-level events are delegated to the replica
+(:meth:`~repro.serve.fleet.ShardedReplica.lose_host` /
+``join_host``) — the replica stays up, drains, delta-streams, resumes.
+A host loss on a 1-host replica degenerates to replica death.
+
+Greedy decode makes every recovery path token-identical to an
+uninterrupted run: retried originals re-decode the same stream, drained
+continuations resume it exactly (``tests/test_fleet_serving.py``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.runtime.supervisor import (FaultInjector, FleetSupervisor,
+                                      JOIN_HOST, KILL_HOST, KILL_REPLICA)
+from repro.serve.engine import Request, Result
+from repro.serve.fleet import ReshardEvent, ShardedReplica
+
+
+@dataclass(frozen=True)
+class RouterConfig:
+    """Admission/failover policy knobs (all times in logical ticks)."""
+
+    max_queue: int = 64               # admission: shed submits beyond this
+    default_sla: Optional[int] = None  # completion deadline; None = no SLA
+    max_retries: int = 2              # per-request retries after deaths
+    heartbeat_timeout: float = 3.0    # ticks of silence => replica dead
+    replica_depth: int = 8            # max outstanding per replica; the
+    #                                   rest wait in the router queue where
+    #                                   deadline shedding still applies
+    max_ticks: int = 100_000          # runaway guard for run()
+
+
+@dataclass
+class _Tracked:
+    request: Request
+    submit_tick: int
+    deadline: Optional[int]           # absolute tick; None = no SLA
+    retries: int = 0
+    replica: Optional[int] = None     # replica id while dispatched
+
+
+@dataclass
+class FleetReport:
+    """Everything run() observed, for tests/benchmarks/CLI."""
+
+    submitted: int = 0
+    admitted: int = 0
+    completed: Dict[object, Result] = field(default_factory=dict)
+    shed_queue_full: List[object] = field(default_factory=list)
+    shed_deadline: List[object] = field(default_factory=list)
+    failed: List[object] = field(default_factory=list)  # retries exhausted
+    sla_misses: List[object] = field(default_factory=list)
+    deaths: List[Dict] = field(default_factory=list)
+    reshards: List[ReshardEvent] = field(default_factory=list)
+    retries: int = 0
+    ticks: int = 0
+
+    @property
+    def availability(self) -> float:
+        """Completed fraction of admitted-and-not-shed requests."""
+        served = self.admitted - len(self.shed_deadline)
+        return len(self.completed) / max(served, 1)
+
+
+class FleetRouter:
+    """Dispatches requests over a pool of :class:`ShardedReplica`."""
+
+    def __init__(self, replicas: List[ShardedReplica], directory, *,
+                 config: Optional[RouterConfig] = None,
+                 injector: Optional[FaultInjector] = None):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        ids = [r.replica_id for r in replicas]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate replica ids {ids}")
+        self.replicas: Dict[int, ShardedReplica] = {
+            r.replica_id: r for r in replicas}
+        self.config = config or RouterConfig()
+        self.injector = injector or FaultInjector([])
+        self.supervisor = FleetSupervisor(
+            directory=Path(directory),
+            timeout=self.config.heartbeat_timeout)
+        self.tick = 0
+        self.queue: deque = deque()   # _Tracked awaiting dispatch
+        self.tracked: Dict[object, _Tracked] = {}
+        self.report = FleetReport()
+
+    # ---- admission ----
+    def submit(self, request: Request,
+               sla: Optional[int] = None) -> bool:
+        """Admit ``request`` (optionally overriding the config SLA).
+        Returns False when the queue is full — the request is shed, not
+        queued (load-shedding is the admission contract)."""
+        self.report.submitted += 1
+        if len(self.queue) >= self.config.max_queue:
+            self.report.shed_queue_full.append(request.uid)
+            return False
+        sla = self.config.default_sla if sla is None else sla
+        tr = _Tracked(request=request, submit_tick=self.tick,
+                      deadline=None if sla is None else self.tick + sla)
+        self.queue.append(tr)
+        self.tracked[request.uid] = tr
+        self.report.admitted += 1
+        return True
+
+    # ---- internals ----
+    def _live(self) -> List[ShardedReplica]:
+        return [r for r in self.replicas.values() if r.alive]
+
+    def _outstanding(self, replica_id: int) -> List[_Tracked]:
+        return [t for t in self.tracked.values()
+                if t.replica == replica_id
+                and t.request.uid not in self.report.completed]
+
+    def _dispatch(self) -> None:
+        depth = self.config.replica_depth
+        while self.queue:
+            cands = [r for r in self._live()
+                     if len(self._outstanding(r.replica_id)) < depth]
+            if not cands:
+                return
+            tr = self.queue.popleft()
+            if tr.deadline is not None and self.tick > tr.deadline:
+                # expired before ever reaching a replica: shed, don't burn
+                # a slot a within-deadline request could use
+                self.report.shed_deadline.append(tr.request.uid)
+                del self.tracked[tr.request.uid]
+                continue
+            dst = min(cands, key=lambda r: (len(self._outstanding(
+                r.replica_id)), r.replica_id))
+            tr.replica = dst.replica_id
+            dst.submit([tr.request])
+
+    def _complete(self, res: Result) -> None:
+        tr = self.tracked.get(res.uid)
+        self.report.completed[res.uid] = res
+        if tr is not None and tr.deadline is not None \
+                and self.tick > tr.deadline:
+            self.report.sla_misses.append(res.uid)
+
+    def _requeue_from(self, replica_id: int, reason: str) -> None:
+        """Retry a dead replica's outstanding requests from their
+        originals (front of the queue — they have waited longest)."""
+        # reverse order + appendleft => oldest request ends up frontmost
+        for tr in sorted(self._outstanding(replica_id),
+                         key=lambda t: t.submit_tick, reverse=True):
+            if tr.retries >= self.config.max_retries:
+                self.report.failed.append(tr.request.uid)
+                del self.tracked[tr.request.uid]
+                continue
+            tr.retries += 1
+            tr.replica = None
+            self.report.retries += 1
+            self.queue.appendleft(tr)
+        self.report.deaths.append(
+            {"tick": self.tick, "replica": replica_id, "reason": reason})
+
+    def _kill_replica(self, replica_id: int, reason: str) -> None:
+        rep = self.replicas.get(replica_id)
+        if rep is None or not rep.alive:
+            return
+        rep.kill()
+        # the dead replica stops beating; the supervisor will *detect* it
+        # after `heartbeat_timeout` silent ticks and only then does the
+        # router requeue — the detection latency is part of the measured
+        # recovery, exactly as with a real crashed process
+
+    def _apply_fault(self, ev) -> None:
+        rep = self.replicas.get(ev.replica)
+        if rep is None or not rep.alive:
+            return
+        if ev.kind == KILL_REPLICA:
+            self._kill_replica(ev.replica, "injected kill")
+        elif ev.kind == KILL_HOST:
+            try:
+                self.report.reshards.append(rep.lose_host(ev.host))
+            except ValueError:
+                # last host: the replica cannot re-shard, it dies
+                self._kill_replica(ev.replica, f"lost last host {ev.host}")
+        elif ev.kind == JOIN_HOST:
+            try:
+                self.report.reshards.append(
+                    rep.join_host(None if ev.host in (None, -1)
+                                  else ev.host))
+            except ValueError:
+                pass                  # no improving move: rebalance refused
+
+    # ---- the clock ----
+    def step(self) -> None:
+        """One scheduling round (one logical tick)."""
+        self.tick += 1
+        self.report.ticks = self.tick
+        for ev in self.injector.due(self.tick):
+            self._apply_fault(ev)
+        self._dispatch()
+        for rep in self._live():
+            for res in rep.pump():
+                self._complete(res)
+            self.supervisor.beat(rep.replica_id, step=self.tick,
+                                 now=float(self.tick))
+        for replica_id in self.supervisor.check(now=float(self.tick)):
+            self._requeue_from(replica_id, "heartbeat timeout")
+
+    @property
+    def busy(self) -> bool:
+        outstanding = [t for t in self.tracked.values()
+                       if t.request.uid not in self.report.completed]
+        return bool(self.queue) or bool(outstanding)
+
+    def run(self, requests: List[Request],
+            slas: Optional[List[Optional[int]]] = None) -> FleetReport:
+        """Submit everything, crank the clock until the fleet is idle (or
+        no replica survives), return the report."""
+        slas = slas if slas is not None else [None] * len(requests)
+        for req, sla in zip(requests, slas):
+            self.submit(req, sla=sla)
+        while self.busy:
+            if not self._live():
+                for tr in list(self.tracked.values()):
+                    if tr.request.uid not in self.report.completed:
+                        self.report.failed.append(tr.request.uid)
+                self.tracked.clear()
+                self.queue.clear()
+                break
+            if self.tick >= self.config.max_ticks:
+                raise RuntimeError(
+                    f"router made no progress in {self.tick} ticks; "
+                    "check max_new_tokens vs max_ticks")
+            self.step()
+        for r in self._live():
+            self.supervisor.retire(r.replica_id)
+        return self.report

@@ -1,0 +1,478 @@
+"""Elastic fault-tolerant fleet serving: router, re-sharding, recovery.
+
+Fast-slice guarantees (PR-gating):
+
+* the engine's stepwise session API (`begin`/`pump`/`drain`/`collect`)
+  is behaviorally identical to ``run()``, and a drain/requeue cycle
+  resumes decode **token-identically** via generated-prefix
+  continuations;
+* block ownership planning tiles the expert axis exactly, re-homes only
+  a dead host's blocks (delta < full reload), and join traffic is
+  bounded by the joiner's share;
+* ``load_expert_blocks`` parts reassemble the artifact bit-for-bit and
+  their byte accounting composes (``LoadStats.accumulate``);
+* the router sheds at admission (queue bound) and at dispatch (expired
+  SLA deadline), detects replica death by heartbeat silence, and retries
+  the dead replica's requests on survivors — availability 1.0 for every
+  admitted-and-served request;
+* a mid-decode host loss on a live replica streams strictly fewer bytes
+  than a reload and the resumed streams match an uninterrupted run.
+
+The full two-replica kill-mid-decode integration runs as a slow test
+(same scenario the CI fleet smoke gates via ``benchmarks/bench_fleet``).
+"""
+import numpy as np
+import pytest
+
+from benchmarks.bench_artifact_loading import _tree_equal, build_artifact
+from repro.checkpoint.checkpointer import LoadStats, merge_subset_trees
+from repro.core import pipeline
+from repro.runtime import elastic
+from repro.runtime.supervisor import (KILL_HOST, KILL_REPLICA, JOIN_HOST,
+                                      FaultEvent, FaultInjector,
+                                      FleetSupervisor, parse_fault_spec)
+from repro.serve.engine import (GenerationOptions, Request, Result,
+                                ServeEngine)
+from repro.serve.fleet import ShardedReplica
+from repro.serve.router import FleetRouter, RouterConfig
+
+
+# --------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def saved(tmp_path_factory):
+    """Expert-heavy artifact with capacity high enough that co-resident
+    requests never overflow expert capacity — decode is then independent
+    of batch composition, so *any* recovery path must be token-identical
+    to the uninterrupted run."""
+    d = tmp_path_factory.mktemp("fleet_artifact")
+    model, artifact, _ = build_artifact(
+        d, num_experts=16, d_model=32, moe_d_ff=384, vocab_size=64,
+        group_size=32, capacity_factor=32.0)
+    return model, artifact, d
+
+
+def _reqs(n=4, max_new=6):
+    return [Request(uid=i, prompt=np.arange(1 + i, 9 + i, dtype=np.int32),
+                    options=GenerationOptions(max_new_tokens=max_new,
+                                              odp="off"))
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def ref(saved):
+    """Uninterrupted single-engine reference streams (and the engine,
+    reusable for session-API tests)."""
+    model, artifact, _ = saved
+    eng = ServeEngine.from_artifact(model, artifact, batch_size=2,
+                                    odp="off")
+    tokens = {r.uid: [int(t) for t in r.tokens] for r in eng.run(_reqs())}
+    return eng, tokens
+
+
+# ------------------------------------------------------- engine sessions
+class TestEngineSession:
+    def test_stepwise_equals_run(self, ref):
+        eng, want = ref
+        eng.begin(_reqs())
+        while eng.busy:
+            eng.pump()
+        got = {r.uid: [int(t) for t in r.tokens] for r in eng.collect()}
+        assert got == want
+
+    def test_drain_resume_token_identical(self, ref):
+        eng, want = ref
+        eng.begin(_reqs())
+        for _ in range(3):
+            eng.pump()
+        requeued = eng.drain()
+        assert not eng.busy
+        early = {r.uid: [int(t) for t in r.tokens] for r in eng.collect()}
+        # in-flight slots carry their generated prefix; pending carry none
+        uids = [rq.request.uid for rq in requeued]
+        assert sorted(uids + list(early)) == [0, 1, 2, 3]
+        prior = {rq.request.uid: [int(t) for t in rq.prior_tokens]
+                 for rq in requeued}
+        assert any(len(p) > 0 for p in prior.values())
+
+        eng.begin([rq.continuation() for rq in requeued])
+        while eng.busy:
+            eng.pump()
+        done = {r.uid: [int(t) for t in r.tokens] for r in eng.collect()}
+        got = dict(early)
+        got.update({u: prior[u] + toks for u, toks in done.items()})
+        assert got == want
+
+    def test_continuation_budget_and_prompt(self):
+        from repro.serve.engine import Requeued
+        req = Request(uid="a", prompt=np.arange(4, dtype=np.int32),
+                      options=GenerationOptions(max_new_tokens=8))
+        rq = Requeued(request=req,
+                      prior_tokens=np.asarray([9, 7], np.int32))
+        cont = rq.continuation()
+        assert cont.uid == "a"
+        assert [int(t) for t in cont.prompt] == [0, 1, 2, 3, 9, 7]
+        assert cont.opts.max_new_tokens == 6
+        empty = Requeued(request=req, prior_tokens=np.zeros(0, np.int32))
+        assert empty.continuation() is req
+
+    def test_session_misuse_raises(self, ref):
+        eng, _ = ref
+        with pytest.raises(RuntimeError, match="no active session"):
+            eng.pump()
+        with pytest.raises(RuntimeError, match="no active session"):
+            eng.collect()
+        assert eng.take_finished() == []
+        eng.begin(_reqs(n=1, max_new=4))
+        with pytest.raises(RuntimeError, match="already active"):
+            eng.begin(_reqs(n=1))
+        with pytest.raises(RuntimeError, match="in-flight"):
+            eng.collect()
+        while eng.busy:
+            eng.pump()
+        assert len(eng.collect()) == 1
+
+    def test_submit_into_open_session(self, ref):
+        eng, want = ref
+        first, later = _reqs()[:2], _reqs()[2:]
+        eng.begin(first)
+        eng.pump()
+        eng.submit(later)
+        with pytest.raises(ValueError, match="capacity"):
+            eng.submit([Request(uid="big",
+                                prompt=np.zeros(500, np.int32),
+                                options=GenerationOptions(
+                                    max_new_tokens=500))])
+        seen = {}
+        while eng.busy:
+            eng.pump()
+            for r in eng.take_finished():
+                seen[r.uid] = [int(t) for t in r.tokens]
+        assert eng.collect() == []     # take_finished drained everything
+        assert seen == want
+
+
+# ------------------------------------------------------- block ownership
+class TestBlockPlanning:
+    def test_initial_assignment_tiles_and_balances(self):
+        a = elastic.initial_assignment([10] * 16, [0, 1],
+                                       blocks_per_host=2)
+        assert a.blocks[0][0] == 0 and a.blocks[-1][1] == 16
+        assert [b[1] for b in a.blocks[:-1]] == \
+            [b[0] for b in a.blocks[1:]]
+        assert a.hosts == (0, 1)
+        assert a.bytes_of(0) == a.bytes_of(1) == 80
+
+    def test_bad_blocks_rejected(self):
+        with pytest.raises(ValueError, match="tile"):
+            elastic.BlockAssignment(blocks=((0, 4), (5, 8)),
+                                    block_bytes=(1, 1), owner=(0, 0))
+        with pytest.raises(ValueError, match="mismatch"):
+            elastic.BlockAssignment(blocks=((0, 8),), block_bytes=(1, 1),
+                                    owner=(0,))
+
+    def test_host_loss_moves_only_orphans(self):
+        a = elastic.initial_assignment(list(range(1, 17)), [0, 1, 2],
+                                       blocks_per_host=2)
+        plan = elastic.plan_host_loss(a, 1)
+        assert all(m.src == 1 for m in plan.moves)
+        assert all(m.dst in (0, 2) for m in plan.moves)
+        assert plan.delta_bytes == a.bytes_of(1)
+        assert 0 < plan.delta_bytes < plan.full_reload_bytes
+        assert 1 not in plan.new.hosts
+        # resident blocks never moved
+        for blk, old_o, new_o in zip(a.blocks, a.owner, plan.new.owner):
+            if old_o != 1:
+                assert new_o == old_o
+
+    def test_last_host_loss_raises(self):
+        a = elastic.initial_assignment([1] * 8, [5], blocks_per_host=2)
+        with pytest.raises(ValueError, match="last host"):
+            elastic.plan_host_loss(a, 5)
+        with pytest.raises(ValueError, match="owns no blocks"):
+            elastic.plan_host_loss(a, 99)
+
+    def test_join_streams_only_joiner(self):
+        a = elastic.initial_assignment([10] * 16, [0, 1],
+                                       blocks_per_host=2)
+        plan = elastic.plan_host_join(a, 2)
+        assert all(m.dst == 2 for m in plan.moves)
+        assert plan.delta_bytes == plan.new.bytes_of(2)
+        assert plan.new.max_host_bytes <= a.max_host_bytes
+        with pytest.raises(ValueError, match="already owns"):
+            elastic.plan_host_join(plan.new, 2)
+
+    def test_join_without_granularity_refused(self):
+        a = elastic.initial_assignment([10] * 2, [0, 1],
+                                       blocks_per_host=1)
+        with pytest.raises(ValueError, match="more"):
+            elastic.plan_host_join(a, 2)
+
+    def test_expert_range_delta(self):
+        d = pipeline.expert_range_delta
+        assert d(((0, 8),), ((0, 12),)) == ((8, 12),)
+        assert d(((4, 8),), ((0, 12),)) == ((0, 4), (8, 12))
+        assert d(((0, 8),), ((0, 8),)) == ()
+        assert d((), ((2, 4),)) == ((2, 4),)
+        assert d(((0, 16),), ()) == ()
+        assert d(((0, 2), (6, 8)), ((0, 8),)) == ((2, 6),)
+
+
+# --------------------------------------------------------- byte accounting
+class TestDeltaAccounting:
+    def test_loadstats_accumulate(self):
+        a = LoadStats(bytes_read=10, total_bytes=100, files_read=1,
+                      total_files=5, groups_read=1, total_groups=5)
+        b = LoadStats(bytes_read=20, total_bytes=100, files_read=2,
+                      total_files=5, groups_read=2, total_groups=5)
+        out = a.accumulate(b)
+        assert out is a
+        assert a.bytes_read == 30 and a.files_read == 3
+        assert a.groups_read == 3 and a.reads == 2
+        assert a.total_bytes == 100 and a.total_files == 5
+
+    def test_expert_blocks_reassemble_and_account(self, saved):
+        _, _, d = saved
+        full = pipeline.CompressedArtifact.load(d)
+        parts = pipeline.load_expert_blocks(d, [(0, 5), (5, 16)],
+                                            include_dense=True)
+        assert len(parts) == 3
+        merged = merge_subset_trees(parts)
+        assert _tree_equal(merged, full.params)
+        total = sum(st.bytes_read for _, st in parts)
+        assert total == full.load_stats.bytes_read
+        # a single block is a strict subset of the artifact
+        blk = parts[1][1]
+        assert 0 < blk.bytes_read < full.load_stats.bytes_read
+        with pytest.raises(ValueError, match="empty expert block"):
+            pipeline.load_expert_blocks(d, [(3, 3)])
+
+    def test_artifact_expert_bytes(self, saved):
+        _, _, d = saved
+        n, ebytes = pipeline.artifact_expert_bytes(d)
+        assert n == 16 and len(ebytes) == 16
+        assert all(b > 0 for b in ebytes)
+
+
+# ------------------------------------------------------------- supervision
+class TestSupervision:
+    def test_parse_fault_spec(self):
+        ev = parse_fault_spec("replica:1@5")
+        assert (ev.kind, ev.replica, ev.tick) == (KILL_REPLICA, 1, 5)
+        ev = parse_fault_spec("host:0.2@7")
+        assert (ev.kind, ev.replica, ev.host, ev.tick) == \
+            (KILL_HOST, 0, 2, 7)
+        ev = parse_fault_spec("join:3@2")
+        assert (ev.kind, ev.replica) == (JOIN_HOST, 3)
+        for bad in ("replica:1", "host:0@3", "nope:1@2", "replica:x@2"):
+            with pytest.raises(ValueError):
+                parse_fault_spec(bad)
+
+    def test_injector_fires_once_in_order(self):
+        inj = FaultInjector([
+            FaultEvent(tick=5, kind=KILL_REPLICA, replica=1),
+            FaultEvent(tick=2, kind=KILL_HOST, replica=0, host=1)])
+        assert inj.pending == 2
+        assert inj.due(1) == []
+        ev = inj.due(3)
+        assert len(ev) == 1 and ev[0].kind == KILL_HOST
+        assert [e.kind for e in inj.due(99)] == [KILL_REPLICA]
+        assert inj.due(99) == [] and inj.pending == 0
+        assert len(inj.fired) == 2
+
+    def test_bad_event_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent(tick=1, kind="explode", replica=0)
+        with pytest.raises(ValueError, match="host index"):
+            FaultEvent(tick=1, kind=KILL_HOST, replica=0)
+
+    def test_supervisor_detects_silence_once(self, tmp_path):
+        sup = FleetSupervisor(directory=tmp_path / "hb", timeout=3.0)
+        for t in range(1, 4):
+            sup.beat(0, step=t, now=float(t))
+            sup.beat(1, step=t, now=float(t))
+        for t in range(4, 7):       # replica 1 goes silent after tick 3
+            sup.beat(0, step=t, now=float(t))
+            assert sup.check(now=float(t)) == []
+        assert sup.check(now=7.0) == [1]
+        assert sup.check(now=8.0) == []     # reported exactly once
+
+    def test_supervisor_retire_is_not_death(self, tmp_path):
+        sup = FleetSupervisor(directory=tmp_path / "hb", timeout=2.0)
+        sup.beat(0, step=1, now=1.0)
+        sup.retire(0)
+        assert sup.check(now=50.0) == []
+
+    def test_supervisor_stragglers(self, tmp_path):
+        sup = FleetSupervisor(directory=tmp_path / "hb", timeout=3.0,
+                              straggler_z=3.0)
+        for t in range(30):
+            sup.beat(0, step=t, now=float(t),
+                     step_s=0.1 + 0.001 * (t % 3))
+        assert not sup.stragglers
+        sup.beat(0, step=30, now=30.0, step_s=1.5)
+        assert sup.stragglers and sup.stragglers[-1]["replica"] == 0
+
+
+# ------------------------------------------------- router (fake replicas)
+class _FakeReplica:
+    """Engine-free replica: completes each request after ``steps`` pumps."""
+
+    def __init__(self, replica_id, steps=3):
+        self.replica_id = replica_id
+        self.alive = True
+        self.steps = steps
+        self._work = {}
+
+    @property
+    def busy(self):
+        return self.alive and bool(self._work)
+
+    def submit(self, requests):
+        for r in requests:
+            self._work[r.uid] = self.steps
+
+    def pump(self):
+        done = []
+        for uid in list(self._work):
+            self._work[uid] -= 1
+            if self._work[uid] <= 0:
+                del self._work[uid]
+                done.append(Result(
+                    uid=uid, tokens=np.zeros(1, np.int32), prefill_s=0.0,
+                    decode_s=0.0, new_tokens=1, finish_reason="length"))
+        return done
+
+    def kill(self):
+        self.alive = False
+        self._work.clear()
+
+
+class TestRouterPolicy:
+    def test_admission_sheds_on_full_queue(self, tmp_path):
+        router = FleetRouter([_FakeReplica(0)], tmp_path / "hb",
+                             config=RouterConfig(max_queue=2))
+        rpt = router.run(_reqs(n=5))
+        assert rpt.submitted == 5 and rpt.admitted == 2
+        assert len(rpt.shed_queue_full) == 3
+        assert len(rpt.completed) == 2
+        assert rpt.availability == 1.0
+
+    def test_deadline_sheds_stale_queue(self, tmp_path):
+        router = FleetRouter(
+            [_FakeReplica(0, steps=5)], tmp_path / "hb",
+            config=RouterConfig(replica_depth=1, default_sla=3))
+        rpt = router.run(_reqs(n=3))
+        assert len(rpt.completed) == 1
+        assert len(rpt.shed_deadline) == 2
+        assert rpt.availability == 1.0
+        # the one that did run finished late — recorded, not shed
+        assert rpt.sla_misses == [0]
+
+    def test_replica_death_retries_on_survivor(self, tmp_path):
+        inj = FaultInjector([FaultEvent(tick=2, kind=KILL_REPLICA,
+                                        replica=0)])
+        router = FleetRouter(
+            [_FakeReplica(0, steps=4), _FakeReplica(1, steps=4)],
+            tmp_path / "hb",
+            config=RouterConfig(heartbeat_timeout=2.0), injector=inj)
+        rpt = router.run(_reqs(n=4))
+        assert len(rpt.completed) == 4
+        assert rpt.deaths and rpt.deaths[0]["replica"] == 0
+        assert rpt.retries > 0
+        assert rpt.availability == 1.0
+
+    def test_all_replicas_dead_fails_outstanding(self, tmp_path):
+        inj = FaultInjector([FaultEvent(tick=1, kind=KILL_REPLICA,
+                                        replica=0)])
+        router = FleetRouter([_FakeReplica(0, steps=10)], tmp_path / "hb",
+                             config=RouterConfig(), injector=inj)
+        rpt = router.run(_reqs(n=3))
+        assert not rpt.completed
+        assert sorted(rpt.failed) == [0, 1, 2]
+
+    def test_retries_exhausted_fails_request(self, tmp_path):
+        inj = FaultInjector([FaultEvent(tick=2, kind=KILL_REPLICA,
+                                        replica=0)])
+        router = FleetRouter(
+            [_FakeReplica(0, steps=6), _FakeReplica(1, steps=6)],
+            tmp_path / "hb",
+            config=RouterConfig(max_retries=0, heartbeat_timeout=2.0,
+                                replica_depth=2),
+            injector=inj)
+        rpt = router.run(_reqs(n=4))
+        assert rpt.failed                      # replica 0's share gave up
+        assert len(rpt.completed) + len(rpt.failed) == 4
+        assert rpt.retries == 0
+
+
+# ---------------------------------------------- fleet integration (real)
+class TestFleetIntegration:
+    def test_host_loss_then_join(self, saved, ref, tmp_path):
+        """Mid-decode host loss: drain, delta-stream, resume — every
+        admitted request completes token-identically to the
+        uninterrupted run, and strictly fewer bytes stream than a full
+        reload. Then a host joins with zero interruption."""
+        model, _, d = saved
+        _, want = ref
+        rep = ShardedReplica(model, d, replica_id=0, num_hosts=2,
+                             blocks_per_host=2, batch_size=2, odp="off")
+        boot_bytes = rep.load_stats.bytes_read
+        assert rep.load_stats.reads == 5       # dense + 4 blocks
+        inj = FaultInjector([FaultEvent(tick=4, kind=KILL_HOST,
+                                        replica=0, host=0)])
+        router = FleetRouter([rep], tmp_path / "hb", injector=inj)
+        rpt = router.run(_reqs())
+
+        got = {r.uid: [int(t) for t in r.tokens]
+               for r in rpt.completed.values()}
+        assert got == want                     # token-identical recovery
+        assert rpt.availability == 1.0
+        ev = rpt.reshards[0]
+        assert ev.kind == "host_loss" and ev.requeued > 0
+        assert 0 < ev.delta_bytes < ev.full_reload_bytes
+        assert rep.load_stats.bytes_read == boot_bytes + ev.delta_bytes
+        assert rep.hosts == (1,)
+
+        ev2 = rep.join_host()
+        assert ev2.kind == "host_join" and len(rep.hosts) == 2
+        assert 0 < ev2.delta_bytes < ev2.full_reload_bytes
+        assert rep.load_stats.bytes_read == \
+            boot_bytes + ev.delta_bytes + ev2.delta_bytes
+
+    def test_lost_last_host_is_replica_death(self, saved, tmp_path):
+        model, _, d = saved
+        rep = ShardedReplica(model, d, replica_id=0, num_hosts=1,
+                             blocks_per_host=2, batch_size=2, odp="off")
+        inj = FaultInjector([FaultEvent(tick=2, kind=KILL_HOST,
+                                        replica=0, host=0)])
+        router = FleetRouter([rep], tmp_path / "hb", injector=inj)
+        rpt = router.run(_reqs(n=2))
+        assert not rep.alive
+        assert sorted(rpt.failed) == [0, 1]    # no survivor to retry on
+
+    @pytest.mark.slow
+    def test_replica_kill_mid_decode(self, saved, ref, tmp_path):
+        """Two real replicas; one dies mid-decode. Heartbeat silence is
+        detected, its requests retry from originals on the survivor, and
+        every admitted request completes token-identically."""
+        model, _, d = saved
+        _, want = ref
+        pool = [ShardedReplica(model, d, replica_id=i, num_hosts=2,
+                               blocks_per_host=2, batch_size=2, odp="off")
+                for i in range(2)]
+        inj = FaultInjector([FaultEvent(tick=3, kind=KILL_REPLICA,
+                                        replica=0)])
+        router = FleetRouter(pool, tmp_path / "hb", injector=inj)
+        rpt = router.run(_reqs())
+        got = {r.uid: [int(t) for t in r.tokens]
+               for r in rpt.completed.values()}
+        assert got == want
+        assert rpt.availability == 1.0
+        assert rpt.deaths and rpt.deaths[0]["replica"] == 0
+        assert rpt.retries > 0
+
+    def test_mesh_reshard_delta_same_mesh_is_empty(self, saved):
+        import jax
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        segs = ((0, 16),)
+        assert elastic.mesh_reshard_delta(mesh, mesh, segs) == ()

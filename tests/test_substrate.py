@@ -125,6 +125,67 @@ class TestFaultTolerance:
         assert Heartbeat.dead_workers(tmp_path / "hb", timeout_s=0.0,
                                       now=time.time() + 10) == [3]
 
+    def test_heartbeat_skips_corrupt_files(self, tmp_path):
+        """A torn/corrupt heartbeat file must never take the detector
+        down — it is skipped, healthy workers still report."""
+        d = tmp_path / "hb"
+        Heartbeat(d, worker_id=1).beat(step=5, now=0.0)
+        Heartbeat(d, worker_id=2).beat(step=5, now=100.0)
+        (d / "hb_7.json").write_text('{"worker": 7, "time"')   # torn write
+        (d / "hb_8.json").write_text('{"step": 1, "time": 0}')  # no worker
+        (d / "hb_9.json").write_text('{"worker": "x", "time": 0}')
+        recs = Heartbeat.read_all(d)
+        assert sorted(recs) == [1, 2]
+        assert Heartbeat.dead_workers(d, timeout_s=10, now=100.0) == [1]
+
+    def test_heartbeat_logical_clock_and_retire(self, tmp_path):
+        d = tmp_path / "hb"
+        hb = Heartbeat(d, worker_id=0)
+        hb.beat(step=1, now=5.0)
+        assert Heartbeat.read_all(d)[0]["time"] == 5.0
+        assert Heartbeat.dead_workers(d, timeout_s=3, now=9.0) == [0]
+        hb.retire()
+        assert Heartbeat.read_all(d) == {}
+        hb.retire()                       # idempotent
+
+    def test_restart_accounting(self, tmp_path):
+        """``restarts`` counts only *completed* restarts; the run that
+        exhausts the budget records a fatal failure string instead."""
+        mgr = CheckpointManager(tmp_path / "ft3", keep=2, async_save=False)
+        fails = {"n": 0}
+
+        def injector(step):
+            if fails["n"] < 2:
+                fails["n"] += 1
+                raise RuntimeError(f"crash {fails['n']}")
+
+        report = run_with_fault_tolerance(
+            total_steps=4, make_state=lambda: {"x": jnp.zeros(())},
+            step_fn=lambda s, i: s, ckpt_manager=mgr, checkpoint_every=2,
+            max_restarts=3, fail_injector=injector)
+        assert report.restarts == 2
+        assert len(report.failures) == 2
+        assert "@ restart 2" in report.failures[-1]
+
+    def test_restart_accounting_fatal(self, tmp_path):
+        """The fatal (budget-exhausting) failure is recorded but NOT
+        counted as a restart — none happens."""
+        mgr = CheckpointManager(tmp_path / "ft4", keep=2, async_save=False)
+
+        def injector(step):
+            raise RuntimeError("persistent failure")
+
+        with pytest.raises(RuntimeError) as ei:
+            run_with_fault_tolerance(
+                total_steps=5, make_state=lambda: {"x": jnp.zeros(())},
+                step_fn=lambda s, i: s, ckpt_manager=mgr,
+                checkpoint_every=2, max_restarts=2, fail_injector=injector)
+        report = ei.value.ft_report
+        assert report.restarts == 2            # 2 tolerated, 3rd fatal
+        assert len(report.failures) == 3
+        assert "fatal" in report.failures[-1]
+        assert "persistent failure" in report.failures[-1]
+
 
 # ---------------------------------------------------------------- elastic
 class TestElastic:
@@ -154,6 +215,54 @@ class TestElastic:
             {"w": (2048, 8192), "odd": (7, 9)}, mesh)
         assert "w" not in issues
         assert "odd" in issues
+
+    def test_survivors_below_model_axis_raises(self):
+        """Any survivor count under the model axis is unservable — the TP
+        tile shapes cannot be preserved."""
+        mesh = MeshConfig(shape=(4, 16), axis_names=("data", "model"))
+        for n in (15, 8, 1):
+            with pytest.raises(ValueError):
+                plan_elastic(mesh, surviving_devices=n, global_batch=64)
+
+    def test_single_device_survivor(self):
+        """A 1x1 mesh down to one device: a degenerate but valid plan."""
+        mesh = MeshConfig(shape=(4, 1), axis_names=("data", "model"))
+        plan = plan_elastic(mesh, surviving_devices=1, global_batch=16)
+        assert plan.new_mesh.axis_size("data") == 1
+        assert plan.new_mesh.axis_size("model") == 1
+        assert plan.grad_accum == 4
+        assert plan.new_global_batch >= 1
+
+    def test_non_power_of_two_survivors(self):
+        """Odd survivor counts round the data axis down to a power of
+        two; leftover devices idle rather than break collectives."""
+        mesh = MeshConfig(shape=(16, 4), axis_names=("data", "model"))
+        plan = plan_elastic(mesh, surviving_devices=23, global_batch=256)
+        # 23 // 4 = 5 data-parallel candidates -> largest pow2 is 4
+        assert plan.new_mesh.axis_size("data") == 4
+        assert plan.new_mesh.axis_size("model") == 4
+        assert plan.grad_accum == 4
+        assert plan.new_global_batch % 4 == 0
+
+    def test_exact_model_axis_survivor(self):
+        """Exactly the model axis left: data collapses to 1."""
+        mesh = MeshConfig(shape=(8, 8), axis_names=("data", "model"))
+        plan = plan_elastic(mesh, surviving_devices=8, global_batch=64)
+        assert plan.new_mesh.axis_size("data") == 1
+        assert plan.new_mesh.axis_size("model") == 8
+        assert plan.grad_accum == 8
+
+    def test_validate_resharding_edges(self):
+        mesh = MeshConfig(shape=(1, 1), axis_names=("data", "model"))
+        # everything divides a 1x1 mesh
+        assert validate_resharding({"w": (7, 9), "v": (3,)}, mesh) == {}
+        mesh = MeshConfig(shape=(2, 8), axis_names=("data", "model"))
+        issues = validate_resharding(
+            {"ok": (4, 16), "vec": (16,), "last_dim_1": (6, 1),
+             "bad": (5, 12)}, mesh)
+        assert "ok" not in issues and "vec" not in issues
+        assert "last_dim_1" not in issues     # dim 1 never shards
+        assert "bad" in issues
 
 
 # ------------------------------------------------------------------- data
