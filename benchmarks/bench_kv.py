@@ -1,0 +1,250 @@
+"""KV memory layer benchmarks: paged + quantized cache vs contiguous.
+
+Four sections, all smoke scale (CPU container):
+
+* **bytes/token** — measured from real device-array ``nbytes`` (not the
+  analytic formula, which is reported alongside): a bf16 contiguous
+  cache (K + V rows plus the int32 ``pos`` bookkeeping) vs the paged
+  pool at ``off`` / ``int8`` / ``int4``.  The headline ratio is
+  int4/bf16; int8 with per-position scales lands at ~56% and is
+  reported but not gated.
+* **capacity at fixed bytes** — how many concurrent max-length slots a
+  fixed pool byte budget holds, contiguous bf16 vs paged int4 (page
+  granularity and the reserved trash page are charged to the paged
+  side).
+* **token identity** — the continuous engine on a mixed workload,
+  contiguous vs paged (quant off): per-uid token sequences must be
+  bit-identical.
+* **prefill interleave** — the longest single scheduling round (the
+  decode gap every active request observes) when a long prompt arrives
+  mid-decode, chunked prefill vs monolithic.  Timing-based, reported
+  only.
+
+``gate=True`` asserts the CI contract: int4 bytes/token <= 50% of bf16
+contiguous, paged tokens identical, and >= 2x concurrent slots at a
+fixed pool budget.
+
+    PYTHONPATH=src python -m benchmarks.bench_kv [--gate]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Table
+from repro.configs import get_config
+from repro.models.model_registry import build_model
+from repro.serve.engine import (EngineConfig, GenerationOptions, Request,
+                                ServeEngine)
+from repro.serve.kv_pool import (KVPoolConfig, contiguous_kv_bytes_per_token,
+                                 paged_kv_bytes_per_token)
+
+
+def _model(seed: int = 0):
+    """The serving smoke MoE (same recipe as bench_serving)."""
+    cfg = get_config("mixtral-8x7b", smoke=True).replace(
+        dtype="float32", num_layers=2, d_model=128, d_ff=256, moe_d_ff=256,
+        num_experts=8, vocab_size=512, capacity_factor=8.0,
+        scan_layers=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _paged_engine(model, params, batch=4, max_seq_len=96, **pool_kw):
+    pool_kw.setdefault("num_pages", 33)
+    pool_kw.setdefault("page_size", 16)
+    return ServeEngine(model, params, config=EngineConfig(
+        batch_size=batch, max_seq_len=max_seq_len,
+        kv_pool=KVPoolConfig(**pool_kw)))
+
+
+def _workload(cfg, n_requests=12, seed=0, max_seq_len=96):
+    """Mixed lengths bounded so prompt + output fits ``max_seq_len``."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n_requests):
+        pl = int(rng.choice([8, 16, 24, 40, 64]))
+        mn = int(rng.choice([4, 8, 12, 16, 24]))
+        assert pl + mn <= max_seq_len
+        reqs.append(Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, pl).astype(np.int32),
+            options=GenerationOptions(max_new_tokens=mn)))
+    return reqs
+
+
+def _nbytes(tree) -> int:
+    return sum(a.nbytes for a in jax.tree.leaves(tree))
+
+
+def bytes_per_token(verbose: bool = True):
+    """Measured KV bytes/token: bf16 contiguous vs paged off/int8/int4.
+
+    Measured on a dense full-attention smoke model (internlm2) so the
+    contiguous baseline is a plain ring-free cache; the per-layer
+    analytic numbers from ``kv_pool`` are reported for cross-checking.
+    """
+    cfg = get_config("internlm2-1.8b", smoke=True).replace(dtype="bfloat16")
+    model = build_model(cfg)
+    num_pages, ps = 65, 16               # 64 usable pages = 1024 tokens
+    tokens = (num_pages - 1) * ps
+
+    contig = _nbytes(model.init_caches(1, tokens)) / tokens
+    paged = {q: _nbytes(model.init_paged_caches(num_pages, ps, quant=q))
+             / tokens for q in ("off", "int8", "int4")}
+
+    t = Table(f"KV bytes/token ({cfg.num_layers} layers, "
+              f"{cfg.num_kv_heads} KV heads x {cfg.head_dim}, "
+              f"page_size {ps})",
+              ["layout", "bytes_tok", "vs bf16 contiguous"])
+    t.add("contiguous bf16 (+pos)", round(contig, 1), "1.00x")
+    for q in ("off", "int8", "int4"):
+        t.add(f"paged {q}", round(paged[q], 1),
+              f"{paged[q] / contig:.2f}x")
+    result = {
+        "contiguous_bf16": contig,
+        "paged": paged,
+        "ratio_vs_bf16": {q: paged[q] / contig for q in paged},
+        "analytic_per_layer": {
+            "contiguous_bf16": contiguous_kv_bytes_per_token(
+                cfg.num_kv_heads, cfg.head_dim),
+            **{q: paged_kv_bytes_per_token(cfg.num_kv_heads, cfg.head_dim, q)
+               for q in ("off", "int8", "int4")}},
+    }
+    if verbose:
+        print(t.render())
+    return result
+
+
+def capacity_at_fixed_bytes(bpt: dict, max_len: int = 1024,
+                            page_size: int = 16, base_slots: int = 4,
+                            verbose: bool = True):
+    """Concurrent max-length slots a fixed pool byte budget holds.
+
+    The budget is what the contiguous engine allocates for
+    ``base_slots`` slots of ``max_len``; the paged side is charged page
+    granularity plus the reserved trash page.
+    """
+    budget = base_slots * max_len * bpt["contiguous_bf16"]
+    pages_per_slot = -(-max_len // page_size)
+    rows = []
+    slots = {}
+    for q in ("off", "int8", "int4"):
+        page_bytes = bpt["paged"][q] * page_size
+        slots[q] = int((budget - page_bytes)        # trash page
+                       // (pages_per_slot * page_bytes))
+        rows.append((q, slots[q], slots[q] / base_slots))
+    t = Table(f"concurrent slots at fixed pool bytes "
+              f"({base_slots} x {max_len}-token bf16 contiguous budget)",
+              ["layout", "slots", "vs contiguous"])
+    t.add("contiguous bf16", base_slots, "1.0x")
+    for q, n, r in rows:
+        t.add(f"paged {q}", n, f"{r:.1f}x")
+    if verbose:
+        print(t.render())
+    return {"budget_bytes": budget, "contiguous_slots": base_slots,
+            "paged_slots": slots,
+            "slot_ratio": {q: slots[q] / base_slots for q in slots}}
+
+
+def token_identity(verbose: bool = True):
+    """Paged (quant off) tokens are bit-identical to the contiguous
+    engine's on a mixed continuous-batching workload."""
+    cfg, model, params = _model()
+    reqs = _workload(cfg)
+
+    contig = ServeEngine(model, params, batch_size=4)
+    ref = {r.uid: list(r.tokens) for r in contig.run(
+        [Request(r.uid, r.prompt, options=r.opts) for r in reqs])}
+    paged = _paged_engine(model, params)
+    out = {r.uid: list(r.tokens) for r in paged.run(
+        [Request(r.uid, r.prompt, options=r.opts) for r in reqs])}
+    identical = ref == out
+    stats = paged._kv_mgr.stats
+    if verbose:
+        print(f"\npaged vs contiguous token identity: "
+              f"{'IDENTICAL' if identical else 'MISMATCH'} "
+              f"({len(reqs)} requests; prefix pages shared: "
+              f"{stats.shared_pages}, admissions deferred: "
+              f"{stats.failed_admits})")
+    return {"identical": identical, "n_requests": len(reqs),
+            "shared_pages": stats.shared_pages,
+            "failed_admits": stats.failed_admits}
+
+
+def prefill_interleave(verbose: bool = True, chunk: int = 8):
+    """Longest scheduling round when a 64-token prompt lands mid-decode:
+    monolithic prefill stalls every active slot for the whole prompt,
+    chunked prefill bounds the gap at one chunk per round."""
+    cfg, model, params = _model()
+    rng = np.random.RandomState(5)
+
+    def reqs():
+        short = [Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, 8).astype(np.int32),
+            options=GenerationOptions(max_new_tokens=24)) for i in range(3)]
+        long_req = Request(
+            uid=99, prompt=rng.randint(1, cfg.vocab_size, 64).astype(np.int32),
+            options=GenerationOptions(max_new_tokens=4))
+        return short, long_req
+
+    gaps = {}
+    for name, pool_kw in (("monolithic", {}),
+                          ("chunked", {"prefill_chunk": chunk})):
+        eng = _paged_engine(model, params, **pool_kw)
+        warm_s, warm_l = reqs()
+        eng.run(warm_s + [warm_l])       # compile every prefill width
+        short, long_req = reqs()
+        eng.begin(short)
+        for _ in range(3):
+            eng.pump()
+        eng.submit([long_req])
+        worst = 0.0
+        while eng.busy:
+            t0 = time.time()
+            eng.pump()
+            worst = max(worst, time.time() - t0)
+        eng.collect()
+        gaps[name] = worst
+    if verbose:
+        print(f"\nworst decode gap with 64-token prompt arriving "
+              f"mid-decode: monolithic {gaps['monolithic'] * 1e3:.1f}ms, "
+              f"chunked({chunk}) {gaps['chunked'] * 1e3:.1f}ms")
+    return {"worst_round_s": gaps, "chunk": chunk}
+
+
+def run(verbose: bool = True, gate: bool = False):
+    """Aggregate payload for ``benchmarks.run --json`` (BENCH_kv)."""
+    bpt = bytes_per_token(verbose=verbose)
+    cap = capacity_at_fixed_bytes(bpt, verbose=verbose)
+    ident = token_identity(verbose=verbose)
+    inter = prefill_interleave(verbose=verbose)
+    result = {"bytes_per_token": bpt, "capacity_at_fixed_bytes": cap,
+              "token_identity": ident, "prefill_interleave": inter}
+    if gate:
+        r4 = bpt["ratio_vs_bf16"]["int4"]
+        assert r4 <= 0.5, (
+            f"kv gate: int4 paged KV must be <= 50% of bf16 contiguous "
+            f"bytes/token, got {r4:.1%}")
+        assert ident["identical"], (
+            "kv gate: paged (quant off) tokens must match contiguous")
+        s4 = cap["slot_ratio"]["int4"]
+        assert s4 >= 2.0, (
+            f"kv gate: int4 paged pool must hold >= 2x concurrent slots "
+            f"at fixed bytes, got {s4:.1f}x")
+        if verbose:
+            print(f"\nkv gate OK: int4 bytes/token {r4:.1%} <= 50%, "
+                  f"tokens identical, {s4:.1f}x slots >= 2x")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gate", action="store_true",
+                    help="assert the CI contract (int4 <= 50% bytes/token, "
+                         "token identity, >= 2x slots)")
+    args = ap.parse_args()
+    run(gate=args.gate)

@@ -9,6 +9,8 @@ Runs one benchmark per paper table/figure at smoke scale (CPU container):
 * bench_artifact_loading — per-host bytes/latency of sharded artifact
   streaming (the deployment half of the paper's pre-loading premise)
 * bench_serving    — engines + the quant-decode launch gate
+* bench_kv         — paged + quantized KV pool: bytes/token, capacity
+  at fixed pool bytes, paged-vs-contiguous token identity
 * bench_fleet      — elastic fleet: availability under replica/host
   faults + delta re-shard bytes vs full reload
 
@@ -51,7 +53,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="allocation|odp|memory|kernels|loading|serving|"
-                         "fleet")
+                         "kv|fleet")
     ap.add_argument("--json", nargs="?", const=".", default=None,
                     metavar="DIR",
                     help="write BENCH_<suite>.json per suite into DIR "
@@ -59,8 +61,8 @@ def main():
     args = ap.parse_args()
     t0 = time.time()
     from benchmarks import (bench_allocation, bench_artifact_loading,
-                            bench_fleet, bench_kernels, bench_memory,
-                            bench_odp, bench_serving)
+                            bench_fleet, bench_kernels, bench_kv,
+                            bench_memory, bench_odp, bench_serving)
     benches = {
         "kernels": bench_kernels.run,
         "memory": bench_memory.run,
@@ -68,6 +70,7 @@ def main():
         "allocation": bench_allocation.run,
         "loading": bench_artifact_loading.run,
         "serving": bench_serving.bench_all,
+        "kv": bench_kv.run,
         "fleet": bench_fleet.run,
     }
     if args.only and args.only not in benches:

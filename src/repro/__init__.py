@@ -38,6 +38,7 @@ _EXPORTS = {
     "ServeEngine": "repro.serve.engine",
     "StaticServeEngine": "repro.serve.engine",
     "EngineConfig": "repro.serve.engine",
+    "KVPoolConfig": "repro.serve.kv_pool",
     "Request": "repro.serve.engine",
     "GenerationOptions": "repro.serve.engine",
     "Result": "repro.serve.engine",

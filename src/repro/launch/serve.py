@@ -116,16 +116,27 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
           mesh_spec: Optional[str] = None, ep_dispatch: bool = False,
           num_hosts: Optional[int] = None, host: Optional[int] = None,
           coordinator: Optional[str] = None,
-          num_processes: Optional[int] = None,
-          process_id: Optional[int] = None, odp="default"):
+          num_processes: Optional[int] = None, odp="default",
+          process_id: Optional[int] = None,
+          kv_pages: Optional[int] = None, kv_page_size: int = 16,
+          kv_quant: str = "off", kv_prefill_chunk: Optional[int] = None):
     if coordinator is not None:
         init_distributed(coordinator, num_processes, process_id)
     cfg = get_config(arch, smoke=smoke)
     model = build_model(cfg)
     engine_cls = StaticServeEngine if static else ServeEngine
     mesh = _parse_mesh(mesh_spec) if mesh_spec else None
+    kv_pool = None
+    max_seq_len = None
+    if kv_pages is not None:
+        from repro.serve.kv_pool import KVPoolConfig
+        kv_pool = KVPoolConfig(num_pages=kv_pages, page_size=kv_page_size,
+                               quant=kv_quant,
+                               prefill_chunk=kv_prefill_chunk)
+        max_seq_len = prompt_len + max_new   # workload bound (mixed <= it)
     eng_cfg = EngineConfig(batch_size=batch_size, mesh=mesh,
-                           ep_dispatch=ep_dispatch, odp=odp)
+                           ep_dispatch=ep_dispatch, odp=odp,
+                           max_seq_len=max_seq_len, kv_pool=kv_pool)
     artifact = None
     report = None
 
@@ -373,6 +384,20 @@ def main():
     ap.add_argument("--max-retries", type=int, default=2, metavar="R",
                     help="with --fleet: retries per request after "
                          "replica deaths")
+    ap.add_argument("--kv-pages", type=int, default=None, metavar="N",
+                    help="back the continuous engine's slots with a paged "
+                         "KV pool of N pages (page 0 is reserved); see "
+                         "--kv-page-size/--kv-quant/--kv-prefill-chunk")
+    ap.add_argument("--kv-page-size", type=int, default=16, metavar="T",
+                    help="with --kv-pages: tokens per KV page")
+    ap.add_argument("--kv-quant", default="off",
+                    choices=("off", "int8", "int4"),
+                    help="with --kv-pages: quantized KV page storage "
+                         "('off' is token-identical to contiguous)")
+    ap.add_argument("--kv-prefill-chunk", type=int, default=None,
+                    metavar="C",
+                    help="with --kv-pages: prefill long prompts C tokens "
+                         "per scheduling round, interleaved with decode")
     ap.add_argument("--odp", default="default", metavar="KNOB",
                     help="engine-wide Online Dynamic Pruning knob: "
                          "'default' (the artifact's calibrated threshold), "
@@ -406,7 +431,9 @@ def main():
           mesh_spec=args.mesh, ep_dispatch=args.ep,
           num_hosts=args.num_hosts, host=args.host,
           coordinator=args.coordinator, num_processes=args.processes,
-          process_id=args.process_id, odp=_parse_odp(args.odp))
+          process_id=args.process_id, odp=_parse_odp(args.odp),
+          kv_pages=args.kv_pages, kv_page_size=args.kv_page_size,
+          kv_quant=args.kv_quant, kv_prefill_chunk=args.kv_prefill_chunk)
 
 
 if __name__ == "__main__":

@@ -66,13 +66,62 @@ class KVCache:
         return self.kscale is not None
 
 
-def _kv_quantize(x: jax.Array):
-    """(B, S, Nkv, H) -> int8 codes + (B, S, Nkv) scales."""
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedKVCache:
+    """Physical KV page pool for the paged serving memory layer.
+
+    Unlike :class:`KVCache` there is no batch axis: storage is a flat pool
+    of ``(num_pages, page_size)`` token slots shared by every decode slot.
+    Which pages belong to which batch row is the engine's **page table**
+    (``kv_table``, a ``(B, max_pages)`` int32 jit *input* of
+    ``decode_step`` — mixed page counts never retrace). Logical token
+    index ``t`` of a row lives at ``table[b, t // page_size]`` offset
+    ``t % page_size``; page 0 is the trash page unused entries point at.
+
+    ``bits`` selects storage: 16 = model dtype, 8 = int8 codes +
+    per-(position, head) absmax scales, 4 = packed int4 (two codes per
+    byte along head_dim) + scales. Scales are folded into the attention
+    math on read (exact — pinned by ``tests/test_kv_quant.py``).
+    """
+
+    k: jax.Array          # (P, ps, Nkv, H) model-dtype/int8; (.., H//2) int4
+    v: jax.Array
+    kscale: Optional[jax.Array] = None   # (P, ps, Nkv) f32
+    vscale: Optional[jax.Array] = None
+    bits: int = dataclasses.field(default=16, metadata=dict(static=True))
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
+def _kv_quantize(x: jax.Array, bits: int = 8):
+    """(..., Nkv, H) -> int8 codes + (..., Nkv) per-(position, head) absmax
+    scales. ``bits`` selects the code range: 8 -> [-127, 127], 4 -> [-7, 7]
+    (int4 codes, stored packed two-per-byte in the paged pool)."""
+    levels = 2 ** (bits - 1) - 1
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    scale = jnp.maximum(absmax, 1e-8) / levels
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
+                 -levels, levels).astype(jnp.int8)
     return q, scale
+
+
+def _pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int4 codes in [-7, 7] pairwise along the last axis:
+    (..., H) int8 -> (..., H//2) int8 (low nibble = even index)."""
+    lo = (codes[..., 0::2] + 8).astype(jnp.uint8)
+    hi = (codes[..., 1::2] + 8).astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def _unpack_int4(packed: jax.Array) -> jax.Array:
+    """(..., H//2) int8 -> (..., H) int8 codes in [-7, 7]."""
+    u = packed.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int8) - 8
+    hi = (u >> 4).astype(jnp.int8) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
 
 
 def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
@@ -194,6 +243,7 @@ def apply_attention(
     cache: Optional[KVCache] = None,
     need_colsums: bool = False,
     q_valid: Optional[jax.Array] = None,
+    kv_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[KVCache], Optional[jax.Array]]:
     """One attention layer.
 
@@ -201,6 +251,9 @@ def apply_attention(
     single new position). kv_src: encoder states for cross-attention.
     q_valid: optional (B, Sq) bool live-token mask, forwarded to the
     colsums reduction only (see :func:`attend`).
+    kv_table: (B, max_pages) int32 page table, required when ``cache`` is
+    a :class:`PagedKVCache` — the decode path writes this step's K/V into
+    the pool through it and attends over the gathered logical view.
     Returns (output, updated cache, attention-received colsums).
     """
     b, sq, d = x.shape
@@ -248,7 +301,24 @@ def apply_attention(
     new_cache = None
     kscale = vscale = None
     q_slots = None              # cache slots this step's queries wrote
-    if cache is not None and kv_src is None:
+    if isinstance(cache, PagedKVCache):
+        if kv_table is None:
+            raise ValueError("a PagedKVCache needs the engine's kv_table "
+                             "(B, max_pages) page-table array")
+        if positions.ndim != 2:
+            raise ValueError("the paged KV path expects per-row (B, Sq) "
+                             f"positions, got shape {positions.shape}")
+        new_cache = _paged_write(cache, kv_table, positions, k, v)
+        k, v, kscale, vscale = _paged_gather(new_cache, kv_table)
+        # logical index inside a row's page list == absolute position, so
+        # the key-position vector is just arange over the gathered view;
+        # entries past a row's live length are causally masked (junk the
+        # trash page / unwritten offsets hold is never attended)
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        mask = build_mask(positions, k_pos, causal=causal, window=window,
+                          chunk=chunk, prefix_len=prefix_len)
+        q_slots = positions
+    elif cache is not None and kv_src is None:
         cap = cache.k.shape[1]
         s_new = k.shape[1]
         quant = cache.quantized
@@ -343,6 +413,70 @@ def apply_attention(
     if "bo" in p:
         out = out + p["bo"].astype(dt)
     return out, new_cache, colsums
+
+
+def _paged_write(cache: PagedKVCache, table: jax.Array,
+                 positions: jax.Array, k: jax.Array,
+                 v: jax.Array) -> PagedKVCache:
+    """Scatter this step's fresh K/V (B, Sq, Nkv, H) into the page pool at
+    the physical slots ``positions`` map to. Rows parked on the trash page
+    (idle/finished slots) scatter harmlessly into storage nobody reads."""
+    ps = cache.page_size
+    pages = jnp.take_along_axis(table, positions // ps, axis=1)   # (B, Sq)
+    offs = positions % ps
+    if cache.bits == 16:
+        kq, vq = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+        ks = vs = None
+    else:
+        kq, ks = _kv_quantize(k, cache.bits)
+        vq, vs = _kv_quantize(v, cache.bits)
+        if cache.bits == 4:
+            kq, vq = _pack_int4(kq), _pack_int4(vq)
+    ck = cache.k.at[pages, offs].set(kq)
+    cv = cache.v.at[pages, offs].set(vq)
+    cks = cvs = None
+    if cache.bits != 16:
+        cks = cache.kscale.at[pages, offs].set(ks)
+        cvs = cache.vscale.at[pages, offs].set(vs)
+    return PagedKVCache(ck, cv, cks, cvs, cache.bits)
+
+
+def _paged_gather(cache: PagedKVCache, table: jax.Array):
+    """Gather a row-major logical view of each batch row's pages:
+    (B, max_pages * page_size, Nkv, H) K/V plus folded-scale arrays (int4
+    codes are unpacked here; scale folding in :func:`attend` does the
+    dequantization as part of the attention math)."""
+    b, n_pages = table.shape
+    def view(pool):
+        g = jnp.take(pool, table, axis=0)          # (B, n_pages, ps, ...)
+        return g.reshape(b, n_pages * cache.page_size, *pool.shape[2:])
+    k, v = view(cache.k), view(cache.v)
+    kscale = vscale = None
+    if cache.bits != 16:
+        kscale, vscale = view(cache.kscale), view(cache.vscale)
+        if cache.bits == 4:
+            k, v = _unpack_int4(k), _unpack_int4(v)
+    return k, v, kscale, vscale
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int, *,
+                     bits: int = 16, dtype=jnp.bfloat16) -> PagedKVCache:
+    nkv, h = cfg.num_kv_heads, cfg.head_dim
+    if bits == 4 and h % 2:
+        raise ValueError(f"int4 KV packs head_dim pairwise; head_dim {h} "
+                         "is odd")
+    quant = bits != 16
+    hh = h // 2 if bits == 4 else h
+    dt = jnp.int8 if quant else dtype
+    return PagedKVCache(
+        k=jnp.zeros((num_pages, page_size, nkv, hh), dt),
+        v=jnp.zeros((num_pages, page_size, nkv, hh), dt),
+        kscale=jnp.zeros((num_pages, page_size, nkv), jnp.float32)
+        if quant else None,
+        vscale=jnp.zeros((num_pages, page_size, nkv), jnp.float32)
+        if quant else None,
+        bits=bits,
+    )
 
 
 def init_cache(cfg: ModelConfig, batch: int, capacity: int, *,

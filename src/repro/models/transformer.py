@@ -137,6 +137,7 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
                 capture: bool = False,
                 token_mask: Optional[jax.Array] = None,
                 odp_threshold: Optional[jax.Array] = None,
+                kv_table: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Any, Dict]:
     """One residual block. Returns (x, new_cache, aux).
 
@@ -161,7 +162,7 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
     attn_out, new_cache, colsums = attn_lib.apply_attention(
         p["attn"], h, cfg=cfg, positions=positions, window=window,
         chunk=chunk, prefix_len=prefix_len, cache=cache,
-        need_colsums=need_colsums, q_valid=token_mask)
+        need_colsums=need_colsums, q_valid=token_mask, kv_table=kv_table)
     if cfg.pre_post_norm:
         attn_out = core_lib.apply_norm(p["post_attn"], attn_out, cfg)
 
@@ -337,6 +338,7 @@ class DecoderModel:
                 moe_layer_metas: Optional[list] = None,
                 token_mask: Optional[jax.Array] = None,
                 odp_threshold: Optional[jax.Array] = None,
+                kv_table: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Any, Dict]:
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
@@ -369,7 +371,8 @@ class DecoderModel:
                 p_l, x, cfg, self.slot_kinds[slot], positions=positions,
                 window=w, chunk=c, prefix_len=prefix_len, cache=cache_l,
                 mc=mc, capture=capture and not use_scan,
-                token_mask=token_mask, odp_threshold=odp_threshold)
+                token_mask=token_mask, odp_threshold=odp_threshold,
+                kv_table=kv_table)
 
         aux_all: Dict = {}
         if use_scan:
@@ -432,7 +435,7 @@ class DecoderModel:
                         chunk=chunk_arr[step, slot],
                         prefix_len=prefix_len, cache=cache_l, mc=mc_l,
                         capture=capture, token_mask=token_mask,
-                        odp_threshold=odp_threshold)
+                        odp_threshold=odp_threshold, kv_table=kv_table)
                     ncs.append(nc)
                     if collect_aux:
                         per_layer_aux.append(aux)
@@ -449,7 +452,12 @@ class DecoderModel:
         return logits, new_caches, aux_all
 
     # ---- caches ----
-    def init_caches(self, batch: int, capacity: int):
+    def init_caches(self, batch: int, capacity: int, *,
+                    linear: bool = False):
+        """Per-(step, slot) contiguous caches. ``linear=True`` forces full
+        linear layout for every attention slot (no ring buffers) — the
+        paged engine's prefill scratch must be page-scatterable, and a
+        ring layout would fold distinct logical indices onto one slot."""
         cfg = self.cfg
         cdt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
 
@@ -462,7 +470,7 @@ class DecoderModel:
             w = int(self.kinds["window"][slot])
             c = int(self.kinds["chunk"][slot])
             local_span = min(w, c)
-            ring = 0 < local_span < capacity
+            ring = (not linear) and 0 < local_span < capacity
             cap = min(capacity, local_span + 8) if ring else capacity
             return attn_lib.init_cache(cfg, batch, cap, ring=ring, dtype=cdt)
 
@@ -485,19 +493,47 @@ class DecoderModel:
 
         return tuple(one(self.slot_kinds[s]) for s in range(self.period))
 
+    def init_paged_caches(self, num_pages: int, page_size: int, *,
+                          quant: str = "off"):
+        """Per-(step, slot) paged KV pools (no batch axis — slots address
+        pages through the engine's page table). Only valid for pure
+        attention stacks; SSM/hybrid layers carry recurrent state that has
+        no paged analogue."""
+        for step in range(self.n_steps):
+            for s in range(self.period):
+                if self.slot_kinds[s] in ("mamba1", "mamba2"):
+                    raise ValueError(
+                        "paged KV caches are only supported for attention "
+                        f"layers; slot {s} is {self.slot_kinds[s]!r}")
+        cfg = self.cfg
+        cdt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+        bits = {"off": 16, "int8": 8, "int4": 4}[quant]
+        caches = []
+        for step in range(self.n_steps):
+            caches.append(tuple(
+                attn_lib.init_paged_cache(cfg, num_pages, page_size,
+                                          bits=bits, dtype=cdt)
+                for _ in range(self.period)))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches,
+                            is_leaf=_is_arr)
+
     def decode_step(self, params, caches, tokens, pos, *,
                     mc: Optional[MCRuntime] = None,
                     token_mask: Optional[jax.Array] = None,
-                    odp_threshold: Optional[jax.Array] = None):
+                    odp_threshold: Optional[jax.Array] = None,
+                    kv_table: Optional[jax.Array] = None):
         """tokens: (B, 1); pos: scalar int32 position shared by the batch,
         or (B,) int32 per-row positions (continuous-batching slots).
         token_mask: optional (B, 1) bool — masked rows (inactive slots)
         are withheld from MoE dispatch so they can't consume capacity.
         odp_threshold: optional (B,) float32 traced per-row ODP threshold
-        (the engines' per-request quality/latency knob; 0.0 = keep all)."""
+        (the engines' per-request quality/latency knob; 0.0 = keep all).
+        kv_table: optional (B, max_pages) int32 page table — required when
+        ``caches`` are paged pools (see ``init_paged_caches``)."""
         logits, new_caches, _ = self.forward(
             params, tokens, caches=caches, start_pos=pos, mc=mc,
-            token_mask=token_mask, odp_threshold=odp_threshold)
+            token_mask=token_mask, odp_threshold=odp_threshold,
+            kv_table=kv_table)
         return logits, new_caches
 
 

@@ -45,6 +45,8 @@ from repro.core import odp as odp_lib
 from repro.models.layers import attention as attn_lib
 from repro.models.layers.attention import GLOBAL_WINDOW
 from repro.models.transformer import DecoderModel, MCRuntime
+from repro.serve.kv_pool import (KVBlockManager, KVPoolConfig, SlotAlloc,
+                                 TRASH_PAGE)
 from repro.sharding import context as shctx
 from repro.sharding import partitioning as part_lib
 
@@ -137,8 +139,13 @@ class EngineConfig:
     ``odp`` is the engine-wide default for the per-request knob (same
     semantics as :class:`GenerationOptions.odp`); requests override it.
     ``max_seq_len`` only applies to the continuous engine (the lockstep
-    engine sizes its cache per batch). Unknown keywords raise ``TypeError``
-    naming the valid fields — nothing is silently swallowed.
+    engine sizes its cache per batch). ``kv_pool`` switches the continuous
+    engine's KV memory layer from contiguous per-slot rows to paged blocks
+    (see :class:`repro.serve.kv_pool.KVPoolConfig`: free-list pages,
+    optional int8/int4 storage, prefix sharing, chunked prefill); it
+    requires ``max_seq_len`` and only applies to the continuous engine.
+    Unknown keywords raise ``TypeError`` naming the valid fields — nothing
+    is silently swallowed.
     """
 
     batch_size: int = 4
@@ -149,6 +156,7 @@ class EngineConfig:
     mesh: Any = None
     ep_dispatch: bool = False
     odp: Union[str, float] = "default"
+    kv_pool: Optional[KVPoolConfig] = None
 
 
 def _merge_config(config: Optional[EngineConfig],
@@ -489,6 +497,25 @@ class Requeued:
 
 
 @dataclass
+class _Prefilling:
+    """An in-progress chunked prefill (paged engine, one at a time): the
+    admission is split into fixed-size chunks, one consumed per ``pump``
+    round between decode steps, so a long prompt no longer stalls the
+    whole pool. The chunks accumulate in the engine's batch-1 scratch
+    cache; the finished prompt is page-scattered like any full prefill."""
+
+    slot: int
+    idx: int                          # submission index
+    req: Request
+    opts: GenerationOptions
+    alloc: SlotAlloc
+    prompt: np.ndarray
+    thr: float
+    n_done: int                       # prompt tokens prefilled so far
+    t0: float
+
+
+@dataclass
 class _PoolSession:
     """Live state of one stepwise serving session over the slot pool."""
 
@@ -504,6 +531,10 @@ class _PoolSession:
     done: Dict[int, Result]           # keyed by submission index
     n_submitted: int
     scope: contextlib.ExitStack
+    # --- paged KV mode (EngineConfig.kv_pool) ---
+    allocs: Optional[List[Optional[SlotAlloc]]] = None
+    table: Optional[np.ndarray] = None      # (B, table_width) int32 pages
+    prefilling: Optional[_Prefilling] = None
 
 
 class ServeEngine(_ArtifactBoot):
@@ -542,6 +573,31 @@ class ServeEngine(_ArtifactBoot):
         self._scratch = None
         self._session: Optional[_PoolSession] = None
         pad_id = config.pad_id
+
+        self._kv_cfg = config.kv_pool
+        self._paged = self._kv_cfg is not None
+        if self._paged:
+            if config.max_seq_len is None:
+                raise ValueError(
+                    "paged KV serving (EngineConfig.kv_pool) needs "
+                    "max_seq_len — the page-table width is sized from it "
+                    "once so mixed page counts never retrace")
+            if self.cfg.family in ("ssm", "hybrid", "encdec"):
+                raise ValueError(
+                    "paged KV serving supports pure-attention decoders; "
+                    f"family {self.cfg.family!r} carries recurrent or "
+                    "cross-attention state that has no paged analogue")
+            if getattr(self.cfg, "kv_quant", False):
+                raise ValueError(
+                    "ModelConfig.kv_quant quantizes the contiguous cache; "
+                    "with EngineConfig.kv_pool the KV quantization mode is "
+                    "KVPoolConfig.quant — disable kv_quant")
+            # engine-lifetime state: the allocator, prefix cache and device
+            # page pools persist across sessions so cached prefix pages
+            # keep their content (that is the whole point of prefix reuse)
+            self._kv_mgr = KVBlockManager(self._kv_cfg)
+            self._table_width = self._kv_mgr.pages_for(config.max_seq_len)
+            self._kv_caches = None      # device pools, built at first begin
 
         kinds = getattr(model, "kinds", None)
         all_global = (kinds is not None
@@ -590,11 +646,77 @@ class ServeEngine(_ArtifactBoot):
             nxt = _rep(jnp.where(active, nxt, jnp.int32(pad_id)))
             return nxt, new_caches
 
+        def _decode_paged(params, caches, cur, pos, active, thr, table):
+            # identical to _decode, plus the page table — a jit *input*
+            # (numpy each step), so any mix of per-slot page counts shares
+            # one compiled step (the PR 6 no-retrace discipline)
+            kw = {"odp_threshold": thr} if dyn else {}
+            logits, new_caches = model.decode_step(
+                params, caches, cur[:, None], pos, mc=self.mc,
+                token_mask=active[:, None], kv_table=table, **kw)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            nxt = _rep(jnp.where(active, nxt, jnp.int32(pad_id)))
+            return nxt, new_caches
+
+        def _prefill_chunk(params, tokens, start, length, caches, thr):
+            # one fixed-size chunk of a long prompt into the batch-1 linear
+            # scratch at traced offset `start` — every chunk shares one
+            # compiled shape; only the final chunk carries padding, masked
+            # out of MoE dispatch like the bucketed pad tail
+            kw = {"token_mask": (start + jnp.arange(tokens.shape[1])[None, :]
+                                 ) < length}
+            if dyn:
+                kw["odp_threshold"] = thr
+            logits, new_caches, _ = model.forward(
+                params, tokens, caches=caches, start_pos=start, mc=self.mc,
+                **kw)
+            # only meaningful on the final chunk (the prompt's last token);
+            # dynamic_index clamps harmlessly on earlier chunks
+            last = jax.lax.dynamic_index_in_dim(
+                logits, length - 1 - start, axis=1, keepdims=False)
+            nxt = _rep(jnp.argmax(last, -1).astype(jnp.int32))   # (1,)
+            return nxt, new_caches
+
+        def _scatter_pages(pool, scratch, targets):
+            # land a finished batch-1 prefill in the page pools: view the
+            # linear scratch as (n_steps, table_width, page_size, ...)
+            # pages, quantize per the pool's storage mode, scatter whole
+            # pages at `targets` — entries the request does not own
+            # (shared prefix pages, beyond-prompt junk) target the trash
+            # page, so the scatter shape never depends on the prompt
+            out = []
+            for pc, sc in zip(pool, scratch):
+                ps = pc.k.shape[2]       # leaves are (n_steps, P, ps, ...)
+
+                def pages_of(a):
+                    return a.reshape(a.shape[0], -1, ps, *a.shape[3:])
+
+                k, v = pages_of(sc.k), pages_of(sc.v)
+                cks = cvs = None
+                if pc.bits == 16:
+                    kq, vq = k.astype(pc.k.dtype), v.astype(pc.v.dtype)
+                else:
+                    kq, ks = attn_lib._kv_quantize(k, pc.bits)
+                    vq, vs = attn_lib._kv_quantize(v, pc.bits)
+                    if pc.bits == 4:
+                        kq = attn_lib._pack_int4(kq)
+                        vq = attn_lib._pack_int4(vq)
+                    cks = pc.kscale.at[:, targets].set(ks)
+                    cvs = pc.vscale.at[:, targets].set(vs)
+                out.append(attn_lib.PagedKVCache(
+                    pc.k.at[:, targets].set(kq),
+                    pc.v.at[:, targets].set(vq), cks, cvs, pc.bits))
+            return tuple(out)
+
         self._prefill = jax.jit(_prefill)
         # donation lets XLA update the pool cache in place on accelerators
         # (ignored with a warning-free no-op on CPU)
         self._insert = jax.jit(_insert, donate_argnums=(0,))
         self._decode = jax.jit(_decode, donate_argnums=(1,))
+        if self._paged:
+            self._decode_paged = jax.jit(_decode_paged, donate_argnums=(1,))
+            self._prefill_chunk = jax.jit(_prefill_chunk)
+            self._scatter = jax.jit(_scatter_pages, donate_argnums=(0,))
 
     # ---- sizing ----
     def _capacity_for(self, requests: List[Request]) -> int:
@@ -632,7 +754,8 @@ class ServeEngine(_ArtifactBoot):
     def busy(self) -> bool:
         """True while the current session has pending or in-flight work."""
         s = self._session
-        return s is not None and (bool(s.pending) or bool(s.active.any()))
+        return s is not None and (bool(s.pending) or bool(s.active.any())
+                                  or s.prefilling is not None)
 
     def begin(self, requests: List[Request]) -> None:
         """Open a serving session over the slot pool. The mesh scope is
@@ -644,12 +767,26 @@ class ServeEngine(_ArtifactBoot):
             raise ValueError("begin() needs at least one request")
         b = self.num_slots
         capacity = self._capacity_for(requests)
+        if self._paged:
+            # logical per-slot span = the fixed page-table width; device
+            # page pools persist across sessions (prefix pages keep their
+            # content), so only the first begin() pays the allocation
+            capacity = self._table_width * self._kv_cfg.page_size
+            self._check_pool_fit(requests)
+            if self._kv_caches is None:
+                self._kv_caches = self._host_caches(
+                    self.model.init_paged_caches(
+                        self._kv_cfg.num_pages, self._kv_cfg.page_size,
+                        quant=self._kv_cfg.quant))
+            caches = self._kv_caches
+        else:
+            caches = self._host_caches(self.model.init_caches(b, capacity))
         scope = self._mesh_scope()
         scope.__enter__()
         self._scratch = None          # reusable batch-1 prefill cache
         self._session = _PoolSession(
             capacity=capacity,
-            caches=self._host_caches(self.model.init_caches(b, capacity)),
+            caches=caches,
             pending=deque(enumerate(requests)),
             active=np.zeros(b, bool),
             cur=np.zeros(b, np.int32),
@@ -661,7 +798,10 @@ class ServeEngine(_ArtifactBoot):
             thr=np.full(b, self._odp_default_thr, np.float32),
             done={},
             n_submitted=len(requests),
-            scope=scope)
+            scope=scope,
+            allocs=[None] * b if self._paged else None,
+            table=np.full((b, self._table_width), TRASH_PAGE, np.int32)
+            if self._paged else None)
 
     def submit(self, requests: List[Request]) -> None:
         """Queue more requests into the open session; they are admitted
@@ -670,6 +810,8 @@ class ServeEngine(_ArtifactBoot):
         sess = self._session
         if sess is None:
             raise RuntimeError("no active session; begin() first")
+        if self._paged:
+            self._check_pool_fit(requests)
         for r in requests:
             need = len(r.prompt) + r.opts.max_new_tokens
             if need > sess.capacity:
@@ -679,6 +821,22 @@ class ServeEngine(_ArtifactBoot):
                     "to size the pool for late arrivals")
             sess.pending.append((sess.n_submitted, r))
             sess.n_submitted += 1
+
+    def _check_pool_fit(self, requests: List[Request]) -> None:
+        """The loud half of paged admission: a request whose whole span
+        can **never** fit the pool is an error at submission; one that
+        merely has to wait for pages queues (see ``_pump_admissions``)."""
+        mgr = self._kv_mgr
+        for r in requests:
+            need = len(r.prompt) + r.opts.max_new_tokens
+            pages = mgr.pages_for(need)
+            if pages > mgr.usable_pages:
+                raise ValueError(
+                    f"request {r.uid} needs {pages} KV pages ({need} "
+                    f"tokens at page_size {self._kv_cfg.page_size}) but "
+                    f"the whole pool holds only {mgr.usable_pages} "
+                    "allocatable pages — enlarge KVPoolConfig.num_pages "
+                    "or shorten the request")
 
     def _finish(self, s: int, reason: str):
         sess = self._session
@@ -693,41 +851,68 @@ class ServeEngine(_ArtifactBoot):
         self.stats.generated_tokens += sl.n_new
         sess.active[s] = False
         sess.slots[s] = None
+        if self._paged:
+            self._kv_mgr.release(sess.allocs[s])
+            sess.allocs[s] = None
+            sess.table[s] = TRASH_PAGE
+
+    def _post_admit_checks(self, s: int) -> None:
+        """Retire a freshly admitted slot whose first (prefill) token
+        already satisfies its stop condition."""
+        sess = self._session
+        sl = sess.slots[s]
+        eos = sl.opts.eos_id if sl.opts.eos_id is not None else self.eos_id
+        if eos is not None and sess.gen[s] and sess.gen[s][0] == eos:
+            self._finish(s, "eos")
+        elif sl.opts.max_new_tokens <= 1:
+            self._finish(s, "length")
 
     def pump(self) -> int:
-        """One scheduling round: admit pending requests into free slots,
-        advance every active slot by one decode step, retire finished
-        requests. Returns the number of slots still active afterwards."""
+        """One scheduling round: admit pending requests into free slots
+        (paged mode: advance at most one prefill chunk), advance every
+        active slot by one decode step, retire finished requests. Returns
+        the number of slots still active afterwards."""
         sess = self._session
         if sess is None:
             raise RuntimeError("no active session; begin() first")
         b = self.num_slots
-        for s in range(b):
-            while not sess.active[s] and sess.pending:
-                idx, req = sess.pending.popleft()
-                sess.caches = self._admit(
-                    req, idx, s, sess.capacity, sess.caches, sess.active,
-                    sess.cur, sess.pos, sess.gen, sess.slots, sess.thr)
-                ro = sess.slots[s].opts
-                eos = ro.eos_id if ro.eos_id is not None else self.eos_id
-                if eos is not None and sess.gen[s] and sess.gen[s][0] == eos:
-                    self._finish(s, "eos")
-                elif ro.max_new_tokens <= 1:
-                    self._finish(s, "length")
+        if self._paged:
+            self._pump_admissions_paged(sess)
+        else:
+            for s in range(b):
+                while not sess.active[s] and sess.pending:
+                    idx, req = sess.pending.popleft()
+                    sess.caches = self._admit(
+                        req, idx, s, sess.capacity, sess.caches,
+                        sess.active, sess.cur, sess.pos, sess.gen,
+                        sess.slots, sess.thr)
+                    self._post_admit_checks(s)
         if not sess.active.any():
             return 0
 
         t0 = time.time()
-        nxt, sess.caches = self._decode(
-            self.params, sess.caches, self._arr(sess.cur),
-            self._arr(sess.pos), self._arr(sess.active), self._arr(sess.thr))
+        if self._paged:
+            # grow each live slot's page list to cover this step's write;
+            # a slot the pool cannot grow stalls for the round (it resumes
+            # when another request's pages free up)
+            step_active = self._grow_for_step(sess)
+            nxt, sess.caches = self._decode_paged(
+                self.params, sess.caches, self._arr(sess.cur),
+                self._arr(sess.pos), self._arr(step_active),
+                self._arr(sess.thr), self._arr(sess.table))
+        else:
+            step_active = sess.active
+            nxt, sess.caches = self._decode(
+                self.params, sess.caches, self._arr(sess.cur),
+                self._arr(sess.pos), self._arr(sess.active),
+                self._arr(sess.thr))
         nxt = _fetch(nxt)
         self.stats.decode_s += time.time() - t0
         self.stats.decode_steps += 1
         self.stats.slot_steps += b
-        self.stats.active_slot_steps += int(sess.active.sum())
+        self.stats.active_slot_steps += int(step_active.sum())
 
-        for s in np.nonzero(sess.active)[0]:
+        for s in np.nonzero(step_active)[0]:
             sl = sess.slots[s]
             tok = int(nxt[s])
             sess.gen[s].append(tok)
@@ -763,6 +948,17 @@ class ServeEngine(_ArtifactBoot):
                     prior_tokens=np.asarray(sess.gen[s], np.int32))))
                 sess.active[s] = False
                 sess.slots[s] = None
+                if self._paged:
+                    self._kv_mgr.release(sess.allocs[s])
+                    sess.allocs[s] = None
+                    sess.table[s] = TRASH_PAGE
+        if sess.prefilling is not None:
+            # a half-prefilled admission restarts from scratch elsewhere
+            pf = sess.prefilling
+            out.append((pf.idx, Requeued(request=pf.req,
+                                         prior_tokens=np.zeros(0, np.int32))))
+            self._kv_mgr.release(pf.alloc)
+            sess.prefilling = None
         for idx, req in sess.pending:
             out.append((idx, Requeued(request=req,
                                       prior_tokens=np.zeros(0, np.int32))))
@@ -788,6 +984,11 @@ class ServeEngine(_ArtifactBoot):
         if self.busy:
             raise RuntimeError("session still has in-flight work; "
                                "pump() it dry or drain() first")
+        if self._paged:
+            # the decode step donates the pools — save the live version
+            # back so the next session (and its prefix-cache hits) sees
+            # the pages' current content
+            self._kv_caches = sess.caches
         self._session = None
         sess.scope.close()
         return [sess.done[i] for i in sorted(sess.done)]
@@ -831,6 +1032,137 @@ class ServeEngine(_ArtifactBoot):
                          prefill_s=prefill_s, admitted_t=t0)
         return caches
 
+    # ---- paged admission (EngineConfig.kv_pool) ----
+    def _pump_admissions_paged(self, sess: _PoolSession) -> None:
+        """Paged scheduling-round admissions: continue the in-flight
+        chunked prefill by one chunk, then admit pending requests into
+        free slots. An admission the pool cannot page **right now** goes
+        back to the front of the queue (FIFO, queue-until-pages-free);
+        requests that can never fit raised at submission."""
+        if sess.prefilling is not None:
+            self._advance_prefill(sess)
+        chunking = self._kv_cfg.prefill_chunk is not None
+        for s in range(self.num_slots):
+            if sess.prefilling is not None:
+                break                     # one in-flight prefill at a time
+            while not sess.active[s] and sess.pending:
+                idx, req = sess.pending.popleft()
+                opts = req.opts
+                prompt = np.asarray(req.prompt, np.int32)
+                thr_val = self._slot_threshold(opts)
+                alloc = self._kv_mgr.admit(
+                    prompt, len(prompt) + opts.max_new_tokens,
+                    thr_key=thr_val)
+                if alloc is None:
+                    sess.pending.appendleft((idx, req))
+                    return
+                sess.thr[s] = thr_val
+                if chunking:
+                    sess.prefilling = _Prefilling(
+                        slot=s, idx=idx, req=req, opts=opts, alloc=alloc,
+                        prompt=prompt, thr=thr_val, n_done=0,
+                        t0=time.time())
+                    self._advance_prefill(sess)   # first chunk this round
+                    break
+                self._admit_paged_full(sess, s, idx, req, opts, prompt,
+                                       thr_val, alloc)
+                self._post_admit_checks(s)
+
+    def _paged_scratch(self, sess: _PoolSession):
+        """The batch-1 prefill scratch in paged mode: a **linear**
+        full-capacity contiguous cache (ring layout would fold logical
+        indices, breaking the page scatter). Reused across admissions —
+        stale entries sit at causally-future positions, so they are never
+        attended (the same argument that makes ``_void_tail`` reuse safe
+        in the contiguous engine)."""
+        if self._scratch is None:
+            self._scratch = self._host_caches(
+                self.model.init_caches(1, sess.capacity, linear=True))
+        return self._scratch
+
+    def _admit_paged_full(self, sess, s, idx, req, opts, prompt, thr_val,
+                          alloc) -> None:
+        ln = len(prompt)
+        lb = self._bucket(ln, sess.capacity)
+        toks = np.full((1, lb), self.pad_id, np.int32)
+        toks[0, :ln] = prompt
+        t0 = time.time()
+        one = self._paged_scratch(sess)
+        nxt, self._scratch = self._prefill(
+            self.params, self._arr(toks), self._scalar(ln), one,
+            self._arr(sess.thr[s:s + 1]))
+        first = int(_fetch(nxt)[0])
+        self._land_prefill(sess, s, idx, req, opts, prompt, thr_val, alloc,
+                           first, t0)
+
+    def _advance_prefill(self, sess: _PoolSession) -> None:
+        """Consume one chunk of the in-flight prefill; on the final chunk
+        the prompt lands in the page pools and the slot activates."""
+        pf = sess.prefilling
+        chunk = self._kv_cfg.prefill_chunk
+        ln = len(pf.prompt)
+        scratch = self._paged_scratch(sess)
+        toks = np.full((1, chunk), self.pad_id, np.int32)
+        piece = pf.prompt[pf.n_done:pf.n_done + chunk]
+        toks[0, :len(piece)] = piece
+        nxt, self._scratch = self._prefill_chunk(
+            self.params, self._arr(toks), self._scalar(pf.n_done),
+            self._scalar(ln), scratch,
+            self._arr(np.asarray([pf.thr], np.float32)))
+        pf.n_done += len(piece)
+        if pf.n_done < ln:
+            return
+        first = int(_fetch(nxt)[0])
+        sess.prefilling = None
+        self._land_prefill(sess, pf.slot, pf.idx, pf.req, pf.opts,
+                           pf.prompt, pf.thr, pf.alloc, first, pf.t0)
+        self._post_admit_checks(pf.slot)
+
+    def _land_prefill(self, sess, s, idx, req, opts, prompt, thr_val,
+                      alloc, first, t0) -> None:
+        """Scatter the finished scratch prefill into the page pools and
+        activate the slot. Shared prefix pages already hold exactly this
+        content (prefix KV is a deterministic function of the prefix
+        tokens and the ODP threshold — the prefix-cache key), so their
+        scatter targets the trash page instead of rewriting them."""
+        targets = np.full(self._table_width, TRASH_PAGE, np.int32)
+        for i in range(alloc.n_shared, len(alloc.pages)):
+            targets[i] = alloc.pages[i]
+        sess.caches = self._scatter(sess.caches, self._scratch,
+                                    self._arr(targets))
+        self._kv_mgr.register_prefix(alloc, prompt, thr_val)
+        sess.allocs[s] = alloc
+        sess.table[s] = self._kv_mgr.table_row(alloc, self._table_width)
+        prefill_s = time.time() - t0
+        self.stats.prefill_s += prefill_s
+        sess.active[s] = True
+        sess.cur[s] = first
+        sess.pos[s] = len(prompt)
+        sess.gen[s] = [first]
+        sess.slots[s] = _Slot(req=req, opts=opts, req_idx=idx,
+                              prefill_s=prefill_s, admitted_t=t0)
+
+    def _grow_for_step(self, sess: _PoolSession) -> np.ndarray:
+        """Cover each live slot's next KV write with a page, on demand.
+        Slots the pool cannot grow are withheld from this decode step
+        (their table rows route the masked write to the trash page); if
+        **every** live slot is stalled nothing can ever free a page, so
+        that is an error, not a hang."""
+        step_active = sess.active.copy()
+        for s in np.nonzero(sess.active)[0]:
+            if self._kv_mgr.ensure(sess.allocs[s], int(sess.pos[s])):
+                sess.table[s] = self._kv_mgr.table_row(sess.allocs[s],
+                                                       self._table_width)
+            else:
+                step_active[s] = False
+        if sess.active.any() and not step_active.any():
+            raise RuntimeError(
+                "KV pool deadlock: every active slot is stalled waiting "
+                "for a free page and no in-flight request can complete to "
+                "free one — enlarge KVPoolConfig.num_pages or lower the "
+                "concurrency")
+        return step_active
+
 
 def _void_tail(caches, length):
     """Invalidate KV-cache entries the padded prefill tail wrote."""
@@ -861,6 +1193,11 @@ class StaticServeEngine(_ArtifactBoot):
         if not config.greedy:
             raise NotImplementedError("sampling is not implemented; "
                                       "only greedy decoding is supported")
+        if config.kv_pool is not None:
+            raise ValueError(
+                "kv_pool (the paged KV memory layer) applies to the "
+                "continuous ServeEngine only; the lockstep engine sizes "
+                "one contiguous cache per batch")
         self.config = config
         self.model = model
         self.cfg: ModelConfig = model.cfg

@@ -1,0 +1,441 @@
+"""Paged KV-cache memory layer: page pool, free-list, refcounts, prefix reuse.
+
+This module is the **host-side allocator** behind the continuous engine's
+paged KV cache (``EngineConfig.kv_pool``). The device side — the physical
+page arrays and the attention read-through — lives in
+:mod:`repro.models.layers.attention` (:class:`PagedKVCache`); the engine
+glue (admission, chunked prefill, on-demand growth) in
+:mod:`repro.serve.engine`. Everything here is pure Python/numpy and fully
+deterministic, which is what makes the hypothesis property harness in
+``tests/test_kv_pool.py`` possible.
+
+Model:
+
+* The pool is ``num_pages`` physical pages of ``page_size`` token slots
+  each. Page 0 is the reserved **trash page**: it is never allocated, and
+  every unused page-table entry points at it, so idle/finished slots'
+  decode writes land in storage nobody reads.
+* A request owns a **growable page list** (:class:`SlotAlloc`): admission
+  allocates just the pages covering the prompt (plus the first decode
+  write); decode grows the list on demand, one page at a time, and the
+  whole list is released when the request finishes.
+* Every page carries a **refcount**. Owned pages have refcount 1 from
+  their slot; pages of a shared prompt prefix are refcounted once per
+  sharing slot plus once for the prefix cache itself. A page returns to
+  the free list exactly when its refcount hits zero.
+* The :class:`PrefixCache` remembers **full pages of prompt prefixes**
+  (keyed by a hash chain over page-sized token chunks, salted with the
+  per-request knobs that change KV content, e.g. the ODP threshold).
+  Matching pages are handed to new requests read-only — decode never
+  writes into a full prompt page — so system-prompt traffic shares
+  storage. Cache-held pages are evicted LRU (deepest chain entries
+  first) under pool pressure.
+
+Invariants (the property suite's contract):
+
+1. the free list and the live (refcount > 0) pages partition
+   ``{1, ..., num_pages - 1}`` at every step;
+2. a page is referenced by two slots only when both hold it as a shared
+   prefix page (same content key);
+3. refcounts hit zero exactly at release, never below;
+4. allocation order is a pure function of the call sequence (no
+   randomness, no iteration-order dependence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: physical page id every unused page-table entry points at; never allocated
+TRASH_PAGE = 0
+
+#: storage bits per KV element for each quantization mode
+KV_QUANT_BITS = {"off": 16, "int8": 8, "int4": 4}
+
+#: pinned round-trip tolerance of the KV quantizer on *real captured KV*
+#: (relative Frobenius error of dequantized vs original cache content).
+#: ``tests/test_kv_quant.py`` asserts these bounds on KV captured from a
+#: smoke decode, and the serving identity tests reuse them — the tolerance
+#: used in serving is the tolerance tested.
+KV_QUANT_REL_TOL = {"int8": 0.02, "int4": 0.15}
+
+#: pinned relative logits drift of an int8-KV paged decode vs the bf16
+#: contiguous reference (matches the seed ``test_decode_tracks_fp`` bound)
+KV_DECODE_REL_TOL = 0.05
+
+
+@dataclass(frozen=True)
+class KVPoolConfig:
+    """Configuration of the paged KV memory layer.
+
+    num_pages: physical pages in the pool (page 0 is reserved as the
+        trash page, so ``num_pages - 1`` are allocatable).
+    page_size: token slots per page.
+    quant: ``"off"`` (bf16/f32 storage), ``"int8"`` or ``"int4"`` —
+        per-token-per-head absmax quantization (the seed quantizer from
+        ``tests/test_kv_quant.py``), scales stored per page alongside the
+        codes and folded into the attention math on read.
+    prefix_sharing: share full prompt-prefix pages across requests.
+    prefill_chunk: when set, prompts prefill in fixed-size chunks
+        interleaved with decode steps (one chunk per scheduling round), so
+        a long admission no longer stalls the pool. ``None`` = whole-prompt
+        prefill (bucketed), the pre-paging behavior.
+    """
+
+    num_pages: int
+    page_size: int = 16
+    quant: str = "off"
+    prefix_sharing: bool = True
+    prefill_chunk: Optional[int] = None
+
+    def __post_init__(self):
+        if self.num_pages < 2:
+            raise ValueError(
+                f"num_pages must be >= 2 (page 0 is the reserved trash "
+                f"page), got {self.num_pages}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.quant not in KV_QUANT_BITS:
+            raise ValueError(
+                f"kv quant mode must be one of {sorted(KV_QUANT_BITS)}, "
+                f"got {self.quant!r}")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+
+    @property
+    def bits(self) -> int:
+        return KV_QUANT_BITS[self.quant]
+
+
+@dataclass
+class SlotAlloc:
+    """One request's growable page list.
+
+    ``pages[:n_shared]`` are read-only prefix pages borrowed from other
+    requests / the prefix cache (refcounted, never written); the rest are
+    exclusively owned. Logical token index ``t`` lives in
+    ``pages[t // page_size]`` at offset ``t % page_size``.
+    """
+
+    pages: List[int]
+    n_shared: int
+    prompt_len: int
+    total_tokens: int
+    released: bool = False
+
+
+@dataclass
+class PoolStats:
+    allocated_pages: int = 0          # cumulative alloc_one() successes
+    shared_pages: int = 0             # cumulative prefix-cache page hits
+    evicted_pages: int = 0            # cache entries dropped under pressure
+    failed_admits: int = 0            # admissions deferred for lack of pages
+    grow_stalls: int = 0              # decode growth deferred
+
+
+class PagePool:
+    """Free-list page allocator with refcounts. Deterministic: the free
+    list is LIFO over an initially ascending page order, so a fixed call
+    sequence always yields the same page ids."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (one is trash), got "
+                             f"{num_pages}")
+        self.num_pages = num_pages
+        # pop() takes from the end: initial allocation order is 1, 2, ...
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.refcount = [0] * num_pages
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - 1
+
+    def alloc_one(self) -> Optional[int]:
+        if not self._free:
+            return None
+        p = self._free.pop()
+        assert self.refcount[p] == 0, f"page {p} on free list with refs"
+        self.refcount[p] = 1
+        return p
+
+    def retain(self, page: int) -> None:
+        if page == TRASH_PAGE:
+            raise ValueError("cannot retain the trash page")
+        if self.refcount[page] <= 0:
+            raise ValueError(f"retain of free page {page}")
+        self.refcount[page] += 1
+
+    def release(self, page: int) -> None:
+        if self.refcount[page] <= 0:
+            raise ValueError(f"release of already-free page {page}")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(page)       # LIFO reuse, deterministic
+
+    def live_pages(self) -> List[int]:
+        return [p for p in range(1, self.num_pages) if self.refcount[p] > 0]
+
+    def free_pages(self) -> List[int]:
+        return list(self._free)
+
+
+@dataclass
+class _CacheEntry:
+    page: int
+    depth: int                         # chain position (0 = first page)
+    last_used: int
+
+
+class PrefixCache:
+    """Content-addressed cache of full prompt-prefix pages.
+
+    Keys are a hash chain over page-sized token chunks (salted with
+    ``thr_key``, the per-request knob that changes KV content), so two
+    prompts share exactly the pages whose *entire* token prefix matches.
+    Each entry holds one pool reference on its page; eviction (LRU,
+    deepest-first among equals) drops that reference — the page is only
+    actually freed once no slot shares it.
+
+    Within a chain, ``last_used`` of a prefix entry is always >= that of
+    its suffix entries (inserts stamp uniformly; matches touch a walked
+    prefix), so deepest-first eviction can never orphan a reachable tail.
+    """
+
+    def __init__(self, pool: PagePool, page_size: int):
+        self.pool = pool
+        self.page_size = page_size
+        self._entries: Dict[bytes, _CacheEntry] = {}
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _chain_keys(self, prompt: np.ndarray, thr_key: float,
+                    n_pages: int) -> List[bytes]:
+        ps = self.page_size
+        h = hashlib.sha1(repr(float(thr_key)).encode()).digest()
+        keys = []
+        for i in range(n_pages):
+            chunk = np.ascontiguousarray(
+                np.asarray(prompt[i * ps:(i + 1) * ps], np.int32))
+            h = hashlib.sha1(h + chunk.tobytes()).digest()
+            keys.append(h)
+        return keys
+
+    def match(self, prompt: np.ndarray, thr_key: float,
+              max_pages: int) -> List[int]:
+        """Longest chain of cached full-prefix pages (<= max_pages). Pure
+        lookup plus LRU touch — the caller retains the returned pages."""
+        self._clock += 1
+        pages = []
+        for key in self._chain_keys(prompt, thr_key, max_pages):
+            e = self._entries.get(key)
+            if e is None:
+                break
+            e.last_used = self._clock
+            pages.append(e.page)
+        return pages
+
+    def register(self, prompt: np.ndarray, thr_key: float,
+                 pages: List[int], n_pages: int) -> None:
+        """Insert the first ``n_pages`` full prompt pages of an admitted
+        request. New entries take one pool reference; already-cached keys
+        are only LRU-touched (their canonical page stays; the request's
+        duplicate copy remains slot-owned and dies with the slot)."""
+        self._clock += 1
+        for depth, key in enumerate(
+                self._chain_keys(prompt, thr_key, n_pages)):
+            e = self._entries.get(key)
+            if e is not None:
+                e.last_used = self._clock
+                continue
+            page = pages[depth]
+            self.pool.retain(page)
+            self._entries[key] = _CacheEntry(page=page, depth=depth,
+                                             last_used=self._clock)
+
+    def evict(self, n_pages: int) -> int:
+        """Drop up to ``n_pages`` cache-only pages (refcount == 1, i.e. no
+        slot shares them), oldest first and deepest-first among equals so
+        a chain's tail always goes before its head. Returns pages freed."""
+        victims = sorted(
+            (e.last_used, -e.depth, key)
+            for key, e in self._entries.items()
+            if self.pool.refcount[e.page] == 1)
+        freed = 0
+        for _, _, key in victims:
+            if freed >= n_pages:
+                break
+            e = self._entries.pop(key)
+            self.pool.release(e.page)
+            freed += 1
+        return freed
+
+    def cached_pages(self) -> List[int]:
+        return [e.page for e in self._entries.values()]
+
+
+class KVBlockManager:
+    """Ties the pool and the prefix cache into the engine-facing API:
+    ``admit`` / ``ensure`` (on-demand growth) / ``register_prefix`` /
+    ``release`` / ``table_row``. All methods are atomic: a failed admit or
+    grow leaves pool state unchanged (beyond LRU touches / evictions)."""
+
+    def __init__(self, config: KVPoolConfig):
+        self.config = config
+        self.page_size = config.page_size
+        self.pool = PagePool(config.num_pages)
+        self.prefix = (PrefixCache(self.pool, config.page_size)
+                       if config.prefix_sharing else None)
+        self.stats = PoolStats()
+
+    # ---- sizing ----
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    @property
+    def usable_pages(self) -> int:
+        return self.pool.usable_pages
+
+    @property
+    def num_free(self) -> int:
+        return self.pool.num_free
+
+    def _free_up(self, n: int) -> bool:
+        """Ensure >= n free pages, evicting cache-only pages if needed."""
+        if self.pool.num_free >= n:
+            return True
+        if self.prefix is not None:
+            self.stats.evicted_pages += self.prefix.evict(
+                n - self.pool.num_free)
+        return self.pool.num_free >= n
+
+    # ---- request lifecycle ----
+    def admit(self, prompt: np.ndarray, total_tokens: int,
+              thr_key: float = 0.0) -> Optional[SlotAlloc]:
+        """Allocate the pages covering the prompt plus the first decode
+        write (logical indices [0, len(prompt)]). Returns None when the
+        pool cannot serve the request *right now* (queue until pages
+        free); raises when the request can **never** fit the pool."""
+        ln = int(len(prompt))
+        if ln < 1:
+            raise ValueError("cannot admit an empty prompt")
+        if total_tokens < ln:
+            raise ValueError(f"total_tokens {total_tokens} < prompt {ln}")
+        total_pages = self.pages_for(total_tokens)
+        if total_pages > self.usable_pages:
+            raise ValueError(
+                f"request needs {total_pages} KV pages "
+                f"({total_tokens} tokens at page_size "
+                f"{self.page_size}) but the whole pool holds only "
+                f"{self.usable_pages} allocatable pages — enlarge "
+                f"KVPoolConfig.num_pages or shorten the request")
+        need_now = self.pages_for(ln + 1)
+        shared: List[int] = []
+        if self.prefix is not None:
+            # only pages strictly full of prompt tokens are shareable:
+            # the page holding index ln will be written by decode
+            shared = self.prefix.match(prompt, thr_key, ln // self.page_size)
+        n_new = need_now - len(shared)
+        if not self._free_up(n_new):
+            self.stats.failed_admits += 1
+            return None
+        for p in shared:
+            self.pool.retain(p)
+        pages = list(shared)
+        for _ in range(n_new):
+            p = self.pool.alloc_one()
+            assert p is not None, "free count checked above"
+            pages.append(p)
+            self.stats.allocated_pages += 1
+        self.stats.shared_pages += len(shared)
+        return SlotAlloc(pages=pages, n_shared=len(shared), prompt_len=ln,
+                         total_tokens=total_tokens)
+
+    def ensure(self, alloc: SlotAlloc, pos: int) -> bool:
+        """Grow ``alloc`` to cover logical token index ``pos``. Returns
+        False (and changes nothing but possible evictions) when the pool
+        is exhausted — the caller stalls the slot and retries."""
+        if pos >= alloc.total_tokens:
+            raise ValueError(f"position {pos} outside the allocation's "
+                             f"span {alloc.total_tokens}")
+        idx = pos // self.page_size
+        while len(alloc.pages) <= idx:
+            if not self._free_up(1):
+                self.stats.grow_stalls += 1
+                return False
+            p = self.pool.alloc_one()
+            assert p is not None
+            alloc.pages.append(p)
+            self.stats.allocated_pages += 1
+        return True
+
+    def register_prefix(self, alloc: SlotAlloc, prompt: np.ndarray,
+                        thr_key: float = 0.0) -> None:
+        """After prefill lands in the pool: publish the request's full
+        prompt pages for sharing."""
+        if self.prefix is None:
+            return
+        n_full = alloc.prompt_len // self.page_size
+        self.prefix.register(prompt, thr_key, alloc.pages, n_full)
+
+    def release(self, alloc: SlotAlloc) -> None:
+        if alloc.released:
+            raise ValueError("allocation already released")
+        for p in alloc.pages:
+            self.pool.release(p)
+        alloc.released = True
+
+    def table_row(self, alloc: Optional[SlotAlloc],
+                  width: int) -> np.ndarray:
+        """(width,) int32 page-table row; unallocated tail -> trash."""
+        row = np.full(width, TRASH_PAGE, np.int32)
+        if alloc is not None:
+            row[:len(alloc.pages)] = alloc.pages
+        return row
+
+    # ---- introspection (tests / benchmarks) ----
+    def check_invariants(self) -> None:
+        """Free list + live pages must partition {1..num_pages-1}; trash
+        never allocated; refcounts non-negative."""
+        pool = self.pool
+        free = pool.free_pages()
+        live = pool.live_pages()
+        assert TRASH_PAGE not in free and TRASH_PAGE not in live
+        assert len(set(free)) == len(free), f"duplicate free pages: {free}"
+        assert not (set(free) & set(live)), \
+            f"pages both free and live: {set(free) & set(live)}"
+        assert sorted(free + live) == list(range(1, pool.num_pages)), (
+            f"free+live does not partition the pool: free={sorted(free)} "
+            f"live={sorted(live)}")
+        assert all(r >= 0 for r in pool.refcount)
+        assert all(pool.refcount[p] == 0 for p in free)
+        assert all(pool.refcount[p] > 0 for p in live)
+
+
+# ------------------------------------------------------------------ sizing
+def paged_kv_bytes_per_token(num_kv_heads: int, head_dim: int,
+                             quant: str = "off") -> float:
+    """Analytic paged KV bytes per token per attention layer (K + V codes
+    plus quantization scales; the page table amortizes to ~0)."""
+    bits = KV_QUANT_BITS[quant]
+    payload = 2 * num_kv_heads * head_dim * bits / 8
+    scales = 2 * num_kv_heads * 4 if quant != "off" else 0.0
+    return payload + scales
+
+
+def contiguous_kv_bytes_per_token(num_kv_heads: int, head_dim: int,
+                                  dtype_bytes: int = 2) -> float:
+    """Contiguous engine KV bytes per token per attention layer: bf16
+    K + V rows plus the per-position int32 ``KVCache.pos`` bookkeeping."""
+    return 2 * num_kv_heads * head_dim * dtype_bytes + 4

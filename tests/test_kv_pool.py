@@ -1,0 +1,321 @@
+"""Property-test harness for the paged KV memory layer.
+
+The allocator behind ``EngineConfig.kv_pool`` (``repro.serve.kv_pool``) is
+pure host-side Python, so its invariants can be pinned exhaustively: random
+admit/decode-grow/finish/evict schedules are generated (via the
+``_hypothesis_compat`` shim — real hypothesis when installed, a seeded
+deterministic grid otherwise) and the pool contract is checked after every
+step:
+
+1. free list + live pages partition ``{1, ..., num_pages - 1}``;
+2. no page is owned by two non-sharing slots (multi-reference only ever
+   means a shared prefix page, same content key);
+3. refcounts hit zero exactly at release, never below;
+4. the allocator is deterministic: a fixed schedule yields identical page
+   assignments on every run.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.serve.kv_pool import (KV_QUANT_BITS, KVBlockManager, KVPoolConfig,
+                                 PagePool, TRASH_PAGE,
+                                 contiguous_kv_bytes_per_token,
+                                 paged_kv_bytes_per_token)
+
+
+def _prompt(rng, lo=1, hi=24):
+    return rng.randint(1, 100, int(rng.randint(lo, hi))).astype(np.int32)
+
+
+def _run_schedule(seed, num_pages, page_size, prefix_sharing, steps=120,
+                  check_every=1):
+    """Drive a random admit/grow/finish schedule; invariant-check each
+    step. Returns the manager plus the page-assignment trace (for the
+    determinism property)."""
+    rng = np.random.RandomState(seed)
+    mgr = KVBlockManager(KVPoolConfig(num_pages=num_pages,
+                                      page_size=page_size,
+                                      prefix_sharing=prefix_sharing))
+    live = []      # (alloc, pos)
+    trace = []
+    for step in range(steps):
+        op = rng.randint(3)
+        if op == 0:                                   # admit
+            prompt = _prompt(rng)
+            total = len(prompt) + int(rng.randint(1, 16))
+            if mgr.pages_for(total) > mgr.usable_pages:
+                with pytest.raises(ValueError):
+                    mgr.admit(prompt, total)
+            else:
+                thr = float(rng.randint(3))
+                a = mgr.admit(prompt, total, thr_key=thr)
+                if a is not None:
+                    mgr.register_prefix(prompt=prompt, alloc=a, thr_key=thr)
+                    live.append([a, a.prompt_len])
+                    trace.append(("admit", tuple(a.pages)))
+        elif op == 1 and live:                        # grow one slot
+            i = rng.randint(len(live))
+            a, pos = live[i]
+            if pos + 1 < a.total_tokens:
+                grew = mgr.ensure(a, pos + 1)
+                if grew:
+                    live[i][1] = pos + 1
+                    trace.append(("grow", tuple(a.pages)))
+        elif op == 2 and live:                        # finish one slot
+            i = rng.randint(len(live))
+            a, _ = live.pop(i)
+            mgr.release(a)
+            trace.append(("release", tuple(a.pages)))
+        if step % check_every == 0:
+            mgr.check_invariants()
+    for a, _ in live:
+        mgr.release(a)
+    mgr.check_invariants()
+    return mgr, trace
+
+
+class TestPagePool:
+    def test_alloc_order_is_ascending(self):
+        pool = PagePool(8)
+        assert [pool.alloc_one() for _ in range(7)] == [1, 2, 3, 4, 5, 6, 7]
+        assert pool.alloc_one() is None
+
+    def test_trash_page_never_allocated(self):
+        pool = PagePool(8)
+        got = {pool.alloc_one() for _ in range(7)}
+        assert TRASH_PAGE not in got
+
+    def test_release_returns_page_lifo(self):
+        pool = PagePool(8)
+        pages = [pool.alloc_one() for _ in range(7)]
+        pool.release(pages[2])
+        pool.release(pages[5])
+        assert pool.alloc_one() == pages[5]       # LIFO reuse
+        assert pool.alloc_one() == pages[2]
+
+    def test_refcount_zero_exactly_at_release(self):
+        pool = PagePool(4)
+        p = pool.alloc_one()
+        pool.retain(p)
+        pool.release(p)
+        assert pool.refcount[p] == 1 and p not in pool.free_pages()
+        pool.release(p)
+        assert pool.refcount[p] == 0 and p in pool.free_pages()
+        with pytest.raises(ValueError):
+            pool.release(p)                       # never below zero
+
+    def test_retain_free_page_rejected(self):
+        pool = PagePool(4)
+        with pytest.raises(ValueError):
+            pool.retain(2)
+        with pytest.raises(ValueError):
+            pool.retain(TRASH_PAGE)
+
+
+class TestInvariantSchedules:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           num_pages=st.integers(4, 24),
+           page_size=st.sampled_from([1, 2, 4, 8]),
+           prefix_sharing=st.sampled_from([False, True]))
+    def test_random_schedule_invariants(self, seed, num_pages, page_size,
+                                        prefix_sharing):
+        """Partition/refcount invariants hold after every step of a random
+        admit/grow/finish schedule, sharing on or off."""
+        _run_schedule(seed, num_pages, page_size, prefix_sharing)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_allocator_deterministic(self, seed):
+        """Same schedule -> byte-identical page-assignment trace."""
+        _, t1 = _run_schedule(seed, 16, 4, True)
+        _, t2 = _run_schedule(seed, 16, 4, True)
+        assert t1 == t2
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           page_size=st.sampled_from([2, 4]))
+    def test_no_cross_ownership(self, seed, page_size):
+        """A page held by two live slots must be a shared prefix page of
+        both (same position in both page lists, inside both shared
+        regions) — exclusive tails never alias."""
+        rng = np.random.RandomState(seed)
+        mgr = KVBlockManager(KVPoolConfig(num_pages=32,
+                                          page_size=page_size))
+        base = rng.randint(1, 100, 4 * page_size).astype(np.int32)
+        allocs = []
+        for _ in range(5):
+            prompt = np.concatenate(
+                [base, _prompt(rng, 1, 2 * page_size)]).astype(np.int32)
+            a = mgr.admit(prompt, len(prompt) + 4)
+            if a is None:
+                break
+            mgr.register_prefix(prompt=prompt, alloc=a)
+            allocs.append(a)
+        assert len(allocs) >= 2, "pool sized to admit at least two"
+        assert any(a.n_shared for a in allocs[1:]), "no sharing happened"
+        for i, a in enumerate(allocs):
+            for b in allocs[i + 1:]:
+                for p in set(a.pages) & set(b.pages):
+                    ia, ib = a.pages.index(p), b.pages.index(p)
+                    assert ia == ib, \
+                        f"page {p} aliased at different logical indices"
+                    assert ib < b.n_shared, (
+                        f"slot holds aliased page {p} outside its shared "
+                        "prefix region")
+        mgr.check_invariants()
+        for a in allocs:
+            mgr.release(a)
+        mgr.check_invariants()
+
+    def test_failed_admit_is_atomic(self):
+        """An admission the pool cannot page leaves the pool byte-
+        identical (no partial allocation to roll back)."""
+        mgr = KVBlockManager(KVPoolConfig(num_pages=6, page_size=4,
+                                          prefix_sharing=False))
+        a = mgr.admit(np.arange(1, 16, dtype=np.int32), 18)   # 4+1 of 5
+        assert a is not None
+        before = (mgr.pool.free_pages(), list(mgr.pool.refcount))
+        assert mgr.admit(np.arange(1, 9, dtype=np.int32), 10) is None
+        assert (mgr.pool.free_pages(), list(mgr.pool.refcount)) == before
+        assert mgr.stats.failed_admits == 1
+        mgr.release(a)
+        mgr.check_invariants()
+
+    def test_failed_grow_is_atomic(self):
+        mgr = KVBlockManager(KVPoolConfig(num_pages=4, page_size=4,
+                                          prefix_sharing=False))
+        a = mgr.admit(np.arange(1, 8, dtype=np.int32), 12)    # 2 of 3 pages
+        b = mgr.admit(np.arange(1, 4, dtype=np.int32), 4)     # last page
+        before = (mgr.pool.free_pages(), list(mgr.pool.refcount))
+        assert not mgr.ensure(a, 8)           # third page: pool exhausted
+        assert (mgr.pool.free_pages(), list(mgr.pool.refcount)) == before
+        assert mgr.stats.grow_stalls == 1
+        mgr.release(b)
+        assert mgr.ensure(a, 8)               # resumes once pages free
+        mgr.release(a)
+        mgr.check_invariants()
+
+    def test_never_fits_raises(self):
+        mgr = KVBlockManager(KVPoolConfig(num_pages=4, page_size=4))
+        with pytest.raises(ValueError, match="whole pool"):
+            mgr.admit(np.arange(1, 10, dtype=np.int32), 16)    # 4 of 3
+
+
+class TestPrefixSharing:
+    def test_shared_pages_refcounted(self):
+        """Two requests with a common full-page prefix share those pages;
+        each page's refcount counts both slots plus the cache, and hits
+        zero only after both release AND eviction."""
+        ps = 4
+        mgr = KVBlockManager(KVPoolConfig(num_pages=16, page_size=ps))
+        base = np.arange(1, 1 + 2 * ps, dtype=np.int32)         # 2 full pages
+        p1 = np.concatenate([base, [90, 91]]).astype(np.int32)
+        p2 = np.concatenate([base, [80]]).astype(np.int32)
+        a1 = mgr.admit(p1, len(p1) + 4)
+        mgr.register_prefix(prompt=p1, alloc=a1)
+        a2 = mgr.admit(p2, len(p2) + 4)
+        assert a2.n_shared == 2 and a2.pages[:2] == a1.pages[:2]
+        for p in a1.pages[:2]:
+            assert mgr.pool.refcount[p] == 3      # slot1 + slot2 + cache
+        mgr.release(a1)
+        mgr.release(a2)
+        for p in a2.pages[:2]:
+            assert mgr.pool.refcount[p] == 1      # cache keeps them warm
+        mgr.check_invariants()
+        mgr.prefix.evict(2)
+        for p in a2.pages[:2]:
+            assert mgr.pool.refcount[p] == 0
+        mgr.check_invariants()
+
+    def test_partial_last_page_never_shared(self):
+        """The page holding the first decode write is never handed out."""
+        ps = 4
+        mgr = KVBlockManager(KVPoolConfig(num_pages=16, page_size=ps))
+        prompt = np.arange(1, 1 + ps + 2, dtype=np.int32)       # 1.5 pages
+        a1 = mgr.admit(prompt, len(prompt) + 4)
+        mgr.register_prefix(prompt=prompt, alloc=a1)
+        a2 = mgr.admit(prompt, len(prompt) + 4)
+        assert a2.n_shared == 1                   # only the full page
+        assert a2.pages[0] == a1.pages[0] and a2.pages[1] != a1.pages[1]
+        mgr.release(a1)
+        mgr.release(a2)
+        mgr.check_invariants()
+
+    def test_thr_key_salts_the_chain(self):
+        """KV content depends on the ODP threshold, so prefixes at
+        different knob settings must not alias."""
+        ps = 4
+        mgr = KVBlockManager(KVPoolConfig(num_pages=16, page_size=ps))
+        prompt = np.arange(1, 1 + 2 * ps, dtype=np.int32)
+        a1 = mgr.admit(prompt, len(prompt) + 2, thr_key=0.0)
+        mgr.register_prefix(prompt=prompt, alloc=a1, thr_key=0.0)
+        a2 = mgr.admit(prompt, len(prompt) + 2, thr_key=0.5)
+        assert a2.n_shared == 0
+        a3 = mgr.admit(prompt, len(prompt) + 2, thr_key=0.0)
+        assert a3.n_shared == 2
+        for a in (a1, a2, a3):
+            mgr.release(a)
+        mgr.check_invariants()
+
+    def test_eviction_frees_deepest_first(self):
+        """Pool pressure evicts cache-only pages, chain tails before
+        heads, and never pages a live slot still shares."""
+        ps = 2
+        mgr = KVBlockManager(KVPoolConfig(num_pages=8, page_size=ps))
+        prompt = np.arange(1, 1 + 3 * ps, dtype=np.int32)       # 3 full pages
+        a1 = mgr.admit(prompt, len(prompt) + 1)                 # 4 pages
+        mgr.register_prefix(prompt=prompt, alloc=a1)
+        mgr.release(a1)                           # 3 cache-only + 1 free
+        assert mgr.num_free == 4                  # page 4 freed, 1-3 cached
+        a2 = mgr.admit(np.arange(50, 62, dtype=np.int32), 13)   # needs 7
+        assert a2 is not None and mgr.stats.evicted_pages >= 2
+        mgr.check_invariants()
+        mgr.release(a2)
+        mgr.check_invariants()
+
+
+class TestTableRow:
+    def test_row_pads_with_trash(self):
+        mgr = KVBlockManager(KVPoolConfig(num_pages=8, page_size=4))
+        a = mgr.admit(np.arange(1, 6, dtype=np.int32), 10)
+        row = mgr.table_row(a, 6)
+        assert row.dtype == np.int32 and row.shape == (6,)
+        assert list(row[:len(a.pages)]) == a.pages
+        assert all(row[len(a.pages):] == TRASH_PAGE)
+        assert all(mgr.table_row(None, 6) == TRASH_PAGE)
+        mgr.release(a)
+
+    def test_double_release_rejected(self):
+        mgr = KVBlockManager(KVPoolConfig(num_pages=8, page_size=4))
+        a = mgr.admit(np.arange(1, 6, dtype=np.int32), 10)
+        mgr.release(a)
+        with pytest.raises(ValueError):
+            mgr.release(a)
+
+
+class TestConfigAndSizing:
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            KVPoolConfig(num_pages=1)
+        with pytest.raises(ValueError):
+            KVPoolConfig(num_pages=8, page_size=0)
+        with pytest.raises(ValueError):
+            KVPoolConfig(num_pages=8, quant="fp8")
+        with pytest.raises(ValueError):
+            KVPoolConfig(num_pages=8, prefill_chunk=0)
+        assert KVPoolConfig(num_pages=8, quant="int4").bits == 4
+
+    def test_bytes_per_token_halves_under_int4(self):
+        """The analytic sizing the CI gate measures for real: int4 paged
+        storage is under half of the contiguous bf16 row (int8 is not,
+        once per-position scales are paid — which is why the gate pins
+        int4)."""
+        for nkv, h in [(4, 32), (8, 128), (2, 64)]:
+            bf16 = contiguous_kv_bytes_per_token(nkv, h)
+            assert paged_kv_bytes_per_token(nkv, h, "int4") <= 0.5 * bf16
+            assert (paged_kv_bytes_per_token(nkv, h, "off")
+                    == 2 * nkv * h * 2)
+        assert set(KV_QUANT_BITS) == {"off", "int8", "int4"}

@@ -1,12 +1,21 @@
-"""int8 KV cache (beyond-paper): exactness of scale folding + quality."""
+"""int8/int4 KV cache: exactness of scale folding + quality bounds.
+
+The round-trip bounds here are asserted on **real captured KV** from a
+smoke decode, against the tolerances pinned in ``repro.serve.kv_pool``
+(``KV_QUANT_REL_TOL`` / ``KV_DECODE_REL_TOL``) — the same constants the
+paged serving engine is gated on, so the tolerance used in serving is the
+tolerance tested.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.models.layers.attention import _kv_quantize, attend
+from repro.models.layers.attention import (_kv_quantize, _pack_int4,
+                                           _unpack_int4, attend)
 from repro.models.model_registry import build_model
+from repro.serve.kv_pool import KV_DECODE_REL_TOL, KV_QUANT_REL_TOL
 
 
 class TestKVQuantMath:
@@ -34,6 +43,47 @@ class TestKVQuantMath:
         err = jnp.abs(deq - x).max()
         assert float(err) <= float(jnp.abs(x).max()) / 127 + 1e-6
         assert q.dtype == jnp.int8
+
+    def test_int4_pack_roundtrip_exact(self):
+        """Packing two int4 codes per byte loses nothing."""
+        codes = jax.random.randint(jax.random.PRNGKey(2), (3, 5, 2, 16),
+                                   -7, 8, dtype=jnp.int32).astype(jnp.int8)
+        packed = _pack_int4(codes)
+        assert packed.shape == (3, 5, 2, 8) and packed.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(_unpack_int4(packed)),
+                                      np.asarray(codes))
+
+
+def _captured_kv():
+    """Real K/V content from a smoke prefill (per attention layer)."""
+    cfg = get_config("internlm2-1.8b", smoke=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                              cfg.vocab_size)
+    caches = model.init_caches(1, 16)
+    _, caches, _ = model.forward(params, toks, caches=caches)
+    out = []
+    for c in caches:                       # per period slot
+        out.append(np.asarray(c.k[:, :, :12], np.float32))
+        out.append(np.asarray(c.v[:, :, :12], np.float32))
+    return out
+
+
+class TestCapturedKVBounds:
+    """Round-trip error on captured KV stays inside the pinned serving
+    tolerances, at both storage widths the paged pool offers."""
+
+    @pytest.mark.parametrize("mode,bits", [("int8", 8), ("int4", 4)])
+    def test_captured_roundtrip_within_pinned_tol(self, mode, bits):
+        tol = KV_QUANT_REL_TOL[mode]
+        for x in _captured_kv():
+            q, s = _kv_quantize(jnp.asarray(x), bits)
+            if bits == 4:
+                q = _unpack_int4(_pack_int4(q))    # through paged storage
+            deq = np.asarray(q.astype(jnp.float32) * s[..., None])
+            rel = np.linalg.norm(deq - x) / max(np.linalg.norm(x), 1e-9)
+            assert rel <= tol, (mode, rel)
 
 
 @pytest.mark.slow
@@ -69,3 +119,35 @@ class TestKVQuantDecode:
         logits, caches = model.decode_step(params, caches, toks[:, 8:9],
                                            jnp.asarray(8, jnp.int32))
         assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.slow
+class TestPagedReadThrough:
+    """The paged attention path (write-through page table, dequant on
+    read) against the contiguous cache, token-by-token on real logits."""
+
+    def _drive(self, model, params, toks, caches, table=None):
+        outs = []
+        for t in range(toks.shape[1]):
+            pos = (jnp.asarray([t], jnp.int32) if table is not None
+                   else jnp.asarray(t, jnp.int32))
+            logits, caches = model.decode_step(
+                params, caches, toks[:, t:t + 1], pos, kv_table=table)
+            outs.append(logits[:, 0])
+        return jnp.stack(outs, axis=1)
+
+    @pytest.mark.parametrize("quant,tol",
+                             [("off", 1e-5), ("int8", KV_DECODE_REL_TOL)])
+    def test_paged_decode_tracks_contiguous(self, quant, tol):
+        cfg = get_config("internlm2-1.8b", smoke=True).replace(
+            dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                                  cfg.vocab_size)
+        ref = self._drive(model, params, toks, model.init_caches(1, 16))
+        pool = model.init_paged_caches(8, 4, quant=quant)
+        table = jnp.asarray(np.array([[1, 2, 3, 4]], np.int32))
+        out = self._drive(model, params, toks, pool, table=table)
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= tol, (quant, rel)

@@ -342,3 +342,226 @@ class TestParseMesh:
         from repro.launch.serve import _parse_mesh
         mesh = _parse_mesh("1x1")
         assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+# ----------------------------------------------------------------- paged KV
+def _paged_family(name):
+    """A paged-eligible smoke model of the given family (full, sliding,
+    local/global or chunked attention; MoE gets a non-binding capacity)."""
+    cfg = get_config(name, smoke=True).replace(
+        dtype="float32", num_layers=2, vocab_size=256, scan_layers=False)
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _kv_engine(model, params, batch=3, max_seq_len=32, **pool_kw):
+    from repro.serve.engine import EngineConfig
+    from repro.serve.kv_pool import KVPoolConfig
+    pool = KVPoolConfig(**pool_kw) if pool_kw else None
+    return ServeEngine(model, params, config=EngineConfig(
+        batch_size=batch, max_seq_len=max_seq_len, kv_pool=pool))
+
+
+def _tokens_by_uid(results):
+    return {r.uid: r.tokens for r in results}
+
+
+class TestPagedKV:
+    """The paged memory layer preserves every token-identity contract."""
+
+    @pytest.mark.parametrize(
+        "name",
+        [pytest.param("internlm2-1.8b", id="dense"),
+         pytest.param("mixtral-8x7b", id="moe", marks=pytest.mark.slow),
+         pytest.param("h2o-danube-3-4b", id="sliding",
+                      marks=pytest.mark.slow),
+         pytest.param("gemma2-27b", id="local_global",
+                      marks=pytest.mark.slow),
+         pytest.param("llama4-maverick-400b-a17b", id="chunked_moe",
+                      marks=pytest.mark.slow)])
+    def test_paged_matches_contiguous(self, name):
+        """Paged pool, quantization off: bit-exact against the contiguous
+        engine across every paged-eligible attention family."""
+        cfg, model, params = _paged_family(name)
+        reqs = _mixed_requests(cfg, 5, seed=3)
+        ref = _tokens_by_uid(
+            _kv_engine(model, params).run(_mixed_requests(cfg, 5, seed=3)))
+        out = _tokens_by_uid(
+            _kv_engine(model, params, num_pages=32, page_size=4).run(reqs))
+        assert set(ref) == set(out)
+        for uid in ref:
+            assert np.array_equal(ref[uid], out[uid]), (
+                f"request {uid}: paged {out[uid]} != contiguous {ref[uid]}")
+
+    @pytest.mark.parametrize("quant", ["int8", "int4"])
+    def test_quantized_first_token_exact(self, quant):
+        """Prefill runs full-precision and quantizes only on the page
+        scatter, so the first generated token is exact at any setting."""
+        cfg, model, params = _dense()
+        reqs = _mixed_requests(cfg, 4, seed=5)
+        ref = _tokens_by_uid(
+            _kv_engine(model, params).run(_mixed_requests(cfg, 4, seed=5)))
+        out = _tokens_by_uid(_kv_engine(model, params, num_pages=32,
+                                        page_size=4, quant=quant).run(reqs))
+        for uid in ref:
+            assert ref[uid][0] == out[uid][0], f"request {uid} first token"
+
+    def test_int8_decode_matches_reference(self):
+        """int8 KV decode on the smoke model stays within the pinned
+        serving tolerance; greedy argmax is far inside it, so tokens
+        match the bf16 contiguous engine outright (the logits-level bound
+        itself is pinned by tests/test_kv_quant.py on captured KV)."""
+        cfg, model, params = _dense()
+        reqs = _mixed_requests(cfg, 5, seed=7)
+        ref = _tokens_by_uid(
+            _kv_engine(model, params).run(_mixed_requests(cfg, 5, seed=7)))
+        out = _tokens_by_uid(_kv_engine(model, params, num_pages=32,
+                                        page_size=4, quant="int8").run(reqs))
+        for uid in ref:
+            assert np.array_equal(ref[uid], out[uid])
+
+    def test_prefix_shared_decodes_identically(self):
+        """Requests sharing a system-prompt prefix decode exactly as
+        without sharing, and sharing actually happens (refcounted pages,
+        not copies)."""
+        cfg, model, params = _dense()
+        sys_prompt = np.arange(1, 13, dtype=np.int32)       # 3 full pages
+
+        def reqs():
+            return [Request(uid=i,
+                            prompt=np.concatenate(
+                                [sys_prompt, [50 + i, 60 + i]]
+                            ).astype(np.int32),
+                            max_new_tokens=6) for i in range(4)]
+
+        unshared = _kv_engine(model, params, num_pages=64, page_size=4,
+                              prefix_sharing=False)
+        ref = _tokens_by_uid(unshared.run(reqs()))
+        assert unshared._kv_mgr.stats.shared_pages == 0
+        shared = _kv_engine(model, params, num_pages=64, page_size=4,
+                            prefix_sharing=True)
+        out = _tokens_by_uid(shared.run(reqs()))
+        assert shared._kv_mgr.stats.shared_pages > 0
+        for uid in ref:
+            assert np.array_equal(ref[uid], out[uid])
+        # the prefix cache persists across sessions: a second run shares
+        # from the very first admission and still decodes identically
+        before = shared._kv_mgr.stats.shared_pages
+        again = _tokens_by_uid(shared.run(reqs()))
+        assert shared._kv_mgr.stats.shared_pages > before
+        for uid in ref:
+            assert np.array_equal(ref[uid], again[uid])
+        shared._kv_mgr.check_invariants()
+
+    def test_chunked_prefill_identical(self):
+        """Chunked prefill (chunks interleaved with decode) changes
+        scheduling, never tokens."""
+        cfg, model, params = _dense()
+        reqs = _mixed_requests(cfg, 5, seed=11)
+        ref = _tokens_by_uid(
+            _kv_engine(model, params, num_pages=32, page_size=4)
+            .run(_mixed_requests(cfg, 5, seed=11)))
+        out = _tokens_by_uid(
+            _kv_engine(model, params, num_pages=32, page_size=4,
+                       prefill_chunk=4).run(reqs))
+        for uid in ref:
+            assert np.array_equal(ref[uid], out[uid])
+
+    def test_queue_until_pages_free(self):
+        """A pool too small for the full workload serves it anyway by
+        queueing admissions until earlier requests release pages — the
+        old mid-pump capacity error is gone."""
+        cfg, model, params = _dense()
+
+        def reqs():
+            return [Request(uid=i, prompt=np.arange(1, 9, dtype=np.int32),
+                            max_new_tokens=8) for i in range(4)]
+
+        ref = _tokens_by_uid(_kv_engine(model, params, batch=2,
+                                        max_seq_len=16).run(reqs()))
+        eng = _kv_engine(model, params, batch=2, max_seq_len=16,
+                         num_pages=6, page_size=4, prefix_sharing=False)
+        out = _tokens_by_uid(eng.run(reqs()))
+        assert eng._kv_mgr.stats.failed_admits > 0
+        for uid in ref:
+            assert np.array_equal(ref[uid], out[uid])
+        eng._kv_mgr.check_invariants()
+        assert eng._kv_mgr.num_free == eng._kv_mgr.usable_pages
+
+    def test_single_request_exceeding_pool_raises(self):
+        """queue-until-free never hides the impossible case: one request
+        larger than the whole pool is a loud error at submission."""
+        cfg, model, params = _dense()
+        eng = _kv_engine(model, params, batch=2, max_seq_len=32,
+                         num_pages=4, page_size=4)       # 12 usable tokens
+        req = Request(uid=0, prompt=np.arange(1, 17, dtype=np.int32),
+                      max_new_tokens=8)
+        with pytest.raises(ValueError, match="whole pool"):
+            eng.run([req])
+        ok = Request(uid=1, prompt=np.arange(1, 5, dtype=np.int32),
+                     max_new_tokens=4)
+        eng.begin([ok])
+        with pytest.raises(ValueError, match="whole pool"):
+            eng.submit([req])
+        while eng.busy:
+            eng.pump()
+        assert len(eng.collect()) == 1
+
+    def test_no_retrace_across_page_counts(self):
+        """The page table is a jit input: requests occupying different
+        page counts (and on-demand growth) share ONE compiled decode."""
+        cfg, model, params = _dense()
+        eng = _kv_engine(model, params, num_pages=32, page_size=4)
+        reqs = [Request(uid=i,
+                        prompt=np.arange(1, 3 + 7 * i, dtype=np.int32),
+                        max_new_tokens=3 + 4 * i) for i in range(3)]
+        eng.run(reqs)
+        assert eng._decode_paged._cache_size() == 1
+
+    def test_paged_rejects_unsupported_models(self):
+        """SSM/hybrid recurrence and encoder-decoder cross state have no
+        paged analogue; misconfiguration fails at construction."""
+        from repro.serve.engine import EngineConfig
+        from repro.serve.kv_pool import KVPoolConfig
+        pool = KVPoolConfig(num_pages=8, page_size=4)
+        hyb = build_model(get_config("zamba2-1.2b", smoke=True))
+        with pytest.raises(ValueError, match="recurrent"):
+            ServeEngine(hyb, None, config=EngineConfig(
+                max_seq_len=32, kv_pool=pool))
+        cfg, model, params = _dense()
+        with pytest.raises(ValueError, match="max_seq_len"):
+            ServeEngine(model, params,
+                        config=EngineConfig(kv_pool=pool))
+        with pytest.raises(ValueError, match="continuous"):
+            StaticServeEngine(model, params, config=EngineConfig(
+                max_seq_len=32, kv_pool=pool))
+        quant_cfg = cfg.replace(kv_quant=True)
+        qmodel = build_model(quant_cfg)
+        with pytest.raises(ValueError, match="kv_quant"):
+            ServeEngine(qmodel, None, config=EngineConfig(
+                max_seq_len=32, kv_pool=pool))
+
+    def test_drain_releases_pages(self):
+        """Draining a paged session releases every in-flight allocation;
+        the requeued continuations decode token-identically."""
+        cfg, model, params = _dense()
+        reqs = _mixed_requests(cfg, 4, seed=13)
+        ref = _tokens_by_uid(
+            _kv_engine(model, params, num_pages=32, page_size=4)
+            .run(_mixed_requests(cfg, 4, seed=13)))
+        eng = _kv_engine(model, params, num_pages=32, page_size=4)
+        eng.begin(reqs)
+        eng.pump()
+        eng.pump()
+        requeued = eng.drain()
+        eng.collect()
+        eng._kv_mgr.check_invariants()
+        done = _tokens_by_uid(eng.run([r.continuation() for r in requeued]))
+        stitched = {r.request.uid:
+                    np.concatenate([r.prior_tokens, done[r.request.uid]])
+                    for r in requeued}
+        for uid, toks in stitched.items():
+            assert np.array_equal(ref[uid], toks.astype(np.int32)), uid
