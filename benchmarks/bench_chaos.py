@@ -1,0 +1,175 @@
+"""Chaos benchmark: fleet correctness and tail latency under an
+unreliable transport.
+
+Drives real compressed-artifact replicas through the message-based
+router (``serve.transport`` + hardened ``serve.router``) and reports the
+numbers CI's tier1-slow gate checks (``BENCH_chaos.json``):
+
+* ``baseline``  — fault-free run on the reliable transport: the token
+  reference and the completion-tick floor;
+* ``schedules`` — ≥ 3 seeded chaos schedules (drops, duplicates, delays,
+  reorders, plus a scripted partition and a replica kill) asserting the
+  chaos invariants per schedule: zero lost requests (every admitted one
+  completes), zero duplicated decode work (per-replica dedup max 1),
+  token identity with the fault-free run, balanced ``FleetReport``
+  accounting; the dedup-hit counter proves duplicate deliveries really
+  occurred and were absorbed;
+* ``hedging``   — straggler A/B: one replica slows 8× mid-run; with
+  hedging the straggler's outstanding requests are raced on the
+  least-loaded survivor and p99 completion tick must drop.
+
+Invariant violations raise — a chaos regression fails the benchmark
+run itself, not just a downstream JSON gate.
+"""
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.bench_artifact_loading import build_artifact
+from repro.runtime.supervisor import (FaultEvent, FaultInjector,
+                                      KILL_REPLICA, PARTITION,
+                                      SLOW_REPLICA)
+from repro.serve.engine import GenerationOptions, Request
+from repro.serve.fleet import ShardedReplica
+from repro.serve.router import FleetRouter, RouterConfig
+from repro.serve.transport import ChaosConfig, FaultyTransport
+
+
+def _requests(vocab: int, n: int, max_new: int):
+    return [Request(uid=i,
+                    prompt=np.arange(1 + i, 9 + i, dtype=np.int32) % vocab,
+                    options=GenerationOptions(max_new_tokens=max_new,
+                                              odp="off"))
+            for i in range(n)]
+
+
+def _pool(model, directory, replicas):
+    return [ShardedReplica(model, directory, replica_id=i, num_hosts=2,
+                           blocks_per_host=2, batch_size=2, odp="off")
+            for i in range(replicas)]
+
+
+def _tokens(rpt):
+    return {r.uid: [int(t) for t in r.tokens]
+            for r in rpt.completed.values()}
+
+
+def _p99(rpt):
+    ticks = sorted(rpt.completion_ticks.values())
+    return float(np.percentile(ticks, 99)) if ticks else float("nan")
+
+
+def run(verbose: bool = True, n_requests: int = 6, max_new: int = 6,
+        seeds=(1, 2, 3)):
+    work = Path(tempfile.mkdtemp(prefix="bench_chaos_"))
+    model, _, _ = build_artifact(
+        work / "artifact", num_experts=16, d_model=32, moe_d_ff=384,
+        vocab_size=64, group_size=32, capacity_factor=32.0)
+    art_dir = work / "artifact"
+    vocab = model.cfg.vocab_size
+    out = {}
+
+    # -- fault-free reference ----------------------------------------------
+    router = FleetRouter(_pool(model, art_dir, 2), work / "hb_base",
+                         config=RouterConfig())
+    rpt = router.run(_requests(vocab, n_requests, max_new))
+    reference = _tokens(rpt)
+    out["baseline"] = {
+        "admitted": rpt.admitted, "completed": len(rpt.completed),
+        "ticks": rpt.ticks, "p99_completion_tick": _p99(rpt),
+    }
+    if verbose:
+        print(f"[chaos] baseline: {len(rpt.completed)}/{rpt.admitted} "
+              f"in {rpt.ticks} ticks")
+
+    # -- seeded chaos schedules --------------------------------------------
+    schedules = []
+    for i, seed in enumerate(seeds):
+        chaos = ChaosConfig(seed=seed, p_drop=0.12, p_dup=0.12,
+                            p_delay=0.15, p_reorder=0.15, max_delay=2,
+                            until=40)
+        # compose message chaos with scripted process/network faults:
+        # schedule 0 also kills a replica, schedule 1 also partitions one
+        events = []
+        if i == 0:
+            events.append(FaultEvent(tick=6, kind=KILL_REPLICA,
+                                     replica=0))
+        elif i == 1:
+            events.append(FaultEvent(tick=4, kind=PARTITION, replica=1,
+                                     until=14))
+        router = FleetRouter(
+            _pool(model, art_dir, 2), work / f"hb_s{seed}",
+            config=RouterConfig(seed=seed, max_retries=20,
+                                max_redispatch=100),
+            injector=FaultInjector(events),
+            transport=FaultyTransport(chaos))
+        rpt = router.run(_requests(vocab, n_requests, max_new))
+
+        lost = sorted(set(reference) - set(rpt.completed))
+        dup_decodes = max((max(n.decode_submissions.values(), default=0)
+                           for n in router.nodes.values()), default=0)
+        token_identical = _tokens(rpt) == reference
+        row = {
+            "seed": seed,
+            "extra_fault": (events[0].kind if events else None),
+            "admitted": rpt.admitted, "completed": len(rpt.completed),
+            "lost": len(lost),
+            "max_decodes_per_replica": dup_decodes,
+            "duplicate_results": rpt.duplicate_results,
+            "ghost_results": rpt.ghost_results,
+            "dedup_hits": rpt.dedup_hits,
+            "retries": rpt.retries, "redispatches": rpt.redispatches,
+            "deaths": len(rpt.deaths),
+            "token_identical": token_identical,
+            "ticks": rpt.ticks,
+            "transport": rpt.transport,
+        }
+        schedules.append(row)
+        if verbose:
+            print(f"[chaos] seed {seed}: completed {row['completed']}/"
+                  f"{row['admitted']}, dedup_hits {row['dedup_hits']}, "
+                  f"token_identical {token_identical}")
+        if lost or not token_identical or dup_decodes > 1:
+            raise AssertionError(
+                f"chaos invariant violated at seed {seed}: lost={lost} "
+                f"token_identical={token_identical} "
+                f"max_decodes_per_replica={dup_decodes}")
+    if not any(r["dedup_hits"] > 0 for r in schedules):
+        raise AssertionError(
+            "no schedule exercised replica-side dedup (dedup_hits == 0 "
+            "everywhere) — the chaos probabilities are too tame to "
+            "certify the exactly-once path")
+    out["schedules"] = schedules
+
+    # -- hedging A/B under a straggler -------------------------------------
+    hedging = {}
+    for mode, hedge in (("hedge_on", True), ("hedge_off", False)):
+        inj = FaultInjector([FaultEvent(tick=12, kind=SLOW_REPLICA,
+                                        replica=0, factor=8)])
+        router = FleetRouter(
+            _pool(model, art_dir, 2), work / f"hb_{mode}",
+            config=RouterConfig(hedge=hedge),
+            injector=inj, transport=FaultyTransport())
+        rpt = router.run(_requests(vocab, n_requests, 12))
+        hedging[mode] = {
+            "completed": len(rpt.completed), "admitted": rpt.admitted,
+            "hedges": rpt.hedges, "hedge_wins": rpt.hedge_wins,
+            "p99_completion_tick": _p99(rpt), "ticks": rpt.ticks,
+        }
+        if verbose:
+            print(f"[chaos] {mode}: p99 completion tick "
+                  f"{hedging[mode]['p99_completion_tick']:.0f} "
+                  f"({rpt.hedges} hedges, {rpt.hedge_wins} wins)")
+    if hedging["hedge_on"]["p99_completion_tick"] >= \
+            hedging["hedge_off"]["p99_completion_tick"]:
+        raise AssertionError(
+            "hedging did not help: p99 completion tick "
+            f"{hedging['hedge_on']['p99_completion_tick']} (on) vs "
+            f"{hedging['hedge_off']['p99_completion_tick']} (off)")
+    out["hedging"] = hedging
+    return out
+
+
+if __name__ == "__main__":
+    run()

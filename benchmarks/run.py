@@ -13,6 +13,8 @@ Runs one benchmark per paper table/figure at smoke scale (CPU container):
   at fixed pool bytes, paged-vs-contiguous token identity
 * bench_fleet      — elastic fleet: availability under replica/host
   faults + delta re-shard bytes vs full reload
+* bench_chaos      — unreliable transport: exactly-once + token
+  identity under seeded message chaos, hedging p99 A/B
 
 ``--json [DIR]`` additionally writes one machine-readable
 ``BENCH_<suite>.json`` per executed suite (kernel launch counts, decode
@@ -53,7 +55,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="allocation|odp|memory|kernels|loading|serving|"
-                         "kv|fleet")
+                         "kv|fleet|chaos")
     ap.add_argument("--json", nargs="?", const=".", default=None,
                     metavar="DIR",
                     help="write BENCH_<suite>.json per suite into DIR "
@@ -61,8 +63,9 @@ def main():
     args = ap.parse_args()
     t0 = time.time()
     from benchmarks import (bench_allocation, bench_artifact_loading,
-                            bench_fleet, bench_kernels, bench_kv,
-                            bench_memory, bench_odp, bench_serving)
+                            bench_chaos, bench_fleet, bench_kernels,
+                            bench_kv, bench_memory, bench_odp,
+                            bench_serving)
     benches = {
         "kernels": bench_kernels.run,
         "memory": bench_memory.run,
@@ -72,6 +75,7 @@ def main():
         "serving": bench_serving.bench_all,
         "kv": bench_kv.run,
         "fleet": bench_fleet.run,
+        "chaos": bench_chaos.run,
     }
     if args.only and args.only not in benches:
         ap.error(f"unknown suite {args.only!r} "

@@ -46,6 +46,10 @@ _EXPORTS = {
     "RouterConfig": "repro.serve.router",
     "FleetReport": "repro.serve.router",
     "ShardedReplica": "repro.serve.fleet",
+    "ReplicaNode": "repro.serve.fleet",
+    "LocalTransport": "repro.serve.transport",
+    "FaultyTransport": "repro.serve.transport",
+    "ChaosConfig": "repro.serve.transport",
 }
 
 __all__ = ["__version__", *_EXPORTS]

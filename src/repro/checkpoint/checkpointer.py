@@ -86,6 +86,9 @@ class LoadStats:
     #: how many separate subset reads this accounting covers (1 for a
     #: plain load; boot + each re-shard delta for a fleet host)
     reads: int = 1
+    #: fingerprint mismatches that recovered on the one re-read retry —
+    #: transient torn reads (a writer racing the reader), not corruption
+    fingerprint_retries: int = 0
     #: key path -> stacking axis, for every split leaf that was loaded
     split_axes: Dict[str, int] = field(default_factory=dict)
     #: key path -> (start, stop, count) when only a contiguous sub-range of
@@ -107,6 +110,7 @@ class LoadStats:
         self.files_read += other.files_read
         self.groups_read += other.groups_read
         self.reads += other.reads
+        self.fingerprint_retries += other.fingerprint_retries
         self.total_bytes = max(self.total_bytes, other.total_bytes)
         self.total_files = max(self.total_files, other.total_files)
         self.total_groups = max(self.total_groups, other.total_groups)
@@ -336,12 +340,20 @@ def _load_values(ckpt: Path, manifest: Dict,
             if verify and f.get("sha256"):
                 digest = _sha256_file(fpath)
                 if digest != f["sha256"]:
-                    raise ValueError(
-                        f"shard group {group!r} failed its fingerprint "
-                        f"check: {f['name']} hashes to {digest[:12]}… but "
-                        f"the manifest records {f['sha256'][:12]}… — the "
-                        "file is corrupt or was tampered with; re-fetch "
-                        "the artifact")
+                    # a re-shard delta read can race a writer mid-rename
+                    # (torn read); one re-read distinguishes that
+                    # transient from genuine corruption
+                    digest = _sha256_file(fpath)
+                    if digest == f["sha256"]:
+                        stats.fingerprint_retries += 1
+                    else:
+                        raise ValueError(
+                            f"shard group {group!r} failed its "
+                            f"fingerprint check (twice): {f['name']} "
+                            f"hashes to {digest[:12]}… but the manifest "
+                            f"records {f['sha256'][:12]}… — the file is "
+                            "corrupt or was tampered with; re-fetch the "
+                            "artifact")
             with np.load(fpath) as z:
                 arrays.update({k: z[k] for k in z.files})
             stats.files_read += 1

@@ -32,11 +32,17 @@ Deployment topology is orthogonal (see ``docs/serving.md``):
   of the artifact and serves as one shard of the distributed engine;
 * ``--fleet --replicas N --fleet-hosts H`` — elastic fault-tolerant
   fleet serving (requires ``--artifact``): N block-owning replicas
-  behind the admission-controlled router (``serve.router``), each
-  assembled from H per-host expert-block streams. Deterministic fault
-  injection via ``--inject-failure replica:<r>@<tick>`` /
-  ``host:<r>.<h>@<tick>`` / ``join:<r>@<tick>`` exercises failover and
-  live delta-streamed re-sharding; the run reports availability,
+  behind the admission-controlled router (``serve.router``), all
+  traffic as messages over the fleet transport (``serve.transport``),
+  each replica assembled from H per-host expert-block streams.
+  Deterministic fault injection via ``--inject-failure`` covers process
+  faults (``replica:<r>@<tick>`` / ``host:<r>.<h>@<tick>`` /
+  ``join:<r>@<tick>``), message faults (``drop:<r>@<tick>`` /
+  ``delay:<r>@<tick>+<d>`` / ``partition:<r>@<t1>..<t2>``) and
+  stragglers (``slow:<r>@<tick>x<f>``, countered by hedging unless
+  ``--no-hedge``); ``--chaos-seed`` + ``--chaos-drop/-dup/-delay/
+  -reorder`` add seeded-random message chaos. The run reports
+  availability, the shed-reason breakdown, retry/dedup/hedge counters,
   recovery events and delta vs full-reload bytes.
 
 Then serves a synthetic batched workload and reports throughput +
@@ -254,14 +260,20 @@ def serve_fleet(arch: str, *, artifact_path, smoke: bool = True,
                 max_new: int = 16, batch_size: int = 4,
                 prompt_len: int = 32, inject=(), sla: Optional[int] = None,
                 max_queue: int = 64, max_retries: int = 2,
-                heartbeat_dir=None, odp="default"):
+                heartbeat_dir=None, odp="default", hedge: bool = True,
+                chaos_seed: Optional[int] = None, chaos_drop: float = 0.0,
+                chaos_dup: float = 0.0, chaos_delay: float = 0.0,
+                chaos_reorder: float = 0.0,
+                chaos_until: Optional[int] = None):
     """Boot an elastic fleet from a saved artifact and serve through the
-    router, with optional scripted fault injection. Returns the
+    router's message transport, with optional scripted fault injection
+    and/or seeded message chaos. Returns the
     :class:`~repro.serve.router.FleetReport`."""
     import tempfile
     from repro.runtime.supervisor import FaultInjector, parse_fault_spec
     from repro.serve.fleet import ShardedReplica
     from repro.serve.router import FleetRouter, RouterConfig
+    from repro.serve.transport import ChaosConfig, FaultyTransport
 
     if artifact_path is None:
         raise SystemExit("--fleet requires --artifact DIR (fleet replicas "
@@ -283,12 +295,24 @@ def serve_fleet(arch: str, *, artifact_path, smoke: bool = True,
     print(f"[fleet] {replicas} replicas booted in {time.time() - t0:.2f}s")
 
     events = [parse_fault_spec(s) for s in inject]
+    chaos = None
+    if any((chaos_seed is not None, chaos_drop, chaos_dup, chaos_delay,
+            chaos_reorder)):
+        chaos = ChaosConfig(seed=chaos_seed or 0, p_drop=chaos_drop,
+                            p_dup=chaos_dup, p_delay=chaos_delay,
+                            p_reorder=chaos_reorder, until=chaos_until)
+        print(f"[fleet] message chaos on: seed {chaos.seed}, "
+              f"drop {chaos.p_drop:.0%} dup {chaos.p_dup:.0%} "
+              f"delay {chaos.p_delay:.0%} reorder {chaos.p_reorder:.0%}"
+              + (f", heals after tick {chaos.until}"
+                 if chaos.until is not None else ""))
     hb = heartbeat_dir or tempfile.mkdtemp(prefix="fleet_hb_")
     router = FleetRouter(
         pool, hb,
         config=RouterConfig(max_queue=max_queue, default_sla=sla,
-                            max_retries=max_retries),
-        injector=FaultInjector(events))
+                            max_retries=max_retries, hedge=hedge),
+        injector=FaultInjector(events),
+        transport=FaultyTransport(chaos))
 
     rng = np.random.RandomState(0)
     reqs = [Request(uid=i,
@@ -297,15 +321,26 @@ def serve_fleet(arch: str, *, artifact_path, smoke: bool = True,
                     options=GenerationOptions(max_new_tokens=max_new))
             for i in range(n_requests)]
     t0 = time.time()
-    report = router.run(reqs)
+    report = router.run(reqs)      # run() validates report.check()
     wall = time.time() - t0
     print(f"[fleet] {report.ticks} ticks in {wall:.2f}s: "
           f"{len(report.completed)}/{report.admitted} admitted requests "
           f"completed (availability {report.availability:.1%}), "
-          f"{report.retries} retries, "
-          f"{len(report.shed_queue_full)} shed at admission, "
-          f"{len(report.shed_deadline)} shed past deadline, "
-          f"{len(report.sla_misses)} SLA misses")
+          f"{report.retries} retries, {len(report.sla_misses)} SLA misses")
+    shed = {k: len(v) for k, v in report.shed.items() if v}
+    print(f"[fleet] accounting balanced: shed by reason {shed or '{}'}"
+          f", {len(report.fatal)} fatal")
+    print(f"[fleet] transport: {report.transport.get('sent', 0)} sent, "
+          f"{report.transport.get('dropped', 0)} dropped, "
+          f"{report.transport.get('duplicated', 0)} duplicated; "
+          f"{report.dedup_hits} dedup hits, "
+          f"{report.duplicate_results} duplicate results discarded, "
+          f"{report.redispatches} redispatches, "
+          f"{report.hedges} hedges ({report.hedge_wins} wins)")
+    for ev in report.breaker_events:
+        print(f"[fleet] breaker: replica {ev['replica']} -> "
+              f"{ev['state']} at tick {ev['tick']}"
+              + (f" ({ev['reason']})" if "reason" in ev else ""))
     for d in report.deaths:
         print(f"[fleet] death: replica {d['replica']} at tick {d['tick']} "
               f"({d['reason']})")
@@ -373,7 +408,31 @@ def main():
                          "'replica:<r>@<tick>' kills a replica, "
                          "'host:<r>.<h>@<tick>' kills one host (live "
                          "delta re-shard), 'join:<r>@<tick>' joins a "
-                         "fresh host")
+                         "fresh host, 'drop:<r>@<tick>' loses that "
+                         "tick's link messages, 'delay:<r>@<tick>+<d>' "
+                         "holds them d ticks, 'partition:<r>@<t1>..<t2>' "
+                         "cuts the link for the window, "
+                         "'slow:<r>@<tick>x<f>' makes the replica an "
+                         "f-times straggler (hedging target)")
+    ap.add_argument("--no-hedge", action="store_true",
+                    help="with --fleet: disable straggler hedging")
+    ap.add_argument("--chaos-seed", type=int, default=None, metavar="S",
+                    help="with --fleet: seeded-random message chaos on "
+                         "the transport (see --chaos-drop/-dup/-delay/"
+                         "-reorder)")
+    ap.add_argument("--chaos-drop", type=float, default=0.0, metavar="P",
+                    help="chaos: per-message drop probability")
+    ap.add_argument("--chaos-dup", type=float, default=0.0, metavar="P",
+                    help="chaos: per-message duplication probability")
+    ap.add_argument("--chaos-delay", type=float, default=0.0, metavar="P",
+                    help="chaos: per-message delay probability")
+    ap.add_argument("--chaos-reorder", type=float, default=0.0,
+                    metavar="P",
+                    help="chaos: per-poll reorder probability")
+    ap.add_argument("--chaos-until", type=int, default=None,
+                    metavar="TICK",
+                    help="chaos: heal the network after this tick "
+                         "(guarantees eventual completion)")
     ap.add_argument("--sla", type=int, default=None, metavar="TICKS",
                     help="with --fleet: per-request completion deadline "
                          "in scheduling ticks (late queued requests are "
@@ -421,7 +480,12 @@ def main():
                     batch_size=args.batch, inject=args.inject_failure,
                     sla=args.sla, max_queue=args.max_queue,
                     max_retries=args.max_retries,
-                    odp=_parse_odp(args.odp))
+                    odp=_parse_odp(args.odp), hedge=not args.no_hedge,
+                    chaos_seed=args.chaos_seed,
+                    chaos_drop=args.chaos_drop, chaos_dup=args.chaos_dup,
+                    chaos_delay=args.chaos_delay,
+                    chaos_reorder=args.chaos_reorder,
+                    chaos_until=args.chaos_until)
         return
     serve(args.arch, mc=args.mc, target_bits=args.bits,
           n_requests=args.requests, max_new=args.max_new,

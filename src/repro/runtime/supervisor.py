@@ -29,22 +29,38 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from repro.runtime.fault_tolerance import Heartbeat, StragglerDetector
 
-#: fault-injection event kinds
+#: fault-injection event kinds — process/topology faults
 KILL_REPLICA = "kill_replica"
 KILL_HOST = "kill_host"
 JOIN_HOST = "join_host"
-_KINDS = (KILL_REPLICA, KILL_HOST, JOIN_HOST)
+#: message faults (applied to the serve.transport layer)
+DROP_LINK = "drop_link"          # lose link traffic sent at one tick
+DELAY_LINK = "delay_link"        # hold link traffic sent at one tick
+PARTITION = "partition"          # lose all link traffic for a window
+#: performance faults
+SLOW_REPLICA = "slow_replica"    # replica steps every Nth tick only
+_KINDS = (KILL_REPLICA, KILL_HOST, JOIN_HOST, DROP_LINK, DELAY_LINK,
+          PARTITION, SLOW_REPLICA)
+#: kinds the router forwards to FaultyTransport.inject
+NET_KINDS = (DROP_LINK, DELAY_LINK, PARTITION)
 
 
 @dataclass(frozen=True)
 class FaultEvent:
     """One scripted fault: at logical tick ``tick``, apply ``kind`` to
-    ``replica`` (and, for host events, ``host`` within that replica)."""
+    ``replica`` (and, for host events, ``host`` within that replica;
+    for message faults, the router↔replica link). ``delay`` is the
+    extra ticks for ``delay_link``; ``until`` the inclusive end tick of
+    a ``partition`` window; ``factor`` the ``slow_replica`` slowdown
+    (the replica only advances its engine every ``factor``-th tick)."""
 
     tick: int
     kind: str
     replica: int
     host: Optional[int] = None
+    delay: Optional[int] = None
+    until: Optional[int] = None
+    factor: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in _KINDS:
@@ -53,30 +69,114 @@ class FaultEvent:
                 f"{_KINDS}")
         if self.kind in (KILL_HOST, JOIN_HOST) and self.host is None:
             raise ValueError(f"{self.kind} needs a host index")
+        if self.kind == DELAY_LINK and (self.delay is None
+                                        or self.delay < 1):
+            raise ValueError(
+                f"{DELAY_LINK} needs delay >= 1 tick; got {self.delay!r}")
+        if self.kind == PARTITION:
+            if self.until is None or self.until < self.tick:
+                raise ValueError(
+                    f"{PARTITION} needs an end tick >= its start "
+                    f"{self.tick}; got {self.until!r}")
+        if self.kind == SLOW_REPLICA and (self.factor is None
+                                          or self.factor < 1):
+            raise ValueError(
+                f"{SLOW_REPLICA} needs a slowdown factor >= 1; got "
+                f"{self.factor!r}")
+
+
+_SPEC_GRAMMAR = (
+    "'replica:<r>@<tick>' (kill replica), 'host:<r>.<h>@<tick>' (kill "
+    "one host), 'join:<r>@<tick>' (join a fresh host), 'drop:<r>@<tick>' "
+    "(lose link messages sent that tick), 'delay:<r>@<tick>+<d>' (hold "
+    "them <d> ticks), 'partition:<r>@<t1>..<t2>' (lose all link traffic "
+    "for the window), or 'slow:<r>@<tick>x<f>' (replica steps every "
+    "<f>th tick)")
+
+
+def _spec_int(token: str, what: str, spec: str) -> int:
+    try:
+        return int(token)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"bad fault spec {spec!r}: {what} {token!r} is not an "
+            f"integer; expected {_SPEC_GRAMMAR}") from None
 
 
 def parse_fault_spec(spec: str) -> FaultEvent:
-    """Parse the CLI grammar: ``replica:<r>@<tick>`` kills replica ``r``;
-    ``host:<r>.<h>@<tick>`` kills host ``h`` of replica ``r``;
-    ``join:<r>@<tick>`` joins a fresh host to replica ``r``."""
-    try:
-        head, tick = spec.rsplit("@", 1)
-        kind, target = head.split(":", 1)
-        t = int(tick)
-        if kind == "replica":
-            return FaultEvent(tick=t, kind=KILL_REPLICA, replica=int(target))
-        if kind == "host":
-            r, h = target.split(".")
-            return FaultEvent(tick=t, kind=KILL_HOST, replica=int(r),
-                              host=int(h))
-        if kind == "join":
-            return FaultEvent(tick=t, kind=JOIN_HOST, replica=int(target),
-                              host=-1)
-    except (ValueError, IndexError):
-        pass
-    raise ValueError(
-        f"bad fault spec {spec!r}; expected 'replica:<r>@<tick>', "
-        "'host:<r>.<h>@<tick>' or 'join:<r>@<tick>'")
+    """Parse one ``--inject-failure`` spec into a :class:`FaultEvent`.
+
+    Every malformed spec fails **loudly, naming the bad token** — an
+    unknown kind, a missing ``@<tick>``, a non-integer field — instead
+    of the silent fallthrough / cryptic unpack errors of the earlier
+    three-kind parser. Grammar: ``replica:<r>@<t>``,
+    ``host:<r>.<h>@<t>``, ``join:<r>@<t>``, ``drop:<r>@<t>``,
+    ``delay:<r>@<t>+<d>``, ``partition:<r>@<t1>..<t2>``,
+    ``slow:<r>@<t>x<f>``."""
+    if ":" not in spec:
+        raise ValueError(
+            f"bad fault spec {spec!r}: missing ':' between kind and "
+            f"target; expected {_SPEC_GRAMMAR}")
+    kind, rest = spec.split(":", 1)
+    kinds = {"replica": KILL_REPLICA, "host": KILL_HOST,
+             "join": JOIN_HOST, "drop": DROP_LINK, "delay": DELAY_LINK,
+             "partition": PARTITION, "slow": SLOW_REPLICA}
+    if kind not in kinds:
+        raise ValueError(
+            f"unknown fault kind {kind!r} in spec {spec!r}; expected "
+            f"one of {sorted(kinds)}")
+    if "@" not in rest:
+        raise ValueError(
+            f"bad fault spec {spec!r}: missing '@<tick>'; expected "
+            f"{_SPEC_GRAMMAR}")
+    target, when = rest.rsplit("@", 1)
+
+    if kind == "host":
+        if "." not in target:
+            raise ValueError(
+                f"bad fault spec {spec!r}: host target {target!r} must "
+                "be '<replica>.<host>'")
+        r_tok, h_tok = target.split(".", 1)
+        replica = _spec_int(r_tok, "replica", spec)
+        host = _spec_int(h_tok, "host", spec)
+    else:
+        replica = _spec_int(target, "replica", spec)
+        host = -1 if kind == "join" else None
+
+    if kind == "delay":
+        if "+" not in when:
+            raise ValueError(
+                f"bad fault spec {spec!r}: delay needs '@<tick>+<d>' "
+                f"(got {when!r})")
+        t_tok, d_tok = when.split("+", 1)
+        return FaultEvent(tick=_spec_int(t_tok, "tick", spec),
+                          kind=DELAY_LINK, replica=replica,
+                          delay=_spec_int(d_tok, "delay", spec))
+    if kind == "partition":
+        if ".." not in when:
+            raise ValueError(
+                f"bad fault spec {spec!r}: partition needs "
+                f"'@<t1>..<t2>' (got {when!r})")
+        t_tok, u_tok = when.split("..", 1)
+        tick = _spec_int(t_tok, "start tick", spec)
+        until = _spec_int(u_tok, "end tick", spec)
+        if until < tick:
+            raise ValueError(
+                f"bad fault spec {spec!r}: partition end tick {until} "
+                f"is before its start tick {tick}")
+        return FaultEvent(tick=tick, kind=PARTITION, replica=replica,
+                          until=until)
+    if kind == "slow":
+        if "x" not in when:
+            raise ValueError(
+                f"bad fault spec {spec!r}: slow needs '@<tick>x<factor>' "
+                f"(got {when!r})")
+        t_tok, f_tok = when.split("x", 1)
+        return FaultEvent(tick=_spec_int(t_tok, "tick", spec),
+                          kind=SLOW_REPLICA, replica=replica,
+                          factor=_spec_int(f_tok, "slowdown factor", spec))
+    return FaultEvent(tick=_spec_int(when, "tick", spec),
+                      kind=kinds[kind], replica=replica, host=host)
 
 
 class FaultInjector:
@@ -130,6 +230,10 @@ class FleetSupervisor:
         if hb is None:
             hb = self._beats[replica] = Heartbeat(
                 directory=Path(self.directory), worker_id=replica)
+        # a beat from a replica we reported dead is a *resurrection* —
+        # e.g. a healed network partition, not a real crash. Forget the
+        # report so a later genuine death is detected again.
+        self._reported.discard(replica)
         hb.beat(step, extra=dict(extra) or None, now=now)
         if step_s is not None:
             det = self._detectors.setdefault(

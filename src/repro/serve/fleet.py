@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core import pipeline as pl
 from repro.runtime import elastic
+from repro.serve import transport as tp
 from repro.serve.engine import (EngineConfig, Request, Requeued, Result,
                                 ServeEngine)
 
@@ -237,3 +238,108 @@ class ShardedReplica:
             recovery_s=time.time() - t0, note=plan.note)
         self.reshards.append(ev)
         return ev
+
+
+@dataclass
+class _PendingResult:
+    result: Result
+    next_send: int               # next retransmit tick
+    interval: int                # doubles per retransmit
+
+
+class ReplicaNode:
+    """The replica-side protocol endpoint over the fleet transport.
+
+    Wraps anything with the replica surface (``replica_id`` / ``alive``
+    / ``submit`` / ``pump`` / ``kill``) — a real
+    :class:`ShardedReplica` or a test fake — and speaks the
+    message protocol with the router:
+
+    * **Idempotent dispatch dedup**: every DISPATCH is ACKed, but a uid
+      already seen (a router retransmit after a lost ACK, a transport
+      duplicate, a hedge landing twice) is **never** submitted to the
+      engine again — a retry must never double-decode. Dedup hits are
+      counted (``dedup_hits``) and, when the request already finished,
+      answered with an immediate RESULT retransmit.
+    * **Results retransmit until acked**: a finished request's RESULT is
+      resent with doubling intervals until the router's RESULT_ACK
+      arrives, so a dropped result message never strands a completion.
+    * **Heartbeats** ride the same (faulty) transport — a partitioned
+      replica genuinely looks dead to the router, and the retry/dedup
+      machinery is what makes the resulting false positive harmless.
+    * ``slowdown`` models a straggler host: the engine only advances
+      every ``slowdown``-th tick, and the heartbeat reports the
+      slowdown as its logical ``step_s`` so the supervisor's
+      z-score detector can flag it (the router's hedging trigger).
+    """
+
+    def __init__(self, replica, transport: tp.Transport, *,
+                 result_retry: int = 4):
+        self.replica = replica
+        self.replica_id = replica.replica_id
+        self.endpoint = tp.replica_endpoint(replica.replica_id)
+        self.transport = transport
+        self.result_retry = result_retry
+        self.slowdown = 1
+        self.dedup_hits = 0
+        self._seen: set = set()
+        #: uid -> submissions that reached the engine (chaos harness
+        #: asserts the max over all uids is 1: no duplicate decode work)
+        self.decode_submissions: Dict[object, int] = {}
+        self._unacked: Dict[object, _PendingResult] = {}
+        self._step = 0
+
+    @property
+    def alive(self) -> bool:
+        return self.replica.alive
+
+    def _send(self, kind: str, uid=None, payload=None) -> None:
+        self.transport.send(tp.Message(
+            kind=kind, src=self.endpoint, dst=tp.ROUTER, seq=0,
+            uid=uid, payload=payload))
+
+    def _emit_result(self, res: Result, tick: int) -> None:
+        pr = self._unacked.get(res.uid)
+        if pr is None:
+            pr = self._unacked[res.uid] = _PendingResult(
+                result=res, next_send=0, interval=self.result_retry)
+        self._send(tp.RESULT, uid=res.uid, payload=pr.result)
+        pr.next_send = tick + pr.interval
+        pr.interval *= 2
+
+    def step(self, tick: int) -> None:
+        """One replica scheduling round: drain the inbox (dedup +
+        submit), advance the engine (unless straggling), emit finished
+        results, retransmit unacked ones, heartbeat."""
+        if not self.alive:
+            return                     # a dead replica is silent
+        self._step += 1
+        fresh: List[Request] = []
+        for m in self.transport.poll(self.endpoint):
+            if m.kind == tp.DISPATCH:
+                if m.uid in self._seen:
+                    self.dedup_hits += 1
+                    self._send(tp.ACK, uid=m.uid)
+                    if m.uid in self._unacked:   # already finished here
+                        self._emit_result(self._unacked[m.uid].result,
+                                          tick)
+                else:
+                    self._seen.add(m.uid)
+                    fresh.append(m.payload)
+                    self._send(tp.ACK, uid=m.uid)
+            elif m.kind == tp.RESULT_ACK:
+                self._unacked.pop(m.uid, None)
+        if fresh:
+            self.replica.submit(fresh)
+            for r in fresh:
+                self.decode_submissions[r.uid] = \
+                    self.decode_submissions.get(r.uid, 0) + 1
+        if tick % max(self.slowdown, 1) == 0:
+            for res in self.replica.pump():
+                self._emit_result(res, tick)
+        for uid, pr in list(self._unacked.items()):
+            if tick >= pr.next_send:
+                self._emit_result(pr.result, tick)
+        self._send(tp.HEARTBEAT,
+                   payload={"step": self._step,
+                            "step_s": float(self.slowdown)})

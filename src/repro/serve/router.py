@@ -1,4 +1,5 @@
-"""Fleet router: request queue, admission control, dispatch, failover.
+"""Fleet router: admission, dispatch over an unreliable transport,
+retry/backoff, exactly-once completion, circuit breaking, hedging.
 
 The front door of fleet serving. Requests enter a bounded queue
 (**admission control**: a full queue sheds the request immediately —
@@ -7,45 +8,74 @@ deadline in ticks; a request whose deadline has already passed when it
 reaches the head of the queue is shed rather than dispatched (it could
 only waste a slot another request still inside its deadline needs).
 
-Dispatch is least-outstanding-first over the live replicas. The router
-drives everything on the **logical clock** (one tick = one scheduling
-round = one decode step per replica): each tick it
+All router↔replica traffic is **messages** over a
+:class:`~repro.serve.transport.Transport` (``serve.transport``): the
+router sends DISPATCH, replicas answer ACK and later RESULT, heartbeats
+ride the same channel. Because the transport may lose, delay, duplicate
+or reorder anything (``FaultyTransport``), the router is hardened:
 
-1. fires due :class:`~repro.runtime.supervisor.FaultInjector` events
-   (kill a replica / kill a host / join a host),
-2. dispatches queued requests onto live replicas,
-3. pumps every live replica one decode step and records completions,
-4. beats the :class:`~repro.runtime.supervisor.FleetSupervisor` for the
-   live replicas and asks it for newly-dead ones — a dead replica's
-   outstanding requests are **requeued from their originals** (its memory
-   died with it) and retried on the survivors, up to
-   ``max_retries`` per request.
+* **Per-call timeouts with exponential backoff + jitter** — a DISPATCH
+  without an ACK within ``ack_timeout`` ticks is retransmitted with a
+  doubling, jittered interval, up to ``dispatch_attempts`` tries.
+* **Idempotent dispatch** — replicas dedup by request uid
+  (:class:`~repro.serve.fleet.ReplicaNode`), so a retransmit after a
+  lost ACK never double-decodes; greedy decode makes any genuine
+  re-execution (on another replica) token-identical.
+* **At-most-once result stitching** — the first RESULT per uid wins;
+  duplicates (retransmits, hedge losers, resurrected replicas) are
+  counted and discarded, results for already-shed requests likewise.
+* **Circuit breaker per link** — ``breaker_threshold`` consecutive
+  dispatch-attempt failures open the link (no traffic); after
+  ``breaker_cooldown`` ticks it goes half-open and admits exactly one
+  probe dispatch, which closes (success) or re-opens (failure) it.
+* **Hedged stragglers** — the supervisor's straggler reports
+  (:attr:`~repro.runtime.supervisor.FleetSupervisor.stragglers`, fed by
+  the per-replica logical step time in heartbeats) trigger a hedge: the
+  straggler's oldest outstanding request is *also* dispatched to the
+  least-loaded healthy survivor, and the first completion wins.
 
-Host-level events are delegated to the replica
-(:meth:`~repro.serve.fleet.ShardedReplica.lose_host` /
-``join_host``) — the replica stays up, drains, delta-streams, resumes.
-A host loss on a 1-host replica degenerates to replica death.
+Replica death is still detected by heartbeat silence — which a network
+partition can now counterfeit. That false positive is deliberate and
+harmless: the "dead" replica's requests are requeued from their
+originals and retried elsewhere, and when the partition heals the
+original's late results are discarded by the at-most-once rule. A beat
+from a reported-dead replica resurrects it in the supervisor.
 
-Greedy decode makes every recovery path token-identical to an
-uninterrupted run: retried originals re-decode the same stream, drained
-continuations resume it exactly (``tests/test_fleet_serving.py``).
+Every admitted request ends in exactly one bucket — completed, shed
+(with a reason: ``sla_expired`` / ``retry_exhausted`` / ``link_open``),
+or fatal (no replica survived) — and :meth:`FleetReport.check` asserts
+that identity at the end of every ``run()``. ``tests/test_chaos.py``
+and ``benchmarks/bench_chaos.py`` drive randomized fault schedules
+against these invariants.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
+
+import numpy as np
 
 from repro.runtime.supervisor import (FaultInjector, FleetSupervisor,
-                                      JOIN_HOST, KILL_HOST, KILL_REPLICA)
+                                      JOIN_HOST, KILL_HOST, KILL_REPLICA,
+                                      NET_KINDS, SLOW_REPLICA)
+from repro.serve import transport as tp
 from repro.serve.engine import Request, Result
-from repro.serve.fleet import ReshardEvent, ShardedReplica
+from repro.serve.fleet import ReplicaNode, ReshardEvent, ShardedReplica
+
+#: shed reasons (FleetReport.shed keys)
+SHED_QUEUE_FULL = "queue_full"      # admission: bounded queue overflow
+SHED_SLA = "sla_expired"            # deadline passed before dispatch
+SHED_RETRY = "retry_exhausted"      # death-requeue budget exhausted
+SHED_LINK = "link_open"             # redispatch budget exhausted on
+#                                     repeatedly failing links
+SHED_REASONS = (SHED_QUEUE_FULL, SHED_SLA, SHED_RETRY, SHED_LINK)
 
 
 @dataclass(frozen=True)
 class RouterConfig:
-    """Admission/failover policy knobs (all times in logical ticks)."""
+    """Admission/failover/transport policy knobs (times in ticks)."""
 
     max_queue: int = 64               # admission: shed submits beyond this
     default_sla: Optional[int] = None  # completion deadline; None = no SLA
@@ -55,6 +85,20 @@ class RouterConfig:
     #                                   rest wait in the router queue where
     #                                   deadline shedding still applies
     max_ticks: int = 100_000          # runaway guard for run()
+    # -- unreliable-transport hardening --
+    ack_timeout: int = 4              # ticks to wait for a dispatch ACK
+    dispatch_attempts: int = 3        # sends per dispatch attempt before
+    #                                   the link is charged a failure
+    retry_jitter: int = 2             # uniform 0..jitter ticks added to
+    #                                   each backoff (decorrelates storms)
+    seed: int = 0                     # jitter RNG seed (deterministic)
+    max_redispatch: int = 16          # failed-link redispatches before the
+    #                                   request is shed with 'link_open'
+    breaker_threshold: int = 3        # consecutive attempt failures to
+    #                                   open a link's circuit breaker
+    breaker_cooldown: int = 8         # open ticks before half-open probe
+    hedge: bool = True                # hedge straggler requests onto the
+    #                                   least-loaded healthy survivor
 
 
 @dataclass
@@ -62,39 +106,133 @@ class _Tracked:
     request: Request
     submit_tick: int
     deadline: Optional[int]           # absolute tick; None = no SLA
-    retries: int = 0
-    replica: Optional[int] = None     # replica id while dispatched
+    retries: int = 0                  # death-requeue count
+    redispatches: int = 0             # failed-link redispatch count
+    assigned: Set[int] = field(default_factory=set)  # replicas working it
+    hedged: bool = False
+    hedge_target: Optional[int] = None
+
+
+@dataclass
+class _Attempt:
+    """One outstanding DISPATCH awaiting its ACK."""
+
+    uid: object
+    replica: int
+    tries: int
+    next_retx: int
+
+
+@dataclass
+class _Breaker:
+    """Per-link circuit breaker state."""
+
+    state: str = "closed"             # closed | open | half_open
+    failures: int = 0                 # consecutive attempt failures
+    opened_at: int = 0
+    probe_uid: Optional[object] = None  # the single half-open probe
 
 
 @dataclass
 class FleetReport:
-    """Everything run() observed, for tests/benchmarks/CLI."""
+    """Everything run() observed, for tests/benchmarks/CLI.
+
+    Accounting contract (:meth:`check`): every admitted request lands in
+    exactly one of ``completed``, ``shed[sla_expired]``,
+    ``shed[retry_exhausted]``, ``shed[link_open]`` or ``fatal``; queue
+    overflow sheds (``shed[queue_full]``) are counted in ``submitted``
+    but never admitted."""
 
     submitted: int = 0
     admitted: int = 0
     completed: Dict[object, Result] = field(default_factory=dict)
-    shed_queue_full: List[object] = field(default_factory=list)
-    shed_deadline: List[object] = field(default_factory=list)
-    failed: List[object] = field(default_factory=list)  # retries exhausted
+    shed: Dict[str, List] = field(
+        default_factory=lambda: {r: [] for r in SHED_REASONS})
+    fatal: List[object] = field(default_factory=list)  # no replica left
     sla_misses: List[object] = field(default_factory=list)
     deaths: List[Dict] = field(default_factory=list)
     reshards: List[ReshardEvent] = field(default_factory=list)
-    retries: int = 0
+    retries: int = 0                  # death requeues
     ticks: int = 0
+    # -- transport-era accounting --
+    redispatches: int = 0             # dispatch attempts that gave up
+    dedup_hits: int = 0               # duplicate deliveries absorbed by
+    #                                   replica-side dedup (no re-decode)
+    duplicate_results: int = 0        # at-most-once discards
+    ghost_results: int = 0            # results for already-shed requests
+    hedges: int = 0
+    hedge_wins: int = 0               # completions won by the hedge copy
+    completion_ticks: Dict[object, int] = field(default_factory=dict)
+    breaker_events: List[Dict] = field(default_factory=list)
+    transport: Dict = field(default_factory=dict)   # TransportStats dump
+
+    # -- legacy views (PR 7 field names) --
+    @property
+    def shed_queue_full(self) -> List[object]:
+        return self.shed[SHED_QUEUE_FULL]
+
+    @property
+    def shed_deadline(self) -> List[object]:
+        return self.shed[SHED_SLA]
+
+    @property
+    def failed(self) -> List[object]:
+        """Terminally unserved admitted requests: retry/redispatch budget
+        exhausted, or the whole fleet died."""
+        return self.shed[SHED_RETRY] + self.shed[SHED_LINK] + \
+            list(self.fatal)
 
     @property
     def availability(self) -> float:
-        """Completed fraction of admitted-and-not-shed requests."""
-        served = self.admitted - len(self.shed_deadline)
+        """Completed fraction of admitted-and-not-deadline-shed."""
+        served = self.admitted - len(self.shed[SHED_SLA])
         return len(self.completed) / max(served, 1)
+
+    def check(self) -> "FleetReport":
+        """Assert the accounting identity — ``admitted == completed +
+        shed(post-admission) + fatal``, ``submitted == admitted +
+        shed[queue_full]``, all buckets disjoint. Raises ``ValueError``
+        naming the imbalance; returns ``self`` for chaining."""
+        buckets = {
+            "completed": list(self.completed),
+            f"shed[{SHED_SLA}]": self.shed[SHED_SLA],
+            f"shed[{SHED_RETRY}]": self.shed[SHED_RETRY],
+            f"shed[{SHED_LINK}]": self.shed[SHED_LINK],
+            "fatal": self.fatal,
+        }
+        sizes = {k: len(v) for k, v in buckets.items()}
+        seen: Dict[object, str] = {}
+        for name, uids in buckets.items():
+            for uid in uids:
+                if uid in seen:
+                    raise ValueError(
+                        f"report accounting violated: request {uid!r} is "
+                        f"in both {seen[uid]} and {name}")
+                seen[uid] = name
+        total = sum(sizes.values())
+        if total != self.admitted:
+            raise ValueError(
+                "report accounting violated: admitted "
+                f"({self.admitted}) != completed + shed + fatal "
+                f"({total}: {sizes})")
+        if self.admitted + len(self.shed[SHED_QUEUE_FULL]) != \
+                self.submitted:
+            raise ValueError(
+                f"report accounting violated: submitted "
+                f"({self.submitted}) != admitted ({self.admitted}) + "
+                f"shed[{SHED_QUEUE_FULL}] "
+                f"({len(self.shed[SHED_QUEUE_FULL])})")
+        return self
 
 
 class FleetRouter:
-    """Dispatches requests over a pool of :class:`ShardedReplica`."""
+    """Dispatches requests over :class:`ShardedReplica`\\ s through a
+    message :class:`~repro.serve.transport.Transport`."""
 
     def __init__(self, replicas: List[ShardedReplica], directory, *,
                  config: Optional[RouterConfig] = None,
-                 injector: Optional[FaultInjector] = None):
+                 injector: Optional[FaultInjector] = None,
+                 transport: Optional[tp.Transport] = None):
         if not replicas:
             raise ValueError("need at least one replica")
         ids = [r.replica_id for r in replicas]
@@ -104,6 +242,11 @@ class FleetRouter:
             r.replica_id: r for r in replicas}
         self.config = config or RouterConfig()
         self.injector = injector or FaultInjector([])
+        self.transport = transport if transport is not None \
+            else tp.FaultyTransport()
+        self.nodes: Dict[int, ReplicaNode] = {
+            r.replica_id: ReplicaNode(r, self.transport)
+            for r in replicas}
         self.supervisor = FleetSupervisor(
             directory=Path(directory),
             timeout=self.config.heartbeat_timeout)
@@ -111,6 +254,12 @@ class FleetRouter:
         self.queue: deque = deque()   # _Tracked awaiting dispatch
         self.tracked: Dict[object, _Tracked] = {}
         self.report = FleetReport()
+        self._inflight: Dict[tuple, _Attempt] = {}  # (uid, rid) -> attempt
+        self._breakers: Dict[int, _Breaker] = {
+            rid: _Breaker() for rid in self.replicas}
+        self._shed_uids: Set[object] = set()
+        self._rng = np.random.RandomState(self.config.seed)
+        self._straggler_cursor = 0
 
     # ---- admission ----
     def submit(self, request: Request,
@@ -120,7 +269,7 @@ class FleetRouter:
         queued (load-shedding is the admission contract)."""
         self.report.submitted += 1
         if len(self.queue) >= self.config.max_queue:
-            self.report.shed_queue_full.append(request.uid)
+            self.report.shed[SHED_QUEUE_FULL].append(request.uid)
             return False
         sla = self.config.default_sla if sla is None else sla
         tr = _Tracked(request=request, submit_tick=self.tick,
@@ -131,52 +280,232 @@ class FleetRouter:
         return True
 
     # ---- internals ----
-    def _live(self) -> List[ShardedReplica]:
-        return [r for r in self.replicas.values() if r.alive]
+    def _live(self) -> List[ReplicaNode]:
+        return [n for n in self.nodes.values() if n.alive]
 
-    def _outstanding(self, replica_id: int) -> List[_Tracked]:
-        return [t for t in self.tracked.values()
-                if t.replica == replica_id
-                and t.request.uid not in self.report.completed]
+    def _load(self, replica_id: int) -> int:
+        return sum(1 for t in self.tracked.values()
+                   if replica_id in t.assigned
+                   and t.request.uid not in self.report.completed)
+
+    def _jitter(self) -> int:
+        j = self.config.retry_jitter
+        return int(self._rng.randint(0, j + 1)) if j > 0 else 0
+
+    def _shed(self, tr: _Tracked, reason: str) -> None:
+        uid = tr.request.uid
+        self.report.shed[reason].append(uid)
+        self._shed_uids.add(uid)
+        self.tracked.pop(uid, None)
+        try:
+            self.queue.remove(tr)
+        except ValueError:
+            pass
+
+    # ---- circuit breaker ----
+    def _breaker_allows(self, replica_id: int) -> bool:
+        b = self._breakers[replica_id]
+        if b.state == "closed":
+            return True
+        if b.state == "open":
+            if self.tick - b.opened_at >= self.config.breaker_cooldown:
+                b.state = "half_open"
+                b.probe_uid = None
+                self.report.breaker_events.append(
+                    {"tick": self.tick, "replica": replica_id,
+                     "state": "half_open"})
+                return True
+            return False
+        return b.probe_uid is None        # half_open: one probe at a time
+
+    def _breaker_success(self, replica_id: int) -> None:
+        b = self._breakers[replica_id]
+        b.failures = 0
+        if b.state != "closed":
+            b.state = "closed"
+            b.probe_uid = None
+            self.report.breaker_events.append(
+                {"tick": self.tick, "replica": replica_id,
+                 "state": "closed"})
+
+    def _breaker_failure(self, replica_id: int) -> None:
+        b = self._breakers[replica_id]
+        b.failures += 1
+        reopen = b.state == "half_open"
+        if reopen or (b.state == "closed"
+                      and b.failures >= self.config.breaker_threshold):
+            b.state = "open"
+            b.opened_at = self.tick
+            b.probe_uid = None
+            self.report.breaker_events.append(
+                {"tick": self.tick, "replica": replica_id,
+                 "state": "open",
+                 "reason": ("failed half-open probe" if reopen else
+                            f"{b.failures} consecutive timeouts")})
+
+    # ---- dispatch ----
+    def _assign(self, tr: _Tracked, replica_id: int) -> None:
+        uid = tr.request.uid
+        tr.assigned.add(replica_id)
+        b = self._breakers[replica_id]
+        if b.state == "half_open":
+            b.probe_uid = uid
+        self._inflight[(uid, replica_id)] = _Attempt(
+            uid=uid, replica=replica_id, tries=1,
+            next_retx=self.tick + self.config.ack_timeout + self._jitter())
+        self.transport.send(tp.Message(
+            kind=tp.DISPATCH, src=tp.ROUTER,
+            dst=tp.replica_endpoint(replica_id), seq=0, uid=uid,
+            payload=tr.request))
 
     def _dispatch(self) -> None:
         depth = self.config.replica_depth
         while self.queue:
-            cands = [r for r in self._live()
-                     if len(self._outstanding(r.replica_id)) < depth]
+            cands = [n for n in self._live()
+                     if self._breaker_allows(n.replica_id)
+                     and self._load(n.replica_id) < depth]
             if not cands:
                 return
             tr = self.queue.popleft()
+            uid = tr.request.uid
+            if uid in self.report.completed or uid in self._shed_uids:
+                continue              # finished/given up while queued
             if tr.deadline is not None and self.tick > tr.deadline:
                 # expired before ever reaching a replica: shed, don't burn
                 # a slot a within-deadline request could use
-                self.report.shed_deadline.append(tr.request.uid)
-                del self.tracked[tr.request.uid]
+                self._shed(tr, SHED_SLA)
                 continue
-            dst = min(cands, key=lambda r: (len(self._outstanding(
-                r.replica_id)), r.replica_id))
-            tr.replica = dst.replica_id
-            dst.submit([tr.request])
+            dst = min(cands, key=lambda n: (self._load(n.replica_id),
+                                            n.replica_id))
+            self._assign(tr, dst.replica_id)
 
-    def _complete(self, res: Result) -> None:
-        tr = self.tracked.get(res.uid)
-        self.report.completed[res.uid] = res
-        if tr is not None and tr.deadline is not None \
-                and self.tick > tr.deadline:
-            self.report.sla_misses.append(res.uid)
+    # ---- inbox ----
+    def _on_ack(self, uid, replica_id: int) -> None:
+        self._inflight.pop((uid, replica_id), None)
+        self._breaker_success(replica_id)
 
+    def _complete(self, res: Result, src_replica: int) -> None:
+        uid = res.uid
+        if uid in self.report.completed:
+            self.report.duplicate_results += 1
+            return
+        if uid in self._shed_uids:
+            self.report.ghost_results += 1   # we gave up on it already
+            return
+        tr = self.tracked.get(uid)
+        self.report.completed[uid] = res
+        self.report.completion_ticks[uid] = self.tick
+        if tr is not None:
+            if tr.deadline is not None and self.tick > tr.deadline:
+                self.report.sla_misses.append(uid)
+            if tr.hedged and src_replica == tr.hedge_target:
+                self.report.hedge_wins += 1
+        for key in [k for k in self._inflight if k[0] == uid]:
+            del self._inflight[key]
+
+    def _recv(self) -> None:
+        for m in self.transport.poll(tp.ROUTER):
+            rid = tp.endpoint_replica(m.src)
+            if m.kind == tp.ACK:
+                self._on_ack(m.uid, rid)
+            elif m.kind == tp.RESULT:
+                self._on_ack(m.uid, rid)     # a result implies receipt
+                self._complete(m.payload, rid)
+                self.transport.send(tp.Message(
+                    kind=tp.RESULT_ACK, src=tp.ROUTER, dst=m.src,
+                    seq=0, uid=m.uid))
+            elif m.kind == tp.HEARTBEAT:
+                hb = m.payload or {}
+                self.supervisor.beat(
+                    rid, step=int(hb.get("step", 0)),
+                    now=float(self.tick), step_s=hb.get("step_s"))
+
+    # ---- timeouts / retransmits ----
+    def _retransmit(self) -> None:
+        cfg = self.config
+        for key, att in list(self._inflight.items()):
+            uid, rid = key
+            if uid in self.report.completed or uid in self._shed_uids:
+                del self._inflight[key]
+                continue
+            if self.tick < att.next_retx:
+                continue
+            node = self.nodes.get(rid)
+            tr = self.tracked.get(uid)
+            if node is None or not node.alive or tr is None:
+                del self._inflight[key]   # death path handles requeue
+                continue
+            if att.tries >= cfg.dispatch_attempts:
+                # the whole attempt failed: no ACK after every try
+                del self._inflight[key]
+                self._breaker_failure(rid)
+                tr.assigned.discard(rid)
+                tr.redispatches += 1
+                self.report.redispatches += 1
+                if tr.redispatches > cfg.max_redispatch:
+                    self._shed(tr, SHED_LINK)
+                elif not tr.assigned and tr not in self.queue:
+                    self.queue.appendleft(tr)
+                continue
+            att.tries += 1
+            backoff = cfg.ack_timeout * (2 ** (att.tries - 1))
+            att.next_retx = self.tick + backoff + self._jitter()
+            self.transport.send(tp.Message(
+                kind=tp.DISPATCH, src=tp.ROUTER,
+                dst=tp.replica_endpoint(rid), seq=0, uid=uid,
+                payload=tr.request))
+
+    # ---- hedging ----
+    def _hedge(self) -> None:
+        if not self.config.hedge:
+            self._straggler_cursor = len(self.supervisor.stragglers)
+            return
+        entries = self.supervisor.stragglers
+        while self._straggler_cursor < len(entries):
+            e = entries[self._straggler_cursor]
+            self._straggler_cursor += 1
+            rid = e["replica"]
+            node = self.nodes.get(rid)
+            if node is None or not node.alive:
+                continue
+            cands = [t for t in self.tracked.values()
+                     if t.assigned == {rid} and not t.hedged
+                     and t.request.uid not in self.report.completed]
+            if not cands:
+                continue
+            tr = min(cands, key=lambda t: t.submit_tick)
+            targets = [n for n in self._live()
+                       if n.replica_id not in tr.assigned
+                       and self._breakers[n.replica_id].state == "closed"]
+            if not targets:
+                continue
+            dst = min(targets, key=lambda n: (self._load(n.replica_id),
+                                              n.replica_id))
+            tr.hedged = True
+            tr.hedge_target = dst.replica_id
+            self.report.hedges += 1
+            self._assign(tr, dst.replica_id)
+
+    # ---- failure handling ----
     def _requeue_from(self, replica_id: int, reason: str) -> None:
         """Retry a dead replica's outstanding requests from their
-        originals (front of the queue — they have waited longest)."""
+        originals (front of the queue — they have waited longest). A
+        request hedged onto a surviving replica is left with the hedge;
+        one out of death-retries is shed with ``retry_exhausted``."""
+        victims = [t for t in self.tracked.values()
+                   if replica_id in t.assigned
+                   and t.request.uid not in self.report.completed]
         # reverse order + appendleft => oldest request ends up frontmost
-        for tr in sorted(self._outstanding(replica_id),
-                         key=lambda t: t.submit_tick, reverse=True):
+        for tr in sorted(victims, key=lambda t: t.submit_tick,
+                         reverse=True):
+            tr.assigned.discard(replica_id)
+            self._inflight.pop((tr.request.uid, replica_id), None)
+            if tr.assigned:
+                continue              # the hedge copy is still running
             if tr.retries >= self.config.max_retries:
-                self.report.failed.append(tr.request.uid)
-                del self.tracked[tr.request.uid]
+                self._shed(tr, SHED_RETRY)
                 continue
             tr.retries += 1
-            tr.replica = None
             self.report.retries += 1
             self.queue.appendleft(tr)
         self.report.deaths.append(
@@ -193,6 +522,19 @@ class FleetRouter:
         # recovery, exactly as with a real crashed process
 
     def _apply_fault(self, ev) -> None:
+        if ev.kind in NET_KINDS:
+            if not hasattr(self.transport, "inject"):
+                raise ValueError(
+                    f"fault {ev.kind!r} needs a fault-injectable "
+                    f"transport (FaultyTransport); got "
+                    f"{type(self.transport).__name__}")
+            self.transport.inject(ev)
+            return
+        if ev.kind == SLOW_REPLICA:
+            node = self.nodes.get(ev.replica)
+            if node is not None and node.alive:
+                node.slowdown = int(ev.factor)
+            return
         rep = self.replicas.get(ev.replica)
         if rep is None or not rep.alive:
             return
@@ -214,19 +556,25 @@ class FleetRouter:
 
     # ---- the clock ----
     def step(self) -> None:
-        """One scheduling round (one logical tick)."""
+        """One scheduling round (one logical tick): faults fire, the
+        transport clock advances, the router drains its inbox, handles
+        timeouts/hedges/dispatches, every live replica endpoint steps,
+        and heartbeat silence is checked last."""
         self.tick += 1
         self.report.ticks = self.tick
         for ev in self.injector.due(self.tick):
             self._apply_fault(ev)
+        self.transport.advance(self.tick)
+        self._recv()
+        self._retransmit()
+        self._hedge()
         self._dispatch()
-        for rep in self._live():
-            for res in rep.pump():
-                self._complete(res)
-            self.supervisor.beat(rep.replica_id, step=self.tick,
-                                 now=float(self.tick))
+        for node in self._live():
+            node.step(self.tick)
         for replica_id in self.supervisor.check(now=float(self.tick)):
             self._requeue_from(replica_id, "heartbeat timeout")
+        self.report.dedup_hits = sum(n.dedup_hits
+                                     for n in self.nodes.values())
 
     @property
     def busy(self) -> bool:
@@ -237,7 +585,8 @@ class FleetRouter:
     def run(self, requests: List[Request],
             slas: Optional[List[Optional[int]]] = None) -> FleetReport:
         """Submit everything, crank the clock until the fleet is idle (or
-        no replica survives), return the report."""
+        no replica survives), validate the accounting identity, return
+        the report."""
         slas = slas if slas is not None else [None] * len(requests)
         for req, sla in zip(requests, slas):
             self.submit(req, sla=sla)
@@ -245,7 +594,7 @@ class FleetRouter:
             if not self._live():
                 for tr in list(self.tracked.values()):
                     if tr.request.uid not in self.report.completed:
-                        self.report.failed.append(tr.request.uid)
+                        self.report.fatal.append(tr.request.uid)
                 self.tracked.clear()
                 self.queue.clear()
                 break
@@ -254,6 +603,9 @@ class FleetRouter:
                     f"router made no progress in {self.tick} ticks; "
                     "check max_new_tokens vs max_ticks")
             self.step()
-        for r in self._live():
-            self.supervisor.retire(r.replica_id)
-        return self.report
+        for n in self._live():
+            self.supervisor.retire(n.replica_id)
+        stats = getattr(self.transport, "stats", None)
+        if stats is not None:
+            self.report.transport = stats.to_dict()
+        return self.report.check()

@@ -1,0 +1,297 @@
+"""Message transport between the fleet router and its replicas.
+
+PR 7's router called replicas as in-process Python objects — correct,
+but silent about every failure mode a real deployment sees first: lost,
+delayed, duplicated and reordered messages. This module makes all
+router↔replica traffic explicit :class:`Message`\\ s over a
+:class:`Transport`:
+
+* :class:`LocalTransport` — the in-process reference transport:
+  reliable, in-order, delivered at the receiver's next poll. The
+  router's scheduling tick drives delivery (``advance(tick)``), so the
+  whole protocol runs on the fleet's deterministic logical clock.
+* :class:`FaultyTransport` — the same queues with **message-level fault
+  injection** on top: per-link drops, fixed/variable delays, duplicates,
+  reorders and full partitions, from a scripted schedule
+  (:meth:`~FaultyTransport.inject`, fed by the router's
+  :class:`~repro.runtime.supervisor.FaultInjector`) and/or a
+  seeded-random :class:`ChaosConfig`. Every decision comes from one
+  ``numpy.random.RandomState``, so a chaos schedule is exactly
+  reproducible from its seed — the property ``tests/test_chaos.py`` and
+  ``benchmarks/bench_chaos.py`` build on.
+
+The protocol the router/replica endpoints speak over this channel
+(DISPATCH/ACK retransmits with backoff, request dedup, RESULT
+retransmit-until-acked, heartbeats) lives in ``serve.router`` and
+``serve.fleet.ReplicaNode``; this module only moves messages. Any
+future real-network transport (TCP, RPC mesh) plugs in by implementing
+``send``/``poll``/``advance`` — the router code does not change.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: message kinds (router -> replica)
+DISPATCH = "dispatch"            # payload: serve.engine.Request
+RESULT_ACK = "result_ack"        # uid: acknowledged result
+#: message kinds (replica -> router)
+ACK = "ack"                      # uid: dispatch received (idempotent)
+RESULT = "result"                # payload: serve.engine.Result
+HEARTBEAT = "heartbeat"          # payload: {"step": int, "step_s": float}
+
+ROUTER = "router"
+
+
+def replica_endpoint(replica_id: int) -> str:
+    return f"replica:{replica_id}"
+
+
+def endpoint_replica(endpoint: str) -> Optional[int]:
+    """The replica id a link touches (None for the router endpoint)."""
+    if endpoint.startswith("replica:"):
+        return int(endpoint.split(":", 1)[1])
+    return None
+
+
+@dataclass(frozen=True)
+class Message:
+    """One protocol message on a router↔replica link."""
+
+    kind: str
+    src: str
+    dst: str
+    seq: int                     # transport-assigned send order
+    uid: Any = None              # request uid (all kinds but HEARTBEAT)
+    payload: Any = None          # Request / Result / heartbeat dict
+
+    def link(self) -> Optional[int]:
+        """The replica id of the link this message travels on."""
+        r = endpoint_replica(self.src)
+        return r if r is not None else endpoint_replica(self.dst)
+
+
+@dataclass
+class TransportStats:
+    """What the transport did to the traffic (reported per run)."""
+
+    sent: int = 0
+    delivered: int = 0
+    dropped: int = 0             # random drops + scripted one-tick drops
+    partition_dropped: int = 0   # dropped inside a partition window
+    duplicated: int = 0
+    delayed: int = 0             # messages given a non-zero extra delay
+    reordered_polls: int = 0     # polls whose batch was shuffled
+    by_kind: Dict[str, int] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict:
+        return {
+            "sent": self.sent, "delivered": self.delivered,
+            "dropped": self.dropped,
+            "partition_dropped": self.partition_dropped,
+            "duplicated": self.duplicated, "delayed": self.delayed,
+            "reordered_polls": self.reordered_polls,
+            "by_kind": dict(self.by_kind),
+        }
+
+
+class Transport:
+    """Interface: ``send`` a message, ``poll`` an endpoint's due inbox,
+    ``advance`` the logical clock. Implementations must deliver each
+    *kept* message exactly once per enqueued copy and never invent
+    messages — loss/duplication semantics live in the implementation,
+    correctness under them lives in the protocol above."""
+
+    def send(self, msg: Message) -> None:
+        raise NotImplementedError
+
+    def poll(self, endpoint: str) -> List[Message]:
+        raise NotImplementedError
+
+    def advance(self, tick: int) -> None:
+        raise NotImplementedError
+
+
+class LocalTransport(Transport):
+    """Reliable in-process transport on the router's logical clock.
+
+    A message sent at tick ``t`` is deliverable at any ``poll`` at tick
+    ``>= t`` — within the router's fixed phase order that means the
+    router's sends reach a replica the same tick, and a replica's
+    replies reach the router next tick (the router polls first). FIFO
+    per link; delivery order is the global send order."""
+
+    def __init__(self):
+        self._now = 0
+        self._seq = 0
+        self._boxes: Dict[str, List[Tuple[int, int, Message]]] = {}
+        self.stats = TransportStats()
+
+    # -- clock --
+    def advance(self, tick: int) -> None:
+        self._now = tick
+
+    @property
+    def now(self) -> int:
+        return self._now
+
+    # -- send path (hooks for FaultyTransport) --
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _enqueue(self, msg: Message, due: int) -> None:
+        self._boxes.setdefault(msg.dst, []).append((due, msg.seq, msg))
+
+    def send(self, msg: Message) -> None:
+        if msg.seq == 0:
+            msg = Message(kind=msg.kind, src=msg.src, dst=msg.dst,
+                          seq=self._next_seq(), uid=msg.uid,
+                          payload=msg.payload)
+        self.stats.sent += 1
+        self.stats.by_kind[msg.kind] = \
+            self.stats.by_kind.get(msg.kind, 0) + 1
+        self._enqueue(msg, self._now)
+
+    # -- receive path --
+    def _shuffle_hook(self, batch: List[Message]) -> List[Message]:
+        return batch
+
+    def poll(self, endpoint: str) -> List[Message]:
+        box = self._boxes.get(endpoint, [])
+        due = sorted((e for e in box if e[0] <= self._now),
+                     key=lambda e: (e[0], e[1]))
+        self._boxes[endpoint] = [e for e in box if e[0] > self._now]
+        out = self._shuffle_hook([m for _, _, m in due])
+        self.stats.delivered += len(out)
+        return out
+
+    @property
+    def in_flight(self) -> int:
+        return sum(len(v) for v in self._boxes.values())
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded-random message faults, applied per send (and per poll for
+    reorders) until tick ``until`` — after that the network **heals**,
+    which is what lets chaos runs terminate with every admitted request
+    completed. All probabilities are independent per message."""
+
+    seed: int = 0
+    p_drop: float = 0.0          # message silently lost
+    p_dup: float = 0.0           # a second copy arrives (extra-delayed)
+    p_delay: float = 0.0         # message held back 1..max_delay ticks
+    max_delay: int = 3
+    p_reorder: float = 0.0       # a poll's due batch is shuffled
+    until: Optional[int] = None  # faults stop strictly after this tick
+
+    def __post_init__(self):
+        for name in ("p_drop", "p_dup", "p_delay", "p_reorder"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"ChaosConfig.{name} must be a "
+                                 f"probability in [0, 1]; got {v!r}")
+        if self.max_delay < 1:
+            raise ValueError("ChaosConfig.max_delay must be >= 1; got "
+                             f"{self.max_delay}")
+
+
+class FaultyTransport(LocalTransport):
+    """LocalTransport plus deterministic message-level fault injection.
+
+    Faults come from two composable sources, both on the logical clock:
+
+    * **Scripted link events** via :meth:`inject` — the parsed
+      ``drop:<r>@<t>`` / ``delay:<r>@<t>+<d>`` /
+      ``partition:<r>@<t>..<t2>`` grammar of
+      :func:`repro.runtime.supervisor.parse_fault_spec`. ``drop`` loses
+      every message sent on replica ``r``'s link at tick ``t``;
+      ``delay`` holds them back ``d`` ticks; ``partition`` loses all
+      traffic both directions for the whole window.
+    * **Seeded-random chaos** via :class:`ChaosConfig` — per-message
+      drop/duplicate/delay draws and per-poll reorders from one
+      ``RandomState(seed)``, healed after ``until``.
+
+    With neither configured it behaves exactly like
+    :class:`LocalTransport` (the router's default)."""
+
+    def __init__(self, chaos: Optional[ChaosConfig] = None):
+        super().__init__()
+        self.chaos = chaos
+        self._rng = np.random.RandomState(
+            chaos.seed if chaos is not None else 0)
+        self._drops: set = set()              # (replica, tick)
+        self._delays: Dict[Tuple[int, int], int] = {}
+        self._partitions: List[Tuple[int, int, int]] = []  # (r, t0, t1)
+
+    # -- scripted schedule --
+    def inject(self, event) -> None:
+        """Apply one parsed net-fault :class:`FaultEvent` (kinds
+        ``drop_link`` / ``delay_link`` / ``partition``)."""
+        from repro.runtime.supervisor import (DELAY_LINK, DROP_LINK,
+                                              PARTITION)
+        if event.kind == DROP_LINK:
+            self._drops.add((event.replica, event.tick))
+        elif event.kind == DELAY_LINK:
+            self._delays[(event.replica, event.tick)] = int(event.delay)
+        elif event.kind == PARTITION:
+            self._partitions.append(
+                (event.replica, event.tick, int(event.until)))
+        else:
+            raise ValueError(
+                f"FaultyTransport cannot inject event kind "
+                f"{event.kind!r}; expected a message fault "
+                "(drop_link/delay_link/partition)")
+
+    def partitioned(self, replica: int, tick: Optional[int] = None) -> bool:
+        t = self._now if tick is None else tick
+        return any(r == replica and t0 <= t <= t1
+                   for r, t0, t1 in self._partitions)
+
+    # -- chaos --
+    def _chaos_active(self) -> bool:
+        c = self.chaos
+        return c is not None and (c.until is None or self._now <= c.until)
+
+    def send(self, msg: Message) -> None:
+        msg = Message(kind=msg.kind, src=msg.src, dst=msg.dst,
+                      seq=self._next_seq(), uid=msg.uid,
+                      payload=msg.payload)
+        self.stats.sent += 1
+        self.stats.by_kind[msg.kind] = \
+            self.stats.by_kind.get(msg.kind, 0) + 1
+        link = msg.link()
+        if link is not None:
+            if self.partitioned(link):
+                self.stats.partition_dropped += 1
+                return
+            if (link, self._now) in self._drops:
+                self.stats.dropped += 1
+                return
+        extra = self._delays.get((link, self._now), 0)
+        if self._chaos_active():
+            c = self.chaos
+            if c.p_drop and self._rng.random_sample() < c.p_drop:
+                self.stats.dropped += 1
+                return
+            if c.p_delay and self._rng.random_sample() < c.p_delay:
+                extra += 1 + int(self._rng.randint(c.max_delay))
+            if c.p_dup and self._rng.random_sample() < c.p_dup:
+                dup_extra = extra + 1 + int(self._rng.randint(c.max_delay))
+                self.stats.duplicated += 1
+                self._enqueue(msg, self._now + dup_extra)
+        if extra:
+            self.stats.delayed += 1
+        self._enqueue(msg, self._now + extra)
+
+    def _shuffle_hook(self, batch: List[Message]) -> List[Message]:
+        if (len(batch) > 1 and self._chaos_active()
+                and self.chaos.p_reorder
+                and self._rng.random_sample() < self.chaos.p_reorder):
+            idx = self._rng.permutation(len(batch))
+            self.stats.reordered_polls += 1
+            return [batch[i] for i in idx]
+        return batch

@@ -1,0 +1,536 @@
+"""Chaos harness: the fleet under an unreliable transport.
+
+PR 9's tentpole turned all router↔replica traffic into messages over
+``serve.transport`` and hardened the router against the failure modes a
+real network delivers: lost, delayed, duplicated and reordered messages,
+full partitions, and straggling replicas. This suite drives every
+hardening mechanism, then composes them under seeded-random chaos
+schedules and asserts the core invariants:
+
+* **exactly-once**: every admitted request completes exactly once —
+  retransmits after lost ACKs are absorbed by replica-side dedup (never
+  re-decoded on the same replica), duplicate/late results are discarded
+  by at-most-once stitching;
+* **token identity**: under greedy decode, results equal the fault-free
+  run's token-for-token (faults may change *where* and *when* a request
+  decodes, never *what* it decodes);
+* **accounting**: ``FleetReport.check`` balances — admitted ==
+  completed + shed(post-admission) + fatal, submitted == admitted +
+  shed[queue_full], buckets disjoint;
+* **determinism**: a chaos schedule is a pure function of its seed.
+
+``benchmarks/bench_chaos.py`` runs the same invariants at benchmark
+scale (CI's tier1-slow gate) plus the hedging A/B.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.bench_artifact_loading import build_artifact
+from repro.runtime.supervisor import (DELAY_LINK, DROP_LINK, KILL_REPLICA,
+                                      PARTITION, SLOW_REPLICA, FaultEvent,
+                                      FaultInjector, parse_fault_spec)
+from repro.serve.engine import (EngineConfig, GenerationOptions, Request,
+                                Result, ServeEngine)
+from repro.serve.fleet import ShardedReplica
+from repro.serve.kv_pool import KVPoolConfig
+from repro.serve.router import (SHED_LINK, SHED_RETRY, FleetRouter,
+                                RouterConfig)
+from repro.serve.transport import (ACK, DISPATCH, ROUTER, ChaosConfig,
+                                   FaultyTransport, LocalTransport,
+                                   Message, replica_endpoint)
+
+
+def _reqs(n=4, max_new=6):
+    return [Request(uid=i, prompt=np.arange(1 + i, 9 + i, dtype=np.int32),
+                    options=GenerationOptions(max_new_tokens=max_new,
+                                              odp="off"))
+            for i in range(n)]
+
+
+def _msg(kind=DISPATCH, dst=replica_endpoint(0), src=ROUTER, uid=0):
+    return Message(kind=kind, src=src, dst=dst, seq=0, uid=uid)
+
+
+class _FakeReplica:
+    """Engine-free replica: completes each request after ``steps`` pumps."""
+
+    def __init__(self, replica_id, steps=3):
+        self.replica_id = replica_id
+        self.alive = True
+        self.steps = steps
+        self._work = {}
+
+    @property
+    def busy(self):
+        return self.alive and bool(self._work)
+
+    def submit(self, requests):
+        for r in requests:
+            self._work[r.uid] = self.steps
+
+    def pump(self):
+        done = []
+        for uid in list(self._work):
+            self._work[uid] -= 1
+            if self._work[uid] <= 0:
+                del self._work[uid]
+                done.append(Result(
+                    uid=uid, tokens=np.zeros(1, np.int32), prefill_s=0.0,
+                    decode_s=0.0, new_tokens=1, finish_reason="length"))
+        return done
+
+    def kill(self):
+        self.alive = False
+        self._work.clear()
+
+
+# ------------------------------------------------------------- transport
+class TestTransport:
+    def test_local_delivers_once_in_order(self):
+        t = LocalTransport()
+        t.advance(1)
+        for uid in (7, 8, 9):
+            t.send(_msg(uid=uid))
+        got = t.poll(replica_endpoint(0))
+        assert [m.uid for m in got] == [7, 8, 9]
+        assert t.poll(replica_endpoint(0)) == []     # consumed
+        assert t.in_flight == 0
+        assert t.stats.sent == 3 and t.stats.delivered == 3
+
+    def test_local_routes_by_endpoint(self):
+        t = LocalTransport()
+        t.advance(1)
+        t.send(_msg(dst=replica_endpoint(0), uid=1))
+        t.send(_msg(dst=replica_endpoint(1), uid=2))
+        t.send(_msg(kind=ACK, dst=ROUTER, src=replica_endpoint(1), uid=2))
+        assert [m.uid for m in t.poll(replica_endpoint(1))] == [2]
+        assert [m.uid for m in t.poll(ROUTER)] == [2]
+        assert [m.uid for m in t.poll(replica_endpoint(0))] == [1]
+
+    def test_scripted_drop_hits_one_tick_only(self):
+        t = FaultyTransport()
+        t.inject(FaultEvent(tick=2, kind=DROP_LINK, replica=0))
+        t.advance(2)
+        t.send(_msg(uid=1))                          # dropped
+        t.advance(3)
+        t.send(_msg(uid=2))                          # delivered
+        assert [m.uid for m in t.poll(replica_endpoint(0))] == [2]
+        assert t.stats.dropped == 1
+
+    def test_scripted_delay_holds_messages(self):
+        t = FaultyTransport()
+        t.inject(FaultEvent(tick=1, kind=DELAY_LINK, replica=0, delay=2))
+        t.advance(1)
+        t.send(_msg(uid=1))
+        assert t.poll(replica_endpoint(0)) == []
+        t.advance(2)
+        assert t.poll(replica_endpoint(0)) == []
+        t.advance(3)
+        assert [m.uid for m in t.poll(replica_endpoint(0))] == [1]
+        assert t.stats.delayed == 1
+
+    def test_partition_cuts_both_directions_for_window(self):
+        t = FaultyTransport()
+        t.inject(FaultEvent(tick=2, kind=PARTITION, replica=0, until=4))
+        for tick, lost in [(1, False), (2, True), (4, True), (5, False)]:
+            t.advance(tick)
+            t.send(_msg(uid=tick))                             # to replica
+            t.send(_msg(kind=ACK, dst=ROUTER,
+                        src=replica_endpoint(0), uid=tick))    # to router
+        assert [m.uid for m in t.poll(replica_endpoint(0))] == [1, 5]
+        assert [m.uid for m in t.poll(ROUTER)] == [1, 5]
+        assert t.stats.partition_dropped == 4
+
+    def test_partition_spares_other_links(self):
+        t = FaultyTransport()
+        t.inject(FaultEvent(tick=1, kind=PARTITION, replica=0, until=9))
+        t.advance(2)
+        t.send(_msg(dst=replica_endpoint(0), uid=1))
+        t.send(_msg(dst=replica_endpoint(1), uid=2))
+        assert t.poll(replica_endpoint(0)) == []
+        assert [m.uid for m in t.poll(replica_endpoint(1))] == [2]
+
+    def test_inject_rejects_non_network_kinds(self):
+        t = FaultyTransport()
+        with pytest.raises(ValueError, match="cannot inject"):
+            t.inject(FaultEvent(tick=1, kind=KILL_REPLICA, replica=0))
+
+    def test_chaos_duplicates_and_heals(self):
+        t = FaultyTransport(ChaosConfig(seed=0, p_dup=1.0, max_delay=1,
+                                        until=1))
+        t.advance(1)
+        t.send(_msg(uid=1))                          # duplicated
+        t.advance(5)
+        t.send(_msg(uid=2))                          # healed: single copy
+        got = [m.uid for m in t.poll(replica_endpoint(0))]
+        assert sorted(got) == [1, 1, 2]
+        assert t.stats.duplicated == 1
+
+    def test_chaos_is_seed_deterministic(self):
+        def run(seed):
+            t = FaultyTransport(ChaosConfig(seed=seed, p_drop=0.3,
+                                            p_delay=0.3, p_dup=0.3))
+            log = []
+            for tick in range(1, 20):
+                t.advance(tick)
+                t.send(_msg(uid=tick))
+                log.append(tuple(m.uid for m in
+                                 t.poll(replica_endpoint(0))))
+            return log, t.stats.to_dict()
+        assert run(7) == run(7)
+        assert run(7) != run(8)
+
+
+# ----------------------------------------------------- fault-spec grammar
+class TestFaultSpecGrammar:
+    def test_new_message_fault_kinds_parse(self):
+        ev = parse_fault_spec("drop:2@5")
+        assert (ev.kind, ev.replica, ev.tick) == (DROP_LINK, 2, 5)
+        ev = parse_fault_spec("delay:0@3+4")
+        assert (ev.kind, ev.tick, ev.delay) == (DELAY_LINK, 3, 4)
+        ev = parse_fault_spec("partition:1@4..9")
+        assert (ev.kind, ev.tick, ev.until) == (PARTITION, 4, 9)
+        ev = parse_fault_spec("slow:1@10x6")
+        assert (ev.kind, ev.tick, ev.factor) == (SLOW_REPLICA, 10, 6)
+
+    @pytest.mark.parametrize("spec,needle", [
+        ("replica0@3", "missing ':'"),
+        ("vaporize:0@3", "unknown fault kind 'vaporize'"),
+        ("replica:0", "missing '@<tick>'"),
+        ("replica:zero@3", "'zero' is not an integer"),
+        ("replica:0@soon", "'soon' is not an integer"),
+        ("host:0@3", "must be '<replica>.<host>'"),
+        ("delay:0@3", "delay needs"),
+        ("delay:0@3+x", "'x' is not an integer"),
+        ("partition:0@3", "partition needs"),
+        ("partition:0@9..3", "end tick 3 is before its start tick 9"),
+        ("slow:0@3", "needs '@<tick>x<factor>'"),
+    ])
+    def test_malformed_specs_name_the_bad_token(self, spec, needle):
+        with pytest.raises(ValueError, match=needle):
+            parse_fault_spec(spec)
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="delay >= 1"):
+            FaultEvent(tick=1, kind=DELAY_LINK, replica=0, delay=0)
+        with pytest.raises(ValueError, match="end tick"):
+            FaultEvent(tick=5, kind=PARTITION, replica=0, until=3)
+        with pytest.raises(ValueError, match="factor >= 1"):
+            FaultEvent(tick=1, kind=SLOW_REPLICA, replica=0, factor=0)
+
+
+# ------------------------------------------------------ protocol (fakes)
+class TestProtocolHardening:
+    def test_dropped_dispatch_is_retransmitted(self, tmp_path):
+        inj = FaultInjector([FaultEvent(tick=1, kind=DROP_LINK,
+                                        replica=0)])
+        router = FleetRouter(
+            [_FakeReplica(0)], tmp_path / "hb",
+            config=RouterConfig(retry_jitter=0), injector=inj,
+            transport=FaultyTransport())
+        rpt = router.run(_reqs(n=1))
+        assert list(rpt.completed) == [0]
+        # the tick-1 dispatch AND that tick's heartbeat were both lost
+        assert rpt.transport["dropped"] == 2
+        assert rpt.transport["by_kind"][DISPATCH] >= 2  # original + retx
+
+    def test_lost_ack_dedups_not_double_decodes(self, tmp_path):
+        # delay the tick-1 dispatch by 1, then drop the tick-2 replica
+        # traffic — the ACK is lost but the request IS decoding; the
+        # router's retransmit must be absorbed by dedup
+        inj = FaultInjector([
+            FaultEvent(tick=1, kind=DELAY_LINK, replica=0, delay=1),
+            FaultEvent(tick=2, kind=DROP_LINK, replica=0)])
+        router = FleetRouter(
+            [_FakeReplica(0, steps=8)], tmp_path / "hb",
+            config=RouterConfig(retry_jitter=0, heartbeat_timeout=6.0),
+            injector=inj, transport=FaultyTransport())
+        rpt = router.run(_reqs(n=1))
+        assert list(rpt.completed) == [0]
+        assert rpt.dedup_hits >= 1
+        node = router.nodes[0]
+        assert node.decode_submissions == {0: 1}     # decoded exactly once
+
+    def test_chaos_duplicates_never_double_decode(self, tmp_path):
+        router = FleetRouter(
+            [_FakeReplica(0), _FakeReplica(1)], tmp_path / "hb",
+            config=RouterConfig(max_retries=10),
+            transport=FaultyTransport(
+                ChaosConfig(seed=3, p_dup=1.0, max_delay=2, until=10)))
+        rpt = router.run(_reqs(n=6))
+        assert sorted(rpt.completed) == list(range(6))
+        assert rpt.dedup_hits > 0
+        for node in router.nodes.values():
+            assert all(n == 1 for n in node.decode_submissions.values())
+
+    def test_partition_false_death_recovers_exactly_once(self, tmp_path):
+        """A partitioned replica looks dead (heartbeat silence); its
+        requests retry elsewhere, and its late results are discarded by
+        the at-most-once rule. Every request completes exactly once."""
+        inj = FaultInjector([FaultEvent(tick=2, kind=PARTITION,
+                                        replica=0, until=30)])
+        router = FleetRouter(
+            [_FakeReplica(0, steps=3), _FakeReplica(1, steps=3)],
+            tmp_path / "hb",
+            config=RouterConfig(retry_jitter=0, max_retries=5),
+            injector=inj, transport=FaultyTransport())
+        rpt = router.run(_reqs(n=4))
+        assert sorted(rpt.completed) == [0, 1, 2, 3]
+        assert any(d["replica"] == 0 for d in rpt.deaths)  # false positive
+        assert router.replicas[0].alive                    # ...but alive
+        # per-replica dedup held: nothing decoded twice on one node
+        for node in router.nodes.values():
+            assert all(n == 1 for n in node.decode_submissions.values())
+
+    def test_breaker_opens_on_dead_link(self, tmp_path):
+        inj = FaultInjector([FaultEvent(tick=1, kind=PARTITION,
+                                        replica=0, until=60)])
+        router = FleetRouter(
+            [_FakeReplica(0), _FakeReplica(1)], tmp_path / "hb",
+            config=RouterConfig(ack_timeout=1, dispatch_attempts=1,
+                                breaker_threshold=2, retry_jitter=0,
+                                max_retries=10, heartbeat_timeout=50.0),
+            injector=inj, transport=FaultyTransport())
+        rpt = router.run(_reqs(n=4))
+        assert sorted(rpt.completed) == [0, 1, 2, 3]
+        opens = [e for e in rpt.breaker_events
+                 if e["replica"] == 0 and e["state"] == "open"]
+        assert opens and rpt.redispatches >= 2
+
+    def test_breaker_half_open_probe_closes_after_heal(self, tmp_path):
+        inj = FaultInjector([FaultEvent(tick=1, kind=PARTITION,
+                                        replica=0, until=6)])
+        router = FleetRouter(
+            [_FakeReplica(0)], tmp_path / "hb",
+            config=RouterConfig(ack_timeout=1, dispatch_attempts=1,
+                                breaker_threshold=1, breaker_cooldown=3,
+                                retry_jitter=0, max_retries=10,
+                                max_redispatch=50,
+                                heartbeat_timeout=50.0),
+            injector=inj, transport=FaultyTransport())
+        rpt = router.run(_reqs(n=1))
+        assert list(rpt.completed) == [0]
+        states = [e["state"] for e in rpt.breaker_events
+                  if e["replica"] == 0]
+        assert "half_open" in states and states[-1] == "closed"
+        # the mid-partition probe failed and re-opened before the heal
+        assert states.count("open") >= 2
+
+    def test_unreachable_fleet_sheds_link_open(self, tmp_path):
+        """A permanent partition with no survivor: the redispatch budget
+        runs out and the request is shed with reason ``link_open`` —
+        bounded, loudly accounted, identity still balanced."""
+        inj = FaultInjector([FaultEvent(tick=1, kind=PARTITION,
+                                        replica=0, until=10_000)])
+        router = FleetRouter(
+            [_FakeReplica(0)], tmp_path / "hb",
+            config=RouterConfig(ack_timeout=1, dispatch_attempts=1,
+                                breaker_threshold=2, breaker_cooldown=2,
+                                max_redispatch=3, retry_jitter=0,
+                                heartbeat_timeout=50.0),
+            injector=inj, transport=FaultyTransport())
+        rpt = router.run(_reqs(n=1))
+        assert rpt.shed[SHED_LINK] == [0] and not rpt.completed
+        assert rpt.failed == [0]                     # legacy view agrees
+
+    def test_hedging_beats_straggler(self, tmp_path):
+        """Replica 0 slows 8x mid-run; the supervisor's z-score flags it
+        and the router hedges its outstanding work onto replica 1. First
+        completion wins — the run finishes far earlier than unhedged."""
+        def run(hedge):
+            inj = FaultInjector([FaultEvent(tick=14, kind=SLOW_REPLICA,
+                                            replica=0, factor=8)])
+            router = FleetRouter(
+                [_FakeReplica(0, steps=40), _FakeReplica(1, steps=40)],
+                tmp_path / f"hb{hedge}",
+                config=RouterConfig(hedge=hedge, retry_jitter=0,
+                                    heartbeat_timeout=10.0),
+                injector=inj, transport=FaultyTransport())
+            return router.run(_reqs(n=4))
+        hedged, unhedged = run(True), run(False)
+        assert sorted(hedged.completed) == [0, 1, 2, 3]
+        assert hedged.hedges >= 1 and hedged.hedge_wins >= 1
+        assert unhedged.hedges == 0
+        assert max(hedged.completion_ticks.values()) < \
+            max(unhedged.completion_ticks.values())
+
+    @pytest.mark.parametrize("seed", [1, 2, 3, 4, 5])
+    def test_seeded_chaos_exactly_once_and_balanced(self, tmp_path, seed):
+        chaos = ChaosConfig(seed=seed, p_drop=0.15, p_dup=0.15,
+                            p_delay=0.2, p_reorder=0.2, max_delay=3,
+                            until=60)
+        router = FleetRouter(
+            [_FakeReplica(i) for i in range(3)], tmp_path / "hb",
+            config=RouterConfig(seed=seed, max_retries=20,
+                                max_redispatch=100),
+            transport=FaultyTransport(chaos))
+        rpt = router.run(_reqs(n=12))
+        # run() already called rpt.check(); re-assert the headline
+        assert sorted(rpt.completed) == list(range(12))
+        assert rpt.admitted == 12 and not rpt.fatal
+        for node in router.nodes.values():
+            assert all(n == 1 for n in node.decode_submissions.values())
+
+    def test_same_seed_same_story(self, tmp_path):
+        def run(tag):
+            chaos = ChaosConfig(seed=11, p_drop=0.2, p_dup=0.2,
+                                p_delay=0.2, p_reorder=0.2, until=50)
+            router = FleetRouter(
+                [_FakeReplica(i) for i in range(2)], tmp_path / tag,
+                config=RouterConfig(seed=11, max_retries=20,
+                                    max_redispatch=100),
+                transport=FaultyTransport(chaos))
+            rpt = router.run(_reqs(n=8))
+            return rpt.completion_ticks, rpt.transport
+        assert run("a") == run("b")
+
+    def test_report_check_catches_imbalance(self, tmp_path):
+        router = FleetRouter([_FakeReplica(0)], tmp_path / "hb")
+        rpt = router.run(_reqs(n=2))
+        rpt.admitted += 1
+        with pytest.raises(ValueError, match="accounting violated"):
+            rpt.check()
+        rpt.admitted -= 1
+        rpt.shed[SHED_RETRY].append(0)               # also in completed
+        with pytest.raises(ValueError, match="in both"):
+            rpt.check()
+
+
+# ------------------------------------------------- real engines, chaos
+@pytest.fixture(scope="module")
+def saved(tmp_path_factory):
+    d = tmp_path_factory.mktemp("chaos_artifact")
+    model, artifact, _ = build_artifact(
+        d, num_experts=16, d_model=32, moe_d_ff=384, vocab_size=64,
+        group_size=32, capacity_factor=32.0)
+    return model, artifact, d
+
+
+@pytest.fixture(scope="module")
+def ref(saved):
+    model, artifact, _ = saved
+    eng = ServeEngine.from_artifact(model, artifact, batch_size=2,
+                                    odp="off")
+    return {r.uid: [int(t) for t in r.tokens] for r in eng.run(_reqs())}
+
+
+def _pool(model, d, n=2, config=None):
+    return [ShardedReplica(model, d, replica_id=i, num_hosts=2,
+                           blocks_per_host=2, batch_size=2, odp="off",
+                           config=config)
+            for i in range(n)]
+
+
+class TestChaosRealEngine:
+    def _chaos_run(self, saved, tmp_path, seed, kill_tick=None):
+        model, _, d = saved
+        events = [] if kill_tick is None else \
+            [FaultEvent(tick=kill_tick, kind=KILL_REPLICA, replica=0)]
+        chaos = ChaosConfig(seed=seed, p_drop=0.1, p_dup=0.1,
+                            p_delay=0.15, p_reorder=0.15, max_delay=2,
+                            until=40)
+        router = FleetRouter(
+            _pool(model, d), tmp_path / f"hb{seed}",
+            config=RouterConfig(seed=seed, max_retries=20,
+                                max_redispatch=100),
+            injector=FaultInjector(events),
+            transport=FaultyTransport(chaos))
+        return router.run(_reqs()), router
+
+    def test_chaos_token_identical(self, saved, ref, tmp_path):
+        """Message chaos over real engines: every request completes
+        exactly once, token-identical to the fault-free run."""
+        rpt, router = self._chaos_run(saved, tmp_path, seed=1)
+        got = {r.uid: [int(t) for t in r.tokens]
+               for r in rpt.completed.values()}
+        assert got == ref
+        for node in router.nodes.values():
+            assert all(n == 1 for n in node.decode_submissions.values())
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("seed", [2, 3])
+    def test_chaos_more_seeds(self, saved, ref, tmp_path, seed):
+        rpt, _ = self._chaos_run(saved, tmp_path, seed=seed)
+        got = {r.uid: [int(t) for t in r.tokens]
+               for r in rpt.completed.values()}
+        assert got == ref
+
+    @pytest.mark.slow
+    def test_chaos_with_replica_kill(self, saved, ref, tmp_path):
+        """Chaos composed with a real mid-decode replica death: the
+        survivor serves everything, still token-identical."""
+        rpt, router = self._chaos_run(saved, tmp_path, seed=4,
+                                      kill_tick=6)
+        got = {r.uid: [int(t) for t in r.tokens]
+               for r in rpt.completed.values()}
+        assert got == ref
+        assert not router.replicas[0].alive
+
+
+# --------------------------------------------- fleet retry × paged KV
+class TestRetryPagedKV:
+    @pytest.mark.slow
+    def test_death_mid_chunked_prefill_leaks_no_pages(self, saved, ref,
+                                                      tmp_path):
+        """Replica 0 dies while still chunk-prefilling its share; the
+        requests requeue onto the paged survivor, whose pool must end
+        the run with every page back on the free list and invariants
+        clean (no leak from the requeue/re-admit cycle)."""
+        model, _, d = saved
+        cfg = EngineConfig(max_seq_len=32, kv_pool=KVPoolConfig(
+            num_pages=24, page_size=4, prefill_chunk=4,
+            prefix_sharing=False))
+        inj = FaultInjector([FaultEvent(tick=2, kind=KILL_REPLICA,
+                                        replica=0)])
+        router = FleetRouter(
+            _pool(model, d, config=cfg), tmp_path / "hb",
+            config=RouterConfig(heartbeat_timeout=2.0, max_retries=5),
+            injector=inj)
+        rpt = router.run(_reqs())
+        got = {r.uid: [int(t) for t in r.tokens]
+               for r in rpt.completed.values()}
+        assert got == ref                            # paged == contiguous
+        assert rpt.retries > 0
+        survivor = router.replicas[1].engine
+        mgr = survivor._kv_mgr
+        mgr.check_invariants()
+        assert mgr.pool.live_pages() == []           # all pages released
+
+
+# ------------------------------------- checkpoint torn-read robustness
+class TestFingerprintRetry:
+    def _save(self, tmp_path):
+        from repro.checkpoint.checkpointer import save_pytree
+        tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "b": np.ones(4, np.float32)}
+        save_pytree(tmp_path, 0, tree)
+        return tree
+
+    def test_transient_mismatch_retries_once(self, tmp_path, monkeypatch):
+        from repro.checkpoint import checkpointer as ck
+        self._save(tmp_path)
+        real = ck._sha256_file
+        flips = {"n": 0}
+
+        def torn_once(path):
+            flips["n"] += 1
+            return "0" * 64 if flips["n"] == 1 else real(path)
+
+        monkeypatch.setattr(ck, "_sha256_file", torn_once)
+        tree, _, stats = ck.load_pytree_subset(tmp_path, None, step=0)
+        assert stats.fingerprint_retries == 1
+        np.testing.assert_array_equal(tree["w"],
+                                      np.arange(12).reshape(3, 4))
+
+    def test_persistent_mismatch_still_raises(self, tmp_path, monkeypatch):
+        from repro.checkpoint import checkpointer as ck
+        self._save(tmp_path)
+        monkeypatch.setattr(ck, "_sha256_file", lambda p: "0" * 64)
+        with pytest.raises(ValueError, match="twice"):
+            ck.load_pytree(tmp_path, 0)
+
+    def test_retry_counts_accumulate(self):
+        from repro.checkpoint.checkpointer import LoadStats
+        a = LoadStats(fingerprint_retries=1)
+        a.accumulate(LoadStats(fingerprint_retries=2))
+        assert a.fingerprint_retries == 3
