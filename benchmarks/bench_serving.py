@@ -346,16 +346,84 @@ def odp_decode(verbose: bool = True, gate: bool = False,
     return result
 
 
+FAMILY_SWEEP_ARCHS = ("mixtral-8x7b", "zamba2-1.2b", "whisper-medium",
+                      "paligemma-3b", "falcon-mamba-7b")
+
+
+def family_sweep(verbose: bool = True, n_requests: int = 4,
+                 batch_size: int = 2, max_new: int = 6):
+    """Every model family through the continuous engine's per-slot state
+    layer: decode throughput plus the analytic state bytes/slot broken
+    down by state kind (``slot_state.state_bytes_per_slot``). The sweep
+    is a smoke-scale regression canary — the numbers matter relative to
+    each other and across commits, not absolutely."""
+    from repro.serve.slot_state import SlotStateSpec, state_bytes_per_slot
+
+    t = Table(f"serving: family sweep ({n_requests} reqs, pool "
+              f"{batch_size}, {max_new} new tokens)",
+              ["arch", "family", "state_kinds", "decode_tok_s",
+               "state_bytes_per_slot"])
+    out = {}
+    for arch in FAMILY_SWEEP_ARCHS:
+        cfg = get_config(arch, smoke=True).replace(dtype="float32")
+        if cfg.family == "moe":
+            cfg = cfg.replace(capacity_factor=8.0)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(1)
+        plen = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
+        reqs = []
+        for i in range(n_requests):
+            pl = int(rng.randint(4, 13))
+            enc = None
+            if cfg.family == "encdec":
+                enc = rng.randn(cfg.encoder_seq,
+                                cfg.d_model).astype(np.float32)
+            elif cfg.family == "vlm":
+                enc = rng.randn(plen, cfg.d_model).astype(np.float32)
+            reqs.append(Request(
+                uid=i,
+                prompt=rng.randint(1, cfg.vocab_size, pl).astype(np.int32),
+                enc_input=enc,
+                options=GenerationOptions(max_new_tokens=max_new)))
+        eng = ServeEngine(model, params, batch_size=batch_size)
+        # _run's warmup copies drop enc_input; build family-aware copies
+        warm = [Request(uid=-1 - i, prompt=r.prompt.copy(),
+                        enc_input=r.enc_input, options=r.opts)
+                for i, r in enumerate(reqs)]
+        eng.run(warm)
+        eng.stats.__init__()
+        eng.run(reqs)
+        spec = SlotStateSpec.from_config(cfg)
+        capacity = plen + 12 + max_new          # the workload's max span
+        sizes = state_bytes_per_slot(cfg, capacity)
+        tok_s = eng.stats.decode_tokens_per_s
+        t.add(arch, cfg.family, "+".join(k.name for k in spec.kinds),
+              round(tok_s, 1), round(sum(sizes.values())))
+        out[cfg.family] = {
+            "arch": arch,
+            "state_kinds": [k.name for k in spec.kinds],
+            "decode_tok_s": round(tok_s, 2),
+            "state_bytes_per_slot": {k: round(v) for k, v in sizes.items()},
+            "scratch_reuses": eng.stats.scratch_reuses,
+        }
+    if verbose:
+        print(t.render())
+    return out
+
+
 def bench_all(verbose: bool = True):
     """Aggregate payload for ``benchmarks.run --json`` (BENCH_serving)."""
     speedup = run(verbose=verbose)
     ttft = cold_start(verbose=verbose)
     qd = quant_decode(verbose=verbose, gate=True)
     od = odp_decode(verbose=verbose)
+    fs = family_sweep(verbose=verbose)
     return {"continuous_vs_static_decode_speedup": speedup,
             "artifact_cold_start_speedup": ttft,
             "quant_decode": qd,
-            "odp_decode": od}
+            "odp_decode": od,
+            "family_sweep": fs}
 
 
 if __name__ == "__main__":

@@ -39,6 +39,10 @@ _EXPORTS = {
     "StaticServeEngine": "repro.serve.engine",
     "EngineConfig": "repro.serve.engine",
     "KVPoolConfig": "repro.serve.kv_pool",
+    "SharedStatePool": "repro.serve.kv_pool",
+    "SlotStateSpec": "repro.serve.slot_state",
+    "StateKind": "repro.serve.slot_state",
+    "state_kinds": "repro.serve.slot_state",
     "Request": "repro.serve.engine",
     "GenerationOptions": "repro.serve.engine",
     "Result": "repro.serve.engine",

@@ -114,6 +114,17 @@ def init_distributed(coordinator: str, num_processes: int,
                                process_id=process_id)
 
 
+def _boot_engine(build):
+    """Run an engine constructor, turning EngineConfig/state-layer
+    validation errors (per-capability checks naming the family's state
+    kinds — e.g. ``--kv-pages`` with a pure-SSM model, where KV paging is
+    a no-op) into CLI errors instead of tracebacks."""
+    try:
+        return build()
+    except ValueError as e:
+        raise SystemExit(f"[serve] {e}") from None
+
+
 def serve(arch: str, *, smoke: bool = True, mc: bool = False,
           target_bits: float = 2.54, n_requests: int = 8,
           max_new: int = 16, batch_size: int = 4, prompt_len: int = 32,
@@ -136,10 +147,16 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
     max_seq_len = None
     if kv_pages is not None:
         from repro.serve.kv_pool import KVPoolConfig
-        kv_pool = KVPoolConfig(num_pages=kv_pages, page_size=kv_page_size,
-                               quant=kv_quant,
-                               prefill_chunk=kv_prefill_chunk)
-        max_seq_len = prompt_len + max_new   # workload bound (mixed <= it)
+        try:
+            kv_pool = KVPoolConfig(num_pages=kv_pages,
+                                   page_size=kv_page_size, quant=kv_quant,
+                                   prefill_chunk=kv_prefill_chunk)
+        except ValueError as e:
+            raise SystemExit(f"--kv-pages: {e}") from None
+        # workload bound (mixed <= it); vlm slots also hold the prefix
+        max_seq_len = (prompt_len + max_new
+                       + (cfg.num_prefix_tokens
+                          if cfg.family == "vlm" else 0))
     eng_cfg = EngineConfig(batch_size=batch_size, mesh=mesh,
                            ep_dispatch=ep_dispatch, odp=odp,
                            max_seq_len=max_seq_len, kv_pool=kv_pool)
@@ -201,7 +218,8 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
               f"{time.time() - t0:.2f}s: avg_bits={report.avg_bits:.2f} "
               f"layout={artifact.plan.layout} "
               f"scan_safe={artifact.scan_safe}")
-        eng = engine_cls.from_artifact(model, artifact, config=eng_cfg)
+        eng = _boot_engine(lambda: engine_cls.from_artifact(
+            model, artifact, config=eng_cfg))
     else:
         params = model.init(jax.random.PRNGKey(0))
         if mc:
@@ -231,9 +249,11 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
                       f"{time.time() - t0:.2f}s (boot it later with "
                       f"--artifact {save_artifact})")
         if artifact is not None:
-            eng = engine_cls.from_artifact(model, artifact, config=eng_cfg)
+            eng = _boot_engine(lambda: engine_cls.from_artifact(
+                model, artifact, config=eng_cfg))
         else:       # uncompressed serving
-            eng = engine_cls(model, params, config=eng_cfg)
+            eng = _boot_engine(
+                lambda: engine_cls(model, params, config=eng_cfg))
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -242,8 +262,16 @@ def serve(arch: str, *, smoke: bool = True, mc: bool = False,
         if mixed_lengths:   # the regime where lockstep batching wastes most
             pl = int(rng.randint(max(4, prompt_len // 4), prompt_len + 1))
             mn = int(rng.randint(max(2, max_new // 4), max_new + 1))
+        enc = None          # the encoder-side input some families need
+        if cfg.family == "encdec":
+            enc = rng.randn(cfg.encoder_seq,
+                            cfg.d_model).astype(np.float32)
+        elif cfg.family == "vlm":
+            enc = rng.randn(cfg.num_prefix_tokens,
+                            cfg.d_model).astype(np.float32)
         reqs.append(Request(
             uid=i, prompt=rng.randint(1, cfg.vocab_size, pl).astype(np.int32),
+            enc_input=enc,
             options=GenerationOptions(max_new_tokens=mn)))
     results = eng.run(reqs)
     s = eng.stats

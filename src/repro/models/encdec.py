@@ -148,14 +148,15 @@ class EncDecModel:
 
     # ---- decoder ----
     def decode(self, params, tokens, enc_out=None, cross=None, *,
-               caches=None, start_pos=0, scan=None):
+               caches=None, start_pos=0, scan=None, kv_table=None):
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         x = core_lib.embed_tokens(params["embed"], tokens, cfg, dtype)
         x = core_lib.add_learned_pos(params["dec_pos"], x, start_pos)
         x = shctx.constrain_batch(x)
         s = x.shape[1]
-        positions = jnp.arange(s, dtype=jnp.int32) + start_pos
+        # (S,) for a shared scalar start, (B, S) for per-row slot positions
+        positions = core_lib.position_grid(s, start_pos)
 
         def cross_attend(p_l, x, kv: CrossKV):
             h = core_lib.apply_norm(p_l["norm_cross"], x, cfg)
@@ -178,7 +179,7 @@ class EncDecModel:
             h = core_lib.apply_norm(p_l["norm_self"], x, cfg)
             out, new_cache, _ = attn_lib.apply_attention(
                 p_l["self_attn"], h, cfg=cfg, positions=positions,
-                cache=cache_l)
+                cache=cache_l, kv_table=kv_table)
             x = x + out
             x = x + cross_attend(p_l, x, kv_l)
             h2 = core_lib.apply_norm(p_l["norm_ffn"], x, cfg)
@@ -214,23 +215,66 @@ class EncDecModel:
         return logits, new_caches
 
     # ---- top-level entry points ----
-    def forward(self, params, tokens, *, enc_frames, caches=None,
-                start_pos=0, mc=None, scan=None, collect_aux=False):
-        enc_out = self.encode(params, enc_frames, scan=scan)
-        logits, new_caches = self.decode(params, tokens, enc_out=enc_out,
+    def forward(self, params, tokens, *, enc_frames=None, cross=None,
+                caches=None, start_pos=0, mc=None, scan=None,
+                collect_aux=False, token_mask=None, odp_threshold=None,
+                kv_table=None):
+        # token_mask / odp_threshold accepted for engine API parity (no
+        # MoE dispatch). ``cross`` lets the engine reuse admission-time
+        # cross-KV instead of re-encoding every prefill.
+        if cross is None:
+            if enc_frames is None:
+                raise ValueError(
+                    "EncDecModel.forward needs enc_frames (to encode) or "
+                    "a precomputed cross (cross-attention K/V)")
+            cross = self.cross_kv(params,
+                                  self.encode(params, enc_frames, scan=scan))
+        logits, new_caches = self.decode(params, tokens, cross=cross,
                                          caches=caches, start_pos=start_pos,
-                                         scan=scan)
+                                         scan=scan, kv_table=kv_table)
         return logits, new_caches, {}
 
-    def init_caches(self, batch: int, capacity: int):
+    def init_caches(self, batch: int, capacity: int, *,
+                    linear: bool = False):
+        # linear accepted for state-layer API parity; encdec decoder
+        # caches are always full linear layout
         cfg = self.cfg
         one = attn_lib.init_cache(cfg, batch, capacity)
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape),
             one)
 
+    def init_paged_caches(self, num_pages: int, page_size: int, *,
+                          quant: str = "off", batch: int = 1):
+        """Per-decoder-layer paged self-attention KV pools, leaves
+        (num_layers, P, ps, Nkv, H). ``batch`` is accepted for state-layer
+        API parity — cross-KV lives in the engine's shared-state pool, not
+        here."""
+        cfg = self.cfg
+        cdt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+        bits = {"off": 16, "int8": 8, "int4": 4}[quant]
+        one = attn_lib.init_paged_cache(cfg, num_pages, page_size,
+                                        bits=bits, dtype=cdt)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape),
+            one)
+
+    def init_cross_state(self, batch: int) -> CrossKV:
+        """Zero per-slot cross-KV pool entry: (L, B, T_enc, Nkv, H) per
+        leaf, batch at axis 1 like every other per-slot state kind."""
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        shape = (cfg.num_layers, batch, cfg.encoder_seq,
+                 cfg.num_kv_heads, cfg.head_dim)
+        return CrossKV(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    def state_kinds(self):
+        from repro.serve import slot_state
+        return slot_state.state_kinds(self.cfg)
+
     def decode_step(self, params, caches, tokens, pos, *, cross, mc=None,
-                    token_mask=None):
+                    token_mask=None, odp_threshold=None, kv_table=None):
         logits, new_caches = self.decode(params, tokens, cross=cross,
-                                         caches=caches, start_pos=pos)
+                                         caches=caches, start_pos=pos,
+                                         kv_table=kv_table)
         return logits, new_caches

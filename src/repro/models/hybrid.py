@@ -73,7 +73,7 @@ class HybridModel:
             "final_norm": core_lib.specs_norm(cfg),
         }
 
-    def _shared_block(self, params, x, positions, cache):
+    def _shared_block(self, params, x, positions, cache, kv_table=None):
         cfg = self.cfg
         p = params["shared"]
         h = core_lib.apply_norm(p["norm_attn"], x, cfg)
@@ -81,13 +81,17 @@ class HybridModel:
                              jnp.int32)
         out, new_cache, _ = attn_lib.apply_attention(
             p["attn"], h, cfg=cfg, positions=positions, window=window,
-            cache=cache)
+            cache=cache, kv_table=kv_table)
         x = x + out
         h2 = core_lib.apply_norm(p["norm_ffn"], x, cfg)
         return x + core_lib.apply_mlp(p["ffn"], h2, cfg), new_cache
 
     def forward(self, params, tokens, *, caches=None, start_pos=0,
-                mc=None, scan=None, collect_aux=False, prefix_embeds=None):
+                mc=None, scan=None, collect_aux=False, prefix_embeds=None,
+                token_mask=None, odp_threshold=None, kv_table=None):
+        # token_mask / odp_threshold are accepted for engine API parity
+        # (no MoE dispatch here); kv_table routes the shared attention
+        # block's KV through the engine's page table
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         x = core_lib.embed_tokens(params["embed"], tokens, cfg, dtype)
@@ -133,7 +137,8 @@ class HybridModel:
             new_ssm.append(ns)
             ac = None if attn_caches is None else \
                 jax.tree.map(lambda a: a[g], attn_caches)
-            x, nac = self._shared_block(params, x, positions, ac)
+            x, nac = self._shared_block(params, x, positions, ac,
+                                        kv_table=kv_table)
             new_attn.append(nac)
         if self.remainder:
             x, ns = run_group(x, self.n_groups * self.period,
@@ -151,12 +156,16 @@ class HybridModel:
         logits = core_lib.unembed(params["embed"], x, cfg)
         return logits, new_caches, {}
 
-    def init_caches(self, batch: int, capacity: int):
+    def init_caches(self, batch: int, capacity: int, *,
+                    linear: bool = False):
+        # linear=True forces a full-capacity non-ring attention cache (the
+        # engine's paged-prefill scratch: every position must survive to
+        # be scattered into pages)
         cfg = self.cfg
         states = [ssm_lib.init_ssm_state(cfg, batch)
                   for _ in range(cfg.num_layers)]
         ssm = jax.tree.map(lambda *t: jnp.stack(t), *states)
-        ring = capacity > (cfg.window_size or capacity)
+        ring = (not linear) and capacity > (cfg.window_size or capacity)
         cap = min(capacity, cfg.window_size + 8) if ring else capacity
         cdt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
         one = attn_lib.init_cache(cfg, batch, cap, ring=ring, dtype=cdt)
@@ -164,9 +173,31 @@ class HybridModel:
             lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape), one)
         return {"ssm": ssm, "attn": attn}
 
+    def init_paged_caches(self, num_pages: int, page_size: int, *,
+                          quant: str = "off", batch: int = 1):
+        """Paged pools for the shared attention block — one pool per
+        group, leaves (n_groups, P, ps, Nkv, H) — next to a dense SSM
+        state pool with ``batch`` per-row-lifetime entries."""
+        cfg = self.cfg
+        states = [ssm_lib.init_ssm_state(cfg, batch)
+                  for _ in range(cfg.num_layers)]
+        ssm = jax.tree.map(lambda *t: jnp.stack(t), *states)
+        cdt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+        bits = {"off": 16, "int8": 8, "int4": 4}[quant]
+        one = attn_lib.init_paged_cache(cfg, num_pages, page_size,
+                                        bits=bits, dtype=cdt)
+        attn = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape), one)
+        return {"ssm": ssm, "attn": attn}
+
+    def state_kinds(self):
+        from repro.serve import slot_state
+        return slot_state.state_kinds(self.cfg)
+
     def decode_step(self, params, caches, tokens, pos, *, mc=None,
-                    token_mask=None):
-        # token_mask accepted for engine API parity; no MoE dispatch here
-        logits, new_caches, _ = self.forward(params, tokens, caches=caches,
-                                             start_pos=pos, mc=mc)
+                    token_mask=None, odp_threshold=None, kv_table=None):
+        logits, new_caches, _ = self.forward(
+            params, tokens, caches=caches, start_pos=pos, mc=mc,
+            token_mask=token_mask, odp_threshold=odp_threshold,
+            kv_table=kv_table)
         return logits, new_caches

@@ -356,7 +356,12 @@ def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
         nh = i // cfg.ssm_head_dim
         h = jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
                       jnp.float32)
-    return SSMState(conv=jnp.zeros((batch, kc - 1, i), jnp.bfloat16), h=h)
+    # conv must match the activation dtype the layer writes back
+    # (``conv_state.astype(x.dtype)``): a narrower initial dtype makes the
+    # state's dtype flip on the first update, so a state row landed before
+    # vs after the first decode step rounds differently.
+    cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return SSMState(conv=jnp.zeros((batch, kc - 1, i), cdt), h=h)
 
 
 def ssm_state_specs(cfg: ModelConfig) -> SSMState:

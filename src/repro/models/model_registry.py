@@ -1,7 +1,10 @@
 """Model factory: ModelConfig -> model object with the common interface.
 
 All models expose: ``init``, ``forward``, ``param_specs``, ``init_caches``,
-``decode_step`` (where the family has one).
+``decode_step`` (where the family has one), plus ``state_kinds()`` — the
+per-slot state bundle the serving engines program against
+(:mod:`repro.serve.slot_state`): ``init_paged_caches`` where the bundle
+has a pageable kind, ``init_cross_state`` where it has a shared kind.
 """
 from __future__ import annotations
 

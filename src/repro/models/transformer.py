@@ -494,11 +494,13 @@ class DecoderModel:
         return tuple(one(self.slot_kinds[s]) for s in range(self.period))
 
     def init_paged_caches(self, num_pages: int, page_size: int, *,
-                          quant: str = "off"):
+                          quant: str = "off", batch: int = 1):
         """Per-(step, slot) paged KV pools (no batch axis — slots address
-        pages through the engine's page table). Only valid for pure
-        attention stacks; SSM/hybrid layers carry recurrent state that has
-        no paged analogue."""
+        pages through the engine's page table; ``batch`` is accepted for
+        state-layer API parity with families that carry dense per-slot
+        pools next to the paged KV). Only valid for pure attention
+        stacks; mamba slots carry recurrent state, which rides the dense
+        state pool instead (see ``repro.serve.slot_state``)."""
         for step in range(self.n_steps):
             for s in range(self.period):
                 if self.slot_kinds[s] in ("mamba1", "mamba2"):
@@ -516,6 +518,10 @@ class DecoderModel:
                 for _ in range(self.period)))
         return jax.tree.map(lambda *xs: jnp.stack(xs), *caches,
                             is_leaf=_is_arr)
+
+    def state_kinds(self):
+        from repro.serve import slot_state
+        return slot_state.state_kinds(self.cfg)
 
     def decode_step(self, params, caches, tokens, pos, *,
                     mc: Optional[MCRuntime] = None,

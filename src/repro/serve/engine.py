@@ -33,7 +33,7 @@ import dataclasses
 import time
 import warnings
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -43,10 +43,12 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core import odp as odp_lib
 from repro.models.layers import attention as attn_lib
+from repro.models.layers import ssm as ssm_lib
 from repro.models.layers.attention import GLOBAL_WINDOW
 from repro.models.transformer import DecoderModel, MCRuntime
-from repro.serve.kv_pool import (KVBlockManager, KVPoolConfig, SlotAlloc,
-                                 TRASH_PAGE)
+from repro.serve import slot_state
+from repro.serve.kv_pool import (KVBlockManager, KVPoolConfig,
+                                 SharedStatePool, SlotAlloc, TRASH_PAGE)
 from repro.sharding import context as shctx
 from repro.sharding import partitioning as part_lib
 
@@ -108,6 +110,12 @@ class Request:
     max_new_tokens: Optional[int] = None      # deprecated -> options
     eos_id: Optional[int] = None              # deprecated -> options
     options: Optional[GenerationOptions] = None
+    #: per-request encoder-side input for families whose state bundle has
+    #: a shared or prefix kind: encdec takes (encoder_seq, d_model) audio
+    #: frames (CrossKV is computed once at admission and shared across
+    #: requests with identical frames); vlm takes (num_prefix_tokens,
+    #: d_model) image-prefix embeddings. Other families must leave it None.
+    enc_input: Optional[np.ndarray] = None
 
     def __post_init__(self):
         if self.max_new_tokens is not None or self.eos_id is not None:
@@ -194,6 +202,8 @@ class EngineStats:
     decode_steps: int = 0
     slot_steps: int = 0               # decode_steps x pool width
     active_slot_steps: int = 0        # slot-steps doing useful work
+    scratch_reuses: int = 0           # admissions served by the reused
+                                      # batch-1 scratch (allocations saved)
 
     @property
     def decode_tokens_per_s(self) -> float:
@@ -460,6 +470,7 @@ class _Slot:
     prefill_s: float
     admitted_t: float
     n_new: int = 1                    # prefill emits the first token
+    cross_key: Optional[bytes] = None  # shared-state pool key (encdec)
 
 
 @dataclass
@@ -493,7 +504,8 @@ class Requeued:
             uid=self.request.uid, prompt=prompt,
             options=GenerationOptions(
                 max_new_tokens=opts.max_new_tokens - len(self.prior_tokens),
-                eos_id=opts.eos_id, odp=opts.odp))
+                eos_id=opts.eos_id, odp=opts.odp),
+            enc_input=self.request.enc_input)
 
 
 @dataclass
@@ -513,6 +525,8 @@ class _Prefilling:
     thr: float
     n_done: int                       # prompt tokens prefilled so far
     t0: float
+    cross_key: Optional[bytes] = None  # shared-state pool key (encdec)
+    extras: Dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass
@@ -535,6 +549,9 @@ class _PoolSession:
     allocs: Optional[List[Optional[SlotAlloc]]] = None
     table: Optional[np.ndarray] = None      # (B, table_width) int32 pages
     prefilling: Optional[_Prefilling] = None
+    # per-session slot-wide state beyond the per-slot caches: families with
+    # a shared kind keep the pool-wide CrossKV here ("cross", (L, B, S, ...))
+    extras: Dict[str, Any] = field(default_factory=dict)
 
 
 class ServeEngine(_ArtifactBoot):
@@ -574,6 +591,13 @@ class ServeEngine(_ArtifactBoot):
         self._session: Optional[_PoolSession] = None
         pad_id = config.pad_id
 
+        # the per-slot state layer: the engine programs against the
+        # family's state-kind bundle (pageable / recurrent / shared), not
+        # against family names — capability checks replace special cases
+        self.state = slot_state.SlotStateSpec.from_config(self.cfg)
+        self._prefix_len = (self.cfg.num_prefix_tokens
+                            if self.cfg.family == "vlm" else 0)
+
         self._kv_cfg = config.kv_pool
         self._paged = self._kv_cfg is not None
         if self._paged:
@@ -582,11 +606,26 @@ class ServeEngine(_ArtifactBoot):
                     "paged KV serving (EngineConfig.kv_pool) needs "
                     "max_seq_len — the page-table width is sized from it "
                     "once so mixed page counts never retrace")
-            if self.cfg.family in ("ssm", "hybrid", "encdec"):
+            if not self.state.has_pageable:
                 raise ValueError(
-                    "paged KV serving supports pure-attention decoders; "
-                    f"family {self.cfg.family!r} carries recurrent or "
-                    "cross-attention state that has no paged analogue")
+                    f"KV paging is a no-op for family {self.cfg.family!r}: "
+                    f"its per-slot state is [{self.state.describe()}] — no "
+                    "pageable kind; drop EngineConfig.kv_pool (recurrent "
+                    "state rides the dense slot pool at fixed size)")
+            if self.state.has_recurrent and \
+                    self._kv_cfg.prefill_chunk is not None:
+                raise ValueError(
+                    "chunked prefill (KVPoolConfig.prefill_chunk) is not "
+                    "supported with a recurrent state kind "
+                    f"([{self.state.describe()}]): the final chunk's pad "
+                    "tail would pollute the recurrence — drop "
+                    "prefill_chunk for this family")
+            if self._prefix_len and self._kv_cfg.prefill_chunk is not None:
+                raise ValueError(
+                    "chunked prefill (KVPoolConfig.prefill_chunk) is not "
+                    "supported with a prefix-embedding family "
+                    f"({self.cfg.family!r}): the prefix span is consumed "
+                    "whole in the first forward — drop prefill_chunk")
             if getattr(self.cfg, "kv_quant", False):
                 raise ValueError(
                     "ModelConfig.kv_quant quantizes the contiguous cache; "
@@ -603,42 +642,63 @@ class ServeEngine(_ArtifactBoot):
         all_global = (kinds is not None
                       and bool(np.all(kinds["window"] == GLOBAL_WINDOW))
                       and bool(np.all(kinds["chunk"] == GLOBAL_WINDOW)))
-        self._bucketed_prefill = (all_global
-                                  and self.cfg.family not in ("ssm", "hybrid"))
+        # recurrent state can't be voided, so pad-tail prefill is out; a
+        # model without a layer-kinds table (hybrid/encdec) prefills at
+        # exact length too
+        self._bucketed_prefill = all_global and not self.state.has_recurrent
+        self._shared_pool = (SharedStatePool()
+                             if self.state.has_shared else None)
         _rep = self._init_host_io()
         dyn = self._odp_dynamic
 
-        def _prefill(params, tokens, length, caches, thr):
-            kw = {}
+        if self.state.has_shared:
+            # CrossKV is a pure function of the encoder input — computed
+            # once per distinct input, refcount-shared across requests
+            self._encode = jax.jit(
+                lambda p, frames: model.cross_kv(
+                    p, model.encode(p, frames)))
+        if self.state.has_recurrent:
+            # in-place zero of the scratch's recurrent leaves between
+            # admissions (donation reuses the buffers)
+            self._reset_scratch = jax.jit(slot_state.reset_recurrent,
+                                          donate_argnums=(0,))
+
+        def _prefill(params, tokens, length, caches, thr, extras):
+            kw = dict(extras)
+            pe = kw.get("prefix_embeds")
+            plen = 0 if pe is None else pe.shape[1]   # static at trace
             if self._bucketed_prefill:
-                # pad-tail tokens must not consume MoE expert capacity
-                kw["token_mask"] = (
-                    jnp.arange(tokens.shape[1])[None, :] < length)
+                # pad-tail tokens must not consume MoE expert capacity;
+                # the mask spans the prefix-inclusive token axis
+                mask = jnp.arange(tokens.shape[1])[None, :] < length
+                if plen:
+                    mask = jnp.concatenate(
+                        [jnp.ones((1, plen), bool), mask], axis=1)
+                kw["token_mask"] = mask
             if dyn:
                 kw["odp_threshold"] = thr        # (1,) per-request knob
             logits, new_caches, _ = model.forward(
                 params, tokens, caches=caches, mc=self.mc, **kw)
-            last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
-                                                keepdims=False)
+            last = jax.lax.dynamic_index_in_dim(
+                logits, plen + length - 1, axis=1, keepdims=False)
             nxt = _rep(jnp.argmax(last, -1).astype(jnp.int32))  # (1,)
             # void the padded tail's cache entries: keys the pad tokens wrote
-            # at positions >= length must never be attended to
-            new_caches = _void_tail(new_caches, length)
+            # at positions >= plen + length must never be attended to
+            new_caches = slot_state.void_attention_tail(
+                new_caches, plen + length)
             return nxt, new_caches
 
         def _insert(pool, one, slot):
-            # every cache leaf carries batch at axis 1 after the model's
-            # step-stacking — scatter row 0 of the fresh cache into `slot`
-            return jax.tree.map(
-                lambda pl, on: jax.lax.dynamic_update_slice(
-                    pl, on.astype(pl.dtype),
-                    (0, slot) + (0,) * (pl.ndim - 2)),
-                pool, one)
+            # every state leaf carries batch at axis 1 after the model's
+            # step-stacking — scatter row 0 of the fresh state into `slot`
+            return slot_state.insert_row(pool, one, slot)
 
-        def _decode(params, caches, cur, pos, active, thr):
+        def _decode(params, caches, cur, pos, active, thr, extras):
             # inactive slots are masked out of MoE dispatch so their junk
             # tokens never consume expert capacity from live requests
-            kw = {"odp_threshold": thr} if dyn else {}   # (B,) per slot
+            kw = dict(extras)
+            if dyn:
+                kw["odp_threshold"] = thr        # (B,) per slot
             logits, new_caches = model.decode_step(
                 params, caches, cur[:, None], pos, mc=self.mc,
                 token_mask=active[:, None], **kw)
@@ -646,11 +706,14 @@ class ServeEngine(_ArtifactBoot):
             nxt = _rep(jnp.where(active, nxt, jnp.int32(pad_id)))
             return nxt, new_caches
 
-        def _decode_paged(params, caches, cur, pos, active, thr, table):
+        def _decode_paged(params, caches, cur, pos, active, thr, table,
+                          extras):
             # identical to _decode, plus the page table — a jit *input*
             # (numpy each step), so any mix of per-slot page counts shares
             # one compiled step (the PR 6 no-retrace discipline)
-            kw = {"odp_threshold": thr} if dyn else {}
+            kw = dict(extras)
+            if dyn:
+                kw["odp_threshold"] = thr
             logits, new_caches = model.decode_step(
                 params, caches, cur[:, None], pos, mc=self.mc,
                 token_mask=active[:, None], kv_table=table, **kw)
@@ -658,13 +721,15 @@ class ServeEngine(_ArtifactBoot):
             nxt = _rep(jnp.where(active, nxt, jnp.int32(pad_id)))
             return nxt, new_caches
 
-        def _prefill_chunk(params, tokens, start, length, caches, thr):
+        def _prefill_chunk(params, tokens, start, length, caches, thr,
+                           extras):
             # one fixed-size chunk of a long prompt into the batch-1 linear
             # scratch at traced offset `start` — every chunk shares one
             # compiled shape; only the final chunk carries padding, masked
             # out of MoE dispatch like the bucketed pad tail
-            kw = {"token_mask": (start + jnp.arange(tokens.shape[1])[None, :]
-                                 ) < length}
+            kw = dict(extras)
+            kw["token_mask"] = (start + jnp.arange(tokens.shape[1])[None, :]
+                                ) < length
             if dyn:
                 kw["odp_threshold"] = thr
             logits, new_caches, _ = model.forward(
@@ -677,15 +742,18 @@ class ServeEngine(_ArtifactBoot):
             nxt = _rep(jnp.argmax(last, -1).astype(jnp.int32))   # (1,)
             return nxt, new_caches
 
-        def _scatter_pages(pool, scratch, targets):
-            # land a finished batch-1 prefill in the page pools: view the
-            # linear scratch as (n_steps, table_width, page_size, ...)
-            # pages, quantize per the pool's storage mode, scatter whole
-            # pages at `targets` — entries the request does not own
-            # (shared prefix pages, beyond-prompt junk) target the trash
-            # page, so the scatter shape never depends on the prompt
-            out = []
-            for pc, sc in zip(pool, scratch):
+        def _scatter_pages(pool, scratch, targets, slot):
+            # land a finished batch-1 prefill in the device state pools,
+            # per state kind: pageable leaves view the linear scratch as
+            # (n_steps, table_width, page_size, ...) pages, quantize per
+            # the pool's storage mode, and scatter whole pages at
+            # `targets` — entries the request does not own (shared prefix
+            # pages, beyond-prompt junk) target the trash page, so the
+            # scatter shape never depends on the prompt. Recurrent leaves
+            # (a dense per-row-lifetime pool) take the plain row insert.
+            def land(pc, sc):
+                if not isinstance(pc, attn_lib.PagedKVCache):
+                    return slot_state.insert_row(pc, sc, slot)
                 ps = pc.k.shape[2]       # leaves are (n_steps, P, ps, ...)
 
                 def pages_of(a):
@@ -703,10 +771,17 @@ class ServeEngine(_ArtifactBoot):
                         vq = attn_lib._pack_int4(vq)
                     cks = pc.kscale.at[:, targets].set(ks)
                     cvs = pc.vscale.at[:, targets].set(vs)
-                out.append(attn_lib.PagedKVCache(
+                return attn_lib.PagedKVCache(
                     pc.k.at[:, targets].set(kq),
-                    pc.v.at[:, targets].set(vq), cks, cvs, pc.bits))
-            return tuple(out)
+                    pc.v.at[:, targets].set(vq), cks, cvs, pc.bits)
+
+            # flatten_up_to pairs each pool-side PagedKVCache / SSMState
+            # node with the matching scratch subtree (a linear KVCache for
+            # paged attention kinds)
+            return jax.tree.map(
+                land, pool, scratch,
+                is_leaf=lambda c: isinstance(
+                    c, (attn_lib.PagedKVCache, ssm_lib.SSMState)))
 
         self._prefill = jax.jit(_prefill)
         # donation lets XLA update the pool cache in place on accelerators
@@ -719,8 +794,13 @@ class ServeEngine(_ArtifactBoot):
             self._scatter = jax.jit(_scatter_pages, donate_argnums=(0,))
 
     # ---- sizing ----
+    def _span(self, r: Request) -> int:
+        """Cache positions a request occupies: the fixed prefix span (vlm
+        image embeddings) + prompt + generation budget."""
+        return self._prefix_len + len(r.prompt) + r.opts.max_new_tokens
+
     def _capacity_for(self, requests: List[Request]) -> int:
-        need = max(len(r.prompt) + r.opts.max_new_tokens for r in requests)
+        need = max(self._span(r) for r in requests)
         if self.max_seq_len is not None:
             # hard memory bound AND stable compiled shapes across runs
             if need > self.max_seq_len:
@@ -736,7 +816,39 @@ class ServeEngine(_ArtifactBoot):
         b = 8
         while b < n:
             b *= 2
-        return min(b, capacity)
+        return min(b, capacity - self._prefix_len)
+
+    def _enc_shape(self) -> Optional[Tuple[int, int]]:
+        """The fixed per-request ``enc_input`` shape this family needs
+        (None when the family takes none). Fixed shapes keep the encoder
+        jit and the prefill steps static across requests."""
+        if self.state.has_shared:
+            return (self.cfg.encoder_seq, self.cfg.d_model)
+        if self._prefix_len:
+            return (self._prefix_len, self.cfg.d_model)
+        return None
+
+    def _check_requests(self, requests: List[Request]) -> None:
+        want = self._enc_shape()
+        for r in requests:
+            if want is None:
+                if r.enc_input is not None:
+                    raise ValueError(
+                        f"request {r.uid}: enc_input is only meaningful "
+                        f"for families with a shared or prefix state kind; "
+                        f"family {self.cfg.family!r} carries "
+                        f"[{self.state.describe()}]")
+                continue
+            got = None if r.enc_input is None else \
+                tuple(np.asarray(r.enc_input).shape)
+            if got != want:
+                kind = ("encoder frames" if self.state.has_shared
+                        else "prefix embeddings")
+                raise ValueError(
+                    f"request {r.uid}: family {self.cfg.family!r} needs "
+                    f"enc_input ({kind}) of shape {want}, got "
+                    f"{got} — fixed shapes keep the compiled steps "
+                    "static across requests")
 
     # ---- lifecycle ----
     def run(self, requests: List[Request]) -> List[Result]:
@@ -765,6 +877,7 @@ class ServeEngine(_ArtifactBoot):
                                "collect() or drain() it first")
         if not requests:
             raise ValueError("begin() needs at least one request")
+        self._check_requests(requests)
         b = self.num_slots
         capacity = self._capacity_for(requests)
         if self._paged:
@@ -777,10 +890,14 @@ class ServeEngine(_ArtifactBoot):
                 self._kv_caches = self._host_caches(
                     self.model.init_paged_caches(
                         self._kv_cfg.num_pages, self._kv_cfg.page_size,
-                        quant=self._kv_cfg.quant))
+                        quant=self._kv_cfg.quant, batch=b))
             caches = self._kv_caches
         else:
             caches = self._host_caches(self.model.init_caches(b, capacity))
+        extras = {}
+        if self.state.has_shared:
+            extras["cross"] = self._host_caches(
+                self.model.init_cross_state(b))
         scope = self._mesh_scope()
         scope.__enter__()
         self._scratch = None          # reusable batch-1 prefill cache
@@ -801,7 +918,8 @@ class ServeEngine(_ArtifactBoot):
             scope=scope,
             allocs=[None] * b if self._paged else None,
             table=np.full((b, self._table_width), TRASH_PAGE, np.int32)
-            if self._paged else None)
+            if self._paged else None,
+            extras=extras)
 
     def submit(self, requests: List[Request]) -> None:
         """Queue more requests into the open session; they are admitted
@@ -810,10 +928,11 @@ class ServeEngine(_ArtifactBoot):
         sess = self._session
         if sess is None:
             raise RuntimeError("no active session; begin() first")
+        self._check_requests(requests)
         if self._paged:
             self._check_pool_fit(requests)
         for r in requests:
-            need = len(r.prompt) + r.opts.max_new_tokens
+            need = self._span(r)
             if need > sess.capacity:
                 raise ValueError(
                     f"request {r.uid}: needs {need} cache positions > "
@@ -828,7 +947,7 @@ class ServeEngine(_ArtifactBoot):
         merely has to wait for pages queues (see ``_pump_admissions``)."""
         mgr = self._kv_mgr
         for r in requests:
-            need = len(r.prompt) + r.opts.max_new_tokens
+            need = self._span(r)
             pages = mgr.pages_for(need)
             if pages > mgr.usable_pages:
                 raise ValueError(
@@ -851,6 +970,8 @@ class ServeEngine(_ArtifactBoot):
         self.stats.generated_tokens += sl.n_new
         sess.active[s] = False
         sess.slots[s] = None
+        if sl.cross_key is not None:
+            self._shared_pool.release(sl.cross_key)
         if self._paged:
             self._kv_mgr.release(sess.allocs[s])
             sess.allocs[s] = None
@@ -882,10 +1003,7 @@ class ServeEngine(_ArtifactBoot):
             for s in range(b):
                 while not sess.active[s] and sess.pending:
                     idx, req = sess.pending.popleft()
-                    sess.caches = self._admit(
-                        req, idx, s, sess.capacity, sess.caches,
-                        sess.active, sess.cur, sess.pos, sess.gen,
-                        sess.slots, sess.thr)
+                    self._admit(sess, req, idx, s)
                     self._post_admit_checks(s)
         if not sess.active.any():
             return 0
@@ -899,13 +1017,13 @@ class ServeEngine(_ArtifactBoot):
             nxt, sess.caches = self._decode_paged(
                 self.params, sess.caches, self._arr(sess.cur),
                 self._arr(sess.pos), self._arr(step_active),
-                self._arr(sess.thr), self._arr(sess.table))
+                self._arr(sess.thr), self._arr(sess.table), sess.extras)
         else:
             step_active = sess.active
             nxt, sess.caches = self._decode(
                 self.params, sess.caches, self._arr(sess.cur),
                 self._arr(sess.pos), self._arr(sess.active),
-                self._arr(sess.thr))
+                self._arr(sess.thr), sess.extras)
         nxt = _fetch(nxt)
         self.stats.decode_s += time.time() - t0
         self.stats.decode_steps += 1
@@ -948,6 +1066,8 @@ class ServeEngine(_ArtifactBoot):
                     prior_tokens=np.asarray(sess.gen[s], np.int32))))
                 sess.active[s] = False
                 sess.slots[s] = None
+                if sl.cross_key is not None:
+                    self._shared_pool.release(sl.cross_key)
                 if self._paged:
                     self._kv_mgr.release(sess.allocs[s])
                     sess.allocs[s] = None
@@ -957,6 +1077,8 @@ class ServeEngine(_ArtifactBoot):
             pf = sess.prefilling
             out.append((pf.idx, Requeued(request=pf.req,
                                          prior_tokens=np.zeros(0, np.int32))))
+            if pf.cross_key is not None:
+                self._shared_pool.release(pf.cross_key)
             self._kv_mgr.release(pf.alloc)
             sess.prefilling = None
         for idx, req in sess.pending:
@@ -993,44 +1115,93 @@ class ServeEngine(_ArtifactBoot):
         sess.scope.close()
         return [sess.done[i] for i in sorted(sess.done)]
 
-    def _admit(self, req: Request, idx: int, s: int, capacity: int, caches,
-               active, cur, pos, gen, slots, thr):
+    # ---- admission-time state helpers (family-agnostic) ----
+    def _admission_state(self, req: Request):
+        """Per-request admission-time state: ``(shared-pool key, prefill
+        extras)``. Families with a **shared** kind (encdec) acquire their
+        CrossKV from the content-addressed pool — computed once per
+        distinct encoder input, refcount-shared across identical inputs;
+        prefix families (vlm) pass their image embeddings straight into
+        the prefill step."""
+        if self.state.has_shared:
+            enc = np.ascontiguousarray(
+                np.asarray(req.enc_input, np.float32))
+            key = SharedStatePool.key_of(enc)
+            cross = self._shared_pool.acquire(
+                key,
+                lambda: self._encode(self.params, self._arr(enc[None])))
+            return key, {"cross": cross}
+        if self._prefix_len:
+            pe = self._arr(np.asarray(req.enc_input, np.float32)[None])
+            return None, {"prefix_embeds": pe}
+        return None, {}
+
+    def _admission_salt(self, req: Request) -> bytes:
+        """Prefix-cache key salt: decoder KV depends on the encoder-side
+        input (cross-attention / the prefix residual stream), so prefix
+        pages are shareable only between requests whose encoder input is
+        byte-identical."""
+        if req.enc_input is None:
+            return b""
+        return SharedStatePool.key_of(
+            np.ascontiguousarray(np.asarray(req.enc_input, np.float32)))
+
+    def _next_scratch(self, capacity: int):
+        """The batch-1 prefill scratch, reused across admissions so only
+        the first one pays the allocation (``EngineStats.scratch_reuses``
+        counts the saved ones). Stale attention entries sit at voided or
+        causally-future positions, so they are never attended; recurrent
+        leaves are zeroed **in place** (the reset jit donates its input)
+        — the admission scratch is reused for every family."""
+        one = self._scratch
+        if one is None:
+            return self._host_caches(
+                self.model.init_caches(1, capacity, linear=self._paged))
+        self._scratch = None
+        self.stats.scratch_reuses += 1
+        if self.state.has_recurrent:
+            one = self._reset_scratch(one)
+        return one
+
+    def _admit(self, sess: _PoolSession, req: Request, idx: int,
+               s: int) -> None:
         opts = req.opts
         prompt = np.asarray(req.prompt, np.int32)
         ln = len(prompt)
-        assert ln + opts.max_new_tokens <= capacity, (
-            f"request {req.uid}: prompt {ln} + max_new "
-            f"{opts.max_new_tokens} exceeds pool capacity {capacity}")
-        lb = self._bucket(ln, capacity)
+        plen = self._prefix_len
+        assert plen + ln + opts.max_new_tokens <= sess.capacity, (
+            f"request {req.uid}: prefix {plen} + prompt {ln} + max_new "
+            f"{opts.max_new_tokens} exceeds pool capacity {sess.capacity}")
+        lb = self._bucket(ln, sess.capacity)
         toks = np.full((1, lb), self.pad_id, np.int32)
         toks[0, :ln] = prompt
-        thr[s] = self._slot_threshold(opts)
+        sess.thr[s] = self._slot_threshold(opts)
 
         t0 = time.time()
-        # reuse one batch-1 scratch cache across admissions when the model
-        # is pure-KV (bucketed path): _void_tail makes every stale entry
-        # unreachable, so only the first admission pays the allocation.
-        # Recurrent (SSM/hybrid) state can't be voided -> fresh each time.
-        one = self._scratch
-        if one is None or not self._bucketed_prefill:
-            one = self._host_caches(self.model.init_caches(1, capacity))
+        cross_key, pf_extras = self._admission_state(req)
+        one = self._next_scratch(sess.capacity)
         nxt, one = self._prefill(self.params, self._arr(toks),
                                  self._scalar(ln), one,
-                                 self._arr(thr[s:s + 1]))
-        if self._bucketed_prefill:
-            self._scratch = one
-        caches = self._insert(caches, one, self._scalar(s))
+                                 self._arr(sess.thr[s:s + 1]), pf_extras)
+        self._scratch = one
+        sess.caches = self._insert(sess.caches, one, self._scalar(s))
+        if "cross" in pf_extras:
+            # the request's CrossKV row lands in the session-wide pool
+            # entry its decode steps read (the shared-pool entry itself
+            # stays alive for other requests with the same encoder input)
+            sess.extras["cross"] = self._insert(
+                sess.extras["cross"], pf_extras["cross"], self._scalar(s))
         first = int(_fetch(nxt)[0])
         prefill_s = time.time() - t0
         self.stats.prefill_s += prefill_s
 
-        active[s] = True
-        cur[s] = first
-        pos[s] = ln                       # first generated token's position
-        gen[s] = [first]
-        slots[s] = _Slot(req=req, opts=opts, req_idx=idx,
-                         prefill_s=prefill_s, admitted_t=t0)
-        return caches
+        sess.active[s] = True
+        sess.cur[s] = first
+        sess.pos[s] = plen + ln       # first generated token's position
+        sess.gen[s] = [first]
+        sess.slots[s] = _Slot(req=req, opts=opts, req_idx=idx,
+                              prefill_s=prefill_s, admitted_t=t0,
+                              cross_key=cross_key)
 
     # ---- paged admission (EngineConfig.kv_pool) ----
     def _pump_admissions_paged(self, sess: _PoolSession) -> None:
@@ -1051,49 +1222,45 @@ class ServeEngine(_ArtifactBoot):
                 prompt = np.asarray(req.prompt, np.int32)
                 thr_val = self._slot_threshold(opts)
                 alloc = self._kv_mgr.admit(
-                    prompt, len(prompt) + opts.max_new_tokens,
-                    thr_key=thr_val)
+                    prompt, self._span(req), thr_key=thr_val,
+                    salt=self._admission_salt(req),
+                    prefix_tokens=self._prefix_len)
                 if alloc is None:
                     sess.pending.appendleft((idx, req))
                     return
                 sess.thr[s] = thr_val
+                # shared/prefix state only after the page allocation
+                # succeeded — a queued request must hold no refcounts
+                cross_key, pf_extras = self._admission_state(req)
                 if chunking:
                     sess.prefilling = _Prefilling(
                         slot=s, idx=idx, req=req, opts=opts, alloc=alloc,
                         prompt=prompt, thr=thr_val, n_done=0,
-                        t0=time.time())
+                        t0=time.time(), cross_key=cross_key,
+                        extras=pf_extras)
                     self._advance_prefill(sess)   # first chunk this round
                     break
                 self._admit_paged_full(sess, s, idx, req, opts, prompt,
-                                       thr_val, alloc)
+                                       thr_val, alloc, cross_key, pf_extras)
                 self._post_admit_checks(s)
 
-    def _paged_scratch(self, sess: _PoolSession):
-        """The batch-1 prefill scratch in paged mode: a **linear**
-        full-capacity contiguous cache (ring layout would fold logical
-        indices, breaking the page scatter). Reused across admissions —
-        stale entries sit at causally-future positions, so they are never
-        attended (the same argument that makes ``_void_tail`` reuse safe
-        in the contiguous engine)."""
-        if self._scratch is None:
-            self._scratch = self._host_caches(
-                self.model.init_caches(1, sess.capacity, linear=True))
-        return self._scratch
-
     def _admit_paged_full(self, sess, s, idx, req, opts, prompt, thr_val,
-                          alloc) -> None:
+                          alloc, cross_key, pf_extras) -> None:
         ln = len(prompt)
         lb = self._bucket(ln, sess.capacity)
         toks = np.full((1, lb), self.pad_id, np.int32)
         toks[0, :ln] = prompt
         t0 = time.time()
-        one = self._paged_scratch(sess)
+        # the paged scratch is a **linear** full-capacity contiguous cache
+        # (ring layout would fold logical indices, breaking the page
+        # scatter) — _next_scratch passes linear=True in paged mode
+        one = self._next_scratch(sess.capacity)
         nxt, self._scratch = self._prefill(
             self.params, self._arr(toks), self._scalar(ln), one,
-            self._arr(sess.thr[s:s + 1]))
+            self._arr(sess.thr[s:s + 1]), pf_extras)
         first = int(_fetch(nxt)[0])
         self._land_prefill(sess, s, idx, req, opts, prompt, thr_val, alloc,
-                           first, t0)
+                           first, t0, cross_key, pf_extras)
 
     def _advance_prefill(self, sess: _PoolSession) -> None:
         """Consume one chunk of the in-flight prefill; on the final chunk
@@ -1101,46 +1268,55 @@ class ServeEngine(_ArtifactBoot):
         pf = sess.prefilling
         chunk = self._kv_cfg.prefill_chunk
         ln = len(pf.prompt)
-        scratch = self._paged_scratch(sess)
+        scratch = (self._next_scratch(sess.capacity) if pf.n_done == 0
+                   else self._scratch)
         toks = np.full((1, chunk), self.pad_id, np.int32)
         piece = pf.prompt[pf.n_done:pf.n_done + chunk]
         toks[0, :len(piece)] = piece
         nxt, self._scratch = self._prefill_chunk(
             self.params, self._arr(toks), self._scalar(pf.n_done),
             self._scalar(ln), scratch,
-            self._arr(np.asarray([pf.thr], np.float32)))
+            self._arr(np.asarray([pf.thr], np.float32)), pf.extras)
         pf.n_done += len(piece)
         if pf.n_done < ln:
             return
         first = int(_fetch(nxt)[0])
         sess.prefilling = None
         self._land_prefill(sess, pf.slot, pf.idx, pf.req, pf.opts,
-                           pf.prompt, pf.thr, pf.alloc, first, pf.t0)
+                           pf.prompt, pf.thr, pf.alloc, first, pf.t0,
+                           pf.cross_key, pf.extras)
         self._post_admit_checks(pf.slot)
 
     def _land_prefill(self, sess, s, idx, req, opts, prompt, thr_val,
-                      alloc, first, t0) -> None:
-        """Scatter the finished scratch prefill into the page pools and
-        activate the slot. Shared prefix pages already hold exactly this
-        content (prefix KV is a deterministic function of the prefix
-        tokens and the ODP threshold — the prefix-cache key), so their
-        scatter targets the trash page instead of rewriting them."""
+                      alloc, first, t0, cross_key, pf_extras) -> None:
+        """Land the finished scratch prefill in the device state pools,
+        per state kind (pageable → page scatter, recurrent → dense row
+        insert), and activate the slot. Shared prefix pages already hold
+        exactly this content (prefix KV is a deterministic function of
+        the prefix tokens, the encoder-input salt and the ODP threshold —
+        the prefix-cache key), so their scatter targets the trash page
+        instead of rewriting them."""
         targets = np.full(self._table_width, TRASH_PAGE, np.int32)
         for i in range(alloc.n_shared, len(alloc.pages)):
             targets[i] = alloc.pages[i]
         sess.caches = self._scatter(sess.caches, self._scratch,
-                                    self._arr(targets))
-        self._kv_mgr.register_prefix(alloc, prompt, thr_val)
+                                    self._arr(targets), self._scalar(s))
+        if "cross" in pf_extras:
+            sess.extras["cross"] = self._insert(
+                sess.extras["cross"], pf_extras["cross"], self._scalar(s))
+        self._kv_mgr.register_prefix(alloc, prompt, thr_val,
+                                     salt=self._admission_salt(req))
         sess.allocs[s] = alloc
         sess.table[s] = self._kv_mgr.table_row(alloc, self._table_width)
         prefill_s = time.time() - t0
         self.stats.prefill_s += prefill_s
         sess.active[s] = True
         sess.cur[s] = first
-        sess.pos[s] = len(prompt)
+        sess.pos[s] = alloc.prefix_tokens + len(prompt)
         sess.gen[s] = [first]
         sess.slots[s] = _Slot(req=req, opts=opts, req_idx=idx,
-                              prefill_s=prefill_s, admitted_t=t0)
+                              prefill_s=prefill_s, admitted_t=t0,
+                              cross_key=cross_key)
 
     def _grow_for_step(self, sess: _PoolSession) -> np.ndarray:
         """Cover each live slot's next KV write with a page, on demand.
@@ -1162,17 +1338,6 @@ class ServeEngine(_ArtifactBoot):
                 "free one — enlarge KVPoolConfig.num_pages or lower the "
                 "concurrency")
         return step_active
-
-
-def _void_tail(caches, length):
-    """Invalidate KV-cache entries the padded prefill tail wrote."""
-    def fix(c):
-        if isinstance(c, attn_lib.KVCache):
-            return dataclasses.replace(
-                c, pos=jnp.where(c.pos >= length, -1, c.pos))
-        return c
-    return jax.tree.map(fix, caches,
-                        is_leaf=lambda c: isinstance(c, attn_lib.KVCache))
 
 
 # ------------------------------------------------------------------- static
@@ -1198,6 +1363,13 @@ class StaticServeEngine(_ArtifactBoot):
                 "kv_pool (the paged KV memory layer) applies to the "
                 "continuous ServeEngine only; the lockstep engine sizes "
                 "one contiguous cache per batch")
+        spec = slot_state.SlotStateSpec.from_config(model.cfg)
+        if spec.has_shared or model.cfg.family == "vlm":
+            raise ValueError(
+                f"family {model.cfg.family!r} (per-slot state "
+                f"[{spec.describe()}]) needs per-request encoder-side "
+                "input, which the lockstep baseline does not carry — "
+                "serve it with the continuous ServeEngine")
         self.config = config
         self.model = model
         self.cfg: ModelConfig = model.cfg

@@ -127,6 +127,10 @@ class SlotAlloc:
     prompt_len: int
     total_tokens: int
     released: bool = False
+    #: non-token positions preceding the prompt in this slot's KV layout
+    #: (e.g. a VLM's image-prefix span); logical index t of the span is
+    #: then ``prefix_tokens + t``
+    prefix_tokens: int = 0
 
 
 @dataclass
@@ -221,24 +225,37 @@ class PrefixCache:
         return len(self._entries)
 
     def _chain_keys(self, prompt: np.ndarray, thr_key: float,
-                    n_pages: int) -> List[bytes]:
+                    n_pages: int, salt: bytes = b"",
+                    prefix_tokens: int = 0) -> List[bytes]:
+        """Hash chain over the slot's page-sized spans. ``salt`` folds in
+        non-prompt content the KV depends on (e.g. the encoder input of an
+        enc-dec / VLM request — decoder KV depends on it through the
+        residual stream, so pages may only be shared under identical
+        encoder input). ``prefix_tokens`` shifts the prompt by a leading
+        non-token span: its pages hash as empty chunks, so two requests
+        share them exactly when their salt (= prefix content) matches."""
         ps = self.page_size
-        h = hashlib.sha1(repr(float(thr_key)).encode()).digest()
+        h = hashlib.sha1(repr(float(thr_key)).encode() + salt
+                         + int(prefix_tokens).to_bytes(4, "little")).digest()
         keys = []
         for i in range(n_pages):
+            lo = max(0, i * ps - prefix_tokens)
+            hi = max(0, (i + 1) * ps - prefix_tokens)
             chunk = np.ascontiguousarray(
-                np.asarray(prompt[i * ps:(i + 1) * ps], np.int32))
+                np.asarray(prompt[lo:hi], np.int32))
             h = hashlib.sha1(h + chunk.tobytes()).digest()
             keys.append(h)
         return keys
 
     def match(self, prompt: np.ndarray, thr_key: float,
-              max_pages: int) -> List[int]:
+              max_pages: int, salt: bytes = b"",
+              prefix_tokens: int = 0) -> List[int]:
         """Longest chain of cached full-prefix pages (<= max_pages). Pure
         lookup plus LRU touch — the caller retains the returned pages."""
         self._clock += 1
         pages = []
-        for key in self._chain_keys(prompt, thr_key, max_pages):
+        for key in self._chain_keys(prompt, thr_key, max_pages, salt,
+                                    prefix_tokens):
             e = self._entries.get(key)
             if e is None:
                 break
@@ -247,14 +264,16 @@ class PrefixCache:
         return pages
 
     def register(self, prompt: np.ndarray, thr_key: float,
-                 pages: List[int], n_pages: int) -> None:
+                 pages: List[int], n_pages: int, salt: bytes = b"",
+                 prefix_tokens: int = 0) -> None:
         """Insert the first ``n_pages`` full prompt pages of an admitted
         request. New entries take one pool reference; already-cached keys
         are only LRU-touched (their canonical page stays; the request's
         duplicate copy remains slot-owned and dies with the slot)."""
         self._clock += 1
         for depth, key in enumerate(
-                self._chain_keys(prompt, thr_key, n_pages)):
+                self._chain_keys(prompt, thr_key, n_pages, salt,
+                                 prefix_tokens)):
             e = self._entries.get(key)
             if e is not None:
                 e.last_used = self._clock
@@ -322,16 +341,22 @@ class KVBlockManager:
 
     # ---- request lifecycle ----
     def admit(self, prompt: np.ndarray, total_tokens: int,
-              thr_key: float = 0.0) -> Optional[SlotAlloc]:
+              thr_key: float = 0.0, *, salt: bytes = b"",
+              prefix_tokens: int = 0) -> Optional[SlotAlloc]:
         """Allocate the pages covering the prompt plus the first decode
-        write (logical indices [0, len(prompt)]). Returns None when the
-        pool cannot serve the request *right now* (queue until pages
-        free); raises when the request can **never** fit the pool."""
+        write (logical indices [0, prefix_tokens + len(prompt)]). Returns
+        None when the pool cannot serve the request *right now* (queue
+        until pages free); raises when the request can **never** fit the
+        pool. ``total_tokens`` counts the whole span including any
+        leading non-token prefix; ``salt``/``prefix_tokens`` thread into
+        the prefix cache keys (see :meth:`PrefixCache._chain_keys`)."""
         ln = int(len(prompt))
         if ln < 1:
             raise ValueError("cannot admit an empty prompt")
-        if total_tokens < ln:
-            raise ValueError(f"total_tokens {total_tokens} < prompt {ln}")
+        span = prefix_tokens + ln
+        if total_tokens < span:
+            raise ValueError(f"total_tokens {total_tokens} < prompt span "
+                             f"{span}")
         total_pages = self.pages_for(total_tokens)
         if total_pages > self.usable_pages:
             raise ValueError(
@@ -340,12 +365,14 @@ class KVBlockManager:
                 f"{self.page_size}) but the whole pool holds only "
                 f"{self.usable_pages} allocatable pages — enlarge "
                 f"KVPoolConfig.num_pages or shorten the request")
-        need_now = self.pages_for(ln + 1)
+        need_now = self.pages_for(span + 1)
         shared: List[int] = []
         if self.prefix is not None:
             # only pages strictly full of prompt tokens are shareable:
-            # the page holding index ln will be written by decode
-            shared = self.prefix.match(prompt, thr_key, ln // self.page_size)
+            # the page holding index `span` will be written by decode
+            shared = self.prefix.match(prompt, thr_key,
+                                       span // self.page_size, salt,
+                                       prefix_tokens)
         n_new = need_now - len(shared)
         if not self._free_up(n_new):
             self.stats.failed_admits += 1
@@ -360,7 +387,8 @@ class KVBlockManager:
             self.stats.allocated_pages += 1
         self.stats.shared_pages += len(shared)
         return SlotAlloc(pages=pages, n_shared=len(shared), prompt_len=ln,
-                         total_tokens=total_tokens)
+                         total_tokens=total_tokens,
+                         prefix_tokens=prefix_tokens)
 
     def ensure(self, alloc: SlotAlloc, pos: int) -> bool:
         """Grow ``alloc`` to cover logical token index ``pos``. Returns
@@ -381,13 +409,15 @@ class KVBlockManager:
         return True
 
     def register_prefix(self, alloc: SlotAlloc, prompt: np.ndarray,
-                        thr_key: float = 0.0) -> None:
+                        thr_key: float = 0.0, *,
+                        salt: bytes = b"") -> None:
         """After prefill lands in the pool: publish the request's full
         prompt pages for sharing."""
         if self.prefix is None:
             return
-        n_full = alloc.prompt_len // self.page_size
-        self.prefix.register(prompt, thr_key, alloc.pages, n_full)
+        n_full = (alloc.prefix_tokens + alloc.prompt_len) // self.page_size
+        self.prefix.register(prompt, thr_key, alloc.pages, n_full, salt,
+                             alloc.prefix_tokens)
 
     def release(self, alloc: SlotAlloc) -> None:
         if alloc.released:
@@ -421,6 +451,99 @@ class KVBlockManager:
         assert all(r >= 0 for r in pool.refcount)
         assert all(pool.refcount[p] == 0 for p in free)
         assert all(pool.refcount[p] > 0 for p in live)
+
+
+# ---------------------------------------------------- shared (cross-KV) pool
+@dataclass
+class SharedStats:
+    hits: int = 0                 # acquire() found a live/cached entry
+    misses: int = 0               # acquire() had to compute
+    evicted: int = 0              # idle entries dropped over capacity
+    peak_refcount: int = 0        # max concurrent sharers of one entry
+
+
+@dataclass
+class _SharedEntry:
+    value: object
+    refcount: int
+    last_used: int
+
+
+class SharedStatePool:
+    """Refcounted pool of admission-computed shared state (the engine's
+    ``cross_kv`` kind: encoder-derived cross-attention KV). Entries are
+    content-addressed by the request's encoder input, so requests with
+    identical encoder input share ONE computed entry — the shared-state
+    analogue of :class:`PrefixCache` page sharing. Released entries stay
+    cached (refcount 0) up to ``capacity``, evicted LRU beyond it; a
+    ``capacity`` of ``None`` never evicts. Pure host-side bookkeeping,
+    deterministic like the page pool."""
+
+    def __init__(self, capacity: Optional[int] = 8):
+        self.capacity = capacity
+        self._entries: Dict[bytes, _SharedEntry] = {}
+        self._clock = 0
+        self.stats = SharedStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def key_of(array) -> bytes:
+        """Content key of an encoder input: bytes + shape + dtype."""
+        a = np.ascontiguousarray(np.asarray(array))
+        meta = repr((a.shape, str(a.dtype))).encode()
+        return hashlib.sha1(a.tobytes() + meta).digest()
+
+    def acquire(self, key: bytes, compute):
+        """Return the entry for ``key``, computing it via ``compute()`` on
+        a miss, and take one reference. Every acquire must be paired with
+        exactly one :meth:`release`."""
+        self._clock += 1
+        e = self._entries.get(key)
+        if e is None:
+            self.stats.misses += 1
+            e = _SharedEntry(value=compute(), refcount=0,
+                             last_used=self._clock)
+            self._entries[key] = e
+        else:
+            self.stats.hits += 1
+        e.refcount += 1
+        e.last_used = self._clock
+        self.stats.peak_refcount = max(self.stats.peak_refcount, e.refcount)
+        return e.value
+
+    def refcount(self, key: bytes) -> int:
+        e = self._entries.get(key)
+        return 0 if e is None else e.refcount
+
+    def release(self, key: bytes) -> None:
+        e = self._entries.get(key)
+        if e is None or e.refcount <= 0:
+            raise ValueError(
+                "release of an unacquired shared-state entry")
+        e.refcount -= 1
+        if e.refcount == 0:
+            self._evict_idle()
+
+    def _evict_idle(self) -> None:
+        """Keep at most ``capacity`` idle (refcount-0) entries, dropping
+        the least recently used first."""
+        if self.capacity is None:
+            return
+        idle = sorted(
+            ((e.last_used, key) for key, e in self._entries.items()
+             if e.refcount == 0))
+        for _, key in idle[:max(0, len(idle) - self.capacity)]:
+            del self._entries[key]
+            self.stats.evicted += 1
+
+    def check_invariants(self) -> None:
+        assert all(e.refcount >= 0 for e in self._entries.values())
+        if self.capacity is not None:
+            idle = sum(1 for e in self._entries.values() if e.refcount == 0)
+            assert idle <= self.capacity, \
+                f"{idle} idle shared entries exceed capacity {self.capacity}"
 
 
 # ------------------------------------------------------------------ sizing

@@ -1,0 +1,234 @@
+"""Family-agnostic per-slot state layer for the serving engines.
+
+Every model family carries some per-request ("per-slot") state across
+decode steps; what differs between families is the *kind* of state, not
+the engine logic around it. This module names the kinds, derives each
+family's bundle from its :class:`~repro.config.ModelConfig`, and provides
+the generic tree operations the continuous engine programs against — so
+adding a family means adding a descriptor row here, not forking the
+engine's admit/insert/drain/collect paths.
+
+State kinds:
+
+============  ==========================================  ============
+kind          what it is                                  capability
+============  ==========================================  ============
+``attn_kv``   attention K/V rows, one per position        pageable
+``ssm``       Mamba recurrent state (conv window + h)     recurrent
+``cross_kv``  encoder-derived cross-attention K/V,        shared
+              computed once at admission
+============  ==========================================  ============
+
+* **pageable** state grows with the sequence, so it can live in paged
+  block pools behind a page table (:mod:`repro.serve.kv_pool`).
+* **recurrent** state is fixed-size per slot and rewritten every token;
+  it rides the slot pool as a dense batch-axis entry with per-row
+  lifetimes, and is **zero-reset** (not position-voided) between
+  requests — there is no position index to invalidate.
+* **shared** state is a pure function of the request's encoder input:
+  computed once at admission and refcount-shared across requests with
+  identical input (:class:`repro.serve.kv_pool.SharedStatePool`).
+
+Per-family bundles (``state_kinds``):
+
+=========  ==========================  =====================================
+family     kinds                       per-slot layout in the engine
+=========  ==========================  =====================================
+dense/moe  attn_kv                     contiguous rows or paged pools
+vlm        attn_kv                     ditto; image prefix occupies the
+                                       leading ``num_prefix_tokens`` slots
+ssm        ssm                         dense state pool, per-row lifetimes
+hybrid     ssm + attn_kv               dense SSM pool + (paged) shared-block
+                                       KV, one pool per attention group
+encdec     attn_kv + cross_kv          (paged) decoder self-attn KV +
+                                       refcounted cross-KV pool entries
+=========  ==========================  =====================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import ssm as ssm_lib
+
+KNOWN_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclass(frozen=True)
+class StateKind:
+    """One kind of per-slot state and its engine-facing capabilities."""
+
+    name: str
+    pageable: bool = False      # can live in paged block pools
+    recurrent: bool = False     # fixed-size, rewritten every token
+    shared: bool = False        # admission-computed, refcount-shared
+
+    def capabilities(self) -> str:
+        caps = [c for c in ("pageable", "recurrent", "shared")
+                if getattr(self, c)]
+        return ", ".join(caps) or "plain"
+
+
+ATTN_KV = StateKind("attn_kv", pageable=True)
+SSM = StateKind("ssm", recurrent=True)
+CROSS_KV = StateKind("cross_kv", shared=True)
+
+
+def state_kinds(cfg) -> Tuple[StateKind, ...]:
+    """The per-slot state bundle of a model family, from its config."""
+    fam = cfg.family
+    if fam == "ssm":
+        return (SSM,)
+    if fam == "hybrid":
+        # the weight-shared attention block runs between Mamba groups even
+        # when shared_attn_period is 0 (one trailing block)
+        return (SSM, ATTN_KV)
+    if fam == "encdec":
+        return (ATTN_KV, CROSS_KV)
+    if fam in ("dense", "moe", "vlm"):
+        return (ATTN_KV,)
+    raise ValueError(
+        f"unknown model family {fam!r}; known families: "
+        f"{', '.join(KNOWN_FAMILIES)}")
+
+
+@dataclass(frozen=True)
+class SlotStateSpec:
+    """The engine's view of one model family's slot state: which kinds it
+    carries and therefore which engine capabilities apply. Built once at
+    engine construction; the admit/insert/drain paths branch on the
+    capability flags instead of on family names."""
+
+    family: str
+    kinds: Tuple[StateKind, ...]
+
+    @classmethod
+    def from_config(cls, cfg) -> "SlotStateSpec":
+        return cls(family=cfg.family, kinds=state_kinds(cfg))
+
+    @property
+    def has_pageable(self) -> bool:
+        return any(k.pageable for k in self.kinds)
+
+    @property
+    def has_recurrent(self) -> bool:
+        return any(k.recurrent for k in self.kinds)
+
+    @property
+    def has_shared(self) -> bool:
+        return any(k.shared for k in self.kinds)
+
+    def describe(self) -> str:
+        """Human-readable kind list for error messages: e.g.
+        ``"ssm (recurrent), attn_kv (pageable)"``."""
+        return ", ".join(f"{k.name} ({k.capabilities()})"
+                         for k in self.kinds)
+
+
+# ------------------------------------------------------- generic tree ops
+#: pytree leaf types holding per-slot state (CrossKV is a plain NamedTuple
+#: of arrays and needs no special-casing in any of the ops below)
+STATE_LEAF_TYPES = (attn_lib.KVCache, attn_lib.PagedKVCache,
+                    ssm_lib.SSMState)
+
+
+def is_state_leaf(x) -> bool:
+    return isinstance(x, STATE_LEAF_TYPES)
+
+
+def insert_row(pool, one, slot):
+    """Scatter row 0 of a batch-1 state bundle into row ``slot`` of the
+    pool bundle. Every pool leaf carries batch at axis 1 (axis 0 is the
+    model's layer/step/group stacking) for all state kinds alike, so one
+    ``dynamic_update_slice`` shape covers KV rows, SSM state and cross-KV
+    entries. The engines jit this with donation so the pool updates in
+    place on accelerators."""
+    return jax.tree.map(
+        lambda pl, on: jax.lax.dynamic_update_slice(
+            pl, on.astype(pl.dtype),
+            (0, slot) + (0,) * (pl.ndim - 2)),
+        pool, one)
+
+
+def reset_recurrent(caches):
+    """Zero every recurrent (``SSMState``) leaf, leaving other kinds
+    untouched — the per-kind reset that makes the batch-1 admission
+    scratch reusable for SSM/hybrid families: attention entries are
+    position-voided by :func:`void_attention_tail`, recurrent entries are
+    zero-filled here. Jitted with donation this is an in-place fill."""
+    def fix(c):
+        if isinstance(c, ssm_lib.SSMState):
+            return ssm_lib.SSMState(jnp.zeros_like(c.conv),
+                                    jnp.zeros_like(c.h))
+        return c
+    return jax.tree.map(
+        fix, caches, is_leaf=lambda c: isinstance(c, ssm_lib.SSMState))
+
+
+def void_attention_tail(caches, length):
+    """Invalidate attention KV entries at positions ``>= length`` (the
+    padded prefill tail, or a reused scratch's stale entries): a voided
+    entry (``pos = -1``) is never attended. Recurrent and paged leaves
+    pass through — recurrent state has no positions to void, and paged
+    pools are written through the page table, never via padding."""
+    def fix(c):
+        if isinstance(c, attn_lib.KVCache):
+            return dataclasses.replace(
+                c, pos=jnp.where(c.pos >= length, -1, c.pos))
+        return c
+    return jax.tree.map(
+        fix, caches, is_leaf=lambda c: isinstance(c, attn_lib.KVCache))
+
+
+# --------------------------------------------------------------- sizing
+def _attention_layer_count(cfg) -> int:
+    if cfg.family == "hybrid":
+        period = cfg.shared_attn_period or cfg.num_layers
+        return cfg.num_layers // period      # one shared block per group
+    if cfg.family == "ssm":
+        return 0
+    return cfg.num_layers
+
+
+def state_bytes_per_slot(cfg, capacity: int,
+                         kv_cfg=None) -> Dict[str, float]:
+    """Analytic bytes of per-slot state, keyed by state-kind name — the
+    serving benchmark's family-sweep metric. ``capacity`` is the slot's
+    logical token span; a :class:`~repro.serve.kv_pool.KVPoolConfig`
+    switches ``attn_kv`` to paged accounting (quantized storage, scales
+    included)."""
+    from repro.serve import kv_pool as kvp
+
+    dtype_bytes = 4 if cfg.dtype == "float32" else 2
+    out: Dict[str, float] = {}
+    for kind in state_kinds(cfg):
+        if kind is ATTN_KV:
+            n_layers = _attention_layer_count(cfg)
+            if kv_cfg is not None:
+                per_tok = kvp.paged_kv_bytes_per_token(
+                    cfg.num_kv_heads, cfg.head_dim, kv_cfg.quant)
+            else:
+                per_tok = kvp.contiguous_kv_bytes_per_token(
+                    cfg.num_kv_heads, cfg.head_dim, dtype_bytes)
+            out[kind.name] = per_tok * capacity * n_layers
+        elif kind is SSM:
+            inner = cfg.d_model * cfg.ssm_expand
+            # the conv window matches the activation dtype (see
+            # ssm.init_ssm_state); h is always f32
+            conv = (cfg.ssm_conv - 1) * inner * dtype_bytes
+            if cfg.ssm_type == "mamba1":
+                h = inner * cfg.ssm_state * 4              # f32
+            else:
+                nh = inner // cfg.ssm_head_dim
+                h = nh * cfg.ssm_head_dim * cfg.ssm_state * 4
+            out[kind.name] = float((conv + h) * cfg.num_layers)
+        elif kind is CROSS_KV:
+            out[kind.name] = float(
+                2 * cfg.encoder_seq * cfg.num_kv_heads * cfg.head_dim
+                * dtype_bytes * cfg.num_layers)
+    return out

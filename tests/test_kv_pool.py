@@ -319,3 +319,174 @@ class TestConfigAndSizing:
             assert (paged_kv_bytes_per_token(nkv, h, "off")
                     == 2 * nkv * h * 2)
         assert set(KV_QUANT_BITS) == {"off", "int8", "int4"}
+
+
+class TestSharedStatePool:
+    """Refcounted content-addressed shared state (encdec CrossKV)."""
+
+    def _pool(self, capacity=8):
+        from repro.serve.kv_pool import SharedStatePool
+        return SharedStatePool(capacity=capacity)
+
+    def test_identical_inputs_share_one_entry(self):
+        pool = self._pool()
+        enc = np.random.RandomState(0).randn(16, 8).astype(np.float32)
+        key = pool.key_of(enc)
+        calls = []
+        a = pool.acquire(key, lambda: calls.append(1) or "entry")
+        b = pool.acquire(key, lambda: calls.append(1) or "entry2")
+        assert a is b and len(calls) == 1           # one compute, shared
+        assert pool.refcount(key) == 2
+        assert pool.stats.misses == 1 and pool.stats.hits == 1
+        pool.release(key)
+        assert pool.refcount(key) == 1
+        pool.release(key)
+        assert pool.refcount(key) == 0              # exactly zero at release
+
+    def test_release_below_zero_raises(self):
+        pool = self._pool()
+        key = pool.key_of(np.zeros(4, np.float32))
+        pool.acquire(key, lambda: "x")
+        pool.release(key)
+        with pytest.raises(ValueError, match="unacquired"):
+            pool.release(key)
+        with pytest.raises(ValueError, match="unacquired"):
+            pool.release(b"never-acquired-key!!")
+
+    def test_distinct_inputs_never_alias(self):
+        """Different encoder inputs — including same bytes at a different
+        shape — get different keys and independent entries."""
+        pool = self._pool()
+        a = np.arange(12, dtype=np.float32).reshape(3, 4)
+        b = np.arange(12, dtype=np.float32).reshape(4, 3)
+        c = np.arange(12, dtype=np.float32).reshape(3, 4) + 1
+        keys = {pool.key_of(x) for x in (a, b, c)}
+        assert len(keys) == 3
+        entries = [pool.acquire(pool.key_of(x), lambda x=x: x.copy())
+                   for x in (a, b, c)]
+        assert entries[0] is not entries[1] is not entries[2]
+        np.testing.assert_array_equal(entries[0], a)
+        np.testing.assert_array_equal(entries[1], b)
+
+    def test_released_entries_cached_then_evicted_lru(self):
+        pool = self._pool(capacity=2)
+        keys = [pool.key_of(np.full(3, i, np.float32)) for i in range(3)]
+        for i, k in enumerate(keys):
+            pool.acquire(k, lambda i=i: i)
+            pool.release(k)
+        assert len(pool) == 2                       # oldest evicted
+        calls = []
+        pool.acquire(keys[0], lambda: calls.append(1) or 0)
+        assert calls, "evicted entry must be recomputed"
+        # a cached (refcount-0) entry revives without recompute
+        pool.acquire(keys[2], lambda: calls.append(9) or 2)
+        assert len(calls) == 1
+
+
+class TestSaltedChains:
+    """The prefix-cache hash chain folds in the admission salt (encoder
+    input) and the prefix-token offset, so requests that differ only in
+    encoder-side state never alias pages."""
+
+    def test_salt_separates_identical_prompts(self):
+        ps = 4
+        mgr = KVBlockManager(KVPoolConfig(num_pages=16, page_size=ps))
+        prompt = np.arange(1, 1 + 2 * ps, dtype=np.int32)
+        a1 = mgr.admit(prompt, len(prompt) + 2, salt=b"encoder-A")
+        mgr.register_prefix(prompt=prompt, alloc=a1, salt=b"encoder-A")
+        a2 = mgr.admit(prompt, len(prompt) + 2, salt=b"encoder-B")
+        assert a2.n_shared == 0
+        a3 = mgr.admit(prompt, len(prompt) + 2, salt=b"encoder-A")
+        assert a3.n_shared == 2
+        for a in (a1, a2, a3):
+            mgr.release(a)
+        mgr.check_invariants()
+
+    def test_prefix_tokens_offset_spans(self):
+        """A vlm prompt's pages cover prefix embeddings + tokens; the
+        same token prompt at a different prefix length must not alias,
+        and same-prefix requests share full pages."""
+        ps = 4
+        mgr = KVBlockManager(KVPoolConfig(num_pages=16, page_size=ps))
+        prompt = np.arange(1, 1 + ps, dtype=np.int32)
+        a1 = mgr.admit(prompt, ps + len(prompt) + 2, prefix_tokens=ps)
+        assert len(a1.pages) >= 2            # prefix page + prompt page
+        assert a1.prefix_tokens == ps
+        mgr.register_prefix(prompt=prompt, alloc=a1)
+        a2 = mgr.admit(prompt, ps + len(prompt) + 2, prefix_tokens=ps)
+        assert a2.n_shared == 2              # prefix page AND token page
+        a3 = mgr.admit(prompt, len(prompt) + 2, prefix_tokens=0)
+        assert a3.n_shared == 0
+        for a in (a1, a2, a3):
+            mgr.release(a)
+        mgr.check_invariants()
+
+
+class TestStatePoolLifetimes:
+    """Dense state-pool row lifetimes for recurrent (hybrid/SSM) state:
+    rows are overwritten per admission and zero-reset between scratch
+    reuses without touching neighbouring rows."""
+
+    def _bundle(self, batch):
+        import jax
+        import jax.numpy as jnp
+        from repro.models.layers.attention import KVCache
+        from repro.models.layers.ssm import SSMState
+        conv = jnp.arange(batch * 2 * 3, dtype=jnp.float32
+                          ).reshape(1, batch, 2, 3)
+        h = jnp.ones((1, batch, 4, 2, 2), jnp.float32)
+        kv = jnp.zeros((1, batch, 8, 2, 4), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32),
+                               (1, batch, 8))
+        return {"ssm": SSMState(conv, h),
+                "attn": KVCache(kv, kv, pos, False, None, None)}
+
+    def test_insert_row_touches_one_row(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.serve import slot_state
+        pool, one = self._bundle(3), self._bundle(1)
+        one = jax.tree.map(lambda a: a * 0 + 7.0
+                           if a.dtype == jnp.float32 else a, one)
+        out = slot_state.insert_row(pool, one, 1)
+        for leaf_out, leaf_in in zip(jax.tree.leaves(out),
+                                     jax.tree.leaves(pool)):
+            np.testing.assert_array_equal(
+                np.asarray(leaf_out[:, 0]), np.asarray(leaf_in[:, 0]))
+            np.testing.assert_array_equal(
+                np.asarray(leaf_out[:, 2]), np.asarray(leaf_in[:, 2]))
+        assert float(out["ssm"].conv[0, 1].min()) == 7.0
+        assert float(out["ssm"].h[0, 1].max()) == 7.0
+
+    def test_reset_recurrent_zeroes_only_ssm(self):
+        from repro.serve import slot_state
+        out = slot_state.reset_recurrent(self._bundle(2))
+        assert float(np.abs(np.asarray(out["ssm"].conv)).max()) == 0.0
+        assert float(np.abs(np.asarray(out["ssm"].h)).max()) == 0.0
+        np.testing.assert_array_equal(np.asarray(out["attn"].pos),
+                                      np.asarray(self._bundle(2)["attn"].pos))
+
+    def test_void_attention_tail_voids_only_positions(self):
+        from repro.serve import slot_state
+        out = slot_state.void_attention_tail(self._bundle(2), 5)
+        pos = np.asarray(out["attn"].pos)
+        assert (pos[..., 5:] == -1).all() and (pos[..., :5] >= 0).all()
+        conv = np.asarray(out["ssm"].conv)
+        np.testing.assert_array_equal(
+            conv, np.asarray(self._bundle(2)["ssm"].conv))
+
+    def test_state_kind_bundles_per_family(self):
+        from repro.configs import get_config
+        from repro.serve import slot_state
+        expect = {"mixtral-8x7b": ["attn_kv"],
+                  "falcon-mamba-7b": ["ssm"],
+                  "zamba2-1.2b": ["ssm", "attn_kv"],
+                  "whisper-medium": ["attn_kv", "cross_kv"],
+                  "paligemma-3b": ["attn_kv"]}
+        for name, kinds in expect.items():
+            cfg = get_config(name, smoke=True)
+            spec = slot_state.SlotStateSpec.from_config(cfg)
+            assert [k.name for k in spec.kinds] == kinds, name
+            sizes = slot_state.state_bytes_per_slot(cfg, capacity=64)
+            assert set(sizes) == set(kinds) and all(
+                v > 0 for v in sizes.values()), name

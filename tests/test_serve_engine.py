@@ -521,16 +521,26 @@ class TestPagedKV:
         eng.run(reqs)
         assert eng._decode_paged._cache_size() == 1
 
-    def test_paged_rejects_unsupported_models(self):
-        """SSM/hybrid recurrence and encoder-decoder cross state have no
-        paged analogue; misconfiguration fails at construction."""
+    def test_paged_rejects_by_capability(self):
+        """Paging eligibility is decided per state kind, not per family:
+        only a family with NO pageable kind (pure SSM) rejects a pool, and
+        the error names the state kinds; recurrent + chunked prefill is the
+        one genuinely unsupported combination."""
         from repro.serve.engine import EngineConfig
         from repro.serve.kv_pool import KVPoolConfig
         pool = KVPoolConfig(num_pages=8, page_size=4)
+        mamba = build_model(get_config("falcon-mamba-7b", smoke=True))
+        with pytest.raises(ValueError, match="no-op.*ssm"):
+            ServeEngine(mamba, None, config=EngineConfig(
+                max_seq_len=32, kv_pool=pool))
+        # hybrids page their shared-attention kind but cannot chunk the
+        # prefill through the recurrence
         hyb = build_model(get_config("zamba2-1.2b", smoke=True))
         with pytest.raises(ValueError, match="recurrent"):
             ServeEngine(hyb, None, config=EngineConfig(
-                max_seq_len=32, kv_pool=pool))
+                max_seq_len=32,
+                kv_pool=KVPoolConfig(num_pages=8, page_size=4,
+                                     prefill_chunk=4)))
         cfg, model, params = _dense()
         with pytest.raises(ValueError, match="max_seq_len"):
             ServeEngine(model, params,
@@ -565,3 +575,150 @@ class TestPagedKV:
                     for r in requeued}
         for uid, toks in stitched.items():
             assert np.array_equal(ref[uid], toks.astype(np.int32)), uid
+
+
+def _family_model(name):
+    """A smoke model served through the per-slot state layer. float32 keeps
+    greedy argmax deterministic across batch compositions."""
+    cfg = get_config(name, smoke=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _family_requests(cfg, n, max_new=5, seed=0):
+    """Mixed-length requests with the encoder-side input the family needs
+    (encoder frames for encdec, prefix embeddings for vlm)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(1, cfg.vocab_size,
+                              int(rng.integers(3, 9))).astype(np.int32)
+        enc = None
+        if cfg.family == "encdec":
+            enc = rng.standard_normal(
+                (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        elif cfg.family == "vlm":
+            enc = rng.standard_normal(
+                (cfg.num_prefix_tokens, cfg.d_model)).astype(np.float32)
+        reqs.append(Request(uid=i, prompt=prompt, enc_input=enc,
+                            max_new_tokens=max_new))
+    return reqs
+
+
+def _family_sequential(model, params, req):
+    """Greedy one-request reference through the model's own prefill/decode
+    steps (no engine), carrying the family's encoder-side input."""
+    cfg = model.cfg
+    prompt, max_new = req.prompt, req.max_new_tokens
+    plen = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
+    caches = model.init_caches(1, plen + len(prompt) + max_new)
+    kw, dkw = {}, {}
+    if cfg.family == "encdec":
+        frames = jnp.asarray(req.enc_input, jnp.float32)[None]
+        kw["enc_frames"] = frames
+        dkw["cross"] = model.cross_kv(params, model.encode(params, frames))
+    elif cfg.family == "vlm":
+        kw["prefix_embeds"] = jnp.asarray(req.enc_input, jnp.float32)[None]
+    logits, caches, _ = model.forward(
+        params, jnp.asarray(prompt, jnp.int32)[None], caches=caches, **kw)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = plen + len(prompt)
+    for _ in range(max_new - 1):
+        logits, caches = model.decode_step(
+            params, caches, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.asarray(pos, jnp.int32), **dkw)
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    return np.asarray(out, np.int32)
+
+
+class TestStateLayer:
+    """The family-agnostic per-slot state layer: every family's state
+    kinds ride the same admit/insert/decode/drain machinery."""
+
+    @pytest.mark.parametrize(
+        "name", [pytest.param("zamba2-1.2b", id="hybrid"),
+                 pytest.param("whisper-medium", id="encdec"),
+                 pytest.param("paligemma-3b", id="vlm"),
+                 pytest.param("falcon-mamba-7b", id="ssm")])
+    def test_engine_matches_sequential(self, name):
+        """Continuous batching over the dense slot pools is token-identical
+        to one-request-at-a-time generation for every state-kind mix."""
+        cfg, model, params = _family_model(name)
+        reqs = _family_requests(cfg, 3, seed=2)
+        eng = _kv_engine(model, params, batch=2, max_seq_len=48)
+        res = eng.run(reqs)
+        for req, r in zip(reqs, res):
+            ref = _family_sequential(model, params, req)
+            np.testing.assert_array_equal(r.tokens, ref,
+                                          err_msg=f"uid {req.uid}")
+        assert eng.stats.scratch_reuses == 2    # 3 admissions, 1 alloc
+
+    @pytest.mark.parametrize(
+        "name", [pytest.param("zamba2-1.2b", id="hybrid"),
+                 pytest.param("whisper-medium", id="encdec"),
+                 pytest.param("paligemma-3b", id="vlm")])
+    def test_paged_matches_contiguous(self, name):
+        """Paging the pageable state kinds (hybrid shared-attention KV,
+        encdec decoder self-attention KV, vlm prefix+prompt KV) preserves
+        greedy tokens exactly; mixed page counts share one compiled step."""
+        cfg, model, params = _family_model(name)
+        ref = _tokens_by_uid(
+            _kv_engine(model, params, batch=2, max_seq_len=48)
+            .run(_family_requests(cfg, 4, seed=4)))
+        eng = _kv_engine(model, params, batch=2, max_seq_len=48,
+                         num_pages=64, page_size=8)
+        out = _tokens_by_uid(eng.run(_family_requests(cfg, 4, seed=4)))
+        for uid in ref:
+            assert np.array_equal(ref[uid], out[uid]), (
+                f"request {uid}: paged {out[uid]} != contiguous {ref[uid]}")
+        assert eng._decode_paged._cache_size() == 1
+        eng._kv_mgr.check_invariants()
+
+    def test_cross_kv_shared_across_identical_encoder_inputs(self):
+        """Requests with the same encoder input share ONE refcounted
+        CrossKV pool entry (refcount > 1 while both are in flight), and
+        distinct inputs do not alias."""
+        cfg, model, params = _family_model("whisper-medium")
+        reqs = _family_requests(cfg, 3, seed=6)
+        reqs[1] = Request(uid=1, prompt=reqs[1].prompt,
+                          enc_input=reqs[0].enc_input,
+                          max_new_tokens=reqs[1].max_new_tokens)
+        eng = _kv_engine(model, params, batch=3, max_seq_len=48)
+        from repro.serve.kv_pool import SharedStatePool
+        key01 = SharedStatePool.key_of(
+            np.asarray(reqs[0].enc_input, np.float32))
+        key2 = SharedStatePool.key_of(
+            np.asarray(reqs[2].enc_input, np.float32))
+        eng.begin(reqs)
+        eng.pump()                       # all three admitted (3 slots)
+        assert eng._shared_pool.refcount(key01) == 2
+        assert eng._shared_pool.refcount(key2) == 1
+        assert eng._shared_pool.stats.hits == 1
+        assert eng._shared_pool.stats.misses == 2
+        while eng.busy:
+            eng.pump()
+        eng.collect()
+        # exactly zero at release: every acquire had its release
+        assert eng._shared_pool.refcount(key01) == 0
+        assert eng._shared_pool.refcount(key2) == 0
+
+    def test_missing_enc_input_is_friendly(self):
+        """Submitting an encdec request without encoder input (or a vlm
+        request with the wrong prefix shape) fails with a message naming
+        the expected shape, not a jit shape error."""
+        cfg, model, params = _family_model("whisper-medium")
+        eng = _kv_engine(model, params, batch=2, max_seq_len=48)
+        with pytest.raises(ValueError, match="enc_input"):
+            eng.run([Request(uid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                             max_new_tokens=2)])
+
+    def test_static_engine_rejects_shared_state(self):
+        """The lockstep baseline carries no per-request encoder input; the
+        error says to use the continuous engine."""
+        cfg, model, params = _family_model("whisper-medium")
+        from repro.serve.engine import EngineConfig
+        with pytest.raises(ValueError, match="continuous ServeEngine"):
+            StaticServeEngine(model, params,
+                              config=EngineConfig(max_seq_len=32))
